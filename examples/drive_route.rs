@@ -1,0 +1,84 @@
+//! Drive a full route under every scheduler and report the driving-safety
+//! metrics of §8.4: per-scheduler STMRate and the Fig. 14 braking probe
+//! (the vehicle brakes for an obstacle seen 250 m ahead after `--brake-at`
+//! meters; the braking distance follows from the probe task's wait +
+//! compute + scheduler latency + CAN + mechanical lag).
+//!
+//!     cargo run --release --example drive_route -- --dist 400 \
+//!         [--ckpt checkpoints/flexai_ub.json] [--area ub] [--seed 42]
+
+use hmai::config::ExperimentConfig;
+use hmai::harness;
+use hmai::safety::braking::{braking_distance_m, stops_within, BrakingBreakdown};
+use hmai::sim::{SimOptions, SimResult};
+use hmai::util::cli::Args;
+use hmai::util::table::{f2, pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let mut cfg = ExperimentConfig::default();
+    cfg.env.distances_m = vec![400.0];
+    cfg.apply_args(&args)?;
+    cfg.env.distances_m.truncate(1);
+    let brake_at = args.get_f64("brake-at", cfg.env.distances_m[0] * 0.5)?;
+    let sensing_m = 250.0; // forward camera max distance (§6.1)
+
+    let platform = cfg.platform()?;
+    let queues = harness::make_queues(&cfg.env);
+    let v = cfg.env.area.max_velocity_ms();
+    println!(
+        "route: {:.0} m ({}), {} tasks; brake event at {brake_at:.0} m, v = {v:.1} m/s",
+        cfg.env.distances_m[0],
+        cfg.env.area.name(),
+        queues[0].len()
+    );
+
+    let mut table = Table::new([
+        "Scheduler", "STMRate", "T_wait (ms)", "T_sched (ms)", "T_compute (ms)",
+        "Braking dist (m)", "Safe (<250 m)",
+    ]);
+
+    let mut probe = |name: &str, r: &SimResult| {
+        let t_probe = brake_at / v;
+        let rec = r
+            .records
+            .iter()
+            .filter(|t| t.release_s >= t_probe && !t.model.is_tracker())
+            .min_by(|a, b| a.release_s.total_cmp(&b.release_s))
+            .expect("route long enough for probe");
+        let bd = BrakingBreakdown::new(rec.wait_s, r.sched_per_task_s(), rec.compute_s);
+        let dist = braking_distance_m(v, &bd);
+        table.row([
+            name.to_string(),
+            pct(r.summary.stm_rate()),
+            f2(bd.t_wait * 1e3),
+            f2(bd.t_schedule * 1e3),
+            f2(bd.t_compute * 1e3),
+            f2(dist),
+            if stops_within(v, &bd, sensing_m) { "yes".into() } else { "NO".into() },
+        ]);
+    };
+
+    // FlexAI (checkpoint if given, fresh otherwise) ...
+    {
+        let mut cfg_f = cfg.clone();
+        cfg_f.scheduler = "flexai".into();
+        let mut s = harness::make_scheduler(&cfg_f)?;
+        let r = harness::run_queues(&queues, &platform, s.as_mut(), SimOptions {
+            record_tasks: true,
+        })
+        .remove(0);
+        probe("FlexAI", &r);
+    }
+    // ... vs every baseline.
+    for name in hmai::sched::BASELINES {
+        let mut s = hmai::sched::by_name(name, cfg.env.seed).expect("baseline");
+        let r = harness::run_queues(&queues, &platform, s.as_mut(), SimOptions {
+            record_tasks: true,
+        })
+        .remove(0);
+        probe(&s.name(), &r);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Design-space exploration over HMAI configurations (§3.1 / §8.2): sweep
+//! (SconvOD, SconvIC, MconvMC) counts, keep the configurations that meet
+//! every scenario's FPS requirements in the chosen area, and print the
+//! utilization/power frontier.  This regenerates the argument for the
+//! paper's (4, 4, 3) pick: it is the smallest configuration whose
+//! geometric-mean utilization beats every homogeneous alternative.
+//!
+//!     cargo run --release --example platform_explorer -- --area ub \
+//!         [--max-units 14]
+
+use hmai::env::{Area, ALL_SCENARIOS};
+use hmai::platform::alloc;
+use hmai::util::cli::Args;
+use hmai::util::stats::geomean;
+use hmai::util::table::{f2, pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let area = Area::parse(args.get_or("area", "ub")).expect("--area: ub|uhw|hw");
+    let max_units = args.get_usize("max-units", 14)?;
+
+    struct Row {
+        counts: (usize, usize, usize),
+        util_gm: f64,
+        power_gm: f64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+
+    for so in 0..=max_units {
+        for si in 0..=max_units.saturating_sub(so) {
+            for mm in 0..=max_units.saturating_sub(so + si) {
+                let counts = (so, si, mm);
+                if so + si + mm == 0 {
+                    continue;
+                }
+                let mut utils = Vec::new();
+                let mut powers = Vec::new();
+                let mut ok = true;
+                for s in ALL_SCENARIOS {
+                    if s == hmai::env::Scenario::Reverse && !area.allows_reverse() {
+                        continue;
+                    }
+                    let reqs = alloc::requirements(area, s);
+                    match alloc::best_allocation(counts, &reqs) {
+                        Some((a, u)) => {
+                            utils.push(u);
+                            powers.push(alloc::power_w_provisioned(&a, &reqs, counts));
+                        }
+                        None => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if ok {
+                    rows.push(Row {
+                        counts,
+                        util_gm: geomean(&utils),
+                        power_gm: geomean(&powers),
+                    });
+                }
+            }
+        }
+    }
+
+    // Pareto frontier: max utilization, min power, min units.
+    rows.sort_by(|a, b| b.util_gm.total_cmp(&a.util_gm));
+    println!(
+        "area = {}: {} feasible configurations ≤ {max_units} units; top 15 by geomean utilization:",
+        area.name(),
+        rows.len()
+    );
+    let mut t = Table::new(["SO", "SI", "MM", "Units", "Util (geomean)", "Power W (geomean)"]);
+    for r in rows.iter().take(15) {
+        t.row([
+            r.counts.0.to_string(),
+            r.counts.1.to_string(),
+            r.counts.2.to_string(),
+            (r.counts.0 + r.counts.1 + r.counts.2).to_string(),
+            pct(r.util_gm),
+            f2(r.power_gm),
+        ]);
+    }
+    t.print();
+
+    // Where does the paper's HMAI (4,4,3) rank?
+    if let Some(pos) = rows.iter().position(|r| r.counts == (4, 4, 3)) {
+        let r = &rows[pos];
+        println!(
+            "\npaper HMAI (4,4,3): rank {} of {}, util {} / power {:.2} W",
+            pos + 1,
+            rows.len(),
+            pct(r.util_gm),
+            r.power_gm
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Builds the paper's HMAI platform (4 SconvOD, 4 SconvIC, 3 MconvMC),
+//! generates a short urban driving route's task queue, schedules it with a
+//! heuristic baseline and with FlexAI (fresh DQN parameters through the
+//! AOT-compiled PJRT path), and prints the §6 metrics side by side.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use hmai::config::EnvConfig;
+use hmai::env::Area;
+use hmai::harness;
+use hmai::platform::Platform;
+use hmai::runtime::Runtime;
+use hmai::sched::flexai::{FlexAI, FlexAIConfig};
+use hmai::sched::minmin::MinMin;
+use hmai::sched::Scheduler;
+use hmai::sim::{simulate, SimOptions};
+use hmai::util::table::{f2, pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    // 1. The platform: the paper's HMAI configuration (§8.2).
+    let platform = Platform::hmai();
+    println!(
+        "platform: {} ({} sub-accelerators, {:.1} peak TOPS)",
+        platform.name,
+        platform.len(),
+        platform.peak_tops()
+    );
+
+    // 2. The environment: a 150 m urban route → one task queue (Fig. 9).
+    let env = EnvConfig { area: Area::Urban, distances_m: vec![150.0], seed: 7 };
+    let queue = harness::make_queues(&env).remove(0);
+    println!(
+        "queue: {} tasks over {:.1} s ({:.0} tasks/s)",
+        queue.len(),
+        queue.route_duration_s,
+        queue.len() as f64 / queue.route_duration_s
+    );
+
+    // 3. Schedulers: Min-Min heuristic vs FlexAI (untrained Q-network —
+    //    run `cargo run --release --example train_flexai` for the real
+    //    agent; the deadline shield already makes the fresh agent safe).
+    let rt = Arc::new(Runtime::load_default()?);
+    let mut flexai = FlexAI::new(rt, FlexAIConfig { seed: 7, ..Default::default() })?;
+    flexai.set_training(false);
+    let mut minmin = MinMin::new();
+
+    let mut table = Table::new([
+        "Scheduler", "STMRate", "Wait (s)", "Energy (J)", "R_Balance", "MS/task", "Gvalue",
+    ]);
+    for sched in [&mut minmin as &mut dyn Scheduler, &mut flexai] {
+        let r = simulate(&queue, &platform, sched, SimOptions::default());
+        let s = &r.summary;
+        table.row([
+            s.scheduler.clone(),
+            pct(s.stm_rate()),
+            f2(s.wait_s),
+            f2(s.energy_j),
+            f2(s.r_balance),
+            f2(s.ms_per_task()),
+            f2(s.gvalue),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

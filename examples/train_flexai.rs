@@ -1,0 +1,125 @@
+//! End-to-end driver: train the FlexAI DQN on real task queues and prove
+//! every layer composes — the L1 Pallas kernels and L2 JAX train step run
+//! as AOT-compiled HLO under the rust RL loop (L3), on the same artifacts
+//! the serving path uses.  Python never runs here.
+//!
+//! Reproduces the Fig. 11 experiment end to end:
+//!   * N episodes, one task queue per episode (§8.3);
+//!   * logs the TD loss curve (written to `flexai_loss.csv`);
+//!   * saves a checkpoint;
+//!   * evaluates the trained agent vs Min-Min / ATA / SA / worst-case on a
+//!     held-out route and prints the Fig. 12-style comparison.
+//!
+//!     make artifacts && cargo run --release --example train_flexai
+//!
+//! Flags: --episodes N (default 4)  --episode-dist M (default 150)
+//!        --eval-dist M (default 250)  --seed S  --out FILE
+
+use hmai::config::{EnvConfig, ExperimentConfig, TrainConfig};
+use hmai::env::Area;
+use hmai::harness;
+use hmai::sched::Scheduler;
+use hmai::sim::{simulate, SimOptions};
+use hmai::util::cli::Args;
+use hmai::util::table::{f2, pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let episodes = args.get_usize("episodes", 4)?;
+    let episode_dist = args.get_f64("episode-dist", 150.0)?;
+    let eval_dist = args.get_f64("eval-dist", 250.0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let out = args.get_or("out", "flexai_ckpt.json").to_string();
+
+    let cfg = ExperimentConfig {
+        env: EnvConfig { area: Area::Urban, distances_m: vec![eval_dist], seed },
+        train: TrainConfig {
+            episodes,
+            episode_distance_m: episode_dist,
+            checkpoint: out.clone(),
+        },
+        ..Default::default()
+    };
+
+    // --- Train (Fig. 11) ---
+    println!("training FlexAI: {episodes} episodes x {episode_dist} m (UB)");
+    let t0 = std::time::Instant::now();
+    let outcome = harness::train_flexai(&cfg)?;
+    println!(
+        "trained in {:.1} s: {} decisions, {} SGD steps, {} target syncs",
+        t0.elapsed().as_secs_f64(),
+        outcome.agent.steps,
+        outcome.agent.train_steps,
+        outcome.agent.target_syncs
+    );
+
+    // Loss curve: console summary (per-decile means) + CSV.
+    let losses = &outcome.losses;
+    if !losses.is_empty() {
+        let mut csv = String::from("step,loss\n");
+        for (i, l) in losses.iter().enumerate() {
+            csv.push_str(&format!("{i},{l}\n"));
+        }
+        std::fs::write("flexai_loss.csv", csv)?;
+        println!("loss curve -> flexai_loss.csv ({} points)", losses.len());
+        let dec = losses.len().max(10) / 10;
+        let mut t = Table::new(["Decile", "Mean TD loss"]);
+        for d in 0..10 {
+            let lo = d * dec;
+            let hi = ((d + 1) * dec).min(losses.len());
+            if lo >= hi {
+                break;
+            }
+            let mean: f32 = losses[lo..hi].iter().sum::<f32>() / (hi - lo) as f32;
+            t.row([format!("{}%", (d + 1) * 10), format!("{mean:.4}")]);
+        }
+        t.print();
+    }
+
+    let mut per_ep = Table::new(["Episode", "Tasks", "STMRate", "Wait (s)", "MS/task"]);
+    for (i, s) in outcome.episode_summaries.iter().enumerate() {
+        per_ep.row([
+            (i + 1).to_string(),
+            s.tasks.to_string(),
+            pct(s.stm_rate()),
+            f2(s.wait_s),
+            f2(s.ms_per_task()),
+        ]);
+    }
+    per_ep.print();
+
+    hmai::sched::flexai::checkpoint::save(&outcome.agent, std::path::Path::new(&out))?;
+    println!("checkpoint -> {out}");
+
+    // --- Evaluate on a held-out route (Fig. 12-style) ---
+    println!("\nheld-out evaluation: {} m route (UB)", eval_dist);
+    let platform = cfg.platform()?;
+    let queue = harness::make_queues(&cfg.env).remove(0);
+    let mut agent = outcome.agent;
+    agent.set_training(false);
+
+    let mut table = Table::new([
+        "Scheduler", "STMRate", "Time (s)", "Wait (s)", "Energy (J)", "R_Balance", "MS/task",
+    ]);
+    let mut run = |sched: &mut dyn Scheduler| {
+        sched.reset();
+        let r = simulate(&queue, &platform, sched, SimOptions::default());
+        let s = &r.summary;
+        table.row([
+            s.scheduler.clone(),
+            pct(s.stm_rate()),
+            f2(s.total_time_s),
+            f2(s.wait_s),
+            f2(s.energy_j),
+            f2(s.r_balance),
+            f2(s.ms_per_task()),
+        ]);
+    };
+    run(&mut agent);
+    for name in hmai::sched::BASELINES {
+        let mut b = hmai::sched::by_name(name, seed).expect("baseline exists");
+        run(b.as_mut());
+    }
+    table.print();
+    Ok(())
+}

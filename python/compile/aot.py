@@ -1,0 +1,108 @@
+"""AOT compile path: lower the L2 model (with L1 Pallas kernels inlined) to
+HLO *text* artifacts the rust runtime loads via the `xla` crate.
+
+Interchange format is HLO text, NOT `lowered.compile()`/`.serialize()`:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Run once via `make artifacts`; emits
+    artifacts/qnet_infer.hlo.txt         Q(s) for a single state   [1, IN]
+    artifacts/qnet_infer_batch.hlo.txt   Q(s) for a camera burst   [B, IN]
+    artifacts/qnet_train.hlo.txt         one DQN SGD step          batch=64
+    artifacts/qnet_init.hlo.txt          seeded parameter init
+    artifacts/meta.json                  dims + hyperparameters for rust
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_specs():
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for s in model.PARAM_SHAPES]
+
+
+def lower_entries():
+    """Return {name: lowered} for every AOT entry point."""
+    f32, i32 = jnp.float32, jnp.int32
+    p = _param_specs()
+    s1 = jax.ShapeDtypeStruct((1, model.IN_DIM), f32)
+    sb = jax.ShapeDtypeStruct((model.INFER_BATCH, model.IN_DIM), f32)
+    B = model.TRAIN_BATCH
+    batch = [
+        jax.ShapeDtypeStruct((B, model.IN_DIM), f32),   # s
+        jax.ShapeDtypeStruct((B,), i32),                # a
+        jax.ShapeDtypeStruct((B,), f32),                # r
+        jax.ShapeDtypeStruct((B, model.IN_DIM), f32),   # s2
+        jax.ShapeDtypeStruct((B,), f32),                # done
+    ]
+    return {
+        "qnet_infer": jax.jit(model.qnet_infer_flat).lower(*p, s1),
+        "qnet_infer_batch": jax.jit(model.qnet_infer_flat).lower(*p, sb),
+        "qnet_train": jax.jit(model.qnet_train_flat).lower(*p, *p, *batch),
+        "qnet_init": jax.jit(model.qnet_init_flat).lower(
+            jax.ShapeDtypeStruct((), i32)
+        ),
+    }
+
+
+def write_meta(out_dir: str) -> None:
+    meta = {
+        "n_slots": model.N_SLOTS,
+        "task_feats": model.TASK_FEATS,
+        "slot_feats": model.SLOT_FEATS,
+        "in_dim": model.IN_DIM,
+        "h1": model.H1,
+        "h2": model.H2,
+        "out_dim": model.OUT_DIM,
+        "train_batch": model.TRAIN_BATCH,
+        "infer_batch": model.INFER_BATCH,
+        "gamma": model.GAMMA,
+        "lr": model.LR,
+        "param_names": model.PARAM_NAMES,
+        "param_shapes": [list(s) for s in model.PARAM_SHAPES],
+        "entries": [
+            "qnet_infer", "qnet_infer_batch", "qnet_train", "qnet_init",
+        ],
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="directory for *.hlo.txt + meta.json")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, lowered in lower_entries().items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"aot: wrote {path} ({len(text)} chars)")
+    write_meta(args.out_dir)
+    print(f"aot: wrote {os.path.join(args.out_dir, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,255 @@
+"""L1 — Pallas fused linear kernels for the FlexAI Q-network.
+
+The FLOP-dominant op of both the scheduling (inference) path and the DQN
+train step is the dense layer ``y = relu(x @ w + b)``.  We implement it as a
+tiled Pallas kernel plus the two backward kernels (dX, dW) and wire them
+into JAX autodiff with ``jax.custom_vjp`` so the L2 model (model.py) can be
+differentiated end-to-end while the hot matmuls stay in Pallas.
+
+TPU adaptation (see DESIGN.md §Hardware-Adaptation): tiles default to
+(128, 128) output blocks with a 128-deep reduction so each grid step is one
+MXU-shaped systolic pass; BlockSpec index maps express the HBM->VMEM
+schedule.  All ``pallas_call``s use ``interpret=True`` — the CPU PJRT
+backend cannot execute Mosaic custom-calls, and interpret mode lowers to
+plain HLO so the AOT artifacts run anywhere (aot_recipe / load_hlo notes).
+
+Shapes that do not divide the block sizes are zero-padded by the wrappers
+and sliced back afterwards; zero padding is exact for matmul + bias + relu.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block sizes, MXU-oriented (128x128 systolic array).
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad2(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Zero-pad a 2-D array up to (rows, cols)."""
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _pad1(x: jax.Array, n: int) -> jax.Array:
+    if x.shape[0] == n:
+        return x
+    return jnp.pad(x, (0, n - x.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# Forward: y = (x @ w + b), optionally ReLU-fused.
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, w_ref, b_ref, o_ref, *, k_steps: int, relu: bool):
+    """One (bm, bn) output tile; grid axis 2 walks the K reduction.
+
+    The output ref doubles as the accumulator: the same (i, j) block is
+    revisited for every k step (see the index maps in ``_fused_linear_raw``),
+    so it lives in VMEM across the reduction.  Bias + activation are applied
+    exactly once, on the final k step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        y = o_ref[...] + b_ref[...][None, :]
+        o_ref[...] = jnp.maximum(y, 0.0) if relu else y
+
+
+def _fused_linear_raw(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    relu: bool,
+    bm: int = BLOCK_M,
+    bn: int = BLOCK_N,
+    bk: int = BLOCK_K,
+) -> jax.Array:
+    """Tiled fused linear over padded operands."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims disagree: {k} vs {k2}"
+    # Shrink blocks to the (padded) problem so tiny layers stay single-tile.
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    mp, np_, kp = bm * _ceil_div(m, bm), bn * _ceil_div(n, bn), bk * _ceil_div(k, bk)
+    xp, wp, bp = _pad2(x, mp, kp), _pad2(w, kp, np_), _pad1(b, np_)
+    k_steps = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, k_steps=k_steps, relu=relu),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bn,), lambda i, j, s: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels.
+#   dX = g_eff @ w.T        (g_eff already ReLU-masked by the vjp wrapper)
+#   dW = x.T @ g_eff
+# ---------------------------------------------------------------------------
+
+
+def _dx_kernel(g_ref, w_ref, o_ref, *, k_steps: int):
+    """dX tile: accumulate g(bm, bn) @ w(bk, bn).T over the N reduction."""
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        g_ref[...], w_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def _matmul_nt_raw(g: jax.Array, w: jax.Array, bm: int, bn: int, bk: int) -> jax.Array:
+    """g[M,N] @ w[K,N].T -> [M,K]; reduction runs over N."""
+    m, n = g.shape
+    k, n2 = w.shape
+    assert n == n2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    mp, np_, kp = bm * _ceil_div(m, bm), bn * _ceil_div(n, bn), bk * _ceil_div(k, bk)
+    gp, wp = _pad2(g, mp, np_), _pad2(w, kp, np_)
+    n_steps = np_ // bn
+
+    out = pl.pallas_call(
+        functools.partial(_dx_kernel, k_steps=n_steps),
+        grid=(mp // bm, kp // bk, n_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (j, s)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, kp), jnp.float32),
+        interpret=True,
+    )(gp, wp)
+    return out[:m, :k]
+
+
+def _dw_kernel(x_ref, g_ref, o_ref, *, m_steps: int):
+    """dW tile: accumulate x(bm, bk).T @ g(bm, bn) over the batch reduction."""
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].T, g_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _matmul_tn_raw(x: jax.Array, g: jax.Array, bm: int, bn: int, bk: int) -> jax.Array:
+    """x[M,K].T @ g[M,N] -> [K,N]; reduction runs over M (the batch)."""
+    m, k = x.shape
+    m2, n = g.shape
+    assert m == m2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    mp, np_, kp = bm * _ceil_div(m, bm), bn * _ceil_div(n, bn), bk * _ceil_div(k, bk)
+    xp, gp = _pad2(x, mp, kp), _pad2(g, mp, np_)
+    m_steps = mp // bm
+
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, m_steps=m_steps),
+        grid=(kp // bk, np_ // bn, m_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (s, i)),
+            pl.BlockSpec((bm, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((kp, np_), jnp.float32),
+        interpret=True,
+    )(xp, gp)
+    return out[:k, :n]
+
+
+# ---------------------------------------------------------------------------
+# Autodiff wiring.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = False):
+    """``relu(x @ w + b)`` (or affine if ``relu=False``) as a Pallas kernel.
+
+    Differentiable via custom_vjp: the backward pass reuses the Pallas
+    matmul kernels (dX = g@w.T, dW = x.T@g) with the ReLU mask recovered
+    from the forward output (y > 0 <=> pre-activation > 0 for ReLU).
+    """
+    return _fused_linear_raw(x, w, b, relu)
+
+
+def _fused_linear_fwd(x, w, b, relu):
+    y = _fused_linear_raw(x, w, b, relu)
+    return y, (x, w, y)
+
+
+def _fused_linear_bwd(relu, res, g):
+    x, w, y = res
+    g_eff = jnp.where(y > 0.0, g, 0.0) if relu else g
+    dx = _matmul_nt_raw(g_eff, w, BLOCK_M, BLOCK_N, BLOCK_K)
+    dw = _matmul_tn_raw(x, g_eff, BLOCK_M, BLOCK_N, BLOCK_K)
+    db = jnp.sum(g_eff, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)
+
+
+def vmem_footprint_bytes(
+    m: int, k: int, n: int, bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K
+) -> int:
+    """Estimated VMEM bytes live per grid step of the forward kernel.
+
+    x-tile + w-tile + bias-tile + output/accumulator tile, fp32.  Used by
+    the §Perf analysis (DESIGN.md): the tile set must fit a ~16 MiB VMEM
+    with room for double-buffering (×2 on the streamed operands).
+    """
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    x_t, w_t, b_t, o_t = bm * bk, bk * bn, bn, bm * bn
+    # Streamed operands are double-buffered; the accumulator is resident.
+    return 4 * (2 * (x_t + w_t + b_t) + o_t)
+
+
+def mxu_utilization_estimate(
+    m: int, k: int, n: int, bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K
+) -> float:
+    """Fraction of MXU lanes doing useful work (padding overhead model)."""
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    mp = bm * _ceil_div(m, bm)
+    np_ = bn * _ceil_div(n, bn)
+    kp = bk * _ceil_div(k, bk)
+    useful = m * k * n
+    issued = mp * kp * np_
+    return useful / issued

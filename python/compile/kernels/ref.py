@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 model.
+
+Everything in this file is deliberately written with plain jax.numpy ops —
+no Pallas, no custom_vjp — so pytest can diff the optimized path against an
+independent implementation (values *and* gradients).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_fused_linear(x, w, b, relu: bool = False):
+    """Oracle for kernels.fused_linear."""
+    y = x @ w + b[None, :]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def ref_qnet_fwd(params: List[jax.Array], x: jax.Array) -> jax.Array:
+    """Oracle for model.qnet_fwd.  params = [w1, b1, w2, b2, w3, b3]."""
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = jnp.maximum(x @ w1 + b1[None, :], 0.0)
+    h2 = jnp.maximum(h1 @ w2 + b2[None, :], 0.0)
+    return h2 @ w3 + b3[None, :]
+
+
+def ref_td_loss(
+    params: List[jax.Array],
+    targ_params: List[jax.Array],
+    s: jax.Array,
+    a: jax.Array,
+    r: jax.Array,
+    s2: jax.Array,
+    done: jax.Array,
+    gamma: float,
+) -> jax.Array:
+    """Oracle for the DQN TD loss (paper §7.1: L = (y - max Q)^2 with
+    y = r + gamma * max_a' Q_targ(s'))."""
+    q = ref_qnet_fwd(params, s)
+    q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+    q_next = ref_qnet_fwd(targ_params, s2)
+    y = r + gamma * (1.0 - done) * jnp.max(q_next, axis=1)
+    y = jax.lax.stop_gradient(y)
+    return jnp.mean((y - q_sa) ** 2)
+
+
+def ref_sgd_step(
+    params: List[jax.Array], grads: List[jax.Array], lr: float
+) -> List[jax.Array]:
+    return [p - lr * g for p, g in zip(params, grads)]
+
+
+def ref_train_step(
+    params: List[jax.Array],
+    targ_params: List[jax.Array],
+    s, a, r, s2, done,
+    gamma: float,
+    lr: float,
+) -> Tuple[List[jax.Array], jax.Array]:
+    """Oracle for model.train_step: one SGD step on the TD loss."""
+    loss, grads = jax.value_and_grad(ref_td_loss)(
+        params, targ_params, s, a, r, s2, done, gamma
+    )
+    return ref_sgd_step(params, grads, lr), loss

@@ -1,0 +1,132 @@
+"""L2 — the FlexAI Q-network and DQN train step, in JAX, on Pallas kernels.
+
+Topology follows the paper (§8.3): two fully-connected layers of 256 and 64
+neurons with ReLU, then a linear head producing one Q value per accelerator
+slot.  (The paper lists a softmax after the head; for Q-value regression a
+softmax would destroy the TD target, so the head is linear — recorded as a
+deviation in DESIGN.md.)
+
+State layout (must match rust/src/sched/flexai/featurize.rs):
+    [ task one-hot (3: YOLO | SSD | GOTURN),
+      amount_norm, layer_num_norm, safety_time_norm,           # Task-Info
+      per-slot x N_SLOTS:                                      # HW-Info
+        [ valid, kind_so, kind_si, kind_mm,
+          queue_time_norm, energy_share, rel_competitiveness, est_time_norm ] ]
+IN_DIM = 6 + 8 * N_SLOTS;  OUT_DIM = N_SLOTS.
+
+Everything here is build-time only: aot.py lowers `qnet_infer`,
+`qnet_infer_batch`, `qnet_train` and `qnet_init` to HLO text which the rust
+runtime executes through PJRT.  Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_linear import fused_linear
+
+# ---------------------------------------------------------------------------
+# Dimensions — single source of truth, exported to rust via artifacts/meta.json.
+# ---------------------------------------------------------------------------
+N_SLOTS = 16              # max accelerator slots (HMAI uses 11: 4 SO + 4 SI + 3 MM)
+TASK_FEATS = 6            # task one-hot(3) + amount + layer_num + safety_time
+SLOT_FEATS = 8
+IN_DIM = TASK_FEATS + SLOT_FEATS * N_SLOTS   # 134
+H1 = 256                  # paper: first FC layer
+H2 = 64                   # paper: second FC layer
+OUT_DIM = N_SLOTS
+TRAIN_BATCH = 64
+INFER_BATCH = 30          # one camera burst (30 cameras firing together)
+GAMMA = 0.95
+LR = 0.01                 # paper: learning rate 0.01
+
+PARAM_SHAPES: List[Tuple[int, ...]] = [
+    (IN_DIM, H1), (H1,), (H1, H2), (H2,), (H2, OUT_DIM), (OUT_DIM,),
+]
+PARAM_NAMES = ["w1", "b1", "w2", "b2", "w3", "b3"]
+
+
+def init_params(seed: jax.Array) -> List[jax.Array]:
+    """He-initialised parameters from an int32 seed (AOT entry `qnet_init`)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    w1 = jax.random.normal(ks[0], (IN_DIM, H1), jnp.float32) * jnp.sqrt(2.0 / IN_DIM)
+    w2 = jax.random.normal(ks[1], (H1, H2), jnp.float32) * jnp.sqrt(2.0 / H1)
+    w3 = jax.random.normal(ks[2], (H2, OUT_DIM), jnp.float32) * jnp.sqrt(2.0 / H2)
+    return [w1, jnp.zeros(H1), w2, jnp.zeros(H2), w3, jnp.zeros(OUT_DIM)]
+
+
+def qnet_fwd(params: List[jax.Array], x: jax.Array) -> jax.Array:
+    """Q(s, ·) for a batch of states — three fused Pallas layers."""
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = fused_linear(x, w1, b1, True)
+    h2 = fused_linear(h1, w2, b2, True)
+    return fused_linear(h2, w3, b3, False)
+
+
+def td_loss(
+    params: List[jax.Array],
+    targ_params: List[jax.Array],
+    s: jax.Array,
+    a: jax.Array,
+    r: jax.Array,
+    s2: jax.Array,
+    done: jax.Array,
+    gamma: float = GAMMA,
+) -> jax.Array:
+    """Paper §7.1: L = (y_i - Q(s_i))^2, y_i = r_i + gamma * max_a Q_targ(s')."""
+    q = qnet_fwd(params, s)
+    q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+    q_next = qnet_fwd(targ_params, s2)
+    y = r + gamma * (1.0 - done) * jnp.max(q_next, axis=1)
+    y = jax.lax.stop_gradient(y)
+    return jnp.mean((y - q_sa) ** 2)
+
+
+def train_step(
+    params: List[jax.Array],
+    targ_params: List[jax.Array],
+    s: jax.Array,
+    a: jax.Array,
+    r: jax.Array,
+    s2: jax.Array,
+    done: jax.Array,
+    gamma: float = GAMMA,
+    lr: float = LR,
+) -> Tuple[List[jax.Array], jax.Array]:
+    """One SGD step of EvalNet against TargNet (AOT entry `qnet_train`).
+
+    Returns (updated params, scalar loss).  TargNet parameters are inputs,
+    never updated here — rust copies EvalNet -> TargNet every
+    `target_sync_every` steps (paper: "copied directly every fixed time").
+    """
+    loss, grads = jax.value_and_grad(td_loss)(
+        params, targ_params, s, a, r, s2, done, gamma
+    )
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return new_params, loss
+
+
+# --- flat-signature wrappers for AOT lowering (rust passes positional args) ---
+
+
+def qnet_infer_flat(w1, b1, w2, b2, w3, b3, x):
+    return (qnet_fwd([w1, b1, w2, b2, w3, b3], x),)
+
+
+def qnet_train_flat(w1, b1, w2, b2, w3, b3,
+                    tw1, tb1, tw2, tb2, tw3, tb3,
+                    s, a, r, s2, done):
+    new_params, loss = train_step(
+        [w1, b1, w2, b2, w3, b3],
+        [tw1, tb1, tw2, tb2, tw3, tb3],
+        s, a, r, s2, done,
+    )
+    return (*new_params, loss)
+
+
+def qnet_init_flat(seed):
+    return tuple(init_params(seed))

@@ -1,0 +1,105 @@
+"""AOT pipeline: every entry lowers to parseable HLO text and meta.json is
+consistent with model dims.  Also round-trips qnet_infer through jax's own
+CPU backend from the lowered module to pin down numerics before rust runs
+the same HLO through PJRT."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels.ref import ref_qnet_fwd
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def entries():
+    return aot.lower_entries()
+
+
+def test_all_entries_lower(entries):
+    assert set(entries) == {
+        "qnet_infer", "qnet_infer_batch", "qnet_train", "qnet_init",
+    }
+
+
+@pytest.mark.parametrize(
+    "name", ["qnet_infer", "qnet_infer_batch", "qnet_train", "qnet_init"]
+)
+def test_hlo_text_structure(entries, name):
+    text = aot.to_hlo_text(entries[name])
+    assert "ENTRY" in text and "ROOT" in text
+    # Pallas (interpret) must have lowered to plain HLO: no custom-calls that
+    # the rust CPU PJRT client cannot execute.
+    assert "custom-call" not in text, f"{name} contains a custom-call"
+
+
+def _entry_param_count(text: str) -> int:
+    """Count parameters of the ENTRY computation only (subcomputations from
+    the pallas-lowered loops have their own parameter() instructions)."""
+    n, in_entry = 0, False
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            in_entry = True
+            continue
+        if in_entry:
+            if line.startswith("}"):
+                break
+            if "parameter(" in line:
+                n += 1
+    return n
+
+
+def test_infer_hlo_param_count(entries):
+    # 6 params + 1 state input
+    assert _entry_param_count(aot.to_hlo_text(entries["qnet_infer"])) == 7
+
+
+def test_train_hlo_param_count(entries):
+    # 6 eval + 6 target params + 5 batch tensors
+    assert _entry_param_count(aot.to_hlo_text(entries["qnet_train"])) == 17
+
+
+def test_meta_roundtrip(tmp_path):
+    aot.write_meta(str(tmp_path))
+    meta = json.loads((tmp_path / "meta.json").read_text())
+    assert meta["in_dim"] == model.IN_DIM == (
+        meta["task_feats"] + meta["slot_feats"] * meta["n_slots"]
+    )
+    assert meta["out_dim"] == model.OUT_DIM
+    assert meta["param_shapes"] == [list(s) for s in model.PARAM_SHAPES]
+    assert meta["lr"] == model.LR and meta["gamma"] == model.GAMMA
+
+
+def test_lowered_infer_numerics(entries):
+    """Compile the lowered infer module in-process and diff against ref."""
+    exe = entries["qnet_infer"].compile()
+    params = model.init_params(jnp.int32(3))
+    x = jax.random.normal(jax.random.PRNGKey(11), (1, model.IN_DIM))
+    (got,) = exe(*params, x)
+    np.testing.assert_allclose(got, ref_qnet_fwd(params, x), rtol=1e-4, atol=1e-4)
+
+
+def test_lowered_train_numerics(entries):
+    exe = entries["qnet_train"].compile()
+    p = model.init_params(jnp.int32(4))
+    t = model.init_params(jnp.int32(5))
+    B = model.TRAIN_BATCH
+    ks = jax.random.split(jax.random.PRNGKey(12), 4)
+    s = jax.random.normal(ks[0], (B, model.IN_DIM))
+    a = jax.random.randint(ks[1], (B,), 0, model.OUT_DIM)
+    r = jax.random.normal(ks[2], (B,))
+    s2 = jax.random.normal(ks[3], (B, model.IN_DIM))
+    done = jnp.zeros(B)
+    out = exe(*p, *t, s, a, r, s2, done)
+    assert len(out) == 7  # 6 new params + loss
+    new_p, loss = out[:6], out[6]
+    want_p, want_loss = model.train_step(p, t, s, a, r, s2, done)
+    np.testing.assert_allclose(loss, want_loss, rtol=1e-4, atol=1e-5)
+    for g, w in zip(new_p, want_p):
+        np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,178 @@
+"""L1 correctness: Pallas fused_linear vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel layer: values and
+gradients must match ref.py across a hypothesis sweep of shapes, with and
+without the fused ReLU, including shapes that do not divide the MXU block
+sizes (exercising the pad/slice path).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_linear import (
+    BLOCK_K,
+    BLOCK_M,
+    BLOCK_N,
+    fused_linear,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import ref_fused_linear
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _mk(m, k, n, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return _rand(ks[0], m, k), _rand(ks[1], k, n), _rand(ks[2], n)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape smoke tests (the exact layer shapes the Q-network uses).
+# ---------------------------------------------------------------------------
+
+QNET_SHAPES = [(1, 134, 256), (1, 256, 64), (1, 64, 16),
+               (64, 134, 256), (64, 256, 64), (64, 64, 16),
+               (30, 134, 256)]
+
+
+@pytest.mark.parametrize("m,k,n", QNET_SHAPES)
+@pytest.mark.parametrize("relu", [False, True])
+def test_qnet_layer_shapes(m, k, n, relu):
+    x, w, b = _mk(m, k, n, seed=m * 7 + k + n + int(relu))
+    got = fused_linear(x, w, b, relu)
+    want = ref_fused_linear(x, w, b, relu)
+    # atol covers fp32 accumulation-order differences near ReLU zeros.
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", QNET_SHAPES)
+def test_qnet_layer_grads(m, k, n):
+    x, w, b = _mk(m, k, n, seed=m + k + n)
+
+    def f_pallas(x, w, b):
+        return jnp.sum(jnp.sin(fused_linear(x, w, b, True)))
+
+    def f_ref(x, w, b):
+        return jnp.sum(jnp.sin(ref_fused_linear(x, w, b, True)))
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gp, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep: arbitrary shapes, both activations.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 160),
+    n=st.integers(1, 140),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(m, k, n, relu, seed):
+    x, w, b = _mk(m, k, n, seed)
+    got = fused_linear(x, w, b, relu)
+    assert got.shape == (m, n)
+    want = ref_fused_linear(x, w, b, relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 100),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_grad_matches_ref(m, k, n, seed):
+    x, w, b = _mk(m, k, n, seed)
+
+    def f_pallas(x, w, b):
+        return jnp.sum(fused_linear(x, w, b, True) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref_fused_linear(x, w, b, True) ** 2)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gp, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Edge cases and structural properties.
+# ---------------------------------------------------------------------------
+
+
+def test_relu_clamps_negative():
+    x = -jnp.ones((4, 8))
+    w = jnp.eye(8)
+    b = jnp.zeros(8)
+    y = fused_linear(x, w, b, True)
+    assert float(jnp.max(y)) == 0.0
+
+
+def test_bias_broadcast():
+    x = jnp.zeros((3, 5))
+    w = jnp.zeros((5, 7))
+    b = jnp.arange(7, dtype=jnp.float32)
+    y = fused_linear(x, w, b, False)
+    np.testing.assert_allclose(y, jnp.broadcast_to(b, (3, 7)))
+
+
+def test_blocks_larger_than_problem():
+    # Whole problem fits one tile: grid collapses to (1,1,1).
+    x, w, b = _mk(2, 3, 4, seed=0)
+    np.testing.assert_allclose(
+        fused_linear(x, w, b, False), ref_fused_linear(x, w, b, False),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_exact_block_multiples():
+    m, k, n = BLOCK_M, BLOCK_K, BLOCK_N
+    x, w, b = _mk(m, k, n, seed=1)
+    np.testing.assert_allclose(
+        fused_linear(x, w, b, True), ref_fused_linear(x, w, b, True),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_jit_compatible():
+    x, w, b = _mk(8, 16, 8, seed=2)
+    f = jax.jit(lambda x, w, b: fused_linear(x, w, b, True))
+    np.testing.assert_allclose(
+        f(x, w, b), ref_fused_linear(x, w, b, True), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# §Perf analysis helpers (DESIGN.md §Hardware-Adaptation).
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_footprint_fits_budget():
+    # Every Q-network layer's tile set must fit a 16 MiB VMEM.
+    for m, k, n in QNET_SHAPES:
+        assert vmem_footprint_bytes(m, k, n) < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_bounds():
+    for m, k, n in QNET_SHAPES:
+        u = mxu_utilization_estimate(m, k, n)
+        assert 0.0 < u <= 1.0
+    # Perfectly-tiled problem wastes nothing.
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0

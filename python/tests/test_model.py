@@ -1,0 +1,127 @@
+"""L2 correctness: Q-network forward + DQN train step vs pure-jnp oracle,
+plus learning-dynamics sanity (loss decreases, params move, target net
+frozen)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import ref_qnet_fwd, ref_td_loss, ref_train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jnp.int32(0))
+
+
+@pytest.fixture(scope="module")
+def targ_params():
+    return model.init_params(jnp.int32(1))
+
+
+def _batch(seed, B=model.TRAIN_BATCH):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    s = jax.random.normal(ks[0], (B, model.IN_DIM), jnp.float32)
+    a = jax.random.randint(ks[1], (B,), 0, model.OUT_DIM)
+    r = jax.random.normal(ks[2], (B,), jnp.float32)
+    s2 = jax.random.normal(ks[3], (B, model.IN_DIM), jnp.float32)
+    done = (jax.random.uniform(ks[4], (B,)) < 0.1).astype(jnp.float32)
+    return s, a, r, s2, done
+
+
+# ---------------------------------------------------------------------------
+# Structure
+# ---------------------------------------------------------------------------
+
+
+def test_param_shapes(params):
+    assert [p.shape for p in params] == [tuple(s) for s in model.PARAM_SHAPES]
+
+
+def test_init_deterministic():
+    a = model.init_params(jnp.int32(42))
+    b = model.init_params(jnp.int32(42))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_init_seed_sensitivity():
+    a = model.init_params(jnp.int32(0))
+    b = model.init_params(jnp.int32(1))
+    assert float(jnp.max(jnp.abs(a[0] - b[0]))) > 0.0
+
+
+def test_fwd_shape(params):
+    x = jnp.zeros((5, model.IN_DIM))
+    assert model.qnet_fwd(params, x).shape == (5, model.OUT_DIM)
+
+
+# ---------------------------------------------------------------------------
+# Numerics vs oracle
+# ---------------------------------------------------------------------------
+
+
+def test_fwd_matches_ref(params):
+    x = jax.random.normal(jax.random.PRNGKey(7), (9, model.IN_DIM))
+    np.testing.assert_allclose(
+        model.qnet_fwd(params, x), ref_qnet_fwd(params, x),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_td_loss_matches_ref(params, targ_params):
+    s, a, r, s2, done = _batch(3)
+    got = model.td_loss(params, targ_params, s, a, r, s2, done)
+    want = ref_td_loss(params, targ_params, s, a, r, s2, done, model.GAMMA)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_train_step_matches_ref(params, targ_params):
+    s, a, r, s2, done = _batch(4)
+    new_p, loss = model.train_step(params, targ_params, s, a, r, s2, done)
+    ref_p, ref_loss = ref_train_step(
+        params, targ_params, s, a, r, s2, done, model.GAMMA, model.LR
+    )
+    np.testing.assert_allclose(loss, ref_loss, rtol=1e-4, atol=1e-5)
+    for g, w in zip(new_p, ref_p):
+        np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Learning dynamics
+# ---------------------------------------------------------------------------
+
+
+def test_train_step_moves_params(params, targ_params):
+    s, a, r, s2, done = _batch(5)
+    new_p, _ = model.train_step(params, targ_params, s, a, r, s2, done)
+    assert any(float(jnp.max(jnp.abs(n - o))) > 0 for n, o in zip(new_p, params))
+
+
+def test_repeated_steps_reduce_loss(params, targ_params):
+    """On a fixed batch (fixed TD target), SGD must reduce the loss."""
+    s, a, r, s2, done = _batch(6)
+    step = jax.jit(model.train_step)
+    p = params
+    first = None
+    for _ in range(20):
+        p, loss = step(p, targ_params, s, a, r, s2, done)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.9
+
+
+def test_done_masks_bootstrap(params, targ_params):
+    """done=1 must remove the gamma * max Q(s') term from the target."""
+    s, a, r, s2, _ = _batch(8, B=4)
+    done1 = jnp.ones(4, jnp.float32)
+    loss_done = model.td_loss(params, targ_params, s, a, r, s2, done1)
+    q = model.qnet_fwd(params, s)
+    q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+    np.testing.assert_allclose(
+        loss_done, jnp.mean((r - q_sa) ** 2), rtol=1e-4, atol=1e-5
+    )

@@ -1,0 +1,46 @@
+//! Fig. 1 + Table 5: frame-rate requirements per (area, scenario, camera
+//! group) and the per-model FPS requirements they induce.  Asserts the
+//! paper's headline totals (UB: DET 870 / TRA 840 / reverse 740) hold.
+
+#[path = "common.rs"]
+mod common;
+
+use hmai::env::camera_hz::{aggregate_fps, model_fps_requirement};
+use hmai::env::{Area, Scenario, ALL_AREAS, ALL_SCENARIOS};
+use hmai::util::bench::section;
+use hmai::workload::ModelKind;
+
+fn main() {
+    section("Fig. 1 — Camera_HZ(area, scenario, group)");
+    println!("{}", hmai::reports::render("fig1").unwrap());
+
+    section("Table 5 — per-model FPS requirements (urban)");
+    println!("{}", hmai::reports::render("table5").unwrap());
+
+    section("requirement matrix across areas");
+    for a in ALL_AREAS {
+        for s in ALL_SCENARIOS {
+            if s == Scenario::Reverse && !a.allows_reverse() {
+                continue;
+            }
+            println!(
+                "{:4} {:3}  DET {:6.0}  TRA {:6.0}  YOLO {:5.0}  SSD {:5.0}  GOTURN {:5.0}",
+                a.name(),
+                s.name(),
+                aggregate_fps(a, s, false),
+                aggregate_fps(a, s, true),
+                model_fps_requirement(a, s, ModelKind::Yolo),
+                model_fps_requirement(a, s, ModelKind::Ssd),
+                model_fps_requirement(a, s, ModelKind::Goturn),
+            );
+        }
+    }
+
+    // Paper checks (Table 5).
+    let ub = Area::Urban;
+    assert!((aggregate_fps(ub, Scenario::GoStraight, false) - 870.0).abs() < 1.0);
+    assert!((aggregate_fps(ub, Scenario::GoStraight, true) - 840.0).abs() < 1.0);
+    assert!((aggregate_fps(ub, Scenario::Turn, false) - 950.0).abs() < 1.0);
+    assert!((aggregate_fps(ub, Scenario::Reverse, false) - 740.0).abs() < 1.0);
+    println!("\nfig1/table5 OK: paper totals reproduced");
+}

@@ -1,0 +1,63 @@
+//! Fig. 2 (+ Table 9): energy and resource utilization of homogeneous
+//! platforms vs the heterogeneous HMAI across the three urban scenarios,
+//! via the exhaustive allocation search.  Asserts the paper's shape: HMAI
+//! has the lowest power and the highest utilization in every scenario.
+
+#[path = "common.rs"]
+mod common;
+
+use hmai::env::{Area, ALL_SCENARIOS};
+use hmai::platform::alloc;
+use hmai::util::bench::{section, Bencher};
+use hmai::util::table::{f2, pct, Table};
+
+fn main() {
+    let area = Area::Urban;
+    let platforms: [(&str, (usize, usize, usize)); 4] = [
+        ("13xSconvOD", (13, 0, 0)),
+        ("13xSconvIC", (0, 13, 0)),
+        ("12xMconvMC", (0, 0, 12)),
+        ("HMAI(4,4,3)", (4, 4, 3)),
+    ];
+
+    section("Fig. 2 — power + utilization, homogeneous vs HMAI (urban)");
+    let mut t = Table::new(["Platform", "Scenario", "Power (W)", "Utilization"]);
+    let mut hmai_vals = Vec::new();
+    let mut homo_vals: Vec<(String, hmai::env::Scenario, f64, f64)> = Vec::new();
+    for (name, counts) in platforms {
+        for s in ALL_SCENARIOS {
+            let reqs = alloc::requirements(area, s);
+            let (a, u) = alloc::best_allocation(counts, &reqs)
+                .unwrap_or_else(|| panic!("{name} infeasible in {s:?}"));
+            let p = alloc::power_w_provisioned(&a, &reqs, counts);
+            t.row([name.to_string(), s.name().to_string(), f2(p), pct(u)]);
+            if name.starts_with("HMAI") {
+                hmai_vals.push((s, p, u));
+            } else {
+                homo_vals.push((name.to_string(), s, p, u));
+            }
+        }
+    }
+    t.print();
+
+    section("Table 9 — best allocation on (4, 4, 3)");
+    println!("{}", hmai::reports::render("table9").unwrap());
+
+    // Paper shape: HMAI strictly better on both axes, every scenario.
+    for (s, hp, hu) in &hmai_vals {
+        for (name, hs, p, u) in &homo_vals {
+            if hs == s {
+                assert!(hp < p, "{name} {s:?}: HMAI power {hp} !< {p}");
+                assert!(hu > u, "{name} {s:?}: HMAI util {hu} !> {u}");
+            }
+        }
+    }
+
+    section("microbench — allocation search");
+    let mut b = Bencher::new();
+    let reqs = alloc::requirements(area, hmai::env::Scenario::GoStraight);
+    b.bench("best_allocation (4,4,3) exhaustive", || {
+        std::hint::black_box(alloc::best_allocation((4, 4, 3), &reqs));
+    });
+    println!("\nfig2/table9 OK: HMAI dominates homogeneous on power and utilization");
+}

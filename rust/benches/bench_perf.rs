@@ -1,0 +1,98 @@
+//! Hot-path microbenchmarks (§Perf of EXPERIMENTS.md): the scheduler
+//! decision pipeline (featurize → PJRT Q-inference → pick), the DQN train
+//! step, the discrete-event engine, and the baseline schedulers'
+//! per-decision costs.
+
+#[path = "common.rs"]
+mod common;
+
+use hmai::config::EnvConfig;
+use hmai::env::Area;
+use hmai::harness;
+use hmai::metrics::NormScales;
+use hmai::platform::Platform;
+use hmai::runtime::TrainBatch;
+use hmai::sched::flexai::featurize::featurize;
+use hmai::sched::Scheduler;
+use hmai::sim::{simulate, ShadowState, SimOptions};
+use hmai::util::bench::{section, Bencher};
+
+fn main() -> anyhow::Result<()> {
+    let rt = common::runtime()?;
+    let platform = Platform::hmai();
+    let env = EnvConfig { area: Area::Urban, distances_m: vec![60.0], seed: 1 };
+    let queue = harness::make_queues(&env).remove(0);
+    let scales = NormScales::for_queue(&queue, &platform);
+    let mut state = ShadowState::new(&platform, scales);
+    let task = queue.tasks[0].clone();
+
+    section("L3 engine primitives");
+    let mut b = Bencher::new();
+    b.bench("ShadowState::clone (11 accels)", || {
+        std::hint::black_box(state.clone());
+    });
+    b.bench("ShadowState::apply", || {
+        let mut s = state.clone();
+        std::hint::black_box(s.apply(&task, 3));
+    });
+    let mut feat = vec![0.0f32; rt.meta.in_dim];
+    b.bench("featurize (134-dim state)", || {
+        std::hint::black_box(featurize(&task, &state, &rt.meta, &mut feat));
+    });
+
+    section("L2/L1 compiled executables (PJRT CPU)");
+    let params = rt.init_params(1)?;
+    featurize(&task, &state, &rt.meta, &mut feat);
+    b.bench("qnet_infer (1x134 -> 16 Q)", || {
+        std::hint::black_box(rt.infer(&params, &feat).unwrap());
+    });
+    let mut states = Vec::new();
+    for _ in 0..rt.meta.infer_batch {
+        states.extend_from_slice(&feat);
+    }
+    b.bench("qnet_infer_batch (30x134)", || {
+        std::hint::black_box(rt.infer_batch(&params, &states).unwrap());
+    });
+    let mut batch = TrainBatch::zeros(&rt.meta);
+    for (i, v) in batch.s.iter_mut().enumerate() {
+        *v = (i % 13) as f32 / 13.0;
+    }
+    batch.s2.copy_from_slice(&batch.s);
+    let targ = params.clone();
+    b.bench("qnet_train (batch 64, SGD step)", || {
+        std::hint::black_box(rt.train_step(&params, &targ, &batch).unwrap());
+    });
+
+    section("end-to-end scheduling throughput (tasks/s)");
+    let burst: Vec<_> = queue.tasks.iter().take(30).cloned().collect();
+    for name in ["minmin", "ata", "edp", "sa", "ga", "rr"] {
+        let mut s = hmai::sched::by_name(name, 1).unwrap();
+        let r = b.bench(&format!("{name}: 30-task burst"), || {
+            std::hint::black_box(s.schedule_batch(&burst, &state));
+        });
+        println!(
+            "    -> {:.0} decisions/s",
+            30.0 / r.mean()
+        );
+    }
+    {
+        let mut agent = hmai::sched::flexai::FlexAI::new(
+            rt.clone(),
+            hmai::sched::flexai::FlexAIConfig { seed: 1, ..Default::default() },
+        )?;
+        agent.set_training(false);
+        let r = b.bench("flexai: 30-task burst (greedy)", || {
+            std::hint::black_box(agent.schedule_batch(&burst, &state));
+        });
+        println!("    -> {:.0} decisions/s", 30.0 / r.mean());
+    }
+
+    section("whole-queue simulation (Min-Min, 60 m route)");
+    let mut minmin = hmai::sched::minmin::MinMin::new();
+    b.bench("simulate 60 m UB queue", || {
+        minmin.reset();
+        std::hint::black_box(simulate(&queue, &platform, &mut minmin, SimOptions::default()));
+    });
+    state.advance(0.0);
+    Ok(())
+}

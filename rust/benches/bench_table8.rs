@@ -1,0 +1,59 @@
+//! Table 8: FPS of the three sub-accelerator cycle models on the three
+//! CNNs, plus the model-evaluation microbenchmark (the scheduler hot path
+//! reads the cached matrix).
+
+#[path = "common.rs"]
+mod common;
+
+use hmai::accel::{cost, task_cost, AccelKind, ALL_ACCELS};
+use hmai::util::bench::{section, Bencher};
+use hmai::workload::{ALL_MODELS, ModelKind};
+
+fn main() {
+    section("Table 8 — sub-accelerator FPS");
+    println!("{}", hmai::reports::render("table8").unwrap());
+
+    section("energy / power per (accelerator, model)");
+    for m in ALL_MODELS {
+        for a in ALL_ACCELS {
+            let c = cost(a, m);
+            println!(
+                "{:8} {:8}  {:8.2} FPS  {:7.2} mJ/inf  {:6.2} W busy  util {:4.1}%",
+                m.name(),
+                a.name(),
+                c.fps(),
+                c.energy_j * 1e3,
+                c.power_w(),
+                c.utilization * 100.0
+            );
+        }
+    }
+
+    // Paper values within rounding.
+    for (a, m, fps) in [
+        (AccelKind::SconvOD, ModelKind::Yolo, 170.37),
+        (AccelKind::SconvIC, ModelKind::Ssd, 82.94),
+        (AccelKind::MconvMC, ModelKind::Goturn, 500.54),
+    ] {
+        let ours = cost(a, m).fps();
+        assert!((ours / fps - 1.0).abs() < 1e-3, "{a:?} {m:?} {ours} != {fps}");
+    }
+
+    section("microbench");
+    let mut b = Bencher::new();
+    b.bench("cost() cached lookup", || {
+        for a in ALL_ACCELS {
+            for m in ALL_MODELS {
+                std::hint::black_box(cost(a, m));
+            }
+        }
+    });
+    b.bench("task_cost() full cycle model (9 pairs)", || {
+        for a in ALL_ACCELS {
+            for m in ALL_MODELS {
+                std::hint::black_box(task_cost(a, m));
+            }
+        }
+    });
+    println!("\ntable8 OK");
+}

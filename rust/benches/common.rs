@@ -1,0 +1,79 @@
+//! Shared plumbing for the per-figure benches.
+//!
+//! Scale: the paper evaluates five 1-2 km routes per area (up to ~200k
+//! tasks each).  `HMAI_BENCH_SCALE` (default 0.2) scales the route
+//! distances so `cargo bench` completes in minutes; set it to 1.0 to
+//! regenerate the figures at full paper scale.
+
+#![allow(dead_code)] // each bench uses a subset of these helpers
+
+use std::sync::Arc;
+
+use hmai::config::{EnvConfig, ExperimentConfig};
+use hmai::env::Area;
+use hmai::harness;
+use hmai::sched::flexai::{checkpoint, FlexAI, FlexAIConfig};
+use hmai::sched::Scheduler;
+
+/// Route-distance scale factor.
+pub fn scale() -> f64 {
+    std::env::var("HMAI_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.2)
+}
+
+/// The paper's five route distances (m), scaled.
+pub fn distances() -> Vec<f64> {
+    let s = scale();
+    vec![1000.0, 1250.0, 1500.0, 1750.0, 2000.0]
+        .into_iter()
+        .map(|d| d * s)
+        .collect()
+}
+
+/// Evaluation environment for one area.
+pub fn env(area: Area) -> EnvConfig {
+    EnvConfig { area, distances_m: distances(), seed: 42 }
+}
+
+/// FlexAI for benching: loads `checkpoints/flexai_<area>.json` (or
+/// `$HMAI_CKPT`) when present; otherwise trains a quick agent in-process
+/// so the bench is self-contained.
+pub fn flexai(area: Area) -> anyhow::Result<FlexAI> {
+    let rt = harness::load_runtime()?;
+    let cfg = FlexAIConfig { seed: 42, ..Default::default() };
+    let path = std::env::var("HMAI_CKPT").unwrap_or_else(|_| {
+        format!("checkpoints/flexai_{}.json", area.name().to_lowercase())
+    });
+    if std::path::Path::new(&path).exists() {
+        eprintln!("[bench] loading FlexAI checkpoint {path}");
+        return checkpoint::load(rt, std::path::Path::new(&path), cfg);
+    }
+    eprintln!("[bench] no checkpoint at {path}; training a quick agent (2 eps x 100 m)");
+    let tcfg = ExperimentConfig {
+        env: EnvConfig { area, distances_m: vec![100.0], seed: 42 },
+        train: hmai::config::TrainConfig {
+            episodes: 2,
+            episode_distance_m: 100.0,
+            checkpoint: String::new(),
+        },
+        ..Default::default()
+    };
+    let mut out = harness::train_flexai(&tcfg)?;
+    out.agent.set_training(false);
+    Ok(out.agent)
+}
+
+/// All Fig. 12 baselines, constructed fresh.
+pub fn baselines(seed: u64) -> Vec<Box<dyn Scheduler>> {
+    hmai::sched::BASELINES
+        .iter()
+        .map(|n| hmai::sched::by_name(n, seed).expect("baseline"))
+        .collect()
+}
+
+/// Arc'd runtime for perf benches.
+pub fn runtime() -> anyhow::Result<Arc<hmai::runtime::Runtime>> {
+    harness::load_runtime()
+}

@@ -1,0 +1,271 @@
+//! Per-dataflow analytical cycle models for the three HMAI sub-accelerators.
+//!
+//! Each model combines *structural fit* terms — how well the layer's shape
+//! tiles onto the PE array (ceil-division remainders) — with a
+//! *dataflow-affinity* efficiency constant per operator class that captures
+//! the serialization each architecture pays (weight streaming on dispersed
+//! registers, broadcast serialization on ShiDianNao-style arrays, window
+//! mapping on Origami-style channel-block arrays).  The constants are
+//! calibrated so the per-network FPS reproduces Table 8's ordering and
+//! magnitudes (see tests + EXPERIMENTS.md):
+//!
+//! | FPS      | SconvOD | SconvIC | MconvMC |
+//! |----------|---------|---------|---------|
+//! | YOLO     | 170.37  | 132.54  | 149.32  |
+//! | SSD      |  74.99  |  82.94  |  82.57  |
+//! | GOTURN   | 352.69  | 350.34  | 500.54  |
+
+use super::{AccelKind, LayerCost, MACS_PER_ACCEL};
+use crate::workload::{Layer, LayerKind};
+
+/// PE-array geometry.
+const OD_ROWS: f64 = 64.0; // SconvOD: rows hold kxk x Tc filter taps
+const OD_COLS: f64 = 64.0; // SconvOD: columns hold output channels
+const IC_PES: f64 = 4096.0; // SconvIC: 64x64 output-pixel PEs
+const MM_TC: f64 = 16.0; // MconvMC: Tm = Tc = 16 channel block
+
+/// Operator class for affinity lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum OpClass {
+    Conv1x1,
+    Conv3x3,
+    ConvLargeK,
+    Fc,
+}
+
+fn op_class(k: usize, kind: &LayerKind) -> OpClass {
+    match kind {
+        LayerKind::Fc => OpClass::Fc,
+        LayerKind::Conv { .. } if k == 1 => OpClass::Conv1x1,
+        LayerKind::Conv { .. } if k <= 3 => OpClass::Conv3x3,
+        _ => OpClass::ConvLargeK,
+    }
+}
+
+/// Dataflow-affinity efficiency (0..1): the fraction of peak the dataflow
+/// sustains on a perfectly-tiling layer of that operator class.
+fn affinity(accel: AccelKind, op: OpClass) -> f64 {
+    use AccelKind::*;
+    use OpClass::*;
+    match (accel, op) {
+        // SconvOD: weights pinned in dispersed PE registers -> superb 2-D
+        // conv reuse; large kernels split across tap passes; FC streams
+        // weights through DR, which is its worst case.
+        (SconvOD, Conv3x3) => 0.96,
+        (SconvOD, Conv1x1) => 0.88,
+        (SconvOD, ConvLargeK) => 0.62,
+        (SconvOD, Fc) => 0.22,
+        // SconvIC: one weight broadcast per cycle serializes deep-channel
+        // layers; shines on large spatial maps (output-pixel parallelism).
+        (SconvIC, Conv3x3) => 0.74,
+        (SconvIC, Conv1x1) => 0.70,
+        (SconvIC, ConvLargeK) => 0.66,
+        (SconvIC, Fc) => 0.28,
+        // MconvMC: channel-block (Tm=Tc=16) processing -> native at deep
+        // channels and matmul/FC; pays window-mapping overhead at 3x3 and
+        // bandwidth underuse at 1x1.
+        (MconvMC, Conv3x3) => 0.82,
+        (MconvMC, Conv1x1) => 0.76,
+        (MconvMC, ConvLargeK) => 0.90,
+        (MconvMC, Fc) => 0.92,
+    }
+}
+
+fn ceil_frac(x: f64, q: f64) -> f64 {
+    // x / (q * ceil(x/q)): fraction of the q-quantized capacity used.
+    if x <= 0.0 {
+        return 1.0;
+    }
+    x / (q * (x / q).ceil())
+}
+
+/// Structural fit (0..1): tiling-remainder waste for this layer shape.
+fn structural_fit(accel: AccelKind, l: &Layer, k: usize) -> f64 {
+    let (ic, oc) = (l.in_c as f64, l.out_c as f64);
+    let spatial = (l.out_h * l.out_w) as f64;
+    match accel {
+        AccelKind::SconvOD => {
+            // Rows hold kxk taps x as many input channels as fit; columns
+            // hold up to 64 output channels.
+            let kk = (k * k) as f64;
+            let tap_rows = kk.min(OD_ROWS);
+            let tc_fit = (OD_ROWS / kk).floor().max(1.0).min(ic);
+            let row_util = (tap_rows * tc_fit).min(OD_ROWS) / OD_ROWS
+                * ceil_frac(ic, tc_fit);
+            let col_util = ceil_frac(oc, OD_COLS);
+            row_util * col_util
+        }
+        AccelKind::SconvIC => {
+            // Output pixels map onto the PE array; when the map is smaller
+            // than the array, spare PEs fold in extra output channels.
+            if spatial >= IC_PES {
+                ceil_frac(spatial, IC_PES)
+            } else {
+                let ch_fold = (IC_PES / spatial).floor().max(1.0).min(oc);
+                (spatial * ch_fold) / IC_PES * ceil_frac(oc, ch_fold)
+            }
+        }
+        AccelKind::MconvMC => {
+            // Tm x Tc channel blocks.
+            ceil_frac(ic, MM_TC) * ceil_frac(oc, MM_TC)
+        }
+    }
+}
+
+/// Stride penalty: ShiDianNao-style ifmap shifting skips with stride > 1.
+fn stride_penalty(accel: AccelKind, stride: usize) -> f64 {
+    if accel == AccelKind::SconvIC && stride > 1 {
+        1.0 / (1.0 + 0.18 * (stride as f64 - 1.0))
+    } else {
+        1.0
+    }
+}
+
+/// EXMC / OCB / register access counts per dataflow (drives energy).
+fn access_counts(accel: AccelKind, l: &Layer, cost: &mut LayerCost) {
+    let b = l.branches as f64;
+    let ifmap = l.input_elems() as f64;
+    let ofmap = l.neurons() as f64;
+    let weights = l.weights() as f64;
+    let macs = cost.macs;
+    match accel {
+        AccelKind::SconvOD => {
+            // NeuFlow claim (§5.2): each ifmap neuron fetched from EXMC
+            // exactly once; weights pinned per pass; psums never leave PEs.
+            cost.exmc_accesses += ifmap + ofmap + weights * b;
+            // psum in + psum out + weight-reg read per MAC.
+            cost.reg_accesses += 3.0 * macs;
+        }
+        AccelKind::SconvIC => {
+            // Ifmaps propagate between PEs (IP); weights re-broadcast per
+            // spatial tile; CR (no psum storage) absorbs ifmap traffic.
+            let tiles = ((l.out_h * l.out_w) as f64 / IC_PES).ceil().max(1.0);
+            cost.exmc_accesses += ifmap + ofmap + weights * tiles * b;
+            // ifmap shift + psum accumulate per MAC.
+            cost.reg_accesses += 2.0 * macs;
+        }
+        AccelKind::MconvMC => {
+            // OCB present (Table 10): ifmaps staged through SRAM A1/A2,
+            // weights streamed once, psum tree accumulation.
+            cost.exmc_accesses += ifmap + ofmap + weights * b;
+            cost.ocb_accesses += ifmap + macs / MM_TC;
+            cost.reg_accesses += 2.0 * macs;
+        }
+    }
+}
+
+/// Cycle + access cost of one layer on one sub-accelerator.
+pub fn layer_cost(accel: AccelKind, l: &Layer) -> LayerCost {
+    let mut cost = LayerCost { macs: l.macs() as f64, ..Default::default() };
+    match l.kind {
+        LayerKind::Conv { k, stride, .. } => {
+            let eff = affinity(accel, op_class(k, &l.kind))
+                * structural_fit(accel, l, k)
+                * stride_penalty(accel, stride);
+            cost.cycles = cost.macs / (MACS_PER_ACCEL as f64 * eff.max(1e-3));
+            access_counts(accel, l, &mut cost);
+        }
+        LayerKind::Fc => {
+            let eff = affinity(accel, OpClass::Fc) * structural_fit(accel, l, 1);
+            cost.cycles = cost.macs / (MACS_PER_ACCEL as f64 * eff.max(1e-3));
+            access_counts(accel, l, &mut cost);
+        }
+        // Data-movement layers: streamed at one element per lane per cycle
+        // through the EXMC interface (memory-bound).
+        LayerKind::MaxPool { k, .. } => {
+            let reads = l.input_elems() as f64 * ((k * k) as f64 / (k * k) as f64);
+            cost.cycles = reads / 256.0; // 256 lanes of pooling comparators
+            cost.exmc_accesses += l.input_elems() as f64 + l.neurons() as f64;
+        }
+        LayerKind::Shortcut | LayerKind::Route | LayerKind::Upsample | LayerKind::Detect => {
+            cost.cycles = l.neurons() as f64 / 256.0;
+            cost.exmc_accesses += l.input_elems() as f64 + l.neurons() as f64;
+        }
+    }
+    cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{task_cost, ALL_ACCELS};
+    use crate::workload::ModelKind;
+
+    /// Paper Table 8 (FPS).
+    const TABLE8: [(ModelKind, [f64; 3]); 3] = [
+        (ModelKind::Yolo, [170.37, 132.54, 149.32]),
+        (ModelKind::Ssd, [74.99, 82.94, 82.57]),
+        (ModelKind::Goturn, [352.69, 350.34, 500.54]),
+    ];
+
+    #[test]
+    fn table8_ordering_holds() {
+        for (m, fps) in TABLE8 {
+            let ours: Vec<f64> = ALL_ACCELS.iter().map(|&a| task_cost(a, m).fps()).collect();
+            // Same argmax / argmin accelerator as the paper.
+            let argmax_paper = fps
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0;
+            let argmax_ours = ours
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0;
+            assert_eq!(argmax_paper, argmax_ours, "{m:?}: ours={ours:?} paper={fps:?}");
+        }
+    }
+
+    #[test]
+    fn table8_magnitudes_within_5pct() {
+        for (m, fps) in TABLE8 {
+            for (i, &a) in ALL_ACCELS.iter().enumerate() {
+                let ours = task_cost(a, m).fps();
+                let ratio = ours / fps[i];
+                assert!(
+                    (0.95..1.05).contains(&ratio),
+                    "{:?} on {:?}: ours {ours:.1} vs paper {:.1} (ratio {ratio:.2})",
+                    m,
+                    a,
+                    fps[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn structural_fit_bounds() {
+        use crate::workload::model;
+        for m in [ModelKind::Yolo, ModelKind::Ssd, ModelKind::Goturn] {
+            for l in &model(m).layers {
+                if let LayerKind::Conv { k, .. } = l.kind {
+                    for a in ALL_ACCELS {
+                        let f = structural_fit(a, l, k);
+                        assert!(f > 0.0 && f <= 1.0, "{a:?} {}: fit={f}", l.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fc_penalizes_dispersed_registers() {
+        // §5.1: DR must stream FC weights; CR-based Mconv is near-native.
+        assert!(affinity(AccelKind::MconvMC, OpClass::Fc) > 3.0 * affinity(AccelKind::SconvOD, OpClass::Fc));
+    }
+
+    #[test]
+    fn movement_layers_have_no_macs() {
+        use crate::workload::model;
+        for l in &model(ModelKind::Yolo).layers {
+            if !l.is_compute() {
+                let c = layer_cost(AccelKind::SconvOD, l);
+                assert_eq!(c.macs, 0.0);
+                assert!(c.cycles > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+fn main() {
+    use hmai::accel::{task_cost, ALL_ACCELS};
+    use hmai::workload::{ALL_MODELS, model};
+    for m in ALL_MODELS {
+        print!("{:8}", m.name());
+        for a in ALL_ACCELS {
+            let c = task_cost(a, m);
+            print!("  {}={:7.2} fps (util {:4.2}, {:6.1} mJ)", a.short(), c.fps(), c.utilization, c.energy_j*1e3);
+        }
+        println!("  [{:.1} GMACs]", model(m).gmacs());
+    }
+}

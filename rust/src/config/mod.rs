@@ -1,0 +1,291 @@
+//! Typed experiment configuration: JSON files + CLI overrides → one struct
+//! every entry point (CLI subcommands, examples, benches) consumes.
+//!
+//! Precedence: defaults < `--config file.json` < individual `--key` flags.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::env::Area;
+use crate::platform::Platform;
+use crate::sched::flexai::epsilon::EpsilonSchedule;
+use crate::sched::flexai::FlexAIConfig;
+use crate::util::cli::Args;
+use crate::util::json::{Json, JsonObj};
+
+/// Route/queue generation settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnvConfig {
+    pub area: Area,
+    /// Route distances in meters; one queue per entry (§8.2/8.3 use five
+    /// 1-2 km routes).
+    pub distances_m: Vec<f64>,
+    pub seed: u64,
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        EnvConfig {
+            area: Area::Urban,
+            distances_m: vec![1000.0, 1250.0, 1500.0, 1750.0, 2000.0],
+            seed: 42,
+        }
+    }
+}
+
+/// Training-loop settings (examples/train_flexai, `hmai train`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    /// Episodes = task queues (§8.3: "each episode includes one task
+    /// queue").
+    pub episodes: usize,
+    /// Route length per training episode (m).  Shorter than eval routes to
+    /// keep wall-clock sane; the loss converges within 2-4 episodes
+    /// (Fig. 11).
+    pub episode_distance_m: f64,
+    /// Checkpoint output path.
+    pub checkpoint: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            episodes: 3,
+            episode_distance_m: 300.0,
+            checkpoint: "flexai_ckpt.json".into(),
+        }
+    }
+}
+
+/// The top-level experiment configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Platform spec: "hmai", "13so", "13si", "12mm" or "so,si,mm" counts.
+    pub platform: String,
+    /// Scheduler name ("flexai" or a baseline).
+    pub scheduler: String,
+    /// FlexAI checkpoint to load (empty = fresh init).
+    pub checkpoint: String,
+    pub env: EnvConfig,
+    pub train: TrainConfig,
+    pub flexai: FlexAIConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            platform: "hmai".into(),
+            scheduler: "flexai".into(),
+            checkpoint: String::new(),
+            env: EnvConfig::default(),
+            train: TrainConfig::default(),
+            flexai: FlexAIConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Resolve the platform spec.
+    pub fn platform(&self) -> Result<Platform> {
+        Platform::parse(&self.platform)
+            .with_context(|| format!("unknown platform '{}'", self.platform))
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<ExperimentConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("config json: {e:?}"))?;
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_json(&j)?;
+        Ok(cfg)
+    }
+
+    /// Merge a JSON object over this config (unknown keys rejected so typos
+    /// fail loudly).
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        let o = j.as_obj().context("config: not an object")?;
+        for (k, v) in o.iter() {
+            match k {
+                "platform" => self.platform = v.as_str().context("platform")?.to_string(),
+                "scheduler" => self.scheduler = v.as_str().context("scheduler")?.to_string(),
+                "checkpoint" => self.checkpoint = v.as_str().context("checkpoint")?.to_string(),
+                "area" => {
+                    self.env.area = Area::parse(v.as_str().context("area")?)
+                        .context("area: expected ub|uhw|hw")?
+                }
+                "distances_m" => {
+                    self.env.distances_m = v
+                        .as_arr()
+                        .context("distances_m")?
+                        .iter()
+                        .filter_map(|x| x.as_f64())
+                        .collect();
+                    anyhow::ensure!(!self.env.distances_m.is_empty(), "distances_m empty");
+                }
+                "seed" => self.env.seed = v.as_f64().context("seed")? as u64,
+                "episodes" => self.train.episodes = v.as_usize().context("episodes")?,
+                "episode_distance_m" => {
+                    self.train.episode_distance_m = v.as_f64().context("episode_distance_m")?
+                }
+                "train_checkpoint" => {
+                    self.train.checkpoint = v.as_str().context("train_checkpoint")?.to_string()
+                }
+                "epsilon_start" => self.flexai.epsilon.start = v.as_f64().with_context(|| k.to_string())?,
+                "epsilon_end" => self.flexai.epsilon.end = v.as_f64().with_context(|| k.to_string())?,
+                "epsilon_decay_steps" => {
+                    self.flexai.epsilon.decay_steps = v.as_f64().with_context(|| k.to_string())? as u64
+                }
+                "train_every" => self.flexai.train_every = v.as_f64().with_context(|| k.to_string())? as u64,
+                "target_sync_every" => {
+                    self.flexai.target_sync_every = v.as_f64().with_context(|| k.to_string())? as u64
+                }
+                "replay_capacity" => self.flexai.replay_capacity = v.as_usize().with_context(|| k.to_string())?,
+                "min_replay" => self.flexai.min_replay = v.as_usize().with_context(|| k.to_string())?,
+                "safety_shield" => {
+                    self.flexai.safety_shield = v.as_bool().with_context(|| k.to_string())?
+                }
+                "guided_explore" => {
+                    self.flexai.guided_explore = v.as_bool().with_context(|| k.to_string())?
+                }
+                other => anyhow::bail!("config: unknown key '{other}'"),
+            }
+        }
+        self.flexai.seed = self.env.seed;
+        Ok(())
+    }
+
+    /// Apply CLI overrides (`--config` first, then flat flags).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(path) = args.get("config") {
+            let loaded = Self::load(Path::new(path))?;
+            *self = loaded;
+        }
+        if let Some(p) = args.get("platform") {
+            self.platform = p.to_string();
+        }
+        if let Some(s) = args.get("sched") {
+            self.scheduler = s.to_string();
+        }
+        if let Some(c) = args.get("ckpt") {
+            self.checkpoint = c.to_string();
+        }
+        if let Some(a) = args.get("area") {
+            self.env.area = Area::parse(a).context("--area: expected ub|uhw|hw")?;
+        }
+        if let Some(d) = args.get("dist") {
+            self.env.distances_m = d
+                .split(',')
+                .map(|x| x.trim().parse::<f64>().context("--dist: bad number"))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        self.env.seed = args.get_u64("seed", self.env.seed)?;
+        self.train.episodes = args.get_usize("episodes", self.train.episodes)?;
+        self.train.episode_distance_m =
+            args.get_f64("episode-dist", self.train.episode_distance_m)?;
+        if let Some(o) = args.get("out") {
+            self.train.checkpoint = o.to_string();
+        }
+        if args.flag("no-shield") {
+            self.flexai.safety_shield = false;
+        }
+        if args.flag("no-guided") {
+            self.flexai.guided_explore = false;
+        }
+        self.flexai.seed = self.env.seed;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("platform", Json::Str(self.platform.clone()));
+        o.insert("scheduler", Json::Str(self.scheduler.clone()));
+        o.insert("checkpoint", Json::Str(self.checkpoint.clone()));
+        o.insert("area", Json::Str(self.env.area.name().to_lowercase()));
+        o.insert("distances_m", Json::array_f64(&self.env.distances_m));
+        o.insert("seed", Json::Num(self.env.seed as f64));
+        o.insert("episodes", Json::Num(self.train.episodes as f64));
+        o.insert("episode_distance_m", Json::Num(self.train.episode_distance_m));
+        o.insert("train_checkpoint", Json::Str(self.train.checkpoint.clone()));
+        o.insert("epsilon_start", Json::Num(self.flexai.epsilon.start));
+        o.insert("epsilon_end", Json::Num(self.flexai.epsilon.end));
+        o.insert("epsilon_decay_steps", Json::Num(self.flexai.epsilon.decay_steps as f64));
+        o.insert("train_every", Json::Num(self.flexai.train_every as f64));
+        o.insert("target_sync_every", Json::Num(self.flexai.target_sync_every as f64));
+        o.insert("replay_capacity", Json::Num(self.flexai.replay_capacity as f64));
+        o.insert("min_replay", Json::Num(self.flexai.min_replay as f64));
+        o.insert("safety_shield", Json::Bool(self.flexai.safety_shield));
+        o.insert("guided_explore", Json::Bool(self.flexai.guided_explore));
+        Json::Obj(o)
+    }
+
+    /// FlexAI config with the configured exploration schedule.
+    pub fn flexai_config(&self) -> FlexAIConfig {
+        self.flexai.clone()
+    }
+
+    /// Greedy (inference-only) FlexAI config.
+    pub fn flexai_infer_config(&self) -> FlexAIConfig {
+        FlexAIConfig { epsilon: EpsilonSchedule::greedy(), ..self.flexai.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_setup() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.platform, "hmai");
+        assert_eq!(c.env.distances_m.len(), 5); // five task queues (§8.2)
+        assert!(c.env.distances_m.iter().all(|&d| (1000.0..=2000.0).contains(&d)));
+        assert!(c.platform().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ExperimentConfig::default();
+        c.scheduler = "minmin".into();
+        c.env.area = Area::Highway;
+        c.flexai.train_every = 9;
+        c.flexai.seed = c.env.seed; // derived field, set by apply_json
+        let text = c.to_json().to_string();
+        let c2 = ExperimentConfig::from_json_text(&text).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(ExperimentConfig::from_json_text("{\"nope\": 1}").is_err());
+    }
+
+    #[test]
+    fn args_override() {
+        let mut c = ExperimentConfig::default();
+        let args = Args::parse(
+            "--sched sa --area hw --dist 500,600 --seed 7 --episodes 9"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.scheduler, "sa");
+        assert_eq!(c.env.area, Area::Highway);
+        assert_eq!(c.env.distances_m, vec![500.0, 600.0]);
+        assert_eq!(c.env.seed, 7);
+        assert_eq!(c.flexai.seed, 7);
+        assert_eq!(c.train.episodes, 9);
+    }
+
+    #[test]
+    fn bad_area_is_error() {
+        let mut c = ExperimentConfig::default();
+        let args = Args::parse(["--area".to_string(), "mars".to_string()]);
+        assert!(c.apply_args(&args).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Per-group camera frame rates — Camera_HZ(A, S, C) of Table 12, the data
+//! behind Fig. 1 — reconstructed to exactly reproduce Table 5's aggregate
+//! FPS requirements for the urban area:
+//!
+//!   UB go-straight: DET 870, TRA 840  (FC 40 x11, sides 25 x16, RC 10 x3)
+//!   UB turn:        DET 950, TRA 920  (FC 40 x11, sides 30 x16, RC 10 x3)
+//!   UB reverse:     DET 740, TRA 740  (FC 20 x11, sides 25 x16, RC 40 x3;
+//!                                      TRA includes RC while reversing)
+//!
+//! UHW/HW rows follow the same construction: forward rates stay high, side
+//! rates scale with lane-change risk, rear rates drop (no reversing on HW).
+
+use super::{Area, CameraGroup, Scenario};
+use crate::workload::ModelKind;
+
+/// Frame rate (Hz = FPS) of one camera in group `c` under (area, scenario).
+pub fn camera_hz(area: Area, scenario: Scenario, group: CameraGroup) -> f64 {
+    use Area::*;
+    use CameraGroup::*;
+    use Scenario::*;
+    let side_fwd = matches!(group, Flsc | Frsc);
+    match (area, scenario, group) {
+        // ---- Urban (reproduces Table 5 exactly) ----
+        (Urban, GoStraight, Fc) => 40.0,
+        (Urban, GoStraight, Rc) => 10.0,
+        (Urban, GoStraight, _) => 25.0,
+        (Urban, Turn, Fc) => 40.0,
+        (Urban, Turn, Rc) => 10.0,
+        (Urban, Turn, _) => 30.0,
+        (Urban, Reverse, Fc) => 20.0,
+        (Urban, Reverse, Rc) => 40.0,
+        (Urban, Reverse, _) => 25.0,
+        // ---- Undivided highway: faster closing speeds -> forward-side up ----
+        (UndividedHighway, GoStraight, Fc) => 40.0,
+        (UndividedHighway, GoStraight, Rc) => 10.0,
+        (UndividedHighway, GoStraight, _) if side_fwd => 30.0,
+        (UndividedHighway, GoStraight, _) => 20.0,
+        (UndividedHighway, Turn, Fc) => 40.0,
+        (UndividedHighway, Turn, Rc) => 10.0,
+        (UndividedHighway, Turn, _) => 30.0,
+        (UndividedHighway, Reverse, Fc) => 20.0,
+        (UndividedHighway, Reverse, Rc) => 40.0,
+        (UndividedHighway, Reverse, _) => 25.0,
+        // ---- Highway: no reversing; overtaking dominates ----
+        (Highway, GoStraight, Fc) => 40.0,
+        (Highway, GoStraight, Rc) => 10.0,
+        (Highway, GoStraight, _) if side_fwd => 25.0,
+        (Highway, GoStraight, _) => 20.0,
+        (Highway, Turn, Fc) => 40.0, // lane change
+        (Highway, Turn, Rc) => 10.0,
+        (Highway, Turn, _) => 30.0,
+        (Highway, Reverse, _) => 0.0, // not allowed (§2.2)
+    }
+}
+
+/// Aggregate FPS requirement across all cameras for a task category
+/// (Table 5 rows: DET = all cameras; TRA = cameras with tracking enabled).
+pub fn aggregate_fps(area: Area, scenario: Scenario, track: bool) -> f64 {
+    super::ALL_GROUPS
+        .iter()
+        .filter(|g| !track || g.tracks_in(scenario))
+        .map(|g| g.count() as f64 * camera_hz(area, scenario, *g))
+        .sum()
+}
+
+/// Per-model FPS requirement (Table 5 bottom rows): detection alternates
+/// YOLO/SSD per frame (half each); GOTURN carries all tracking frames.
+pub fn model_fps_requirement(area: Area, scenario: Scenario, kind: ModelKind) -> f64 {
+    match kind {
+        ModelKind::Yolo | ModelKind::Ssd => aggregate_fps(area, scenario, false) / 2.0,
+        ModelKind::Goturn => aggregate_fps(area, scenario, true),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{ALL_AREAS, ALL_SCENARIOS};
+
+    #[test]
+    fn table5_urban_exact() {
+        let a = Area::Urban;
+        assert_eq!(aggregate_fps(a, Scenario::GoStraight, false), 870.0);
+        assert_eq!(aggregate_fps(a, Scenario::GoStraight, true), 840.0);
+        assert_eq!(aggregate_fps(a, Scenario::Turn, false), 950.0);
+        assert_eq!(aggregate_fps(a, Scenario::Turn, true), 920.0);
+        assert_eq!(aggregate_fps(a, Scenario::Reverse, false), 740.0);
+        assert_eq!(aggregate_fps(a, Scenario::Reverse, true), 740.0);
+    }
+
+    #[test]
+    fn table5_urban_per_model() {
+        let a = Area::Urban;
+        assert_eq!(model_fps_requirement(a, Scenario::GoStraight, ModelKind::Yolo), 435.0);
+        assert_eq!(model_fps_requirement(a, Scenario::GoStraight, ModelKind::Ssd), 435.0);
+        assert_eq!(model_fps_requirement(a, Scenario::GoStraight, ModelKind::Goturn), 840.0);
+        assert_eq!(model_fps_requirement(a, Scenario::Turn, ModelKind::Yolo), 475.0);
+        assert_eq!(model_fps_requirement(a, Scenario::Reverse, ModelKind::Goturn), 740.0);
+    }
+
+    #[test]
+    fn rates_within_camera_limits() {
+        // §2.2: cameras generate 10..40 FPS.
+        for a in ALL_AREAS {
+            for s in ALL_SCENARIOS {
+                for g in crate::env::ALL_GROUPS {
+                    let hz = camera_hz(a, s, g);
+                    if a == Area::Highway && s == Scenario::Reverse {
+                        assert_eq!(hz, 0.0);
+                    } else {
+                        assert!((10.0..=40.0).contains(&hz), "{a:?} {s:?} {g:?}: {hz}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn total_peak_below_1200(){
+        // §3.1: 30 cameras x 40 FPS = 1200 FPS is the design ceiling.
+        for a in ALL_AREAS {
+            for s in ALL_SCENARIOS {
+                assert!(aggregate_fps(a, s, false) <= 1200.0);
+            }
+        }
+    }
+}

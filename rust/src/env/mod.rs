@@ -1,0 +1,197 @@
+//! Dynamic driving environment (§2, §8.1): areas, scenarios, camera groups,
+//! per-group frame-rate tables, object projection, route generation and
+//! task-queue construction.
+
+pub mod camera_hz;
+pub mod objects;
+pub mod route;
+pub mod taskgen;
+
+/// Driving area (§2.2): urban, undivided-highway, highway.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Area {
+    Urban,
+    UndividedHighway,
+    Highway,
+}
+
+pub const ALL_AREAS: [Area; 3] = [Area::Urban, Area::UndividedHighway, Area::Highway];
+
+impl Area {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Area::Urban => "UB",
+            Area::UndividedHighway => "UHW",
+            Area::Highway => "HW",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Area> {
+        match s.to_ascii_lowercase().as_str() {
+            "ub" | "urban" => Some(Area::Urban),
+            "uhw" | "undivided-highway" | "undivided" => Some(Area::UndividedHighway),
+            "hw" | "highway" => Some(Area::Highway),
+            _ => None,
+        }
+    }
+
+    /// Maximum velocity allowed (§6.1: 60 / 80 / 120 km/h), in m/s.
+    pub fn max_velocity_ms(&self) -> f64 {
+        match self {
+            Area::Urban => 60.0 / 3.6,
+            Area::UndividedHighway => 80.0 / 3.6,
+            Area::Highway => 120.0 / 3.6,
+        }
+    }
+
+    /// Reversing is not allowed on the highway (§2.2).
+    pub fn allows_reverse(&self) -> bool {
+        !matches!(self, Area::Highway)
+    }
+}
+
+/// Driving scenario (§2.2).  Turning left and right share requirements
+/// (Table 5 note), so a single `Turn` variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    GoStraight,
+    Turn,
+    Reverse,
+}
+
+pub const ALL_SCENARIOS: [Scenario; 3] = [Scenario::GoStraight, Scenario::Turn, Scenario::Reverse];
+
+impl Scenario {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::GoStraight => "GS",
+            Scenario::Turn => "TL",
+            Scenario::Reverse => "RE",
+        }
+    }
+
+    /// Maximum velocity while in this scenario (turning capped at 50 km/h,
+    /// §6.1; reversing is slow).
+    pub fn velocity_cap_ms(&self) -> f64 {
+        match self {
+            Scenario::GoStraight => f64::INFINITY,
+            Scenario::Turn => 50.0 / 3.6,
+            Scenario::Reverse => 10.0 / 3.6,
+        }
+    }
+}
+
+/// Camera function groups (Table 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CameraGroup {
+    /// Forward cameras.
+    Fc,
+    /// Forward left side.
+    Flsc,
+    /// Rearward left side.
+    Rlsc,
+    /// Forward right side.
+    Frsc,
+    /// Rearward right side.
+    Rrsc,
+    /// Rear cameras.
+    Rc,
+}
+
+pub const ALL_GROUPS: [CameraGroup; 6] = [
+    CameraGroup::Fc,
+    CameraGroup::Flsc,
+    CameraGroup::Rlsc,
+    CameraGroup::Frsc,
+    CameraGroup::Rrsc,
+    CameraGroup::Rc,
+];
+
+impl CameraGroup {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CameraGroup::Fc => "FC",
+            CameraGroup::Flsc => "FLSC",
+            CameraGroup::Rlsc => "RLSC",
+            CameraGroup::Frsc => "FRSC",
+            CameraGroup::Rrsc => "RRSC",
+            CameraGroup::Rc => "RC",
+        }
+    }
+
+    /// Cameras per group (Table 4: 11 + 4 + 4 + 4 + 4 + 3 = 30).
+    pub fn count(&self) -> usize {
+        match self {
+            CameraGroup::Fc => 11,
+            CameraGroup::Flsc | CameraGroup::Rlsc | CameraGroup::Frsc | CameraGroup::Rrsc => 4,
+            CameraGroup::Rc => 3,
+        }
+    }
+
+    /// Maximum sensing distance in meters (§6.1: FC 250 m, RC 100 m,
+    /// side 80 m — the ST_250FC / ST_100RC / ST_80SC subscripts).
+    pub fn max_distance_m(&self) -> f64 {
+        match self {
+            CameraGroup::Fc => 250.0,
+            CameraGroup::Rc => 100.0,
+            _ => 80.0,
+        }
+    }
+
+    pub fn is_side(&self) -> bool {
+        matches!(
+            self,
+            CameraGroup::Flsc | CameraGroup::Rlsc | CameraGroup::Frsc | CameraGroup::Rrsc
+        )
+    }
+
+    /// Object tracking is not performed for rear cameras except while
+    /// reversing (§2.2: TRA totals exclude RC when going straight/turning,
+    /// but the reverse rows of Table 5 have DET == TRA).
+    pub fn tracks_in(&self, scenario: Scenario) -> bool {
+        *self != CameraGroup::Rc || scenario == Scenario::Reverse
+    }
+}
+
+/// Total number of cameras (Table 4).
+pub fn total_cameras() -> usize {
+    ALL_GROUPS.iter().map(|g| g.count()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_camera_counts() {
+        assert_eq!(CameraGroup::Fc.count(), 11);
+        assert_eq!(CameraGroup::Rc.count(), 3);
+        assert_eq!(total_cameras(), 30);
+    }
+
+    #[test]
+    fn area_velocities() {
+        assert!((Area::Urban.max_velocity_ms() - 16.6667).abs() < 1e-3);
+        assert!((Area::Highway.max_velocity_ms() - 33.3333).abs() < 1e-3);
+    }
+
+    #[test]
+    fn no_reverse_on_highway() {
+        assert!(Area::Urban.allows_reverse());
+        assert!(!Area::Highway.allows_reverse());
+    }
+
+    #[test]
+    fn rc_tracking_rule() {
+        assert!(!CameraGroup::Rc.tracks_in(Scenario::GoStraight));
+        assert!(CameraGroup::Rc.tracks_in(Scenario::Reverse));
+        assert!(CameraGroup::Fc.tracks_in(Scenario::GoStraight));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for a in ALL_AREAS {
+            assert_eq!(Area::parse(a.name()), Some(a));
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Object projection model (Table 2): how a vehicle's / pedestrian's pixel
+//! area changes with distance, and which detector the §2.1 rule picks.
+//!
+//! A pinhole camera projects a physical cross-section of area A at distance
+//! d to A·(f/d)² pixels.  We anchor each object class at the paper's
+//! near-distance datum (vehicle: 42 000 px @ 17.98 m; pedestrian: 42 000 px
+//! @ 15.48 m).  NOTE: the paper's far-distance rows (4 620 px @ 163 m) are
+//! linear rather than quadratic in distance — a physical impossibility we
+//! treat as a typo; `table2_rows()` reports both the paper's figures and
+//! the pinhole-model values (see EXPERIMENTS.md).
+
+use crate::workload::accuracy::ObjectSize;
+
+/// Image geometry used by the paper (§2.1): 640 x 480.
+pub const IMAGE_W: f64 = 640.0;
+pub const IMAGE_H: f64 = 480.0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObjectClass {
+    Vehicle,
+    Pedestrian,
+}
+
+impl ObjectClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObjectClass::Vehicle => "Vehicle",
+            ObjectClass::Pedestrian => "Pedestrian",
+        }
+    }
+
+    /// Anchor datum from Table 2: (area_px, distance_m).
+    fn anchor(&self) -> (f64, f64) {
+        match self {
+            ObjectClass::Vehicle => (42_000.0, 17.98),
+            ObjectClass::Pedestrian => (42_000.0, 15.48),
+        }
+    }
+}
+
+/// Projected pixel area at distance `d` meters (pinhole model).
+pub fn area_px(class: ObjectClass, d: f64) -> f64 {
+    let (a0, d0) = class.anchor();
+    a0 * (d0 / d) * (d0 / d)
+}
+
+/// Fraction of the image the object covers.
+pub fn area_fraction(class: ObjectClass, d: f64) -> f64 {
+    area_px(class, d) / (IMAGE_W * IMAGE_H)
+}
+
+/// COCO size class of the object at distance `d`.
+pub fn size_at(class: ObjectClass, d: f64) -> ObjectSize {
+    ObjectSize::from_area_px(area_px(class, d))
+}
+
+/// Distance beyond which the object becomes "small" (area < 32^2 px).
+pub fn small_threshold_m(class: ObjectClass) -> f64 {
+    let (a0, d0) = class.anchor();
+    d0 * (a0 / (32.0 * 32.0)).sqrt()
+}
+
+/// A Table 2 row: paper figures + our pinhole-model values.
+pub struct Table2Row {
+    pub class: ObjectClass,
+    pub distance_m: f64,
+    pub paper_area_px: f64,
+    pub model_area_px: f64,
+}
+
+pub fn table2_rows() -> Vec<Table2Row> {
+    let rows = [
+        (ObjectClass::Vehicle, 163.0, 4620.0),
+        (ObjectClass::Vehicle, 17.98, 42_000.0),
+        (ObjectClass::Pedestrian, 140.0, 4620.0),
+        (ObjectClass::Pedestrian, 15.48, 42_000.0),
+    ];
+    rows.iter()
+        .map(|&(class, d, paper)| Table2Row {
+            class,
+            distance_m: d,
+            paper_area_px: paper,
+            model_area_px: area_px(class, d),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_reproduce() {
+        assert!((area_px(ObjectClass::Vehicle, 17.98) - 42_000.0).abs() < 1.0);
+        assert!((area_px(ObjectClass::Pedestrian, 15.48) - 42_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn near_objects_are_large() {
+        // Table 2: 42 000 px (~3% of image) at 17.98 m is a large object.
+        assert_eq!(size_at(ObjectClass::Vehicle, 17.98), ObjectSize::Large);
+        assert!((area_fraction(ObjectClass::Vehicle, 17.98) - 0.137).abs() < 0.01);
+    }
+
+    #[test]
+    fn far_objects_are_small() {
+        // §2.1: at 163 m the vehicle is processed as a small object.
+        assert_eq!(size_at(ObjectClass::Vehicle, 163.0), ObjectSize::Small);
+        assert_eq!(size_at(ObjectClass::Pedestrian, 140.0), ObjectSize::Small);
+    }
+
+    #[test]
+    fn area_monotonically_decreasing() {
+        let mut last = f64::INFINITY;
+        for d in [10.0, 20.0, 50.0, 100.0, 200.0] {
+            let a = area_px(ObjectClass::Vehicle, d);
+            assert!(a < last);
+            last = a;
+        }
+    }
+
+    #[test]
+    fn small_threshold_within_camera_range() {
+        // The transition to "small" must happen inside the 20..200 m camera
+        // vision band (§2.1) — that is what forces heterogeneous CNNs.
+        let t = small_threshold_m(ObjectClass::Vehicle);
+        assert!((20.0..200.0).contains(&t), "threshold = {t}");
+    }
+}

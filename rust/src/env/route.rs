@@ -1,0 +1,216 @@
+//! Driving-route generation (§8.1, Table 12/13, Fig. 9): a route through one
+//! area with randomly placed turn / reverse segments, giving the scenario
+//! timeline that modulates every camera's frame rate.
+
+use super::{Area, Scenario};
+use crate::util::rng::Rng;
+
+/// Generation parameters — Table 12 (parameters) with Table 13 defaults.
+#[derive(Debug, Clone)]
+pub struct RouteParams {
+    pub area: Area,
+    /// Route length in meters (§8.2/8.3: 1-2 km).
+    pub distance_m: f64,
+    /// Cruise velocity in m/s (§8.3: 60/80/120 km/h by area).
+    pub velocity_ms: f64,
+    /// Maximum number of turn segments (Table 13: 10).
+    pub max_times_turn: usize,
+    /// Maximum number of reverse segments (Table 13: 10).
+    pub max_times_reverse: usize,
+    /// Longest single turn, seconds (Table 13: 10).
+    pub max_duration_turn: f64,
+    /// Longest single reverse, seconds (Table 13: 20).
+    pub max_duration_reverse: f64,
+}
+
+impl RouteParams {
+    /// Paper defaults for an area (velocity from §8.3, limits from Table 13).
+    pub fn for_area(area: Area, distance_m: f64) -> Self {
+        Self {
+            area,
+            distance_m,
+            velocity_ms: area.max_velocity_ms(),
+            max_times_turn: 10,
+            max_times_reverse: 10,
+            max_duration_turn: 10.0,
+            max_duration_reverse: 20.0,
+        }
+    }
+}
+
+/// One scenario segment on the timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    pub scenario: Scenario,
+    pub start_s: f64,
+    pub duration_s: f64,
+}
+
+impl Segment {
+    pub fn end_s(&self) -> f64 {
+        self.start_s + self.duration_s
+    }
+}
+
+/// A generated route: contiguous scenario segments covering [0, duration].
+#[derive(Debug, Clone)]
+pub struct Route {
+    pub params: RouteParams,
+    pub duration_s: f64,
+    /// Sorted, non-overlapping, covering the whole duration.
+    pub segments: Vec<Segment>,
+}
+
+impl Route {
+    /// Generate a route: pick turn/reverse counts and durations at random
+    /// (Fig. 9: "the start time and lasting time of each scenario is
+    /// randomly determined"), fill the gaps with go-straight.
+    pub fn generate(params: RouteParams, rng: &mut Rng) -> Route {
+        let duration_s = params.distance_m / params.velocity_ms;
+        let mut events: Vec<Segment> = Vec::new();
+
+        let n_turns = rng.int_range(0, params.max_times_turn.min(6));
+        let n_revs = if params.area.allows_reverse() {
+            rng.int_range(0, params.max_times_reverse.min(3))
+        } else {
+            0
+        };
+        let place = |scenario: Scenario, max_dur: f64, rng: &mut Rng, events: &mut Vec<Segment>| {
+            // Up to a few attempts to find a non-overlapping slot.
+            for _ in 0..16 {
+                let dur = rng.range_f64(1.0, max_dur).min(duration_s * 0.2);
+                let start = rng.range_f64(0.0, (duration_s - dur).max(0.0));
+                let cand = Segment { scenario, start_s: start, duration_s: dur };
+                let overlaps = events
+                    .iter()
+                    .any(|e| cand.start_s < e.end_s() && e.start_s < cand.end_s());
+                if !overlaps {
+                    events.push(cand);
+                    return;
+                }
+            }
+        };
+        for _ in 0..n_turns {
+            place(Scenario::Turn, params.max_duration_turn, rng, &mut events);
+        }
+        for _ in 0..n_revs {
+            place(Scenario::Reverse, params.max_duration_reverse, rng, &mut events);
+        }
+        events.sort_by(|a, b| a.start_s.total_cmp(&b.start_s));
+
+        // Fill gaps with go-straight to cover [0, duration].
+        let mut segments = Vec::new();
+        let mut t = 0.0;
+        for e in events {
+            if e.start_s > t + 1e-9 {
+                segments.push(Segment {
+                    scenario: Scenario::GoStraight,
+                    start_s: t,
+                    duration_s: e.start_s - t,
+                });
+            }
+            t = e.end_s();
+            segments.push(e);
+        }
+        if t < duration_s - 1e-9 {
+            segments.push(Segment {
+                scenario: Scenario::GoStraight,
+                start_s: t,
+                duration_s: duration_s - t,
+            });
+        }
+        Route { params, duration_s, segments }
+    }
+
+    /// Scenario active at time `t`.
+    pub fn scenario_at(&self, t: f64) -> Scenario {
+        self.segments
+            .iter()
+            .find(|s| t >= s.start_s && t < s.end_s())
+            .map(|s| s.scenario)
+            .unwrap_or(Scenario::GoStraight)
+    }
+
+    /// Vehicle velocity at time `t` (cruise speed capped by the scenario).
+    pub fn velocity_at(&self, t: f64) -> f64 {
+        self.params
+            .velocity_ms
+            .min(self.scenario_at(t).velocity_cap_ms())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(area: Area, seed: u64) -> Route {
+        Route::generate(RouteParams::for_area(area, 1000.0), &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn covers_full_duration() {
+        for seed in 0..20 {
+            let r = mk(Area::Urban, seed);
+            let mut t = 0.0;
+            for s in &r.segments {
+                assert!((s.start_s - t).abs() < 1e-6, "gap at {t}");
+                assert!(s.duration_s > 0.0);
+                t = s.end_s();
+            }
+            assert!((t - r.duration_s).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn no_reverse_on_highway() {
+        for seed in 0..20 {
+            let r = mk(Area::Highway, seed);
+            assert!(r.segments.iter().all(|s| s.scenario != Scenario::Reverse));
+        }
+    }
+
+    #[test]
+    fn urban_routes_have_variety() {
+        // Across seeds, urban routes include turns and reverses.
+        let mut saw_turn = false;
+        let mut saw_rev = false;
+        for seed in 0..30 {
+            let r = mk(Area::Urban, seed);
+            saw_turn |= r.segments.iter().any(|s| s.scenario == Scenario::Turn);
+            saw_rev |= r.segments.iter().any(|s| s.scenario == Scenario::Reverse);
+        }
+        assert!(saw_turn && saw_rev);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = mk(Area::Urban, 7);
+        let b = mk(Area::Urban, 7);
+        assert_eq!(a.segments, b.segments);
+    }
+
+    #[test]
+    fn scenario_lookup() {
+        let r = mk(Area::Urban, 3);
+        assert_eq!(r.scenario_at(-1.0), Scenario::GoStraight); // out of range
+        for s in &r.segments {
+            let mid = s.start_s + s.duration_s / 2.0;
+            assert_eq!(r.scenario_at(mid), s.scenario);
+        }
+    }
+
+    #[test]
+    fn turn_velocity_capped() {
+        let r = mk(Area::Highway, 11);
+        if let Some(s) = r.segments.iter().find(|s| s.scenario == Scenario::Turn) {
+            let v = r.velocity_at(s.start_s + 0.5 * s.duration_s);
+            assert!(v <= 50.0 / 3.6 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn duration_matches_distance() {
+        let r = mk(Area::Urban, 1);
+        assert!((r.duration_s - 1000.0 / (60.0 / 3.6)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,177 @@
+//! Experiment harness: the shared plumbing between the CLI, the examples
+//! and the per-figure benches — queue construction, scheduler construction
+//! (including FlexAI with its PJRT runtime), training loops and
+//! multi-queue evaluation.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{EnvConfig, ExperimentConfig};
+use crate::env::route::{Route, RouteParams};
+use crate::env::taskgen::{self, TaskQueue};
+use crate::metrics::summary::RunSummary;
+use crate::platform::Platform;
+use crate::runtime::Runtime;
+use crate::sched::flexai::{checkpoint, FlexAI};
+use crate::sched::Scheduler;
+use crate::sim::{simulate, SimOptions, SimResult};
+use crate::util::rng::Rng;
+
+/// Build one task queue per configured route distance.  Queue `i` uses a
+/// deterministic sub-stream of the seed, so adding distances never changes
+/// existing queues.
+pub fn make_queues(env: &EnvConfig) -> Vec<TaskQueue> {
+    make_queues_with_deadline(env, taskgen::DeadlineMode::Rss)
+}
+
+/// `make_queues` with an explicit deadline regime (Fig. 13's second table).
+pub fn make_queues_with_deadline(
+    env: &EnvConfig,
+    mode: taskgen::DeadlineMode,
+) -> Vec<TaskQueue> {
+    let mut rng = Rng::new(env.seed);
+    env.distances_m
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| {
+            let mut stream = rng.fork(i as u64);
+            let route = Route::generate(RouteParams::for_area(env.area, d), &mut stream);
+            taskgen::generate_with_deadline(&route, mode)
+        })
+        .collect()
+}
+
+/// A single training-route queue.  Route length cycles through
+/// {0.75×, 1×, 1.5×} of the base distance so the policy sees several
+/// route scales (eval routes are longer than training routes).
+pub fn make_training_queue(env: &EnvConfig, distance_m: f64, episode: usize) -> TaskQueue {
+    let mut rng = Rng::new(env.seed ^ 0xace1_u64);
+    let mut stream = rng.fork(1000 + episode as u64);
+    let scale = [0.75, 1.0, 1.5][episode % 3];
+    let route =
+        Route::generate(RouteParams::for_area(env.area, distance_m * scale), &mut stream);
+    taskgen::generate(&route)
+}
+
+/// Load the PJRT runtime once (FlexAI paths only).
+pub fn load_runtime() -> Result<Arc<Runtime>> {
+    Ok(Arc::new(Runtime::load_default().context(
+        "loading AOT artifacts — run `make artifacts` first",
+    )?))
+}
+
+/// Construct the configured scheduler.  For FlexAI: loads the checkpoint
+/// when set, otherwise fresh seeded parameters, always inference mode.
+pub fn make_scheduler(cfg: &ExperimentConfig) -> Result<Box<dyn Scheduler>> {
+    if cfg.scheduler.eq_ignore_ascii_case("flexai") {
+        let rt = load_runtime()?;
+        let agent = if cfg.checkpoint.is_empty() {
+            let mut a = FlexAI::new(rt, cfg.flexai_infer_config())?;
+            a.set_training(false);
+            a
+        } else {
+            checkpoint::load(rt, std::path::Path::new(&cfg.checkpoint), cfg.flexai_infer_config())?
+        };
+        Ok(Box::new(agent))
+    } else {
+        crate::sched::by_name(&cfg.scheduler, cfg.env.seed)
+            .with_context(|| format!("unknown scheduler '{}'", cfg.scheduler))
+    }
+}
+
+/// Evaluate one scheduler over all queues; `reset` between queues.
+pub fn run_queues(
+    queues: &[TaskQueue],
+    platform: &Platform,
+    scheduler: &mut dyn Scheduler,
+    opts: SimOptions,
+) -> Vec<SimResult> {
+    queues
+        .iter()
+        .map(|q| {
+            scheduler.reset();
+            simulate(q, platform, scheduler, opts)
+        })
+        .collect()
+}
+
+/// Result of a FlexAI training run.
+pub struct TrainOutcome {
+    pub agent: FlexAI,
+    /// TD loss per train step, across all episodes (Fig. 11).
+    pub losses: Vec<f32>,
+    /// (episode, tasks, stm_rate, mean reward proxy) per episode.
+    pub episode_summaries: Vec<RunSummary>,
+}
+
+/// Train FlexAI per §8.3: one episode = one task queue; ε-greedy decays
+/// across episodes; TargNet syncs on the configured cadence.
+pub fn train_flexai(cfg: &ExperimentConfig) -> Result<TrainOutcome> {
+    let rt = load_runtime()?;
+    let platform = cfg.platform()?;
+    let mut agent = FlexAI::new(rt, cfg.flexai_config())?;
+    agent.set_training(true);
+    let mut episode_summaries = Vec::new();
+    for ep in 0..cfg.train.episodes {
+        let queue = make_training_queue(&cfg.env, cfg.train.episode_distance_m, ep);
+        let r = simulate(&queue, &platform, &mut agent, SimOptions::default());
+        agent.end_episode();
+        episode_summaries.push(r.summary);
+    }
+    agent.set_training(false);
+    let losses = agent.losses.clone();
+    Ok(TrainOutcome { agent, losses, episode_summaries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::Area;
+
+    #[test]
+    fn queues_are_deterministic_and_distance_scaled() {
+        let env = EnvConfig {
+            area: Area::Urban,
+            distances_m: vec![100.0, 200.0],
+            seed: 5,
+        };
+        let a = make_queues(&env);
+        let b = make_queues(&env);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].len(), b[0].len());
+        assert!(a[1].len() > a[0].len(), "longer route, more tasks");
+        // Adding a distance does not perturb earlier queues.
+        let env3 = EnvConfig { distances_m: vec![100.0, 200.0, 300.0], ..env };
+        let c = make_queues(&env3);
+        assert_eq!(c[0].len(), a[0].len());
+        assert_eq!(c[1].len(), a[1].len());
+    }
+
+    #[test]
+    fn make_scheduler_baselines() {
+        let mut cfg = ExperimentConfig::default();
+        for name in crate::sched::BASELINES {
+            cfg.scheduler = name.into();
+            assert!(make_scheduler(&cfg).is_ok(), "{name}");
+        }
+        cfg.scheduler = "bogus".into();
+        assert!(make_scheduler(&cfg).is_err());
+    }
+
+    #[test]
+    fn train_one_tiny_episode() {
+        let cfg = ExperimentConfig {
+            train: crate::config::TrainConfig {
+                episodes: 1,
+                episode_distance_m: 40.0,
+                checkpoint: String::new(),
+            },
+            ..Default::default()
+        };
+        let out = train_flexai(&cfg).expect("artifacts present");
+        assert_eq!(out.episode_summaries.len(), 1);
+        assert!(out.episode_summaries[0].tasks > 100);
+        assert!(!out.agent.is_training());
+    }
+}

@@ -1,0 +1,22 @@
+//! HMAI + FlexAI — reproduction of "Tackling Variabilities in Autonomous
+//! Driving" (CS.AR 2021).
+//!
+//! A heterogeneous multi-core AI accelerator platform (HMAI) model, the
+//! dynamic driving environment, the RSS-derived safety criteria (Matching
+//! Score, Gvalue) and the FlexAI DQN task scheduler — with the Q-network
+//! AOT-compiled from JAX/Pallas to HLO and executed via the PJRT C API.
+//! See DESIGN.md for the full architecture and the experiment index.
+
+pub mod util;
+pub mod accel;
+pub mod env;
+pub mod safety;
+pub mod workload;
+pub mod platform;
+pub mod metrics;
+pub mod sim;
+pub mod sched;
+pub mod runtime;
+pub mod config;
+pub mod harness;
+pub mod reports;

@@ -1,0 +1,354 @@
+//! `hmai` — the leader binary: drive the HMAI platform model, the driving
+//! environment and the schedulers from the command line.
+//!
+//! Subcommands:
+//!   report <name|all>   regenerate a paper table (table1-9, table11, fig1)
+//!   env                 generate a route + task queue, print statistics
+//!   platform            homogeneous-vs-heterogeneous exploration (Fig. 2)
+//!   schedule            run a scheduler over task queues (Fig. 12/13 rows)
+//!   train               train the FlexAI DQN, save a checkpoint (Fig. 11)
+//!   braking             braking-distance probe (Fig. 14)
+
+use anyhow::{Context, Result};
+
+use hmai::config::ExperimentConfig;
+use hmai::env::route::{Route, RouteParams};
+use hmai::env::{taskgen, ALL_SCENARIOS};
+use hmai::harness;
+use hmai::platform::alloc;
+use hmai::safety::braking::{braking_distance_m, BrakingBreakdown};
+use hmai::sim::{SimOptions, TaskRecord};
+use hmai::util::cli::Args;
+use hmai::util::rng::Rng;
+use hmai::util::table::{f1, f2, pct, Table};
+
+fn main() {
+    let args = Args::from_env();
+    if let Some(lvl) = args.get("log") {
+        hmai::util::logging::set_level_from_str(lvl);
+    }
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("hmai: error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("report") => cmd_report(args),
+        Some("env") => cmd_env(args),
+        Some("platform") => cmd_platform(args),
+        Some("schedule") => cmd_schedule(args),
+        Some("train") => cmd_train(args),
+        Some("braking") => cmd_braking(args),
+        Some("help") | None => {
+            print!("{}", usage());
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown subcommand '{other}' (try `hmai help`)"),
+    }
+}
+
+fn usage() -> String {
+    let mut s = String::from(
+        "hmai — HMAI platform model + FlexAI scheduler (paper reproduction)\n\n\
+         USAGE:\n    hmai <SUBCOMMAND> [OPTIONS]\n\nSUBCOMMANDS:\n\
+         \x20   report <name|all>   regenerate a paper table\n\
+         \x20   env                 route + task-queue statistics\n\
+         \x20   platform            Fig. 2 homogeneous-vs-HMAI exploration\n\
+         \x20   schedule            run a scheduler over task queues\n\
+         \x20   train               train FlexAI, save a checkpoint\n\
+         \x20   braking             Fig. 14 braking-distance probe\n\nOPTIONS:\n",
+    );
+    for o in [
+        ("--config <file>", "JSON config (defaults < file < flags)"),
+        ("--sched <name>", "flexai | minmin | ata | edp | ga | sa | worst | rr | random"),
+        ("--ckpt <file>", "FlexAI checkpoint to load"),
+        ("--platform <spec>", "hmai | 13so | 13si | 12mm | \"so,si,mm\""),
+        ("--area <a>", "ub | uhw | hw"),
+        ("--dist <m,...>", "route distances in meters"),
+        ("--seed <u64>", "top-level seed"),
+        ("--episodes <n>", "training episodes"),
+        ("--episode-dist <m>", "training route length"),
+        ("--out <file>", "checkpoint output path (train)"),
+        ("--log <level>", "error|warn|info|debug|trace"),
+    ] {
+        s.push_str(&format!("    {:<22} {}\n", o.0, o.1));
+    }
+    s
+}
+
+fn config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let name = args.rest().first().map(String::as_str).unwrap_or("all");
+    if name == "all" {
+        for n in hmai::reports::ALL_REPORTS {
+            println!("── {n} " );
+            println!("{}", hmai::reports::render(n)?);
+        }
+        return Ok(());
+    }
+    print!("{}", hmai::reports::render(name)?);
+    Ok(())
+}
+
+fn cmd_env(args: &Args) -> Result<()> {
+    let cfg = config(args)?;
+    let mut rng = Rng::new(cfg.env.seed);
+    let mut t = Table::new([
+        "Queue", "Distance (m)", "Duration (s)", "Tasks", "Tasks/s", "YOLO", "SSD", "GOTURN",
+        "Turns", "Reverses",
+    ]);
+    for (i, &d) in cfg.env.distances_m.iter().enumerate() {
+        let mut stream = rng.fork(i as u64);
+        let route = Route::generate(RouteParams::for_area(cfg.env.area, d), &mut stream);
+        let q = taskgen::generate(&route);
+        let count = |m: hmai::workload::ModelKind| {
+            q.tasks.iter().filter(|t| t.model == m).count().to_string()
+        };
+        let turns = route
+            .segments
+            .iter()
+            .filter(|s| s.scenario == hmai::env::Scenario::Turn)
+            .count();
+        let revs = route
+            .segments
+            .iter()
+            .filter(|s| s.scenario == hmai::env::Scenario::Reverse)
+            .count();
+        t.row([
+            (i + 1).to_string(),
+            f1(d),
+            f1(route.duration_s),
+            q.len().to_string(),
+            f1(q.len() as f64 / route.duration_s),
+            count(hmai::workload::ModelKind::Yolo),
+            count(hmai::workload::ModelKind::Ssd),
+            count(hmai::workload::ModelKind::Goturn),
+            turns.to_string(),
+            revs.to_string(),
+        ]);
+    }
+    println!("area = {}", cfg.env.area.name());
+    t.print();
+    Ok(())
+}
+
+/// Fig. 2: energy + utilization of homogeneous platforms vs HMAI across the
+/// three UB scenarios.
+fn cmd_platform(args: &Args) -> Result<()> {
+    let cfg = config(args)?;
+    let area = cfg.env.area;
+    let mut t = Table::new(["Platform", "Scenario", "Feasible", "Power (W)", "Utilization"]);
+    let platforms: Vec<(String, (usize, usize, usize))> = vec![
+        ("13xSconvOD".into(), (13, 0, 0)),
+        ("13xSconvIC".into(), (0, 13, 0)),
+        ("12xMconvMC".into(), (0, 0, 12)),
+        ("HMAI(4,4,3)".into(), (4, 4, 3)),
+    ];
+    for (name, counts) in &platforms {
+        for s in ALL_SCENARIOS {
+            if s == hmai::env::Scenario::Reverse && !area.allows_reverse() {
+                continue;
+            }
+            let reqs = alloc::requirements(area, s);
+            match alloc::best_allocation(*counts, &reqs) {
+                Some((a, u)) => t.row([
+                    name.clone(),
+                    s.name().to_string(),
+                    "yes".into(),
+                    f2(alloc::power_w_provisioned(&a, &reqs, *counts)),
+                    pct(u),
+                ]),
+                None => t.row([name.clone(), s.name().to_string(), "NO".into(), "-".into(), "-".into()]),
+            };
+        }
+    }
+    println!("area = {}", area.name());
+    t.print();
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let cfg = config(args)?;
+    let platform = cfg.platform()?;
+    let queues = harness::make_queues(&cfg.env);
+    let mut sched = harness::make_scheduler(&cfg)?;
+    let results =
+        harness::run_queues(&queues, &platform, sched.as_mut(), SimOptions::default());
+
+    let mut t = Table::new([
+        "Queue", "Tasks", "STMRate", "Time (s)", "Wait (s)", "Makespan (s)", "Energy (J)",
+        "R_Balance", "MS/task", "Gvalue", "Sched µs/task",
+    ]);
+    for (i, r) in results.iter().enumerate() {
+        let s = &r.summary;
+        t.row([
+            (i + 1).to_string(),
+            s.tasks.to_string(),
+            pct(s.stm_rate()),
+            f2(s.total_time_s),
+            f2(s.wait_s),
+            f2(s.makespan_s),
+            f1(s.energy_j),
+            f2(s.r_balance),
+            f2(s.ms_per_task()),
+            f2(s.gvalue),
+            f2(r.sched_per_task_s() * 1e6),
+        ]);
+    }
+    println!(
+        "scheduler = {}  platform = {}  area = {}",
+        cfg.scheduler,
+        platform.name,
+        cfg.env.area.name()
+    );
+    t.print();
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config(args)?;
+    let out = harness::train_flexai(&cfg)?;
+    println!(
+        "trained {} episodes, {} decisions, {} train steps, {} target syncs",
+        cfg.train.episodes,
+        out.agent.steps,
+        out.agent.train_steps,
+        out.agent.target_syncs
+    );
+    if !out.losses.is_empty() {
+        let k = out.losses.len();
+        let head = &out.losses[..k.min(5)];
+        let tail = &out.losses[k.saturating_sub(5)..];
+        println!("loss: first {head:?} ... last {tail:?}");
+    }
+    let mut t = Table::new(["Episode", "Tasks", "STMRate", "Wait (s)", "MS/task", "R_Balance"]);
+    for (i, s) in out.episode_summaries.iter().enumerate() {
+        t.row([
+            (i + 1).to_string(),
+            s.tasks.to_string(),
+            pct(s.stm_rate()),
+            f2(s.wait_s),
+            f2(s.ms_per_task()),
+            f2(s.r_balance),
+        ]);
+    }
+    t.print();
+    let path = std::path::Path::new(&cfg.train.checkpoint);
+    hmai::sched::flexai::checkpoint::save(&out.agent, path)
+        .with_context(|| format!("saving checkpoint {}", path.display()))?;
+    println!("checkpoint -> {}", path.display());
+    Ok(())
+}
+
+/// Fig. 14: a brake event at `--brake-at` meters (default 1000 m); the
+/// braking distance follows from the probe task's wait/compute plus the
+/// measured scheduler runtime, CAN latency and mechanical lag.
+fn cmd_braking(args: &Args) -> Result<()> {
+    let mut cfg = config(args)?;
+    if cfg.env.distances_m.len() > 1 {
+        cfg.env.distances_m.truncate(1);
+    }
+    let brake_at_m = args.get_f64("brake-at", 1000.0)?;
+    let platform = cfg.platform()?;
+    let queues = harness::make_queues(&cfg.env);
+    let mut sched = harness::make_scheduler(&cfg)?;
+    let r = harness::run_queues(
+        &queues,
+        &platform,
+        sched.as_mut(),
+        SimOptions { record_tasks: true },
+    )
+    .remove(0);
+
+    let v = cfg.env.area.max_velocity_ms();
+    let t_probe = brake_at_m / v;
+    let rec = probe_task(&r.records, t_probe)
+        .context("route too short for the brake point (increase --dist)")?;
+    let bd = BrakingBreakdown::new(rec.wait_s, r.sched_per_task_s(), rec.compute_s);
+    let dist = braking_distance_m(v, &bd);
+
+    println!(
+        "scheduler = {}  area = {}  brake point = {brake_at_m} m  v = {:.1} m/s",
+        cfg.scheduler,
+        cfg.env.area.name(),
+        v
+    );
+    let mut t = Table::new(["T_wait (ms)", "T_sched (ms)", "T_compute (ms)", "T_data (ms)",
+        "T_mech (ms)", "Total (ms)", "Braking distance (m)"]);
+    t.row([
+        f2(bd.t_wait * 1e3),
+        f2(bd.t_schedule * 1e3),
+        f2(bd.t_compute * 1e3),
+        f2(bd.t_data * 1e3),
+        f2(bd.t_mech * 1e3),
+        f2(bd.total() * 1e3),
+        f2(dist),
+    ]);
+    t.print();
+    Ok(())
+}
+
+/// First forward-camera detection task released at or after `t_probe`.
+fn probe_task(records: &[TaskRecord], t_probe: f64) -> Option<&TaskRecord> {
+    records
+        .iter()
+        .filter(|r| r.release_s >= t_probe && !r.model.is_tracker())
+        .min_by(|a, b| a.release_s.total_cmp(&b.release_s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_mentions_every_subcommand() {
+        let u = usage();
+        for cmd in ["report", "env", "platform", "schedule", "train", "braking"] {
+            assert!(u.contains(cmd), "{cmd} missing from usage");
+        }
+    }
+
+    #[test]
+    fn config_from_flags() {
+        let args = Args::parse(
+            ["schedule", "--sched", "minmin", "--area", "hw"].iter().map(|s| s.to_string()),
+        );
+        let cfg = config(&args).unwrap();
+        assert_eq!(cfg.scheduler, "minmin");
+        assert_eq!(cfg.env.area, hmai::env::Area::Highway);
+    }
+
+    #[test]
+    fn probe_finds_first_detection_after_t() {
+        let mk = |id: u32, rel: f64, model: hmai::workload::ModelKind| TaskRecord {
+            task_id: id,
+            model,
+            accel: 0,
+            release_s: rel,
+            start_s: rel,
+            finish_s: rel + 0.01,
+            wait_s: 0.0,
+            compute_s: 0.01,
+            response_s: 0.01,
+            energy_j: 0.1,
+            ms: 0.5,
+            safety_time_s: 0.1,
+            met_deadline: true,
+        };
+        use hmai::workload::ModelKind::*;
+        let recs = vec![mk(0, 1.0, Yolo), mk(1, 2.0, Goturn), mk(2, 2.5, Ssd), mk(3, 3.0, Yolo)];
+        assert_eq!(probe_task(&recs, 2.0).unwrap().task_id, 2);
+        assert!(probe_task(&recs, 10.0).is_none());
+    }
+}

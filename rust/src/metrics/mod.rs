@@ -1,0 +1,234 @@
+//! System design criteria (§6) and their accumulation rules (§7.2):
+//! energy E, makespan T, resource-utilization balance rate R_Balance,
+//! Matching Score MS, the Global State Value
+//! `Gvalue = (-E - T + R_Balance)/3` (after normalization), and the
+//! Safety-Time-Meet-Rate (STMRate, §8.4).
+
+pub mod summary;
+
+use crate::env::taskgen::TaskQueue;
+use crate::platform::Platform;
+
+/// Normalization scales for Gvalue (§6.2 "after normalization").
+///
+/// The paper normalizes E and T before combining them with R_Balance
+/// (which is already in [0, 1]) but does not give the scales; we pin them
+/// to queue-intrinsic ideals so Gvalue is comparable across schedulers on
+/// the same queue:
+///   * `e_scale` — the energy if every task ran on its energy-cheapest
+///     sub-accelerator (no scheduler can do better);
+///   * `t_scale` — the perfectly-balanced makespan: total best-case compute
+///     divided by the number of accelerators.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NormScales {
+    pub e_scale: f64,
+    pub t_scale: f64,
+    /// Mean best-case energy per task (J) — the per-decision energy unit
+    /// of the RL reward.
+    pub e_task: f64,
+    /// Mean best-case compute per task (s) — the per-decision time unit of
+    /// the RL reward; one unit of waiting costs like one extra inference.
+    pub t_task: f64,
+}
+
+impl NormScales {
+    /// Scales for one (queue, platform) pair.
+    pub fn for_queue(queue: &TaskQueue, platform: &Platform) -> NormScales {
+        let mut e = 0.0;
+        let mut t = 0.0;
+        for task in &queue.tasks {
+            let mut best_e = f64::INFINITY;
+            let mut best_t = f64::INFINITY;
+            for a in &platform.accels {
+                let c = crate::accel::cost(a.kind, task.model);
+                best_e = best_e.min(c.energy_j);
+                best_t = best_t.min(c.time_s);
+            }
+            e += best_e;
+            t += best_t;
+        }
+        let n = queue.len().max(1) as f64;
+        NormScales {
+            e_scale: e.max(1e-12),
+            t_scale: (t / platform.len().max(1) as f64).max(1e-12),
+            e_task: (e / n).max(1e-12),
+            t_task: (t / n).max(1e-12),
+        }
+    }
+
+    /// Unit scales (useful in tests and for raw-value reporting).
+    pub fn unit() -> NormScales {
+        NormScales { e_scale: 1.0, t_scale: 1.0, e_task: 1.0, t_task: 1.0 }
+    }
+
+    /// Gvalue from raw aggregates (§6.2).
+    pub fn gvalue(&self, energy_j: f64, makespan_s: f64, r_balance: f64) -> f64 {
+        (-energy_j / self.e_scale - makespan_s / self.t_scale + r_balance) / 3.0
+    }
+}
+
+/// Running §7.2 metric state for one accelerator `H_i`:
+/// `E_i += e_j; T_i += t_j; MS_i += ms_j;
+///  R_Balance_i = (r_j + R_Balance_i)/num`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AccelMetrics {
+    /// Total energy consumed by tasks run here (J).
+    pub energy_j: f64,
+    /// Total busy (execution) time (s).
+    pub busy_s: f64,
+    /// §7.2 `T_i`: total *response* time (wait + execute) of tasks run
+    /// here (s).  The paper's reward uses this T — it must see waiting, or
+    /// the agent learns to ride deadlines instead of draining queues
+    /// (Fig. 14b: FlexAI's T_wait is 0).
+    pub resp_s: f64,
+    /// Sum of matching scores of tasks run here.
+    pub ms_sum: f64,
+    /// Running average of per-task balance rates `r_j`.
+    pub r_balance: f64,
+    /// Number of tasks executed (the paper's `num`).
+    pub num_tasks: u64,
+}
+
+impl AccelMetrics {
+    /// Apply the §7.2 per-task update.
+    pub fn update(&mut self, e_j: f64, t_j: f64, resp_j: f64, ms_j: f64, r_j: f64) {
+        self.energy_j += e_j;
+        self.busy_s += t_j;
+        self.resp_s += resp_j;
+        self.ms_sum += ms_j;
+        self.num_tasks += 1;
+        // R_Balance_i = (r_j + R_Balance_i) / num — the paper's literal
+        // recurrence (an exponentially-fading average for num >= 2; exact
+        // average for the first task).
+        self.r_balance = (r_j + self.r_balance) / self.num_tasks.min(2) as f64;
+    }
+}
+
+/// Whole-platform aggregates (§7.2):
+/// `E = ΣE_i; T = max{T_i}; MS = ΣMS_i; R_Balance = mean{R_Balance_i}`.
+#[derive(Debug, Clone)]
+pub struct PlatformMetrics {
+    pub per_accel: Vec<AccelMetrics>,
+    pub scales: NormScales,
+}
+
+impl PlatformMetrics {
+    pub fn new(n_accels: usize, scales: NormScales) -> PlatformMetrics {
+        PlatformMetrics { per_accel: vec![AccelMetrics::default(); n_accels], scales }
+    }
+
+    pub fn energy_j(&self) -> f64 {
+        self.per_accel.iter().map(|a| a.energy_j).sum()
+    }
+
+    /// Hardware makespan: max total *busy* time over accelerators.
+    pub fn makespan_s(&self) -> f64 {
+        self.per_accel.iter().map(|a| a.busy_s).fold(0.0, f64::max)
+    }
+
+    /// §7.2 `T = max{T_1..T_N}` over response-time sums — the Gvalue /
+    /// reward T term (sees queueing, unlike `makespan_s`).
+    pub fn resp_makespan_s(&self) -> f64 {
+        self.per_accel.iter().map(|a| a.resp_s).fold(0.0, f64::max)
+    }
+
+    pub fn ms_total(&self) -> f64 {
+        self.per_accel.iter().map(|a| a.ms_sum).sum()
+    }
+
+    /// `R_Balance = (1/N) Σ R_Balance_i`.
+    pub fn r_balance(&self) -> f64 {
+        if self.per_accel.is_empty() {
+            return 0.0;
+        }
+        self.per_accel.iter().map(|a| a.r_balance).sum::<f64>() / self.per_accel.len() as f64
+    }
+
+    /// `Gvalue = (-E - T + R_Balance)/3` after normalization (§6.2), with
+    /// T the response-time makespan.
+    pub fn gvalue(&self) -> f64 {
+        self.scales.gvalue(self.energy_j(), self.resp_makespan_s(), self.r_balance())
+    }
+
+    pub fn total_tasks(&self) -> u64 {
+        self.per_accel.iter().map(|a| a.num_tasks).sum()
+    }
+}
+
+/// STMRate (§8.4): fraction of tasks whose response time is within their
+/// safety time.
+pub fn stm_rate(met: u64, total: u64) -> f64 {
+    if total == 0 {
+        1.0
+    } else {
+        met as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::route::{Route, RouteParams};
+    use crate::env::Area;
+    use crate::util::rng::Rng;
+
+    fn small_queue() -> TaskQueue {
+        let route =
+            Route::generate(RouteParams::for_area(Area::Urban, 30.0), &mut Rng::new(1));
+        crate::env::taskgen::generate(&route)
+    }
+
+    #[test]
+    fn scales_positive_and_queue_dependent() {
+        let q = small_queue();
+        let s = NormScales::for_queue(&q, &Platform::hmai());
+        assert!(s.e_scale > 0.0 && s.t_scale > 0.0);
+        // More accelerators => smaller ideal makespan, same ideal energy.
+        let s26 = NormScales::for_queue(&q, &Platform::from_counts("big", 10, 10, 6));
+        assert!(s26.t_scale < s.t_scale);
+        assert!((s26.e_scale - s.e_scale).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gvalue_prefers_lower_energy_time_higher_balance() {
+        let s = NormScales::unit();
+        let base = s.gvalue(1.0, 1.0, 0.5);
+        assert!(s.gvalue(0.5, 1.0, 0.5) > base);
+        assert!(s.gvalue(1.0, 0.5, 0.5) > base);
+        assert!(s.gvalue(1.0, 1.0, 0.9) > base);
+    }
+
+    #[test]
+    fn accel_update_rules() {
+        let mut a = AccelMetrics::default();
+        a.update(1.0, 2.0, 2.0, 0.5, 0.8);
+        assert_eq!(a.energy_j, 1.0);
+        assert_eq!(a.busy_s, 2.0);
+        assert_eq!(a.ms_sum, 0.5);
+        // First task: R_Balance = r_j exactly.
+        assert!((a.r_balance - 0.8).abs() < 1e-12);
+        a.update(1.0, 2.0, 2.0, 0.5, 0.4);
+        // Second: (0.4 + 0.8)/2 = 0.6.
+        assert!((a.r_balance - 0.6).abs() < 1e-12);
+        assert_eq!(a.num_tasks, 2);
+    }
+
+    #[test]
+    fn platform_aggregation() {
+        let mut m = PlatformMetrics::new(3, NormScales::unit());
+        m.per_accel[0].update(1.0, 5.0, 5.0, 1.0, 1.0);
+        m.per_accel[1].update(2.0, 3.0, 3.0, -1.0, 0.5);
+        assert!((m.energy_j() - 3.0).abs() < 1e-12);
+        assert!((m.makespan_s() - 5.0).abs() < 1e-12); // max, not sum
+        assert!((m.ms_total() - 0.0).abs() < 1e-12);
+        assert!((m.r_balance() - 0.5).abs() < 1e-12); // (1.0+0.5+0)/3
+        assert_eq!(m.total_tasks(), 2);
+    }
+
+    #[test]
+    fn stm_rate_edges() {
+        assert_eq!(stm_rate(0, 0), 1.0);
+        assert_eq!(stm_rate(5, 10), 0.5);
+        assert_eq!(stm_rate(10, 10), 1.0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Per-run summary: the quantities Figures 12-14 report, aggregated from a
+//! simulation's task records.
+
+use crate::util::json::Json;
+
+use super::{stm_rate, PlatformMetrics};
+
+/// Aggregate results of scheduling one task queue on one platform with one
+/// scheduler — the row unit of Figures 12 and 13.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub scheduler: String,
+    pub platform: String,
+    pub tasks: u64,
+    /// Tasks whose response time met their safety time.
+    pub tasks_met: u64,
+    /// Total energy E (J).
+    pub energy_j: f64,
+    /// Makespan T = max accelerator busy time (s).
+    pub makespan_s: f64,
+    /// Figure 12(a) "time": Σ(wait + execute) over tasks + scheduler
+    /// runtime (s).
+    pub total_time_s: f64,
+    /// Σ waiting time over tasks (s).
+    pub wait_s: f64,
+    /// Σ execution time over tasks (s).
+    pub compute_s: f64,
+    /// Measured scheduler runtime (wall clock, s).
+    pub sched_s: f64,
+    pub r_balance: f64,
+    pub ms_total: f64,
+    pub gvalue: f64,
+    /// Mean response time (s).
+    pub mean_response_s: f64,
+    /// Max response time (s).
+    pub max_response_s: f64,
+}
+
+impl RunSummary {
+    pub fn from_metrics(
+        scheduler: &str,
+        platform: &str,
+        m: &PlatformMetrics,
+        tasks_met: u64,
+        wait_s: f64,
+        sched_s: f64,
+        mean_response_s: f64,
+        max_response_s: f64,
+    ) -> RunSummary {
+        let compute_s: f64 = m.per_accel.iter().map(|a| a.busy_s).sum();
+        RunSummary {
+            scheduler: scheduler.to_string(),
+            platform: platform.to_string(),
+            tasks: m.total_tasks(),
+            tasks_met,
+            energy_j: m.energy_j(),
+            makespan_s: m.makespan_s(),
+            total_time_s: wait_s + compute_s + sched_s,
+            wait_s,
+            compute_s,
+            sched_s,
+            r_balance: m.r_balance(),
+            ms_total: m.ms_total(),
+            gvalue: m.gvalue(),
+            mean_response_s,
+            max_response_s,
+        }
+    }
+
+    /// STMRate (§8.4).
+    pub fn stm_rate(&self) -> f64 {
+        stm_rate(self.tasks_met, self.tasks)
+    }
+
+    /// Mean MS per task (comparable across queue lengths).
+    pub fn ms_per_task(&self) -> f64 {
+        if self.tasks == 0 {
+            0.0
+        } else {
+            self.ms_total / self.tasks as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("platform", Json::Str(self.platform.clone())),
+            ("tasks", Json::Num(self.tasks as f64)),
+            ("tasks_met", Json::Num(self.tasks_met as f64)),
+            ("stm_rate", Json::Num(self.stm_rate())),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("makespan_s", Json::Num(self.makespan_s)),
+            ("total_time_s", Json::Num(self.total_time_s)),
+            ("wait_s", Json::Num(self.wait_s)),
+            ("compute_s", Json::Num(self.compute_s)),
+            ("sched_s", Json::Num(self.sched_s)),
+            ("r_balance", Json::Num(self.r_balance)),
+            ("ms_total", Json::Num(self.ms_total)),
+            ("gvalue", Json::Num(self.gvalue)),
+            ("mean_response_s", Json::Num(self.mean_response_s)),
+            ("max_response_s", Json::Num(self.max_response_s)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::NormScales;
+
+    fn summary() -> RunSummary {
+        let mut m = PlatformMetrics::new(2, NormScales::unit());
+        m.per_accel[0].update(1.0, 2.0, 2.0, 1.0, 0.9);
+        m.per_accel[1].update(1.0, 1.0, 1.0, -1.0, 0.6);
+        RunSummary::from_metrics("test", "p", &m, 1, 0.5, 0.1, 1.5, 2.0)
+    }
+
+    #[test]
+    fn totals_compose() {
+        let s = summary();
+        assert_eq!(s.tasks, 2);
+        assert!((s.compute_s - 3.0).abs() < 1e-12);
+        assert!((s.total_time_s - (0.5 + 3.0 + 0.1)).abs() < 1e-12);
+        assert!((s.stm_rate() - 0.5).abs() < 1e-12);
+        assert!((s.ms_per_task() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip_fields() {
+        let s = summary();
+        let j = s.to_json();
+        let o = j.as_obj().unwrap();
+        assert_eq!(o.get("scheduler").unwrap().as_str(), Some("test"));
+        assert!((o.get("stm_rate").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
+        // Render + parse back.
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert!((parsed.as_obj().unwrap().get("energy_j").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,147 @@
+//! Hardware platforms: HMAI — the paper's (4 SconvOD, 4 SconvIC,
+//! 3 MconvMC) heterogeneous configuration (§8.2) — plus the homogeneous
+//! baselines (13 SO / 13 SI / 12 MM, §3.1) and arbitrary custom mixes.
+
+pub mod alloc;
+
+use crate::accel::AccelKind;
+
+/// One physical sub-accelerator instance.
+#[derive(Debug, Clone, Copy)]
+pub struct AccelInstance {
+    pub id: usize,
+    pub kind: AccelKind,
+}
+
+/// A multi-accelerator platform.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: String,
+    pub accels: Vec<AccelInstance>,
+}
+
+impl Platform {
+    /// Build from per-kind counts (SO, SI, MM).
+    pub fn from_counts(name: &str, so: usize, si: usize, mm: usize) -> Platform {
+        let mut accels = Vec::with_capacity(so + si + mm);
+        let mut id = 0;
+        for (kind, n) in [
+            (AccelKind::SconvOD, so),
+            (AccelKind::SconvIC, si),
+            (AccelKind::MconvMC, mm),
+        ] {
+            for _ in 0..n {
+                accels.push(AccelInstance { id, kind });
+                id += 1;
+            }
+        }
+        Platform { name: name.to_string(), accels }
+    }
+
+    /// The paper's HMAI: (4 SconvOD, 4 SconvIC, 3 MconvMC) — §8.2.
+    pub fn hmai() -> Platform {
+        Platform::from_counts("HMAI(4SO,4SI,3MM)", 4, 4, 3)
+    }
+
+    /// Homogeneous baselines (§3.1/§8.2): sized to meet the max-scenario
+    /// requirement — 13 SconvOD, 13 SconvIC or 12 MconvMC.
+    pub fn homogeneous(kind: AccelKind) -> Platform {
+        match kind {
+            AccelKind::SconvOD => Platform::from_counts("13xSconvOD", 13, 0, 0),
+            AccelKind::SconvIC => Platform::from_counts("13xSconvIC", 0, 13, 0),
+            AccelKind::MconvMC => Platform::from_counts("12xMconvMC", 0, 0, 12),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.accels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.accels.is_empty()
+    }
+
+    pub fn count_of(&self, kind: AccelKind) -> usize {
+        self.accels.iter().filter(|a| a.kind == kind).count()
+    }
+
+    /// Peak compute of the whole platform, TOPS.
+    pub fn peak_tops(&self) -> f64 {
+        self.len() as f64 * crate::accel::peak_tops()
+    }
+
+    /// Parse "4,4,3"-style counts or a named platform.
+    pub fn parse(s: &str) -> Option<Platform> {
+        match s.to_ascii_lowercase().as_str() {
+            "hmai" => return Some(Platform::hmai()),
+            "13so" => return Some(Platform::homogeneous(AccelKind::SconvOD)),
+            "13si" => return Some(Platform::homogeneous(AccelKind::SconvIC)),
+            "12mm" => return Some(Platform::homogeneous(AccelKind::MconvMC)),
+            _ => {}
+        }
+        let parts: Vec<usize> = s.split(',').filter_map(|p| p.trim().parse().ok()).collect();
+        if parts.len() == 3 {
+            Some(Platform::from_counts(
+                &format!("custom({},{},{})", parts[0], parts[1], parts[2]),
+                parts[0],
+                parts[1],
+                parts[2],
+            ))
+        } else {
+            None
+        }
+    }
+}
+
+/// Number of accelerators of `kind` needed to sustain `fps_req` on `model`.
+pub fn accels_needed(kind: AccelKind, model: crate::workload::ModelKind, fps_req: f64) -> usize {
+    (fps_req / crate::accel::cost(kind, model).fps()).ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::camera_hz::model_fps_requirement;
+    use crate::env::{Area, Scenario};
+    use crate::workload::ModelKind;
+
+    #[test]
+    fn hmai_composition() {
+        let p = Platform::hmai();
+        assert_eq!(p.len(), 11);
+        assert_eq!(p.count_of(AccelKind::SconvOD), 4);
+        assert_eq!(p.count_of(AccelKind::SconvIC), 4);
+        assert_eq!(p.count_of(AccelKind::MconvMC), 3);
+        // Stable ids 0..11.
+        assert!(p.accels.iter().enumerate().all(|(i, a)| a.id == i));
+    }
+
+    #[test]
+    fn homogeneous_sizes_match_paper() {
+        assert_eq!(Platform::homogeneous(AccelKind::SconvOD).len(), 13);
+        assert_eq!(Platform::homogeneous(AccelKind::SconvIC).len(), 13);
+        assert_eq!(Platform::homogeneous(AccelKind::MconvMC).len(), 12);
+    }
+
+    #[test]
+    fn paper_3_1_sconvod_counts() {
+        // §3.1: going straight in UB needs 3 SconvOD for YOLO, 6 for SSD,
+        // 3 for GOTURN -> 12 total.  Our Table 8-pinned FPS reproduces it.
+        let a = Area::Urban;
+        let s = Scenario::GoStraight;
+        let k = AccelKind::SconvOD;
+        assert_eq!(accels_needed(k, ModelKind::Yolo, model_fps_requirement(a, s, ModelKind::Yolo)), 3);
+        assert_eq!(accels_needed(k, ModelKind::Ssd, model_fps_requirement(a, s, ModelKind::Ssd)), 6);
+        assert_eq!(
+            accels_needed(k, ModelKind::Goturn, model_fps_requirement(a, s, ModelKind::Goturn)),
+            3
+        );
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(Platform::parse("hmai").unwrap().len(), 11);
+        assert_eq!(Platform::parse("2,1,1").unwrap().len(), 4);
+        assert!(Platform::parse("nonsense").is_none());
+    }
+}

@@ -1,0 +1,289 @@
+//! Regenerators for the paper's static tables (1-4, 6-9, 11).  Each
+//! function returns a rendered `Table` whose rows come from the library's
+//! models, not hard-coded copies — `hmai report <name>` prints them, the
+//! test suite asserts the headline cells.
+
+use anyhow::{bail, Result};
+
+use crate::accel::{cost, AccelKind, ALL_ACCELS};
+use crate::env::camera_hz::{camera_hz, model_fps_requirement};
+use crate::env::objects::table2_rows;
+use crate::env::{Area, Scenario, ALL_GROUPS, ALL_SCENARIOS};
+use crate::platform::alloc;
+use crate::util::table::{f1, f2, Table};
+use crate::workload::accuracy::TABLE3;
+use crate::workload::{model, ALL_MODELS};
+
+/// Table 1: MACs, weights+neurons, layer counts of the three CNNs.
+pub fn table1() -> Table {
+    let mut t = Table::new(["CNN", "#MACs (G)", "#weights+neurons (M)", "Layers"]);
+    for kind in ALL_MODELS {
+        let m = model(kind);
+        t.row([
+            kind.name().to_string(),
+            f1(m.gmacs()),
+            f1(m.mweights_neurons()),
+            m.num_layers().to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table 2: object area / image proportion at representative distances.
+pub fn table2() -> Table {
+    let mut t = Table::new(["Object", "Distance (m)", "Area (px)", "Proportion"]);
+    for row in table2_rows() {
+        t.row([
+            row.class.name().to_string(),
+            f2(row.distance_m),
+            format!("{:.0}", row.model_area_px),
+            format!("{:.2}%", row.model_area_px / (640.0 * 480.0) * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Table 3: YOLO/SSD AP by object size (constants from the cited papers).
+pub fn table3() -> Table {
+    let mut t = Table::new(["Method", "Backbone", "AP_S", "AP_M", "AP_L"]);
+    for row in TABLE3 {
+        t.row([
+            row.method.to_string(),
+            row.backbone.to_string(),
+            f1(row.ap_s),
+            f1(row.ap_m),
+            f1(row.ap_l),
+        ]);
+    }
+    t
+}
+
+/// Table 4: camera counts per function group.
+pub fn table4() -> Table {
+    let mut t = Table::new(["Function", "Cameras"]);
+    for g in ALL_GROUPS {
+        t.row([g.name().to_string(), g.count().to_string()]);
+    }
+    t.row(["Total".to_string(), crate::env::total_cameras().to_string()]);
+    t
+}
+
+/// Table 5: per-model FPS requirements in urban area (derived from the
+/// Fig. 1 Camera_HZ tables, not hard-coded).
+pub fn table5() -> Table {
+    let mut t = Table::new(["Scenario", "DET", "TRA", "YOLO", "SSD", "GOTURN"]);
+    for s in ALL_SCENARIOS {
+        let det = crate::env::camera_hz::aggregate_fps(Area::Urban, s, false);
+        let tra = crate::env::camera_hz::aggregate_fps(Area::Urban, s, true);
+        t.row([
+            s.name().to_string(),
+            format!("{det:.0}"),
+            format!("{tra:.0}"),
+            format!("{:.0}", model_fps_requirement(Area::Urban, s, crate::workload::ModelKind::Yolo)),
+            format!("{:.0}", model_fps_requirement(Area::Urban, s, crate::workload::ModelKind::Ssd)),
+            format!("{:.0}", model_fps_requirement(Area::Urban, s, crate::workload::ModelKind::Goturn)),
+        ]);
+    }
+    t
+}
+
+/// Table 6: camera frame rates across driving datasets (literature
+/// constants motivating ≥40 FPS cameras).
+pub fn table6() -> Table {
+    let mut t = Table::new(["Source", "Max velocity (km/h)", "Frame rate (FPS)"]);
+    for (src, v, f) in [
+        ("KITTI", "90", "10-100"),
+        ("ApolloScape", "30", "30"),
+        ("Princeton", "80", "10"),
+        ("VisLab", "70.9", ">25"),
+        ("Oxford RobotCar", "n/a", "11.1-16"),
+        ("Comma.ai", "n/a", "20"),
+    ] {
+        t.row([src, v, f]);
+    }
+    t
+}
+
+/// Table 7: peak FPS of single accelerators from the literature — the
+/// motivation that no single accelerator reaches the 1200 FPS a 30-camera
+/// car needs.
+pub fn table7() -> Table {
+    let mut t = Table::new(["Device", "YOLO variant", "Peak FPS"]);
+    for (d, y, f) in [
+        ("GTX TitanX", "Sim-YOLO-v2", 88.0),
+        ("GTX TitanX", "FAST YOLO", 155.0),
+        ("Zynq UltraScale+", "Tincy YOLO", 30.0),
+        ("Zynq UltraScale+", "Lightweight YOLO-v2", 40.81),
+        ("Virtex-7 VC707", "Tiny YOLO-v2", 66.56),
+        ("Virtex-7 VC707", "Sim-YOLO-v2", 109.3),
+        ("ADM-7V3 FPGA(1)", "Tiny YOLO", 208.2),
+        ("ADM-7V3 FPGA(2)", "Tiny YOLO", 314.2),
+    ] {
+        t.row([d.to_string(), y.to_string(), f1(f)]);
+    }
+    t
+}
+
+/// Table 8: FPS of the three sub-accelerators on the three CNNs (the
+/// calibrated cycle model).
+pub fn table8() -> Table {
+    let mut t = Table::new(["Model", "SconvOD (FPS)", "SconvIC (FPS)", "MconvMC (FPS)"]);
+    for m in ALL_MODELS {
+        t.row([
+            m.name().to_string(),
+            f2(cost(AccelKind::SconvOD, m).fps()),
+            f2(cost(AccelKind::SconvIC, m).fps()),
+            f2(cost(AccelKind::MconvMC, m).fps()),
+        ]);
+    }
+    t
+}
+
+/// Table 9: best task allocation on (4 SO, 4 SI, 3 MM) per UB scenario.
+pub fn table9() -> Table {
+    let mut t = Table::new(["Scenario", "YOLO", "SSD", "GOTURN", "Utilization"]);
+    for s in ALL_SCENARIOS {
+        let reqs = alloc::requirements(Area::Urban, s);
+        let (a, u) = alloc::best_allocation((4, 4, 3), &reqs).expect("HMAI is feasible in UB");
+        let cell = |mi: usize| {
+            let mut parts = Vec::new();
+            for k in ALL_ACCELS {
+                let n = a[k.index()][mi];
+                if n > 0 {
+                    parts.push(format!("{} {}", n, k.short()));
+                }
+            }
+            if parts.is_empty() { "-".into() } else { parts.join(", ") }
+        };
+        t.row([
+            s.name().to_string(),
+            cell(0),
+            cell(1),
+            cell(2),
+            format!("{:.2}%", u * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Table 11: which metrics each algorithm covers.
+pub fn table11() -> Table {
+    let mut t = Table::new(["Metric", "EDP", "Min-Min", "ATA", "Rand", "GA", "SA", "FlexAI"]);
+    let y = "yes";
+    let n = "-";
+    t.row(["Time", y, y, n, y, y, y, y]);
+    t.row(["Energy", y, y, y, y, y, y, y]);
+    t.row(["Resource", n, n, n, n, n, n, y]);
+    t.row(["MS", n, n, y, n, n, n, y]);
+    t
+}
+
+/// HMAI peak summary (supporting §3.1 numbers).
+pub fn platform_summary() -> Table {
+    let mut t = Table::new(["Platform", "Accels", "Peak TOPS"]);
+    for (name, p) in [
+        ("HMAI", crate::platform::Platform::hmai()),
+        ("13xSconvOD", crate::platform::Platform::homogeneous(AccelKind::SconvOD)),
+        ("13xSconvIC", crate::platform::Platform::homogeneous(AccelKind::SconvIC)),
+        ("12xMconvMC", crate::platform::Platform::homogeneous(AccelKind::MconvMC)),
+    ] {
+        t.row([name.to_string(), p.len().to_string(), f2(p.peak_tops())]);
+    }
+    t
+}
+
+/// Fig. 1 frame-rate requirement matrix (per area × scenario × group).
+pub fn fig1() -> Table {
+    let mut t = Table::new(["Area", "Scenario", "FC", "FLSC", "RLSC", "FRSC", "RRSC", "RC"]);
+    for a in crate::env::ALL_AREAS {
+        for s in ALL_SCENARIOS {
+            if s == Scenario::Reverse && !a.allows_reverse() {
+                continue;
+            }
+            let mut row = vec![a.name().to_string(), s.name().to_string()];
+            for g in ALL_GROUPS {
+                row.push(format!("{:.0}", camera_hz(a, s, g)));
+            }
+            t.row(row);
+        }
+    }
+    t
+}
+
+/// Render a report by name.
+pub fn render(name: &str) -> Result<String> {
+    let t = match name {
+        "table1" => table1(),
+        "table2" => table2(),
+        "table3" => table3(),
+        "table4" => table4(),
+        "table5" => table5(),
+        "table6" => table6(),
+        "table7" => table7(),
+        "table8" => table8(),
+        "table9" => table9(),
+        "table11" => table11(),
+        "fig1" => fig1(),
+        "platforms" => platform_summary(),
+        _ => bail!(
+            "unknown report '{name}' (try table1-9, table11, fig1, platforms)"
+        ),
+    };
+    Ok(t.render())
+}
+
+/// All report names, for `hmai report all`.
+pub const ALL_REPORTS: [&str; 12] = [
+    "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "table9",
+    "table11", "fig1", "platforms",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_reports_render() {
+        for name in ALL_REPORTS {
+            let s = render(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(s.lines().count() >= 3, "{name} too short:\n{s}");
+        }
+        assert!(render("nope").is_err());
+    }
+
+    #[test]
+    fn table1_headline_cells() {
+        let s = table1().render();
+        assert!(s.contains("SSD"));
+        assert!(s.contains("101")); // YOLO layers
+        assert!(s.contains("11")); // GOTURN layers
+    }
+
+    #[test]
+    fn table5_matches_paper_totals() {
+        let s = table5().render();
+        assert!(s.contains("870"), "{s}");
+        assert!(s.contains("840"), "{s}");
+        assert!(s.contains("740"), "{s}");
+    }
+
+    #[test]
+    fn table8_matches_calibration() {
+        let s = table8().render();
+        assert!(s.contains("170.37"), "{s}");
+        assert!(s.contains("500.54"), "{s}");
+    }
+
+    #[test]
+    fn table9_is_feasible_allocation_text() {
+        let s = table9().render();
+        assert!(s.contains('%'));
+        assert!(s.contains("SO") || s.contains("SI") || s.contains("MM"));
+    }
+
+    #[test]
+    fn peak_tops_consistent() {
+        let s = platform_summary().render();
+        assert!(s.contains(&format!("{:.2}", 11.0 * crate::accel::peak_tops())));
+    }
+}

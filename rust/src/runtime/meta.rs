@@ -1,0 +1,162 @@
+//! `artifacts/meta.json`: the dimension/hyper-parameter contract between
+//! `python/compile/aot.py` (which writes it) and the rust runtime (which
+//! must feed the executables exactly those shapes).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed meta.json.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Meta {
+    pub n_slots: usize,
+    pub task_feats: usize,
+    pub slot_feats: usize,
+    pub in_dim: usize,
+    pub h1: usize,
+    pub h2: usize,
+    pub out_dim: usize,
+    pub train_batch: usize,
+    pub infer_batch: usize,
+    pub gamma: f64,
+    pub lr: f64,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+}
+
+impl Meta {
+    pub fn load(path: &Path) -> Result<Meta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Meta> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("meta.json: {e:?}"))?;
+        let o = j.as_obj().context("meta.json: not an object")?;
+        let get = |k: &str| -> Result<usize> {
+            o.get(k)
+                .and_then(|v| v.as_usize())
+                .with_context(|| format!("meta.json: missing usize '{k}'"))
+        };
+        let param_names = o
+            .get("param_names")
+            .and_then(|v| v.as_arr())
+            .context("meta.json: param_names")?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect::<Vec<_>>();
+        let param_shapes = o
+            .get("param_shapes")
+            .and_then(|v| v.as_arr())
+            .context("meta.json: param_shapes")?
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .context("shape row")
+                    .map(|r| r.iter().filter_map(|v| v.as_usize()).collect::<Vec<_>>())
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let meta = Meta {
+            n_slots: get("n_slots")?,
+            task_feats: get("task_feats")?,
+            slot_feats: get("slot_feats")?,
+            in_dim: get("in_dim")?,
+            h1: get("h1")?,
+            h2: get("h2")?,
+            out_dim: get("out_dim")?,
+            train_batch: get("train_batch")?,
+            infer_batch: get("infer_batch")?,
+            gamma: o.get("gamma").and_then(|v| v.as_f64()).context("gamma")?,
+            lr: o.get("lr").and_then(|v| v.as_f64()).context("lr")?,
+            param_names,
+            param_shapes,
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    /// Cross-check internal consistency (the same invariants model.py holds).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.in_dim == self.task_feats + self.slot_feats * self.n_slots,
+            "in_dim {} != {} + {}*{}",
+            self.in_dim,
+            self.task_feats,
+            self.slot_feats,
+            self.n_slots
+        );
+        anyhow::ensure!(self.out_dim == self.n_slots, "out_dim != n_slots");
+        anyhow::ensure!(
+            self.param_shapes.len() == self.param_names.len(),
+            "param names/shapes mismatch"
+        );
+        let want = [
+            vec![self.in_dim, self.h1],
+            vec![self.h1],
+            vec![self.h1, self.h2],
+            vec![self.h2],
+            vec![self.h2, self.out_dim],
+            vec![self.out_dim],
+        ];
+        anyhow::ensure!(
+            self.param_shapes == want,
+            "param_shapes {:?} != expected {:?}",
+            self.param_shapes,
+            want
+        );
+        Ok(())
+    }
+
+    /// Element count of parameter tensor `i`.
+    pub fn param_len(&self, i: usize) -> usize {
+        self.param_shapes[i].iter().product()
+    }
+
+    /// Total parameter count of the Q-network.
+    pub fn total_params(&self) -> usize {
+        (0..self.param_shapes.len()).map(|i| self.param_len(i)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "n_slots": 16, "task_feats": 6, "slot_feats": 8,
+        "in_dim": 134, "h1": 256, "h2": 64, "out_dim": 16,
+        "train_batch": 64, "infer_batch": 30,
+        "gamma": 0.95, "lr": 0.01,
+        "param_names": ["w1","b1","w2","b2","w3","b3"],
+        "param_shapes": [[134,256],[256],[256,64],[64],[64,16],[16]]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Meta::parse(SAMPLE).unwrap();
+        assert_eq!(m.in_dim, 134);
+        assert_eq!(m.param_len(0), 134 * 256);
+        assert_eq!(
+            m.total_params(),
+            134 * 256 + 256 + 256 * 64 + 64 + 64 * 16 + 16
+        );
+    }
+
+    #[test]
+    fn rejects_inconsistent_dims() {
+        let bad = SAMPLE.replace("\"in_dim\": 134", "\"in_dim\": 999");
+        assert!(Meta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_artifact_meta_is_consistent() {
+        let path = std::path::Path::new("artifacts/meta.json");
+        if path.exists() {
+            let m = Meta::load(path).unwrap();
+            assert_eq!(m.out_dim, m.n_slots);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Q-network parameter set: host tensors + a version id.
+//!
+//! The version id keys the runtime's device-buffer cache: parameters are
+//! uploaded to the PJRT device once per version and every subsequent
+//! inference reuses the resident buffers — the scheduler hot path only
+//! materializes the (tiny) state buffer per decision.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::util::json::{Json, JsonObj};
+
+use super::Meta;
+
+static NEXT_VERSION: AtomicU64 = AtomicU64::new(1);
+
+/// EvalNet/TargNet parameters.
+#[derive(Debug)]
+pub struct Params {
+    tensors: Vec<Vec<f32>>,
+    shapes: Vec<Vec<usize>>,
+    /// Unique id for device-cache keying; changes on every new set.
+    version: u64,
+}
+
+impl Clone for Params {
+    fn clone(&self) -> Self {
+        // A clone is a distinct logical set (it may diverge), so it gets
+        // its own version and its own device upload on first use.
+        Params::from_host(self.tensors.clone(), self.shapes.clone())
+            .expect("clone of valid params")
+    }
+}
+
+impl Params {
+    /// Build from host tensors + shapes (validates element counts).
+    pub fn from_host(tensors: Vec<Vec<f32>>, shapes: Vec<Vec<usize>>) -> Result<Params> {
+        anyhow::ensure!(tensors.len() == shapes.len(), "tensor/shape count mismatch");
+        for (t, s) in tensors.iter().zip(&shapes) {
+            let want: usize = s.iter().product();
+            anyhow::ensure!(t.len() == want, "tensor len {} != shape {:?}", t.len(), s);
+        }
+        Ok(Params {
+            tensors,
+            shapes,
+            version: NEXT_VERSION.fetch_add(1, Ordering::Relaxed),
+        })
+    }
+
+    /// Build from executable outputs in meta order.
+    pub fn from_literals(meta: &Meta, lits: Vec<Literal>) -> Result<Params> {
+        anyhow::ensure!(
+            lits.len() == meta.param_shapes.len(),
+            "got {} literals, want {}",
+            lits.len(),
+            meta.param_shapes.len()
+        );
+        let mut tensors = Vec::with_capacity(lits.len());
+        for (lit, shape) in lits.iter().zip(&meta.param_shapes) {
+            let v = lit.to_vec::<f32>()?;
+            anyhow::ensure!(
+                v.len() == shape.iter().product::<usize>(),
+                "literal len {} != shape {:?}",
+                v.len(),
+                shape
+            );
+            tensors.push(v);
+        }
+        Params::from_host(tensors, meta.param_shapes.clone())
+    }
+
+    pub fn tensors(&self) -> &[Vec<f32>] {
+        &self.tensors
+    }
+
+    pub fn shapes(&self) -> &[Vec<usize>] {
+        &self.shapes
+    }
+
+    /// Device-cache key (unique per parameter set).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// L2 distance to another parameter set (target-sync diagnostics).
+    pub fn l2_distance(&self, other: &Params) -> f64 {
+        self.tensors
+            .iter()
+            .zip(&other.tensors)
+            .flat_map(|(a, b)| a.iter().zip(b))
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Serialize for checkpoints.
+    pub fn to_json(&self, names: &[String]) -> Json {
+        let mut o = JsonObj::new();
+        for ((name, t), s) in names.iter().zip(&self.tensors).zip(&self.shapes) {
+            let mut entry = JsonObj::new();
+            entry.insert("shape", Json::Arr(s.iter().map(|&d| Json::Num(d as f64)).collect()));
+            entry.insert("data", Json::array_f32(t));
+            o.insert(name.clone(), Json::Obj(entry));
+        }
+        Json::Obj(o)
+    }
+
+    /// Deserialize a checkpoint produced by `to_json`.
+    pub fn from_json(j: &Json, names: &[String]) -> Result<Params> {
+        let o = j.as_obj().ok_or_else(|| anyhow::anyhow!("params: not an object"))?;
+        let mut tensors = Vec::new();
+        let mut shapes = Vec::new();
+        for name in names {
+            let entry = o
+                .get(name)
+                .filter(|v| v.as_obj().is_some())
+                .ok_or_else(|| anyhow::anyhow!("params: missing '{name}'"))?;
+            let shape: Vec<usize> = entry
+                .get_arr("shape")
+                .map_err(|e| anyhow::anyhow!("{name}.shape: {e:?}"))?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
+            let data = entry
+                .get_f32_vec("data")
+                .map_err(|e| anyhow::anyhow!("{name}.data: {e:?}"))?;
+            shapes.push(shape);
+            tensors.push(data);
+        }
+        Params::from_host(tensors, shapes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Params {
+        Params::from_host(
+            vec![vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![0.5, -0.5]],
+            vec![vec![3, 2], vec![2]],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn versions_are_unique() {
+        let p = sample();
+        let q = sample();
+        let r = p.clone();
+        assert_ne!(p.version(), q.version());
+        assert_ne!(p.version(), r.version());
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        assert!(Params::from_host(vec![vec![1.0; 5]], vec![vec![3, 2]]).is_err());
+    }
+
+    #[test]
+    fn clone_is_deep() {
+        let p = sample();
+        let q = p.clone();
+        assert_eq!(p.tensors(), q.tensors());
+        assert!((p.l2_distance(&q)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = sample();
+        let names = vec!["w".to_string(), "b".to_string()];
+        let j = p.to_json(&names);
+        let q = Params::from_json(&Json::parse(&j.to_string()).unwrap(), &names).unwrap();
+        assert_eq!(p.tensors(), q.tensors());
+        assert_eq!(p.shapes(), q.shapes());
+    }
+
+    #[test]
+    fn l2_distance_detects_change() {
+        let p = sample();
+        let mut t = p.tensors().to_vec();
+        t[0][0] += 3.0;
+        let q = Params::from_host(t, p.shapes().to_vec()).unwrap();
+        assert!((p.l2_distance(&q) - 3.0).abs() < 1e-6);
+    }
+}

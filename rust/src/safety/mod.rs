@@ -1,0 +1,9 @@
+//! Safety substrate: the RSS safety model (Eq. 1), per-camera safety times,
+//! the Matching Score (§6.1, Fig. 7) and the braking model (§8.4, Fig. 14).
+
+pub mod braking;
+pub mod ms;
+pub mod rss;
+
+pub use ms::{matching_score, TaskCategory};
+pub use rss::{safety_time, RssParams};

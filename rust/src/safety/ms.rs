@@ -1,0 +1,77 @@
+//! Matching Score (§6.1, Fig. 7): how well a task's *response time* (wait +
+//! schedule + compute) matches its camera's *safety time*.
+//!
+//! Object detection (Fig. 7a): inside the accepted-time region [0, ST] the
+//! score grows linearly with response time — slower is *better* as long as
+//! the deadline holds, because energy drops with relaxed latency (§6.1,
+//! citing [72]).  Past ST the score plummets to -1.
+//!
+//! Object tracking (Fig. 7b): a step function.  NOTE the paper's text says
+//! MS = -1 *inside* ACTime and +1 outside, which would reward deadline
+//! misses; we implement the evident intent (+1 in ACTime, -1 in UACTime) —
+//! recorded as a deviation in DESIGN.md.
+
+/// Task category for MS purposes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskCategory {
+    Detection,
+    Tracking,
+}
+
+/// Matching score of a task with `response_time` against `safety_time`.
+pub fn matching_score(cat: TaskCategory, response_time: f64, safety_time: f64) -> f64 {
+    debug_assert!(safety_time > 0.0);
+    match cat {
+        TaskCategory::Detection => {
+            if response_time <= safety_time {
+                (response_time / safety_time).clamp(0.0, 1.0)
+            } else {
+                -1.0
+            }
+        }
+        TaskCategory::Tracking => {
+            if response_time <= safety_time {
+                1.0
+            } else {
+                -1.0
+            }
+        }
+    }
+}
+
+/// Whether the response met the deadline (used by STMRate, §8.4).
+pub fn meets_safety_time(response_time: f64, safety_time: f64) -> bool {
+    response_time <= safety_time
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detection_ramp() {
+        // Linear growth inside ACTime (Fig. 7a).
+        assert_eq!(matching_score(TaskCategory::Detection, 0.0, 2.0), 0.0);
+        assert_eq!(matching_score(TaskCategory::Detection, 1.0, 2.0), 0.5);
+        assert_eq!(matching_score(TaskCategory::Detection, 2.0, 2.0), 1.0);
+    }
+
+    #[test]
+    fn detection_plummets_past_deadline() {
+        assert_eq!(matching_score(TaskCategory::Detection, 2.001, 2.0), -1.0);
+        assert_eq!(matching_score(TaskCategory::Detection, 100.0, 2.0), -1.0);
+    }
+
+    #[test]
+    fn tracking_step() {
+        assert_eq!(matching_score(TaskCategory::Tracking, 0.5, 2.0), 1.0);
+        assert_eq!(matching_score(TaskCategory::Tracking, 2.0, 2.0), 1.0);
+        assert_eq!(matching_score(TaskCategory::Tracking, 2.5, 2.0), -1.0);
+    }
+
+    #[test]
+    fn stmrate_predicate() {
+        assert!(meets_safety_time(1.0, 2.0));
+        assert!(!meets_safety_time(3.0, 2.0));
+    }
+}

@@ -1,0 +1,75 @@
+//! Shared fitness/cost function for the guided random-search baselines
+//! (GA, SA).  As the paper notes (§7): "a fitness equation in GA and a
+//! cost function in SA are needed ... thus the global performance like
+//! resource utilization of HMAI can't be taken into account" — so this
+//! cost deliberately covers only *time and energy* (Table 11), never
+//! R_Balance or MS.
+
+use crate::env::taskgen::Task;
+use crate::sim::ShadowState;
+
+/// Cost of mapping the burst `tasks` with `assignment`: the burst-local
+/// makespan (when the last accelerator drains) plus normalized energy.
+/// Lower is better.
+/// Energy weight: joules are converted to "equivalent seconds" via the
+/// burst's own best-case time/energy ratio, then discounted so makespan
+/// dominates and energy breaks ties.
+const ENERGY_WEIGHT: f64 = 0.25;
+
+pub fn rollout_cost(tasks: &[Task], assignment: &[usize], state: &ShadowState) -> f64 {
+    debug_assert_eq!(tasks.len(), assignment.len());
+    let mut rolling = state.clone();
+    let mut energy = 0.0;
+    // Burst-intrinsic conversion: seconds per joule at the best-case
+    // operating point, so the two terms are commensurate regardless of
+    // burst composition.
+    let (mut best_t, mut best_e) = (0.0, 0.0);
+    for (task, &a) in tasks.iter().zip(assignment) {
+        energy += rolling.apply(task, a).energy_j;
+        let mut bt = f64::INFINITY;
+        let mut be = f64::INFINITY;
+        for i in 0..state.len() {
+            bt = bt.min(crate::accel::cost(state.kinds[i], task.model).time_s);
+            be = be.min(crate::accel::cost(state.kinds[i], task.model).energy_j);
+        }
+        best_t += bt;
+        best_e += be;
+    }
+    let drain = rolling
+        .busy_until
+        .iter()
+        .fold(0.0_f64, |m, &b| m.max(b - state.now));
+    let sec_per_joule = if best_e > 0.0 { best_t / best_e } else { 0.0 };
+    drain + ENERGY_WEIGHT * energy * sec_per_joule
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::NormScales;
+    use crate::platform::Platform;
+    use crate::sched::tests::small_queue;
+
+    #[test]
+    fn balanced_assignment_costs_less_than_piled() {
+        let q = small_queue(1);
+        let platform = Platform::hmai();
+        let state = ShadowState::new(&platform, NormScales::unit());
+        let burst: Vec<_> = q.tasks.iter().take(11).cloned().collect();
+        let piled = vec![0; 11];
+        let spread: Vec<usize> = (0..11).collect();
+        assert!(
+            rollout_cost(&burst, &spread, &state) < rollout_cost(&burst, &piled, &state)
+        );
+    }
+
+    #[test]
+    fn cost_does_not_mutate_state() {
+        let q = small_queue(2);
+        let platform = Platform::hmai();
+        let state = ShadowState::new(&platform, NormScales::unit());
+        let burst: Vec<_> = q.tasks.iter().take(5).cloned().collect();
+        let _ = rollout_cost(&burst, &[0, 1, 2, 3, 4], &state);
+        assert!(state.busy_until.iter().all(|&b| b == 0.0));
+    }
+}

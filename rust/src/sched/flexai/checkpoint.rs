@@ -1,0 +1,92 @@
+//! FlexAI checkpoints: EvalNet parameters + training provenance as JSON.
+//! The paper's deployment model (§5.2: "the RL agent can be retrained by
+//! GPU in cloud ... when the task category and scheduling strategy need to
+//! be changed") maps to: train → save checkpoint → ship to the vehicle →
+//! load in pure-inference mode.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Params, Runtime};
+use crate::util::json::Json;
+
+use super::{FlexAI, FlexAIConfig};
+
+/// Checkpoint format version.
+pub const VERSION: usize = 1;
+
+/// Serialize agent parameters + provenance.
+pub fn save(agent: &FlexAI, path: &Path) -> Result<()> {
+    let rt = agent.runtime();
+    let j = Json::from_pairs(vec![
+        ("version", Json::Num(VERSION as f64)),
+        ("in_dim", Json::Num(rt.meta.in_dim as f64)),
+        ("out_dim", Json::Num(rt.meta.out_dim as f64)),
+        ("steps", Json::Num(agent.steps as f64)),
+        ("train_steps", Json::Num(agent.train_steps as f64)),
+        ("params", agent.params().to_json(&rt.meta.param_names)),
+    ]);
+    std::fs::write(path, j.to_string())
+        .with_context(|| format!("writing checkpoint {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a checkpoint into a fresh inference-mode agent.
+pub fn load(rt: Arc<Runtime>, path: &Path, cfg: FlexAIConfig) -> Result<FlexAI> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("checkpoint json: {e:?}"))?;
+    anyhow::ensure!(j.as_obj().is_some(), "checkpoint: not an object");
+    let in_dim = j.get_usize("in_dim").map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    anyhow::ensure!(
+        in_dim == rt.meta.in_dim,
+        "checkpoint in_dim {} != runtime {} (stale artifacts?)",
+        in_dim,
+        rt.meta.in_dim
+    );
+    let params = Params::from_json(
+        j.get("params").map_err(|e| anyhow::anyhow!("checkpoint: params: {e:?}"))?,
+        &rt.meta.param_names,
+    )?;
+    anyhow::ensure!(
+        params.shapes() == rt.meta.param_shapes.as_slice(),
+        "checkpoint shapes mismatch"
+    );
+    let mut agent = FlexAI::new(rt, cfg)?;
+    agent.set_params(params);
+    agent.set_training(false);
+    Ok(agent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_params() {
+        let rt = Arc::new(Runtime::load_default().expect("artifacts present"));
+        let mut agent = FlexAI::new(rt.clone(), FlexAIConfig::default()).unwrap();
+        agent.steps = 123;
+        let dir = std::env::temp_dir().join("hmai_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("agent.json");
+        save(&agent, &path).unwrap();
+        let loaded = load(rt, &path, FlexAIConfig::default()).unwrap();
+        assert!(agent.params().l2_distance(loaded.params()) < 1e-12);
+        assert!(!loaded.is_training());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_checkpoint() {
+        let rt = Arc::new(Runtime::load_default().expect("artifacts present"));
+        let dir = std::env::temp_dir().join("hmai_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, "{\"version\": 1}").unwrap();
+        assert!(load(rt, &path, FlexAIConfig::default()).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,58 @@
+//! ε-greedy exploration schedule: linear decay from `start` to `end` over
+//! `decay_steps` decisions, then constant `end`.
+
+/// Exploration schedule parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpsilonSchedule {
+    pub start: f64,
+    pub end: f64,
+    pub decay_steps: u64,
+}
+
+impl Default for EpsilonSchedule {
+    fn default() -> Self {
+        EpsilonSchedule { start: 1.0, end: 0.05, decay_steps: 20_000 }
+    }
+}
+
+impl EpsilonSchedule {
+    /// Greedy-only (inference) schedule.
+    pub fn greedy() -> EpsilonSchedule {
+        EpsilonSchedule { start: 0.0, end: 0.0, decay_steps: 1 }
+    }
+
+    pub fn at(&self, step: u64) -> f64 {
+        if self.decay_steps == 0 || step >= self.decay_steps {
+            return self.end;
+        }
+        let frac = step as f64 / self.decay_steps as f64;
+        self.start + (self.end - self.start) * frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_decay_then_floor() {
+        let e = EpsilonSchedule { start: 1.0, end: 0.1, decay_steps: 100 };
+        assert_eq!(e.at(0), 1.0);
+        assert!((e.at(50) - 0.55).abs() < 1e-12);
+        assert_eq!(e.at(100), 0.1);
+        assert_eq!(e.at(1_000_000), 0.1);
+    }
+
+    #[test]
+    fn greedy_is_always_zero() {
+        let e = EpsilonSchedule::greedy();
+        assert_eq!(e.at(0), 0.0);
+        assert_eq!(e.at(10), 0.0);
+    }
+
+    #[test]
+    fn zero_decay_steps_is_constant_end() {
+        let e = EpsilonSchedule { start: 1.0, end: 0.3, decay_steps: 0 };
+        assert_eq!(e.at(0), 0.3);
+    }
+}

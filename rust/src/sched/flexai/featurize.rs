@@ -1,0 +1,162 @@
+//! State featurization: (Task-Info, HW-Info) → the flat f32 vector the
+//! Q-network consumes (§7.1).
+//!
+//! Layout must match `python/compile/model.py`:
+//!   [ task one-hot (3: YOLO | SSD | GOTURN),
+//!     amount_norm, layer_num_norm, safety_time_norm,            Task-Info
+//!     per-slot × N_SLOTS:                                        HW-Info
+//!       [ valid, kind_so, kind_si, kind_mm,
+//!         queue_time_norm, energy_share, rel_competitiveness, est_time_norm ] ]
+//!
+//! All features are bounded to [0, 1] so a policy trained on one route
+//! length transfers to another (raw E_i / queue times grow unboundedly
+//! along a route; ratios and shares do not).
+
+use crate::env::taskgen::Task;
+use crate::runtime::Meta;
+use crate::sim::ShadowState;
+
+/// Amount scale: SSD is the largest model at 26 GMACs (Table 1).
+pub const AMOUNT_SCALE: f64 = 30.0;
+/// LayerNum scale: YOLO has the most layers, 101 (Table 1).
+pub const LAYER_SCALE: f64 = 101.0;
+/// Safety-time scale: longest RSS safety times are ~100 ms (§6.1).
+pub const SAFETY_SCALE: f64 = 0.1;
+
+/// Write the feature vector for scheduling `task` on `state` into `out`
+/// (length `meta.in_dim`).  Returns the number of valid slots.
+pub fn featurize(task: &Task, state: &ShadowState, meta: &Meta, out: &mut [f32]) -> usize {
+    debug_assert_eq!(out.len(), meta.in_dim);
+    out.fill(0.0);
+
+    // --- Task-Info ---
+    out[task.model.index()] = 1.0;
+    out[3] = (task.amount_gmacs() / AMOUNT_SCALE).min(1.0) as f32;
+    out[4] = (task.layer_num() as f64 / LAYER_SCALE).min(1.0) as f32;
+    out[5] = (task.safety_time_s / SAFETY_SCALE).min(1.0) as f32;
+
+    // --- HW-Info: one block per slot ---
+    let n = state.len().min(meta.n_slots);
+    let total_energy: f64 =
+        state.metrics.per_accel.iter().map(|m| m.energy_j).sum::<f64>().max(1e-12);
+    // Best predicted response across valid slots — the anchor for the
+    // *relative* competitiveness feature.  Deadline-relative features
+    // alone squash millisecond-scale dataflow-affinity differences to
+    // ~1e-3 (invisible to the net); the relative feature keeps them O(1).
+    let mut est_min = f64::INFINITY;
+    for i in 0..n {
+        est_min = est_min.min(state.est_response(task, i));
+    }
+    let est_min = est_min.max(1e-12);
+    for i in 0..n {
+        let base = meta.task_feats + i * meta.slot_feats;
+        let est = state.est_response(task, i);
+        out[base] = 1.0; // valid
+        out[base + 1 + state.kinds[i].index()] = 1.0; // kind one-hot
+        // Queue backlog relative to this task's deadline budget.
+        out[base + 4] =
+            ratio01(state.queue_delay(i) / task.safety_time_s.max(1e-9));
+        // Energy share of this slot — the balance signal.
+        out[base + 5] = (state.accel_metrics(i).energy_j / total_energy) as f32;
+        // Relative competitiveness: 0 for the best slot, →1 as the slot's
+        // predicted response falls behind the best (affinity + backlog).
+        out[base + 6] = ((est / est_min - 1.0).clamp(0.0, 1.0)) as f32;
+        // Predicted response over safety time — the MS signal.
+        out[base + 7] = ratio01(est / task.safety_time_s.max(1e-9));
+    }
+    n
+}
+
+/// Map a nonnegative ratio to [0, 1]: identity on [0, 1], saturating at 2×.
+fn ratio01(r: f64) -> f32 {
+    (r.min(2.0) / 2.0) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::NormScales;
+    use crate::platform::Platform;
+
+    fn meta() -> Meta {
+        Meta::parse(
+            r#"{
+            "n_slots": 16, "task_feats": 6, "slot_feats": 8,
+            "in_dim": 134, "h1": 256, "h2": 64, "out_dim": 16,
+            "train_batch": 64, "infer_batch": 30,
+            "gamma": 0.95, "lr": 0.01,
+            "param_names": ["w1","b1","w2","b2","w3","b3"],
+            "param_shapes": [[134,256],[256],[256,64],[64],[64,16],[16]]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    fn env() -> (Task, ShadowState, Meta) {
+        let q = crate::sched::tests::small_queue(1);
+        let state = ShadowState::new(&Platform::hmai(), NormScales::unit());
+        (q.tasks[0].clone(), state, meta())
+    }
+
+    #[test]
+    fn layout_and_bounds() {
+        let (task, state, meta) = env();
+        let mut out = vec![0.0f32; meta.in_dim];
+        let n = featurize(&task, &state, &meta, &mut out);
+        assert_eq!(n, 11);
+        // One-hot task kind.
+        let onehot: f32 = out[..3].iter().sum();
+        assert_eq!(onehot, 1.0);
+        assert_eq!(out[task.model.index()], 1.0);
+        // All bounded.
+        assert!(out.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        // Slots 11..16 invalid → all-zero blocks.
+        for i in 11..16 {
+            let base = meta.task_feats + i * meta.slot_feats;
+            assert!(out[base..base + meta.slot_feats].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn kind_onehot_matches_platform_layout() {
+        let (task, state, meta) = env();
+        let mut out = vec![0.0f32; meta.in_dim];
+        featurize(&task, &state, &meta, &mut out);
+        // HMAI: slots 0-3 SO, 4-7 SI, 8-10 MM.
+        for (slot, kidx) in [(0usize, 1usize), (4, 2), (8, 3)] {
+            let base = meta.task_feats + slot * meta.slot_feats;
+            assert_eq!(out[base + kidx], 1.0, "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn backlog_moves_queue_and_est_features() {
+        let (task, mut state, meta) = env();
+        let mut before = vec![0.0f32; meta.in_dim];
+        featurize(&task, &state, &meta, &mut before);
+        for _ in 0..5 {
+            state.apply(&task, 0);
+        }
+        let mut after = vec![0.0f32; meta.in_dim];
+        featurize(&task, &state, &meta, &mut after);
+        let base = meta.task_feats;
+        assert!(after[base + 4] > before[base + 4], "queue feature must rise");
+        assert!(after[base + 7] > before[base + 7], "est feature must rise");
+        // Slot 1 untouched.
+        let b1 = meta.task_feats + meta.slot_feats;
+        assert_eq!(after[b1 + 4], before[b1 + 4]);
+    }
+
+    #[test]
+    fn energy_share_sums_to_one_over_active_slots() {
+        let (task, mut state, meta) = env();
+        state.apply(&task, 0);
+        state.apply(&task, 5);
+        let mut out = vec![0.0f32; meta.in_dim];
+        featurize(&task, &state, &meta, &mut out);
+        let total: f32 = (0..11)
+            .map(|i| out[meta.task_feats + i * meta.slot_feats + 5])
+            .sum();
+        assert!((total - 1.0).abs() < 1e-5, "shares sum {total}");
+    }
+}

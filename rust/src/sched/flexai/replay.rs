@@ -1,0 +1,132 @@
+//! Experience replay (§7.1: "the record (S_i, H_j, r_i, S_{i+1}) is saved
+//! in memory ... the RL agent will use record_m - record_n to start
+//! learning"): a fixed-capacity ring buffer with uniform sampling straight
+//! into the `qnet_train` batch layout.
+
+use crate::runtime::TrainBatch;
+use crate::util::rng::Rng;
+
+/// One (S, a, r, S', done) transition.
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub s: Vec<f32>,
+    pub a: i32,
+    pub r: f32,
+    pub s2: Vec<f32>,
+    pub done: f32,
+}
+
+/// Ring-buffer replay memory.
+#[derive(Debug)]
+pub struct Replay {
+    buf: Vec<Transition>,
+    capacity: usize,
+    next: usize,
+    pushed: u64,
+}
+
+impl Replay {
+    pub fn new(capacity: usize) -> Replay {
+        assert!(capacity > 0);
+        Replay { buf: Vec::with_capacity(capacity.min(4096)), capacity, next: 0, pushed: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total transitions ever pushed (≥ len once the ring wraps).
+    pub fn total_pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.next] = t;
+            self.next = (self.next + 1) % self.capacity;
+        }
+        self.pushed += 1;
+    }
+
+    /// Fill `batch` with `train_batch` uniform samples (with replacement).
+    /// Panics if empty.
+    pub fn sample_into(&self, batch: &mut TrainBatch, in_dim: usize, rng: &mut Rng) {
+        assert!(!self.buf.is_empty(), "sampling from empty replay");
+        let b = batch.a.len();
+        for k in 0..b {
+            let t = &self.buf[rng.below(self.buf.len())];
+            debug_assert_eq!(t.s.len(), in_dim);
+            batch.s[k * in_dim..(k + 1) * in_dim].copy_from_slice(&t.s);
+            batch.s2[k * in_dim..(k + 1) * in_dim].copy_from_slice(&t.s2);
+            batch.a[k] = t.a;
+            batch.r[k] = t.r;
+            batch.done[k] = t.done;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(tag: f32) -> Transition {
+        Transition { s: vec![tag; 4], a: tag as i32, r: tag, s2: vec![tag + 0.5; 4], done: 0.0 }
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_capacity() {
+        let mut r = Replay::new(3);
+        for i in 0..7 {
+            r.push(tr(i as f32));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.total_pushed(), 7);
+        // Oldest entries were overwritten: all remaining tags >= 4 - 3 + ...
+        assert!(r.buf.iter().all(|t| t.r >= 1.0));
+    }
+
+    #[test]
+    fn sample_fills_batch_layout() {
+        let mut r = Replay::new(8);
+        for i in 0..8 {
+            r.push(tr(i as f32));
+        }
+        let mut batch = TrainBatch {
+            s: vec![0.0; 5 * 4],
+            a: vec![0; 5],
+            r: vec![0.0; 5],
+            s2: vec![0.0; 5 * 4],
+            done: vec![9.0; 5],
+        };
+        let mut rng = crate::util::rng::Rng::new(1);
+        r.sample_into(&mut batch, 4, &mut rng);
+        for k in 0..5 {
+            let tag = batch.r[k];
+            assert_eq!(batch.a[k], tag as i32);
+            assert!(batch.s[k * 4..(k + 1) * 4].iter().all(|&x| x == tag));
+            assert!(batch.s2[k * 4..(k + 1) * 4].iter().all(|&x| x == tag + 0.5));
+            assert_eq!(batch.done[k], 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn sampling_empty_panics() {
+        let r = Replay::new(2);
+        let mut batch = TrainBatch {
+            s: vec![0.0; 4],
+            a: vec![0; 1],
+            r: vec![0.0; 1],
+            s2: vec![0.0; 4],
+            done: vec![0.0; 1],
+        };
+        let mut rng = crate::util::rng::Rng::new(1);
+        r.sample_into(&mut batch, 4, &mut rng);
+    }
+}

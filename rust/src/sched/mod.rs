@@ -1,0 +1,121 @@
+//! Task scheduling (§3.3, §7): the `Scheduler` trait the simulation engine
+//! drives, the paper's baselines (Min-Min, ATA, EDP, GA, SA, the
+//! unscheduled worst case) and FlexAI, the DQN scheduler.
+
+pub mod ata;
+pub mod edp;
+pub mod fitness;
+pub mod flexai;
+pub mod ga;
+pub mod minmin;
+pub mod random;
+pub mod roundrobin;
+pub mod sa;
+pub mod worst;
+
+use crate::env::taskgen::Task;
+use crate::sim::ShadowState;
+
+/// A task-mapping policy.  The engine hands the scheduler one *burst* (all
+/// tasks released at the same instant — up to one frame from each of the 30
+/// cameras) plus the exact platform state, and gets back one accelerator
+/// index per task.
+pub trait Scheduler {
+    /// Display name (used in reports and Figure legends).
+    fn name(&self) -> String;
+
+    /// Map each task of a burst to an accelerator index in `0..state.len()`.
+    fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize>;
+
+    /// Reset any per-queue state (called between task queues/episodes).
+    fn reset(&mut self) {}
+}
+
+/// Drive a per-task policy over a burst: the closure picks an accelerator
+/// for each task against a *rolling* shadow copy, so later picks in the
+/// burst see the backlog created by earlier ones — exactly what the engine
+/// will execute.
+pub fn sequential<F>(tasks: &[Task], state: &ShadowState, mut pick: F) -> Vec<usize>
+where
+    F: FnMut(&Task, &ShadowState) -> usize,
+{
+    let mut rolling = state.clone();
+    let mut out = Vec::with_capacity(tasks.len());
+    for task in tasks {
+        let a = pick(task, &rolling);
+        rolling.apply(task, a);
+        out.push(a);
+    }
+    out
+}
+
+/// Construct a scheduler by name.  FlexAI is not constructible here (it
+/// needs the PJRT runtime and a checkpoint); use `flexai::FlexAI` directly.
+pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
+    match name.to_ascii_lowercase().as_str() {
+        "minmin" | "min-min" => Some(Box::new(minmin::MinMin::new())),
+        "ata" => Some(Box::new(ata::Ata::new())),
+        "edp" => Some(Box::new(edp::Edp::new())),
+        "ga" => Some(Box::new(ga::Ga::new(seed))),
+        "sa" => Some(Box::new(sa::Sa::new(seed))),
+        "worst" | "worse" | "unscheduled" => Some(Box::new(worst::WorstCase::new())),
+        "rr" | "roundrobin" | "round-robin" => Some(Box::new(roundrobin::RoundRobin::new())),
+        "rand" | "random" | "w-rand" => Some(Box::new(random::RandomSched::new(seed))),
+        _ => None,
+    }
+}
+
+/// All baseline scheduler names (Fig. 12 comparison set, minus FlexAI).
+pub const BASELINES: [&str; 5] = ["ata", "ga", "minmin", "sa", "worst"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::route::{Route, RouteParams};
+    use crate::env::taskgen::TaskQueue;
+    use crate::env::Area;
+    use crate::metrics::NormScales;
+    use crate::platform::Platform;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn small_queue(seed: u64) -> TaskQueue {
+        let route =
+            Route::generate(RouteParams::for_area(Area::Urban, 40.0), &mut Rng::new(seed));
+        crate::env::taskgen::generate(&route)
+    }
+
+    /// Every constructible scheduler returns in-range assignments and is
+    /// deterministic for a fixed seed.
+    #[test]
+    fn registry_constructs_and_assigns_in_range() {
+        let q = small_queue(1);
+        let platform = Platform::hmai();
+        let state = ShadowState::new(&platform, NormScales::unit());
+        let burst: Vec<_> = q.tasks.iter().take(30).cloned().collect();
+        for name in ["minmin", "ata", "edp", "ga", "sa", "worst", "rr", "random"] {
+            let mut s = by_name(name, 7).unwrap_or_else(|| panic!("{name} not found"));
+            let a = s.schedule_batch(&burst, &state);
+            assert_eq!(a.len(), burst.len(), "{name}");
+            assert!(a.iter().all(|&i| i < platform.len()), "{name}");
+            let mut s2 = by_name(name, 7).unwrap();
+            assert_eq!(a, s2.schedule_batch(&burst, &state), "{name} not deterministic");
+        }
+        assert!(by_name("nope", 0).is_none());
+    }
+
+    #[test]
+    fn sequential_sees_rolling_backlog() {
+        let platform = Platform::from_counts("p", 1, 0, 0);
+        let state = ShadowState::new(&platform, NormScales::unit());
+        let q = small_queue(2);
+        let burst: Vec<_> = q.tasks.iter().take(4).cloned().collect();
+        let mut delays = Vec::new();
+        sequential(&burst, &state, |t, s| {
+            delays.push(s.queue_delay(0));
+            let _ = t;
+            0
+        });
+        // Backlog strictly grows as the burst is assigned to the only accel.
+        assert!(delays.windows(2).all(|w| w[1] > w[0]));
+    }
+}

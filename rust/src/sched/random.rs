@@ -1,0 +1,57 @@
+//! Uniform-random mapping (the "W-rand"-style weightless random baseline of
+//! Table 11): each task goes to an accelerator drawn uniformly at random.
+
+use crate::env::taskgen::Task;
+use crate::sim::ShadowState;
+use crate::util::rng::Rng;
+
+use super::Scheduler;
+
+#[derive(Debug)]
+pub struct RandomSched {
+    seed: u64,
+    rng: Rng,
+}
+
+impl RandomSched {
+    pub fn new(seed: u64) -> RandomSched {
+        RandomSched { seed, rng: Rng::new(seed) }
+    }
+}
+
+impl Scheduler for RandomSched {
+    fn name(&self) -> String {
+        "Random".into()
+    }
+
+    fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
+        tasks.iter().map(|_| self.rng.below(state.len())).collect()
+    }
+
+    fn reset(&mut self) {
+        self.rng = Rng::new(self.seed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::NormScales;
+    use crate::platform::Platform;
+
+    #[test]
+    fn covers_platform_and_resets() {
+        let platform = Platform::hmai();
+        let state = ShadowState::new(&platform, NormScales::unit());
+        let q = crate::sched::tests::small_queue(3);
+        let burst: Vec<_> = q.tasks.iter().take(200).cloned().collect();
+        let mut s = RandomSched::new(9);
+        let a = s.schedule_batch(&burst, &state);
+        // With 200 draws over 11 slots, every slot should be hit.
+        for i in 0..platform.len() {
+            assert!(a.contains(&i), "slot {i} never drawn");
+        }
+        s.reset();
+        assert_eq!(s.schedule_batch(&burst, &state), a);
+    }
+}

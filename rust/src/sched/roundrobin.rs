@@ -1,0 +1,61 @@
+//! Round-robin: rotate through accelerators regardless of fit.  Not a paper
+//! baseline, but a useful sanity floor — it balances load blindly, paying
+//! for dataflow mismatch.
+
+use crate::env::taskgen::Task;
+use crate::sim::ShadowState;
+
+use super::Scheduler;
+
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin { next: 0 }
+    }
+}
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> String {
+        "RoundRobin".into()
+    }
+
+    fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
+        tasks
+            .iter()
+            .map(|_| {
+                let a = self.next;
+                self.next = (self.next + 1) % state.len();
+                a
+            })
+            .collect()
+    }
+
+    fn reset(&mut self) {
+        self.next = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::NormScales;
+    use crate::platform::Platform;
+
+    #[test]
+    fn cycles_through_all_accels() {
+        let platform = Platform::hmai();
+        let state = ShadowState::new(&platform, NormScales::unit());
+        let q = crate::sched::tests::small_queue(1);
+        let burst: Vec<_> = q.tasks.iter().take(22).cloned().collect();
+        let mut rr = RoundRobin::new();
+        let a = rr.schedule_batch(&burst, &state);
+        assert_eq!(&a[..11], &[0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+        assert_eq!(a[11], 0);
+        rr.reset();
+        assert_eq!(rr.schedule_batch(&burst[..1], &state), vec![0]);
+    }
+}

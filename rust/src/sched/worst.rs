@@ -1,0 +1,56 @@
+//! The "unscheduled worse case" baseline (§8.3): no load balancing at all —
+//! every task piles onto the accelerator that is currently the most
+//! backlogged (ties broken toward index 0, so an empty platform degenerates
+//! to "everything on accelerator 0").  This is the pathological mapping the
+//! paper uses as the floor of Figures 12-14.
+
+use crate::env::taskgen::Task;
+use crate::sim::ShadowState;
+
+use super::{sequential, Scheduler};
+
+#[derive(Debug, Default)]
+pub struct WorstCase;
+
+impl WorstCase {
+    pub fn new() -> WorstCase {
+        WorstCase
+    }
+}
+
+impl Scheduler for WorstCase {
+    fn name(&self) -> String {
+        "WorstCase".into()
+    }
+
+    fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
+        sequential(tasks, state, |_, s| {
+            let mut best = 0;
+            for i in 1..s.len() {
+                if s.queue_delay(i) > s.queue_delay(best) {
+                    best = i;
+                }
+            }
+            best
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::NormScales;
+    use crate::platform::Platform;
+
+    #[test]
+    fn piles_everything_on_one_accel() {
+        let platform = Platform::hmai();
+        let state = ShadowState::new(&platform, NormScales::unit());
+        let q = crate::sched::tests::small_queue(1);
+        let burst: Vec<_> = q.tasks.iter().take(20).cloned().collect();
+        let mut s = WorstCase::new();
+        let a = s.schedule_batch(&burst, &state);
+        // From an idle platform, everything lands on accel 0.
+        assert!(a.iter().all(|&i| i == 0));
+    }
+}

@@ -1,0 +1,254 @@
+//! Discrete-event simulation of a task queue on a multi-accelerator
+//! platform: tasks arrive on their camera frame clocks, the scheduler maps
+//! each burst to accelerators, and per-accelerator FIFO queues determine
+//! waiting, response times and the §6/§7.2 metrics.
+
+pub mod shadow;
+
+use std::time::Instant;
+
+use crate::env::taskgen::TaskQueue;
+use crate::metrics::summary::RunSummary;
+use crate::metrics::NormScales;
+use crate::platform::Platform;
+use crate::sched::Scheduler;
+use crate::workload::ModelKind;
+
+pub use shadow::{Applied, ShadowState};
+
+/// Release times within this window belong to the same burst (all cameras
+/// that fire "simultaneously", §7: "when 30 cameras in a vehicle work once,
+/// 30 frames will be generated simultaneously").
+pub const BURST_EPS_S: f64 = 1e-9;
+
+/// Per-task outcome record (kept only when `SimOptions::record_tasks`).
+#[derive(Debug, Clone, Copy)]
+pub struct TaskRecord {
+    pub task_id: u32,
+    pub model: ModelKind,
+    pub accel: usize,
+    pub release_s: f64,
+    pub start_s: f64,
+    pub finish_s: f64,
+    pub wait_s: f64,
+    pub compute_s: f64,
+    pub response_s: f64,
+    pub energy_j: f64,
+    pub ms: f64,
+    pub safety_time_s: f64,
+    pub met_deadline: bool,
+}
+
+/// Simulation options.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// Keep a per-task record vector (needed for Fig. 14's braking probe).
+    pub record_tasks: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { record_tasks: false }
+    }
+}
+
+/// Full simulation result.
+#[derive(Debug)]
+pub struct SimResult {
+    pub summary: RunSummary,
+    /// Final platform state (metrics + backlog) at queue end.
+    pub final_state: ShadowState,
+    /// Per-task records if requested.
+    pub records: Vec<TaskRecord>,
+    /// Wall-clock seconds spent inside the scheduler.
+    pub sched_wall_s: f64,
+    /// Number of scheduling invocations (bursts).
+    pub bursts: u64,
+}
+
+impl SimResult {
+    /// Mean scheduler wall time per task (the Fig. 14 `T_schedule`).
+    pub fn sched_per_task_s(&self) -> f64 {
+        if self.summary.tasks == 0 {
+            0.0
+        } else {
+            self.sched_wall_s / self.summary.tasks as f64
+        }
+    }
+}
+
+/// Run `queue` on `platform` under `scheduler`.
+///
+/// Tasks are processed in release order, grouped into bursts of identical
+/// release time; the scheduler sees the exact `ShadowState` the engine
+/// executes on, so scheduler-side predictions are exact.
+pub fn simulate(
+    queue: &TaskQueue,
+    platform: &Platform,
+    scheduler: &mut dyn Scheduler,
+    opts: SimOptions,
+) -> SimResult {
+    let scales = NormScales::for_queue(queue, platform);
+    simulate_with_scales(queue, platform, scheduler, opts, scales)
+}
+
+/// `simulate` with externally-fixed normalization scales (so a trained
+/// agent can be evaluated with the scales it was trained under).
+pub fn simulate_with_scales(
+    queue: &TaskQueue,
+    platform: &Platform,
+    scheduler: &mut dyn Scheduler,
+    opts: SimOptions,
+    scales: NormScales,
+) -> SimResult {
+    let mut state = ShadowState::new(platform, scales);
+    let mut records = Vec::new();
+    if opts.record_tasks {
+        records.reserve(queue.len());
+    }
+
+    let mut wait_s = 0.0;
+    let mut met: u64 = 0;
+    let mut response_sum = 0.0;
+    let mut response_max = 0.0_f64;
+    let mut sched_wall = 0.0;
+    let mut bursts: u64 = 0;
+
+    let tasks = &queue.tasks;
+    let mut i = 0;
+    while i < tasks.len() {
+        // Collect the burst [i, j): all tasks released together.
+        let t0 = tasks[i].release_s;
+        let mut j = i + 1;
+        while j < tasks.len() && tasks[j].release_s - t0 <= BURST_EPS_S {
+            j += 1;
+        }
+        let burst = &tasks[i..j];
+        state.advance(t0);
+
+        let clk = Instant::now();
+        let assignment = scheduler.schedule_batch(burst, &state);
+        sched_wall += clk.elapsed().as_secs_f64();
+        bursts += 1;
+        debug_assert_eq!(assignment.len(), burst.len());
+
+        for (task, &accel) in burst.iter().zip(&assignment) {
+            let a = state.apply(task, accel);
+            wait_s += a.wait_s;
+            if a.met_deadline {
+                met += 1;
+            }
+            response_sum += a.response_s;
+            response_max = response_max.max(a.response_s);
+            if opts.record_tasks {
+                records.push(TaskRecord {
+                    task_id: task.id,
+                    model: task.model,
+                    accel,
+                    release_s: task.release_s,
+                    start_s: a.start_s,
+                    finish_s: a.finish_s,
+                    wait_s: a.wait_s,
+                    compute_s: a.compute_s,
+                    response_s: a.response_s,
+                    energy_j: a.energy_j,
+                    ms: a.ms,
+                    safety_time_s: task.safety_time_s,
+                    met_deadline: a.met_deadline,
+                });
+            }
+        }
+        i = j;
+    }
+
+    let n = queue.len() as f64;
+    let summary = RunSummary::from_metrics(
+        &scheduler.name(),
+        &platform.name,
+        &state.metrics,
+        met,
+        wait_s,
+        sched_wall,
+        if n > 0.0 { response_sum / n } else { 0.0 },
+        response_max,
+    );
+    SimResult { summary, final_state: state, records, sched_wall_s: sched_wall, bursts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::route::{Route, RouteParams};
+    use crate::env::Area;
+    use crate::sched::roundrobin::RoundRobin;
+    use crate::util::rng::Rng;
+
+    fn queue(dist: f64, seed: u64) -> TaskQueue {
+        let route =
+            Route::generate(RouteParams::for_area(Area::Urban, dist), &mut Rng::new(seed));
+        crate::env::taskgen::generate(&route)
+    }
+
+    #[test]
+    fn processes_every_task() {
+        let q = queue(60.0, 1);
+        let mut s = RoundRobin::new();
+        let r = simulate(&q, &Platform::hmai(), &mut s, SimOptions { record_tasks: true });
+        assert_eq!(r.summary.tasks as usize, q.len());
+        assert_eq!(r.records.len(), q.len());
+        assert!(r.bursts > 0 && r.bursts <= r.summary.tasks);
+    }
+
+    #[test]
+    fn records_are_causally_consistent() {
+        let q = queue(40.0, 2);
+        let mut s = RoundRobin::new();
+        let r = simulate(&q, &Platform::hmai(), &mut s, SimOptions { record_tasks: true });
+        for rec in &r.records {
+            assert!(rec.start_s >= rec.release_s - 1e-12);
+            assert!((rec.finish_s - rec.start_s - rec.compute_s).abs() < 1e-9);
+            assert!((rec.response_s - (rec.wait_s + rec.compute_s)).abs() < 1e-9);
+            assert_eq!(rec.met_deadline, rec.response_s <= rec.safety_time_s);
+        }
+    }
+
+    #[test]
+    fn per_accel_fifo_no_overlap() {
+        let q = queue(40.0, 3);
+        let mut s = RoundRobin::new();
+        let r = simulate(&q, &Platform::hmai(), &mut s, SimOptions { record_tasks: true });
+        // Tasks on the same accelerator never overlap in time.
+        let n = Platform::hmai().len();
+        for accel in 0..n {
+            let mut last_finish = 0.0;
+            for rec in r.records.iter().filter(|r| r.accel == accel) {
+                assert!(rec.start_s >= last_finish - 1e-9);
+                last_finish = rec.finish_s;
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let q = queue(50.0, 4);
+        let run = |q: &TaskQueue| {
+            let mut s = RoundRobin::new();
+            simulate(q, &Platform::hmai(), &mut s, SimOptions::default())
+        };
+        let a = run(&q);
+        let b = run(&q);
+        assert_eq!(a.summary.energy_j, b.summary.energy_j);
+        assert_eq!(a.summary.makespan_s, b.summary.makespan_s);
+        assert_eq!(a.summary.tasks_met, b.summary.tasks_met);
+    }
+
+    #[test]
+    fn summary_matches_metrics() {
+        let q = queue(50.0, 5);
+        let mut s = RoundRobin::new();
+        let r = simulate(&q, &Platform::hmai(), &mut s, SimOptions::default());
+        assert!((r.summary.energy_j - r.final_state.metrics.energy_j()).abs() < 1e-9);
+        assert!((r.summary.gvalue - r.final_state.metrics.gvalue()).abs() < 1e-12);
+        assert!(r.summary.stm_rate() >= 0.0 && r.summary.stm_rate() <= 1.0);
+    }
+}

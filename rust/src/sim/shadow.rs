@@ -1,0 +1,241 @@
+//! The shadow platform state: the deterministic timing/energy model of the
+//! multi-accelerator platform that both the simulation engine and every
+//! scheduler share.
+//!
+//! Schedulers (Min-Min, GA, SA, FlexAI, ...) need to predict exactly what
+//! the engine will do with a candidate assignment; giving them the same
+//! `ShadowState::apply` the engine itself executes guarantees the
+//! prediction is exact, not an approximation.
+
+use crate::accel::{cost, AccelKind};
+use crate::env::taskgen::Task;
+use crate::metrics::{AccelMetrics, NormScales, PlatformMetrics};
+use crate::platform::Platform;
+use crate::safety::ms::matching_score;
+
+/// What happened when a task was applied to an accelerator.
+#[derive(Debug, Clone, Copy)]
+pub struct Applied {
+    pub accel: usize,
+    pub start_s: f64,
+    pub finish_s: f64,
+    /// Waiting time in the accelerator's queue.
+    pub wait_s: f64,
+    /// Pure execution time on the accelerator.
+    pub compute_s: f64,
+    /// wait + compute — what the MS responds to.
+    pub response_s: f64,
+    pub energy_j: f64,
+    /// Matching score of this (task, response) pair (§6.1).
+    pub ms: f64,
+    /// Per-task balance rate `r_j` (§7.2): busy fraction at dispatch.
+    pub r_j: f64,
+    pub met_deadline: bool,
+}
+
+/// Deterministic platform state: per-accelerator FIFO backlog plus the §7.2
+/// running metrics.  Cloning is cheap (a few `Vec<f64>` of length N), which
+/// is what GA/SA rollouts and Min-Min need.
+#[derive(Debug, Clone)]
+pub struct ShadowState {
+    pub kinds: Vec<AccelKind>,
+    /// Simulation clock: release time of the task being scheduled.
+    pub now: f64,
+    /// Time at which each accelerator drains its queue.
+    pub busy_until: Vec<f64>,
+    pub metrics: PlatformMetrics,
+}
+
+impl ShadowState {
+    pub fn new(platform: &Platform, scales: NormScales) -> ShadowState {
+        let kinds: Vec<AccelKind> = platform.accels.iter().map(|a| a.kind).collect();
+        let n = kinds.len();
+        ShadowState {
+            kinds,
+            now: 0.0,
+            busy_until: vec![0.0; n],
+            metrics: PlatformMetrics::new(n, scales),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    /// Queue delay a task dispatched now would see on accelerator `i`.
+    pub fn queue_delay(&self, i: usize) -> f64 {
+        (self.busy_until[i] - self.now).max(0.0)
+    }
+
+    /// Predicted response time (wait + compute) of `task` on accelerator `i`.
+    pub fn est_response(&self, task: &Task, i: usize) -> f64 {
+        self.queue_delay(i) + cost(self.kinds[i], task.model).time_s
+    }
+
+    /// Predicted completion-time point on the route clock.
+    pub fn est_completion(&self, task: &Task, i: usize) -> f64 {
+        self.now + self.est_response(task, i)
+    }
+
+    /// Energy `task` would consume on accelerator `i`.
+    pub fn est_energy(&self, task: &Task, i: usize) -> f64 {
+        cost(self.kinds[i], task.model).energy_j
+    }
+
+    /// Fraction of accelerators still busy at `t`.
+    pub fn busy_fraction_at(&self, t: f64) -> f64 {
+        if self.kinds.is_empty() {
+            return 0.0;
+        }
+        let busy = self.busy_until.iter().filter(|&&b| b > t).count();
+        busy as f64 / self.kinds.len() as f64
+    }
+
+    /// Advance the clock to a task release time (never backwards).
+    pub fn advance(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
+    /// Execute `task` on accelerator `accel`: FIFO semantics, §7.2 metric
+    /// updates, matching score.  This is the single source of truth for
+    /// platform timing — the engine and all scheduler rollouts call it.
+    pub fn apply(&mut self, task: &Task, accel: usize) -> Applied {
+        debug_assert!(accel < self.kinds.len());
+        let c = cost(self.kinds[accel], task.model);
+        let start = self.busy_until[accel].max(self.now);
+        let finish = start + c.time_s;
+        self.busy_until[accel] = finish;
+
+        let wait = start - self.now;
+        let response = finish - self.now;
+        let ms = matching_score(task.category, response, task.safety_time_s);
+        // r_j: busy fraction right after dispatch — "the higher R_Balance,
+        // the less idle accelerators in HMAI at every moment" (§6.2).
+        let r_j = self.busy_fraction_at(self.now);
+        self.metrics.per_accel[accel].update(c.energy_j, c.time_s, response, ms, r_j);
+
+        Applied {
+            accel,
+            start_s: start,
+            finish_s: finish,
+            wait_s: wait,
+            compute_s: c.time_s,
+            response_s: response,
+            energy_j: c.energy_j,
+            ms,
+            r_j,
+            met_deadline: response <= task.safety_time_s,
+        }
+    }
+
+    /// Gvalue + total MS — the pair whose per-task delta is the RL reward
+    /// (§7.2: reward = Gvalue_new - Gvalue + MS_new - MS).
+    pub fn gvalue_ms(&self) -> (f64, f64) {
+        (self.metrics.gvalue(), self.metrics.ms_total())
+    }
+
+    /// Per-accelerator §7.2 snapshot, used by featurization.
+    pub fn accel_metrics(&self, i: usize) -> &AccelMetrics {
+        &self.metrics.per_accel[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{CameraGroup, Scenario};
+    use crate::safety::ms::TaskCategory;
+    use crate::workload::ModelKind;
+
+    fn task(model: ModelKind, release: f64, safety: f64) -> Task {
+        Task {
+            id: 0,
+            group: CameraGroup::Fc,
+            cam_idx: 0,
+            release_s: release,
+            model,
+            category: TaskCategory::Detection,
+            scenario: Scenario::GoStraight,
+            safety_time_s: safety,
+        }
+    }
+
+    fn shadow() -> ShadowState {
+        ShadowState::new(&Platform::hmai(), NormScales::unit())
+    }
+
+    #[test]
+    fn fifo_backlog_accumulates() {
+        let mut s = shadow();
+        let t = task(ModelKind::Yolo, 0.0, 1.0);
+        let a1 = s.apply(&t, 0);
+        let a2 = s.apply(&t, 0);
+        assert_eq!(a1.wait_s, 0.0);
+        assert!((a2.wait_s - a1.compute_s).abs() < 1e-12);
+        assert!((a2.finish_s - 2.0 * a1.compute_s).abs() < 1e-12);
+        // A different accelerator is still free.
+        assert_eq!(s.queue_delay(1), 0.0);
+    }
+
+    #[test]
+    fn clock_advance_drains_queues() {
+        let mut s = shadow();
+        let t = task(ModelKind::Ssd, 0.0, 1.0);
+        let a = s.apply(&t, 3);
+        s.advance(a.finish_s + 1.0);
+        assert_eq!(s.queue_delay(3), 0.0);
+        assert_eq!(s.busy_fraction_at(s.now), 0.0);
+    }
+
+    #[test]
+    fn est_response_matches_apply() {
+        let mut s = shadow();
+        let t1 = task(ModelKind::Yolo, 0.0, 1.0);
+        let t2 = task(ModelKind::Goturn, 0.0, 1.0);
+        s.apply(&t1, 5);
+        let est = s.est_response(&t2, 5);
+        let a = s.apply(&t2, 5);
+        assert!((est - a.response_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_and_ms_sign() {
+        let mut s = shadow();
+        // Generous deadline -> met, MS > 0 for detection.
+        let a = s.apply(&task(ModelKind::Yolo, 0.0, 10.0), 0);
+        assert!(a.met_deadline);
+        assert!(a.ms > 0.0);
+        // Impossible deadline -> missed, MS == -1.
+        let b = s.apply(&task(ModelKind::Yolo, 0.0, 1e-9), 1);
+        assert!(!b.met_deadline);
+        assert_eq!(b.ms, -1.0);
+    }
+
+    #[test]
+    fn r_j_tracks_busy_fraction() {
+        let mut s = shadow();
+        let t = task(ModelKind::Yolo, 0.0, 1.0);
+        let a1 = s.apply(&t, 0);
+        // After dispatching to accel 0, 1 of 11 is busy.
+        assert!((a1.r_j - 1.0 / 11.0).abs() < 1e-12);
+        let a2 = s.apply(&t, 1);
+        assert!((a2.r_j - 2.0 / 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rollout_clone_is_independent(){
+        let mut s = shadow();
+        let t = task(ModelKind::Ssd, 0.0, 1.0);
+        let mut rollout = s.clone();
+        rollout.apply(&t, 0);
+        assert_eq!(s.queue_delay(0), 0.0);
+        s.apply(&t, 1);
+        assert_eq!(rollout.queue_delay(1), 0.0);
+    }
+}

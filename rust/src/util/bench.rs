@@ -1,0 +1,159 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module.  Each
+//! benchmark warms up, then runs timed iterations until both a minimum
+//! iteration count and a minimum wall-clock budget are met, and reports
+//! mean / p50 / p95 per-iteration latency plus derived throughput.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile;
+
+/// One benchmark's collected samples (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        crate::util::stats::mean(&self.samples)
+    }
+
+    pub fn p50(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(f64::total_cmp);
+        percentile(&s, 50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(f64::total_cmp);
+        percentile(&s, 95.0)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} mean {}  p50 {}  p95 {}  ({} iters)",
+            self.name,
+            fmt_duration(self.mean()),
+            fmt_duration(self.p50()),
+            fmt_duration(self.p95()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{:8.3} s ", secs)
+    } else if secs >= 1e-3 {
+        format!("{:8.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:8.3} µs", secs * 1e6)
+    } else {
+        format!("{:8.1} ns", secs * 1e9)
+    }
+}
+
+/// Benchmark runner with a fixed time budget per benchmark.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick profile for expensive end-to-end benches.
+    pub fn heavy() -> Self {
+        Self {
+            warmup: Duration::ZERO,
+            budget: Duration::from_secs(1),
+            min_iters: 3,
+            max_iters: 50,
+            ..Self::default()
+        }
+    }
+
+    /// Run `f` repeatedly, timing each call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Timed runs.
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while (samples.len() < self.min_iters || t0.elapsed() < self.budget)
+            && samples.len() < self.max_iters
+        {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_secs_f64());
+        }
+        let r = BenchResult { name: name.to_string(), samples };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Print a section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples() {
+        let mut b = Bencher {
+            warmup: Duration::ZERO,
+            budget: Duration::from_millis(10),
+            min_iters: 5,
+            max_iters: 1000,
+            results: Vec::new(),
+        };
+        let r = b.bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.samples.len() >= 5);
+        assert!(r.mean() >= 0.0);
+        assert!(r.p95() >= r.p50() * 0.5);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(2.0).contains("s"));
+        assert!(fmt_duration(2e-3).contains("ms"));
+        assert!(fmt_duration(2e-6).contains("µs"));
+        assert!(fmt_duration(2e-9).contains("ns"));
+    }
+}

@@ -1,0 +1,189 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args, with
+//! typed accessors and a usage printer driven by a declarative option table.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags/options plus positionals, in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declarative option description for usage text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub value: Option<&'static str>,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+impl Args {
+    /// Parse a raw arg list.  Anything starting with `--` is an option; if
+    /// the next token doesn't start with `--` it is taken as its value,
+    /// otherwise it's a bare flag.  `--k=v` is always key/value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let raw: Vec<String> = raw.into_iter().collect();
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    a.opts.insert(body.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected an integer, got '{v}'")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Positionals after the subcommand.
+    pub fn rest(&self) -> &[String] {
+        if self.positional.is_empty() {
+            &[]
+        } else {
+            &self.positional[1..]
+        }
+    }
+}
+
+/// Render a usage block from option specs.
+pub fn usage(program: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nUSAGE:\n    {program} [OPTIONS]\n\nOPTIONS:\n");
+    for spec in specs {
+        let left = match spec.value {
+            Some(v) => format!("--{} <{}>", spec.name, v),
+            None => format!("--{}", spec.name),
+        };
+        let default = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("    {:<28} {}{}\n", left, spec.help, default));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_key_value() {
+        let a = parse("--seed 7 --area urban");
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.get("area"), Some("urban"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse("--lr=0.01 --episodes=5");
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.01);
+        assert_eq!(a.get_usize("episodes", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        // NB: `--flag value`-style ambiguity is resolved as key/value, so
+        // bare flags go after positionals or use `--flag=true`.
+        let a = parse("train route.json --verbose --fast");
+        assert_eq!(a.subcommand(), Some("train"));
+        assert!(a.flag("verbose"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.rest(), &["route.json".to_string()]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("--n abc");
+        assert!(a.get_usize("n", 1).is_err());
+        assert_eq!(a.get_usize("missing", 42).unwrap(), 42);
+        assert_eq!(a.get_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b 3");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("3"));
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage(
+            "hmai",
+            "HMAI coordinator",
+            &[OptSpec { name: "seed", value: Some("u64"), help: "rng seed", default: Some("0") }],
+        );
+        assert!(u.contains("--seed <u64>"));
+        assert!(u.contains("[default: 0]"));
+    }
+}

@@ -1,0 +1,90 @@
+//! Leveled stderr logger with a global level, timestamped relative to
+//! process start.  Deliberately tiny: the coordinator's hot path must never
+//! pay for logging when the level is off (guarded by an atomic load).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+lazy_static::lazy_static! {
+    static ref START: Instant = Instant::now();
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn set_level_from_str(s: &str) -> bool {
+    let level = match s.to_ascii_lowercase().as_str() {
+        "error" => Level::Error,
+        "warn" => Level::Warn,
+        "info" => Level::Info,
+        "debug" => Level::Debug,
+        "trace" => Level::Trace,
+        _ => return false,
+    };
+    set_level(level);
+    true
+}
+
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, target: &str, msg: std::fmt::Arguments) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.elapsed().as_secs_f64();
+    let tag = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{t:>10.4}s {tag} {target}] {msg}");
+}
+
+#[macro_export]
+macro_rules! log_error { ($t:expr, $($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, $t, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($t:expr, $($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, $t, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_info { ($t:expr, $($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, $t, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($t:expr, $($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, $t, format_args!($($arg)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn level_from_str() {
+        assert!(set_level_from_str("debug"));
+        assert!(enabled(Level::Debug));
+        assert!(!set_level_from_str("bogus"));
+        set_level(Level::Info);
+    }
+}

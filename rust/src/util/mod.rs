@@ -1,0 +1,11 @@
+//! Substrate utilities built in-repo (the offline vendor set has no serde /
+//! clap / criterion / rand): JSON, PRNG, CLI parsing, logging, statistics,
+//! bench harness, table rendering.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod table;

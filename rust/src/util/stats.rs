@@ -1,0 +1,120 @@
+//! Small statistics helpers used by metrics and benches.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Geometric mean of positive values; 0.0 for an empty slice.
+/// Non-positive entries are clamped to a tiny epsilon (they would otherwise
+/// collapse the whole product — matches how the paper reports geomeans over
+/// ratios that are always positive).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let log_sum: f64 = xs.iter().map(|&x| x.max(1e-12).ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p.clamp(0.0, 100.0) / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Min-max normalize `x` into [0,1] given observed bounds; degenerate
+/// bounds map to 0.5 (neutral).
+pub fn minmax_norm(x: f64, lo: f64, hi: f64) -> f64 {
+    if hi - lo <= f64::EPSILON {
+        0.5
+    } else {
+        ((x - lo) / (hi - lo)).clamp(0.0, 1.0)
+    }
+}
+
+/// Saturating exponential normalization to (0, 1): 1 - exp(-x/scale).
+/// Used to squash unbounded quantities (energy, time) for the RL state.
+pub fn soft_norm(x: f64, scale: f64) -> f64 {
+    if scale <= 0.0 {
+        return 0.0;
+    }
+    1.0 - (-x.max(0.0) / scale).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_clamps_nonpositive() {
+        assert!(geomean(&[0.0, 1.0]) > 0.0);
+    }
+
+    #[test]
+    fn stddev_basic() {
+        assert_eq!(stddev(&[2.0, 2.0, 2.0]), 0.0);
+        let s = stddev(&[1.0, 3.0]);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert_eq!(percentile(&v, 50.0), 2.5);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn minmax_norm_clamps() {
+        assert_eq!(minmax_norm(5.0, 0.0, 10.0), 0.5);
+        assert_eq!(minmax_norm(-1.0, 0.0, 10.0), 0.0);
+        assert_eq!(minmax_norm(11.0, 0.0, 10.0), 1.0);
+        assert_eq!(minmax_norm(3.0, 3.0, 3.0), 0.5);
+    }
+
+    #[test]
+    fn soft_norm_monotone_bounded() {
+        let a = soft_norm(1.0, 10.0);
+        let b = soft_norm(5.0, 10.0);
+        assert!(0.0 < a && a < b && b < 1.0);
+        assert_eq!(soft_norm(0.0, 10.0), 0.0);
+    }
+}

@@ -1,0 +1,96 @@
+//! Detector accuracy by object size (paper Table 3) and the heterogeneous-
+//! CNN selection rule of §2.1: YOLO for small/medium objects, SSD for large.
+
+use super::ModelKind;
+
+/// COCO-style object size classes (paper §2.1): small < 32^2 px,
+/// medium in [32^2, 96^2), large >= 96^2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObjectSize {
+    Small,
+    Medium,
+    Large,
+}
+
+impl ObjectSize {
+    pub fn from_area_px(area: f64) -> ObjectSize {
+        if area < 32.0 * 32.0 {
+            ObjectSize::Small
+        } else if area < 96.0 * 96.0 {
+            ObjectSize::Medium
+        } else {
+            ObjectSize::Large
+        }
+    }
+}
+
+/// One detector's AP by size class (paper Table 3 rows).
+#[derive(Debug, Clone, Copy)]
+pub struct ApRow {
+    pub method: &'static str,
+    pub backbone: &'static str,
+    pub ap_s: f64,
+    pub ap_m: f64,
+    pub ap_l: f64,
+}
+
+/// Paper Table 3 verbatim.
+pub const TABLE3: [ApRow; 4] = [
+    ApRow { method: "YOLOv2", backbone: "DarkNet-53", ap_s: 18.3, ap_m: 35.4, ap_l: 41.9 },
+    ApRow { method: "SSD312", backbone: "ResNet-101", ap_s: 6.2, ap_m: 28.3, ap_l: 49.3 },
+    ApRow { method: "SSD512*", backbone: "VGG-16", ap_s: 10.9, ap_m: 31.8, ap_l: 43.5 },
+    ApRow { method: "SSD513", backbone: "ResNet-101", ap_s: 10.2, ap_m: 34.5, ap_l: 49.8 },
+];
+
+/// §2.1 selection rule: YOLO leads on small & medium AP, SSD on large AP,
+/// so detection tasks alternate per image but the *accuracy-optimal*
+/// assignment keys on expected object size.
+pub fn best_detector(size: ObjectSize) -> ModelKind {
+    match size {
+        ObjectSize::Small | ObjectSize::Medium => ModelKind::Yolo,
+        ObjectSize::Large => ModelKind::Ssd,
+    }
+}
+
+/// AP of a detector for a size class (best Table 3 row for that family).
+pub fn ap(kind: ModelKind, size: ObjectSize) -> f64 {
+    let best = |f: fn(&ApRow) -> f64, method_prefix: &str| {
+        TABLE3
+            .iter()
+            .filter(|r| r.method.starts_with(method_prefix))
+            .map(f)
+            .fold(f64::MIN, f64::max)
+    };
+    match (kind, size) {
+        (ModelKind::Yolo, ObjectSize::Small) => best(|r| r.ap_s, "YOLO"),
+        (ModelKind::Yolo, ObjectSize::Medium) => best(|r| r.ap_m, "YOLO"),
+        (ModelKind::Yolo, ObjectSize::Large) => best(|r| r.ap_l, "YOLO"),
+        (ModelKind::Ssd, ObjectSize::Small) => best(|r| r.ap_s, "SSD"),
+        (ModelKind::Ssd, ObjectSize::Medium) => best(|r| r.ap_m, "SSD"),
+        (ModelKind::Ssd, ObjectSize::Large) => best(|r| r.ap_l, "SSD"),
+        (ModelKind::Goturn, _) => f64::NAN, // tracker, not a detector
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_classes() {
+        assert_eq!(ObjectSize::from_area_px(100.0), ObjectSize::Small);
+        assert_eq!(ObjectSize::from_area_px(4620.0), ObjectSize::Medium);
+        assert_eq!(ObjectSize::from_area_px(42000.0), ObjectSize::Large);
+    }
+
+    #[test]
+    fn selection_rule_matches_table3() {
+        // YOLO wins small+medium, SSD wins large — the paper's motivation
+        // for heterogeneous CNNs.
+        assert!(ap(ModelKind::Yolo, ObjectSize::Small) > ap(ModelKind::Ssd, ObjectSize::Small));
+        assert!(ap(ModelKind::Yolo, ObjectSize::Medium) > ap(ModelKind::Ssd, ObjectSize::Medium));
+        assert!(ap(ModelKind::Ssd, ObjectSize::Large) > ap(ModelKind::Yolo, ObjectSize::Large));
+        assert_eq!(best_detector(ObjectSize::Small), ModelKind::Yolo);
+        assert_eq!(best_detector(ObjectSize::Large), ModelKind::Ssd);
+    }
+}

@@ -1,0 +1,237 @@
+//! Per-layer CNN shape records.  The accelerator cycle models (accel/)
+//! consume these to derive cycles and memory traffic per layer; the
+//! workload zoo (yolo.rs / ssd.rs / goturn.rs) builds them.
+
+/// Layer operator kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 2-D convolution with square kernel `k`, stride and padding.
+    Conv { k: usize, stride: usize, pad: usize },
+    /// Max pooling.
+    MaxPool { k: usize, stride: usize },
+    /// Fully connected (in = in_c*in_h*in_w flattened, out = out_c).
+    Fc,
+    /// Residual add (YOLOv3 shortcut).
+    Shortcut,
+    /// Concatenating route (YOLOv3) / siamese feature concat (GOTURN).
+    Route,
+    /// Nearest-neighbour 2x upsample.
+    Upsample,
+    /// Detection decode (YOLO head / SSD priorbox+decode).
+    Detect,
+}
+
+/// One layer with resolved input/output shapes.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_c: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    /// Siamese branches (GOTURN runs each conv on both crops): multiplies
+    /// MACs and activations, weights are shared.
+    pub branches: usize,
+}
+
+impl Layer {
+    /// Multiply-accumulate count for one inference.
+    pub fn macs(&self) -> u64 {
+        let b = self.branches as u64;
+        match self.kind {
+            LayerKind::Conv { k, .. } => {
+                b * (self.out_c * self.out_h * self.out_w) as u64
+                    * (self.in_c * k * k) as u64
+            }
+            LayerKind::Fc => b * (self.in_c * self.in_h * self.in_w) as u64 * self.out_c as u64,
+            // Pool/route/shortcut/upsample/detect do data movement, not MACs.
+            _ => 0,
+        }
+    }
+
+    /// Weight (parameter) count; shared across siamese branches.
+    pub fn weights(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { k, .. } => (self.out_c * self.in_c * k * k + self.out_c) as u64,
+            LayerKind::Fc => (self.in_c * self.in_h * self.in_w * self.out_c + self.out_c) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Output activation (neuron) count.
+    pub fn neurons(&self) -> u64 {
+        self.branches as u64 * (self.out_c * self.out_h * self.out_w) as u64
+    }
+
+    /// Input activation element count (per branch x branches).
+    pub fn input_elems(&self) -> u64 {
+        self.branches as u64 * (self.in_c * self.in_h * self.in_w) as u64
+    }
+
+    pub fn is_compute(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv { .. } | LayerKind::Fc)
+    }
+}
+
+/// Incremental network builder tracking the current feature-map shape.
+#[derive(Debug)]
+pub struct NetBuilder {
+    pub layers: Vec<Layer>,
+    c: usize,
+    h: usize,
+    w: usize,
+    branches: usize,
+}
+
+impl NetBuilder {
+    pub fn new(in_c: usize, in_h: usize, in_w: usize) -> Self {
+        Self { layers: Vec::new(), c: in_c, h: in_h, w: in_w, branches: 1 }
+    }
+
+    pub fn siamese(mut self, branches: usize) -> Self {
+        self.branches = branches;
+        self
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.c, self.h, self.w)
+    }
+
+    fn push(&mut self, name: &str, kind: LayerKind, out_c: usize, out_h: usize, out_w: usize) {
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind,
+            in_c: self.c,
+            in_h: self.h,
+            in_w: self.w,
+            out_c,
+            out_h,
+            out_w,
+            branches: self.branches,
+        });
+        self.c = out_c;
+        self.h = out_h;
+        self.w = out_w;
+    }
+
+    pub fn conv(&mut self, name: &str, out_c: usize, k: usize, stride: usize) -> &mut Self {
+        let pad = k / 2;
+        let oh = (self.h + 2 * pad - k) / stride + 1;
+        let ow = (self.w + 2 * pad - k) / stride + 1;
+        self.push(name, LayerKind::Conv { k, stride, pad }, out_c, oh, ow);
+        self
+    }
+
+    /// Valid (unpadded) convolution, AlexNet-style.
+    pub fn conv_valid(&mut self, name: &str, out_c: usize, k: usize, stride: usize) -> &mut Self {
+        let oh = (self.h - k) / stride + 1;
+        let ow = (self.w - k) / stride + 1;
+        self.push(name, LayerKind::Conv { k, stride, pad: 0 }, out_c, oh, ow);
+        self
+    }
+
+    pub fn maxpool(&mut self, name: &str, k: usize, stride: usize) -> &mut Self {
+        let oh = (self.h - k) / stride + 1;
+        let ow = (self.w - k) / stride + 1;
+        self.push(name, LayerKind::MaxPool { k, stride }, self.c, oh, ow);
+        self
+    }
+
+    pub fn fc(&mut self, name: &str, out: usize) -> &mut Self {
+        self.push(name, LayerKind::Fc, out, 1, 1);
+        self
+    }
+
+    pub fn shortcut(&mut self, name: &str) -> &mut Self {
+        self.push(name, LayerKind::Shortcut, self.c, self.h, self.w);
+        self
+    }
+
+    /// Route that (re)sets the current shape, optionally concatenating
+    /// `extra_c` channels from the source being routed in.
+    pub fn route(&mut self, name: &str, c: usize, h: usize, w: usize) -> &mut Self {
+        self.push(name, LayerKind::Route, c, h, w);
+        self
+    }
+
+    pub fn upsample(&mut self, name: &str) -> &mut Self {
+        self.push(name, LayerKind::Upsample, self.c, self.h * 2, self.w * 2);
+        self
+    }
+
+    pub fn detect(&mut self, name: &str) -> &mut Self {
+        self.push(name, LayerKind::Detect, self.c, self.h, self.w);
+        self
+    }
+
+    /// End the siamese section: subsequent layers run once on concatenated
+    /// features (`route` with doubled channels).
+    pub fn merge_branches(&mut self, name: &str) -> &mut Self {
+        let (c, h, w) = (self.c * self.branches, self.h, self.w);
+        self.branches = 1;
+        self.route(name, c, h, w);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_math() {
+        let mut b = NetBuilder::new(3, 416, 416);
+        b.conv("c1", 32, 3, 1);
+        assert_eq!(b.shape(), (32, 416, 416));
+        b.conv("c2", 64, 3, 2);
+        assert_eq!(b.shape(), (64, 208, 208));
+    }
+
+    #[test]
+    fn conv_macs_weights() {
+        let mut b = NetBuilder::new(3, 8, 8);
+        b.conv("c", 16, 3, 1);
+        let l = &b.layers[0];
+        assert_eq!(l.macs(), (16 * 8 * 8) as u64 * (3 * 3 * 3) as u64);
+        assert_eq!(l.weights(), (16 * 3 * 3 * 3 + 16) as u64);
+        assert_eq!(l.neurons(), 16 * 8 * 8);
+    }
+
+    #[test]
+    fn fc_macs() {
+        let mut b = NetBuilder::new(256, 6, 6);
+        b.fc("fc", 512);
+        let l = &b.layers[0];
+        assert_eq!(l.macs(), (256 * 6 * 6 * 512) as u64);
+        assert_eq!(l.weights(), (256 * 6 * 6 * 512 + 512) as u64);
+    }
+
+    #[test]
+    fn siamese_doubles_macs_not_weights() {
+        let mut a = NetBuilder::new(3, 64, 64);
+        a.conv("c", 8, 3, 1);
+        let mut s = NetBuilder::new(3, 64, 64).siamese(2);
+        s.conv("c", 8, 3, 1);
+        assert_eq!(s.layers[0].macs(), 2 * a.layers[0].macs());
+        assert_eq!(s.layers[0].weights(), a.layers[0].weights());
+    }
+
+    #[test]
+    fn pool_no_macs() {
+        let mut b = NetBuilder::new(16, 8, 8);
+        b.maxpool("p", 2, 2);
+        assert_eq!(b.layers[0].macs(), 0);
+        assert_eq!(b.shape(), (16, 4, 4));
+    }
+
+    #[test]
+    fn merge_branches_concats_channels() {
+        let mut b = NetBuilder::new(3, 32, 32).siamese(2);
+        b.conv("c", 8, 3, 1);
+        b.merge_branches("cat");
+        assert_eq!(b.shape(), (16, 32, 32));
+    }
+}

@@ -1,0 +1,144 @@
+//! CNN workload zoo: the three perception networks the paper schedules
+//! (YOLO + SSD for detection, GOTURN for tracking; §2.1, Table 1), with
+//! per-layer shape records consumed by the accelerator cycle models.
+
+pub mod accuracy;
+pub mod goturn;
+pub mod layer;
+pub mod ssd;
+pub mod yolo;
+
+pub use layer::{Layer, LayerKind};
+
+/// The three CNN task types in the driving-automation workload mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Yolo,
+    Ssd,
+    Goturn,
+}
+
+pub const ALL_MODELS: [ModelKind; 3] = [ModelKind::Yolo, ModelKind::Ssd, ModelKind::Goturn];
+
+impl ModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Yolo => "YOLO",
+            ModelKind::Ssd => "SSD",
+            ModelKind::Goturn => "GOTURN",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "yolo" => Some(ModelKind::Yolo),
+            "ssd" => Some(ModelKind::Ssd),
+            "goturn" => Some(ModelKind::Goturn),
+            _ => None,
+        }
+    }
+
+    /// Task category: detection (DET) or tracking (TRA), §2.1.
+    pub fn is_tracker(&self) -> bool {
+        matches!(self, ModelKind::Goturn)
+    }
+
+    /// Index used in one-hot featurization (must match python model.py).
+    pub fn index(&self) -> usize {
+        match self {
+            ModelKind::Yolo => 0,
+            ModelKind::Ssd => 1,
+            ModelKind::Goturn => 2,
+        }
+    }
+}
+
+/// A network: name + resolved layer list + cached aggregates.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub kind: ModelKind,
+    pub layers: Vec<Layer>,
+    pub total_macs: u64,
+    pub total_weights: u64,
+    pub total_neurons: u64,
+}
+
+impl Model {
+    fn build(kind: ModelKind) -> Model {
+        let layers = match kind {
+            ModelKind::Yolo => yolo::build(),
+            ModelKind::Ssd => ssd::build(),
+            ModelKind::Goturn => goturn::build(),
+        };
+        let total_macs = layers.iter().map(Layer::macs).sum();
+        let total_weights = layers.iter().map(Layer::weights).sum();
+        let total_neurons = layers.iter().map(Layer::neurons).sum();
+        Model { kind, layers, total_macs, total_weights, total_neurons }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn gmacs(&self) -> f64 {
+        self.total_macs as f64 / 1e9
+    }
+
+    /// Table 1's "#of weights and neurons" column, in millions.
+    pub fn mweights_neurons(&self) -> f64 {
+        (self.total_weights + self.total_neurons) as f64 / 1e6
+    }
+}
+
+lazy_static::lazy_static! {
+    static ref YOLO: Model = Model::build(ModelKind::Yolo);
+    static ref SSD: Model = Model::build(ModelKind::Ssd);
+    static ref GOTURN: Model = Model::build(ModelKind::Goturn);
+}
+
+/// Cached model lookup (layer lists are immutable after construction).
+pub fn model(kind: ModelKind) -> &'static Model {
+    match kind {
+        ModelKind::Yolo => &YOLO,
+        ModelKind::Ssd => &SSD,
+        ModelKind::Goturn => &GOTURN,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_builds_and_caches() {
+        for kind in ALL_MODELS {
+            let m = model(kind);
+            assert!(m.total_macs > 0);
+            assert!(m.num_layers() > 0);
+            // Cached: same allocation on second call.
+            assert!(std::ptr::eq(m, model(kind)));
+        }
+    }
+
+    #[test]
+    fn table1_layer_counts() {
+        assert_eq!(model(ModelKind::Ssd).num_layers(), 53);
+        assert_eq!(model(ModelKind::Yolo).num_layers(), 101);
+        assert_eq!(model(ModelKind::Goturn).num_layers(), 11);
+    }
+
+    #[test]
+    fn table1_mac_ordering() {
+        // SSD > YOLO > GOTURN in MACs (26G > 16G > 11G).
+        assert!(model(ModelKind::Ssd).total_macs > model(ModelKind::Yolo).total_macs);
+        assert!(model(ModelKind::Yolo).total_macs > model(ModelKind::Goturn).total_macs);
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for kind in ALL_MODELS {
+            assert_eq!(ModelKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ModelKind::parse("nope"), None);
+    }
+}

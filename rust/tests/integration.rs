@@ -1,0 +1,164 @@
+//! Cross-module integration tests: environment → scheduler → simulator →
+//! metrics, for every scheduler, plus the conservation and ordering
+//! properties the figures rely on.
+
+use hmai::config::EnvConfig;
+use hmai::env::taskgen::TaskQueue;
+use hmai::env::{Area, ALL_AREAS};
+use hmai::harness;
+use hmai::metrics::NormScales;
+use hmai::platform::Platform;
+use hmai::sched::{by_name, Scheduler, BASELINES};
+use hmai::sim::{simulate, simulate_with_scales, SimOptions};
+
+fn queue(area: Area, dist: f64, seed: u64) -> TaskQueue {
+    harness::make_queues(&EnvConfig { area, distances_m: vec![dist], seed }).remove(0)
+}
+
+const ALL_SCHEDS: [&str; 8] = ["minmin", "ata", "edp", "ga", "sa", "worst", "rr", "random"];
+
+#[test]
+fn every_scheduler_processes_every_task_in_every_area() {
+    for area in ALL_AREAS {
+        let q = queue(area, 60.0, 9);
+        let platform = Platform::hmai();
+        for name in ALL_SCHEDS {
+            let mut s = by_name(name, 3).unwrap();
+            let r = simulate(&q, &platform, s.as_mut(), SimOptions { record_tasks: true });
+            assert_eq!(r.summary.tasks as usize, q.len(), "{name} {area:?}");
+            assert_eq!(r.records.len(), q.len(), "{name} {area:?}");
+            // Conservation: every record's accel is in range; totals match.
+            assert!(r.records.iter().all(|rec| rec.accel < platform.len()));
+            let total_e: f64 = r.records.iter().map(|rec| rec.energy_j).sum();
+            assert!(
+                (total_e - r.summary.energy_j).abs() < 1e-6,
+                "{name}: record energy {} vs summary {}",
+                total_e,
+                r.summary.energy_j
+            );
+            let met = r.records.iter().filter(|rec| rec.met_deadline).count() as u64;
+            assert_eq!(met, r.summary.tasks_met, "{name}");
+        }
+    }
+}
+
+#[test]
+fn summary_wait_equals_record_wait() {
+    let q = queue(Area::Urban, 50.0, 1);
+    let mut s = by_name("sa", 1).unwrap();
+    let r = simulate(&q, &Platform::hmai(), s.as_mut(), SimOptions { record_tasks: true });
+    let wait: f64 = r.records.iter().map(|rec| rec.wait_s).sum();
+    assert!((wait - r.summary.wait_s).abs() < 1e-6);
+}
+
+#[test]
+fn fixed_scales_reproduce_default_scales() {
+    let q = queue(Area::Urban, 40.0, 2);
+    let platform = Platform::hmai();
+    let scales = NormScales::for_queue(&q, &platform);
+    let mut a = by_name("minmin", 0).unwrap();
+    let mut b = by_name("minmin", 0).unwrap();
+    let ra = simulate(&q, &platform, a.as_mut(), SimOptions::default());
+    let rb = simulate_with_scales(&q, &platform, b.as_mut(), SimOptions::default(), scales);
+    assert_eq!(ra.summary.energy_j, rb.summary.energy_j);
+    assert_eq!(ra.summary.gvalue, rb.summary.gvalue);
+}
+
+#[test]
+fn worst_case_is_the_floor() {
+    // The unscheduled worst case has the worst makespan and R_Balance of
+    // all schedulers (the Fig. 12 floor).
+    let q = queue(Area::Urban, 80.0, 3);
+    let platform = Platform::hmai();
+    let mut worst = by_name("worst", 0).unwrap();
+    let wc = simulate(&q, &platform, worst.as_mut(), SimOptions::default());
+    for name in ["minmin", "sa", "ata", "edp", "rr"] {
+        let mut s = by_name(name, 0).unwrap();
+        let r = simulate(&q, &platform, s.as_mut(), SimOptions::default());
+        assert!(
+            r.summary.makespan_s < wc.summary.makespan_s,
+            "{name} makespan !< worst"
+        );
+        assert!(
+            r.summary.r_balance > wc.summary.r_balance,
+            "{name} balance !> worst"
+        );
+    }
+}
+
+#[test]
+fn ata_leads_baselines_on_ms() {
+    // Table 11 / §8.3: ATA is the only baseline optimized toward MS.
+    let q = queue(Area::Urban, 80.0, 4);
+    let platform = Platform::hmai();
+    let run = |name: &str| {
+        let mut s = by_name(name, 0).unwrap();
+        simulate(&q, &platform, s.as_mut(), SimOptions::default()).summary
+    };
+    let ata = run("ata");
+    for name in ["ga", "worst", "random"] {
+        assert!(
+            ata.ms_per_task() > run(name).ms_per_task(),
+            "ATA MS !> {name}"
+        );
+    }
+}
+
+#[test]
+fn larger_platform_reduces_waiting() {
+    let q = queue(Area::Urban, 60.0, 5);
+    let small = Platform::from_counts("small", 2, 2, 2);
+    let large = Platform::from_counts("large", 8, 8, 6);
+    let mut s1 = by_name("sa", 1).unwrap();
+    let mut s2 = by_name("sa", 1).unwrap();
+    let r_small = simulate(&q, &small, s1.as_mut(), SimOptions::default());
+    let r_large = simulate(&q, &large, s2.as_mut(), SimOptions::default());
+    assert!(r_large.summary.wait_s < r_small.summary.wait_s);
+    assert!(r_large.summary.stm_rate() >= r_small.summary.stm_rate());
+}
+
+#[test]
+fn harness_run_queues_resets_between_queues() {
+    let env = EnvConfig { area: Area::Urban, distances_m: vec![40.0], seed: 6 };
+    let q = harness::make_queues(&env).remove(0);
+    let queues = vec![q.clone(), q]; // identical queues, stateful scheduler
+    let platform = Platform::hmai();
+    // A stateful scheduler (random) must produce identical summaries on
+    // identical queues thanks to reset().
+    let mut s = by_name("random", 11).unwrap();
+    let rs = harness::run_queues(&queues, &platform, s.as_mut(), SimOptions::default());
+    assert_eq!(rs[0].summary.energy_j, rs[1].summary.energy_j);
+    assert_eq!(rs[0].summary.tasks_met, rs[1].summary.tasks_met);
+}
+
+#[test]
+fn highway_queues_have_no_reverse_tasks() {
+    let q = queue(Area::Highway, 300.0, 7);
+    assert!(q
+        .tasks
+        .iter()
+        .all(|t| t.scenario != hmai::env::Scenario::Reverse));
+}
+
+#[test]
+fn stm_rate_is_monotone_in_deadline_slack() {
+    // Scaling every safety time up can only improve STMRate.
+    let mut q = queue(Area::Urban, 60.0, 8);
+    let platform = Platform::hmai();
+    let mut s = by_name("rr", 0).unwrap();
+    let base = simulate(&q, &platform, s.as_mut(), SimOptions::default());
+    for t in q.tasks.iter_mut() {
+        t.safety_time_s *= 3.0;
+    }
+    let mut s2 = by_name("rr", 0).unwrap();
+    let relaxed = simulate(&q, &platform, s2.as_mut(), SimOptions::default());
+    assert!(relaxed.summary.stm_rate() >= base.summary.stm_rate());
+}
+
+#[test]
+fn scheduler_trait_objects_are_nameable() {
+    for name in BASELINES {
+        let s: Box<dyn Scheduler> = by_name(name, 0).unwrap();
+        assert!(!s.name().is_empty());
+    }
+}

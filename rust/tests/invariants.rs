@@ -1,0 +1,227 @@
+//! Randomized property tests (hand-rolled proptest style over the
+//! deterministic `Rng`): coordinator invariants that must hold for *any*
+//! task sequence, platform shape and scheduler decision stream.
+
+use hmai::accel::{cost, ALL_ACCELS};
+use hmai::env::route::{Route, RouteParams};
+use hmai::env::taskgen::{self, Task};
+use hmai::env::{Area, CameraGroup, Scenario, ALL_AREAS, ALL_GROUPS};
+use hmai::metrics::NormScales;
+use hmai::platform::{alloc, Platform};
+use hmai::safety::ms::{matching_score, TaskCategory};
+use hmai::safety::rss::safety_time;
+use hmai::sim::ShadowState;
+use hmai::util::rng::Rng;
+use hmai::workload::{ModelKind, ALL_MODELS};
+
+fn random_task(rng: &mut Rng, id: u32) -> Task {
+    let model = ALL_MODELS[rng.below(3)];
+    Task {
+        id,
+        group: ALL_GROUPS[rng.below(6)],
+        cam_idx: rng.below(4) as u8,
+        release_s: rng.range_f64(0.0, 10.0),
+        model,
+        category: if model.is_tracker() {
+            TaskCategory::Tracking
+        } else {
+            TaskCategory::Detection
+        },
+        scenario: Scenario::GoStraight,
+        safety_time_s: rng.range_f64(0.01, 2.0),
+    }
+}
+
+fn random_platform(rng: &mut Rng) -> Platform {
+    loop {
+        let (so, si, mm) = (rng.below(5), rng.below(5), rng.below(5));
+        if so + si + mm > 0 {
+            return Platform::from_counts("rand", so, si, mm);
+        }
+    }
+}
+
+/// Invariant: for any random decision stream, the shadow state's clock and
+/// queues are causally consistent and metrics are conserved.
+#[test]
+fn shadow_state_causality_under_random_streams() {
+    let mut rng = Rng::new(0xfeed);
+    for trial in 0..50 {
+        let platform = random_platform(&mut rng);
+        let mut state = ShadowState::new(&platform, NormScales::unit());
+        let mut tasks: Vec<Task> = (0..60).map(|i| random_task(&mut rng, i)).collect();
+        tasks.sort_by(|a, b| a.release_s.total_cmp(&b.release_s));
+
+        let mut total_compute = 0.0;
+        let mut total_energy = 0.0;
+        let mut ms_sum = 0.0;
+        for t in &tasks {
+            state.advance(t.release_s);
+            let a = rng.below(platform.len());
+            let applied = state.apply(t, a);
+            // Causality.
+            assert!(applied.start_s >= t.release_s - 1e-12, "trial {trial}");
+            assert!(applied.finish_s > applied.start_s);
+            assert!(applied.wait_s >= 0.0);
+            assert!((applied.response_s - (applied.wait_s + applied.compute_s)).abs() < 1e-9);
+            // Cost-model consistency.
+            let c = cost(platform.accels[a].kind, t.model);
+            assert_eq!(applied.compute_s, c.time_s);
+            assert_eq!(applied.energy_j, c.energy_j);
+            // MS bounds.
+            assert!((-1.0..=1.0).contains(&applied.ms));
+            assert!((0.0..=1.0).contains(&applied.r_j));
+            total_compute += applied.compute_s;
+            total_energy += applied.energy_j;
+            ms_sum += applied.ms;
+        }
+        // Conservation across per-accelerator metrics.
+        let m = &state.metrics;
+        let busy: f64 = m.per_accel.iter().map(|a| a.busy_s).sum();
+        assert!((busy - total_compute).abs() < 1e-9);
+        assert!((m.energy_j() - total_energy).abs() < 1e-9);
+        assert!((m.ms_total() - ms_sum).abs() < 1e-9);
+        assert_eq!(m.total_tasks(), tasks.len() as u64);
+        // Busy-until never precedes the clock by construction.
+        assert!(state.busy_until.iter().all(|&b| b >= 0.0));
+    }
+}
+
+/// Invariant: matching score is -1 past the safety time for detection and
+/// bounded on both sides everywhere.
+#[test]
+fn matching_score_properties() {
+    let mut rng = Rng::new(7);
+    for _ in 0..2000 {
+        let st = rng.range_f64(1e-3, 3.0);
+        let resp = rng.range_f64(0.0, 6.0);
+        for cat in [TaskCategory::Detection, TaskCategory::Tracking] {
+            let ms = matching_score(cat, resp, st);
+            assert!((-1.0..=1.0).contains(&ms));
+            if resp > st {
+                assert_eq!(ms, -1.0, "late tasks always score -1");
+            } else {
+                assert!(ms > -1.0 || cat == TaskCategory::Tracking);
+                assert!(ms >= -1.0);
+            }
+        }
+        // Detection MS grows with response inside the accepted region
+        // (the Fig. 7 energy-saving ramp).
+        let r1 = rng.range_f64(0.0, st * 0.5);
+        let r2 = rng.range_f64(st * 0.5, st);
+        let m1 = matching_score(TaskCategory::Detection, r1, st);
+        let m2 = matching_score(TaskCategory::Detection, r2, st);
+        assert!(m2 >= m1, "ramp must be nondecreasing: {m1} vs {m2}");
+    }
+}
+
+/// Invariant: RSS safety times shrink with faster areas and grow with
+/// camera sensing distance.
+#[test]
+fn rss_safety_time_monotonicity() {
+    for scenario in [Scenario::GoStraight, Scenario::Turn] {
+        for g in ALL_GROUPS {
+            let ub = safety_time(Area::Urban, scenario, g);
+            let uhw = safety_time(Area::UndividedHighway, scenario, g);
+            let hw = safety_time(Area::Highway, scenario, g);
+            assert!(ub > 0.0 && uhw > 0.0 && hw > 0.0);
+            assert!(ub >= uhw && uhw >= hw, "{scenario:?} {g:?}: {ub} {uhw} {hw}");
+        }
+        // Longer-range camera => more headroom => larger safety time.
+        let fc = safety_time(Area::Urban, scenario, CameraGroup::Fc);
+        let side = safety_time(Area::Urban, scenario, CameraGroup::Flsc);
+        assert!(fc >= side, "{scenario:?}: FC {fc} vs side {side}");
+    }
+}
+
+/// Invariant: generated routes partition their duration, respect area
+/// rules, and task queues are release-sorted with positive safety times.
+#[test]
+fn route_and_queue_invariants_random() {
+    let mut rng = Rng::new(0xabcd);
+    for _ in 0..20 {
+        let area = ALL_AREAS[rng.below(3)];
+        let dist = rng.range_f64(50.0, 400.0);
+        let route = Route::generate(RouteParams::for_area(area, dist), &mut rng);
+        // Segments tile [0, duration) without overlap.
+        let mut t = 0.0;
+        for s in &route.segments {
+            assert!((s.start_s - t).abs() < 1e-9, "gap at {t}");
+            assert!(s.duration_s > 0.0);
+            t = s.end_s();
+        }
+        assert!((t - route.duration_s).abs() < 1e-6);
+        if area == Area::Highway {
+            assert!(route.segments.iter().all(|s| s.scenario != Scenario::Reverse));
+        }
+        let q = taskgen::generate(&route);
+        assert!(q.tasks.windows(2).all(|w| w[0].release_s <= w[1].release_s));
+        assert!(q.tasks.iter().all(|t| t.safety_time_s > 0.0));
+        assert!(q.tasks.iter().all(|t| t.release_s < route.duration_s));
+    }
+}
+
+/// Invariant: any feasible allocation found by the exhaustive search
+/// actually covers the requirements, never over-uses the platform, and
+/// reports utilization in (0, 1].
+#[test]
+fn allocation_search_soundness_random() {
+    let mut rng = Rng::new(0x5eed);
+    for _ in 0..40 {
+        let counts = (rng.below(6), rng.below(6), rng.below(6));
+        let area = ALL_AREAS[rng.below(3)];
+        let scenario = [Scenario::GoStraight, Scenario::Turn][rng.below(2)];
+        let reqs = alloc::requirements(area, scenario);
+        if let Some((a, u)) = alloc::best_allocation(counts, &reqs) {
+            assert!(alloc::feasible(&a, &reqs));
+            assert!(u > 0.0 && u <= 1.0 + 1e-9);
+            // Per-kind usage within the platform's counts.
+            let totals = [counts.0, counts.1, counts.2];
+            for k in ALL_ACCELS {
+                let used: usize = (0..3).map(|m| a[k.index()][m]).sum();
+                assert!(used <= totals[k.index()]);
+            }
+            assert!(alloc::power_w_provisioned(&a, &reqs, counts) > 0.0);
+        }
+    }
+}
+
+/// Invariant: scheduler assignments are always in range, for random
+/// platforms and random bursts, for every constructible scheduler.
+#[test]
+fn schedulers_in_range_on_random_platforms() {
+    let mut rng = Rng::new(0xdead);
+    for trial in 0..15 {
+        let platform = random_platform(&mut rng);
+        let state = ShadowState::new(&platform, NormScales::unit());
+        let burst: Vec<Task> = (0..rng.int_range(1, 40) as u32)
+            .map(|i| {
+                let mut t = random_task(&mut rng, i);
+                t.release_s = 0.0;
+                t
+            })
+            .collect();
+        for name in ["minmin", "ata", "edp", "ga", "sa", "worst", "rr", "random"] {
+            let mut s = hmai::sched::by_name(name, trial).unwrap();
+            let a = s.schedule_batch(&burst, &state);
+            assert_eq!(a.len(), burst.len(), "{name}");
+            assert!(a.iter().all(|&i| i < platform.len()), "{name} out of range");
+        }
+    }
+}
+
+/// Invariant: ModelKind task features feed consistent Task-Info.
+#[test]
+fn task_info_consistency() {
+    let mut rng = Rng::new(1);
+    for i in 0..200 {
+        let t = random_task(&mut rng, i);
+        assert!(t.amount_gmacs() > 0.0);
+        assert!(t.layer_num() > 0);
+        assert!((t.deadline_s() - (t.release_s + t.safety_time_s)).abs() < 1e-12);
+        match t.model {
+            ModelKind::Goturn => assert!(t.model.is_tracker()),
+            _ => assert!(!t.model.is_tracker()),
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! End-to-end AOT-path tests: the compiled HLO executables (L1 Pallas
+//! kernels inlined into the L2 JAX graph) are cross-checked against an
+//! independent pure-rust re-implementation of the Q-network math, and the
+//! FlexAI train/checkpoint/serve cycle is exercised through PJRT.
+//!
+//! These tests require `make artifacts`.
+
+use std::sync::Arc;
+
+use hmai::config::EnvConfig;
+use hmai::env::Area;
+use hmai::harness;
+use hmai::platform::Platform;
+use hmai::runtime::{Params, Runtime, TrainBatch};
+use hmai::sched::flexai::{checkpoint, FlexAI, FlexAIConfig};
+use hmai::sim::{simulate, SimOptions};
+
+fn rt() -> Arc<Runtime> {
+    Arc::new(Runtime::load_default().expect("run `make artifacts` first"))
+}
+
+/// Independent rust reference of the Q-network forward pass:
+/// x·W1+b1 → ReLU → ·W2+b2 → ReLU → ·W3+b3.  Must match the compiled
+/// Pallas/JAX path bit-for-bit up to f32 accumulation order.
+fn reference_forward(params: &Params, x: &[f32], meta: &hmai::runtime::Meta) -> Vec<f32> {
+    let t = params.tensors();
+    let (w1, b1, w2, b2, w3, b3) = (&t[0], &t[1], &t[2], &t[3], &t[4], &t[5]);
+    let matvec = |x: &[f32], w: &[f32], b: &[f32], i: usize, o: usize, relu: bool| {
+        let mut y = vec![0.0f32; o];
+        for c in 0..o {
+            // f64 accumulation: tolerance below absorbs ordering effects.
+            let mut acc = b[c] as f64;
+            for r in 0..i {
+                acc += x[r] as f64 * w[r * o + c] as f64;
+            }
+            y[c] = if relu { (acc as f32).max(0.0) } else { acc as f32 };
+        }
+        y
+    };
+    let h1 = matvec(x, w1, b1, meta.in_dim, meta.h1, true);
+    let h2 = matvec(&h1, w2, b2, meta.h1, meta.h2, true);
+    matvec(&h2, w3, b3, meta.h2, meta.out_dim, false)
+}
+
+#[test]
+fn compiled_qnet_matches_rust_reference() {
+    let rt = rt();
+    let params = rt.init_params(11).unwrap();
+    // A few structured states, not just noise.
+    let mut states: Vec<Vec<f32>> = Vec::new();
+    states.push(vec![0.0; rt.meta.in_dim]);
+    states.push(vec![1.0; rt.meta.in_dim]);
+    let mut ramp = vec![0.0f32; rt.meta.in_dim];
+    for (i, v) in ramp.iter_mut().enumerate() {
+        *v = (i as f32 / 134.0).sin().abs();
+    }
+    states.push(ramp);
+    for x in &states {
+        let compiled = rt.infer(&params, x).unwrap();
+        let reference = reference_forward(&params, x, &rt.meta);
+        for (c, r) in compiled.iter().zip(&reference) {
+            assert!(
+                (c - r).abs() <= 1e-3 * (1.0 + r.abs()),
+                "compiled {c} vs reference {r}"
+            );
+        }
+    }
+}
+
+#[test]
+fn train_step_matches_sgd_direction() {
+    // After one compiled train step on a batch whose TD target exceeds
+    // Q(s,a), Q(s,a) must move toward the target (plain SGD property).
+    let rt = rt();
+    let params = rt.init_params(3).unwrap();
+    let targ = params.clone();
+    let mut batch = TrainBatch::zeros(&rt.meta);
+    for (i, v) in batch.s.iter_mut().enumerate() {
+        *v = ((i * 7) % 19) as f32 / 19.0;
+    }
+    batch.s2.copy_from_slice(&batch.s);
+    for a in batch.a.iter_mut() {
+        *a = 2;
+    }
+    for r in batch.r.iter_mut() {
+        *r = 5.0; // large positive reward pushes the target above Q
+    }
+    for d in batch.done.iter_mut() {
+        *d = 1.0; // y = r exactly
+    }
+    let q_before = rt.infer(&params, &batch.s[..rt.meta.in_dim].to_vec()).unwrap()[2];
+    let (new_params, loss) = rt.train_step(&params, &targ, &batch).unwrap();
+    let q_after = rt.infer(&new_params, &batch.s[..rt.meta.in_dim].to_vec()).unwrap()[2];
+    assert!(loss > 0.0);
+    assert!(
+        q_after > q_before,
+        "Q(s, a=2) must move toward target 5.0: {q_before} -> {q_after}"
+    );
+}
+
+#[test]
+fn gamma_zero_done_batch_converges_to_reward() {
+    // With done=1 everywhere the TD target is exactly r; repeated steps on
+    // the same batch must drive Q(s,a) to r.
+    let rt = rt();
+    let mut params = rt.init_params(5).unwrap();
+    let targ = params.clone();
+    let mut batch = TrainBatch::zeros(&rt.meta);
+    for (i, v) in batch.s.iter_mut().enumerate() {
+        *v = ((i * 13) % 17) as f32 / 17.0;
+    }
+    batch.s2.copy_from_slice(&batch.s);
+    for a in batch.a.iter_mut() {
+        *a = 0;
+    }
+    for r in batch.r.iter_mut() {
+        *r = -1.5;
+    }
+    for d in batch.done.iter_mut() {
+        *d = 1.0;
+    }
+    let mut loss = f32::INFINITY;
+    for _ in 0..200 {
+        let (p, l) = rt.train_step(&params, &targ, &batch).unwrap();
+        params = p;
+        loss = l;
+    }
+    assert!(loss < 0.05, "loss should converge to ~0, got {loss}");
+    let q = rt.infer(&params, &batch.s[..rt.meta.in_dim].to_vec()).unwrap()[0];
+    assert!((q - (-1.5)).abs() < 0.3, "Q -> r: got {q}");
+}
+
+#[test]
+fn trained_agent_roundtrips_through_checkpoint_identically() {
+    let rt = rt();
+    let env = EnvConfig { area: Area::Urban, distances_m: vec![40.0], seed: 21 };
+    let queue = harness::make_queues(&env).remove(0);
+    let platform = Platform::hmai();
+
+    // Short in-process training.
+    let cfg = FlexAIConfig { seed: 21, min_replay: 64, ..Default::default() };
+    let mut agent = FlexAI::new(rt.clone(), cfg.clone()).unwrap();
+    agent.set_training(true);
+    simulate(&queue, &platform, &mut agent, SimOptions::default());
+    agent.end_episode();
+    agent.set_training(false);
+
+    let dir = std::env::temp_dir().join("hmai_e2e_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("agent.json");
+    checkpoint::save(&agent, &path).unwrap();
+    let mut restored = checkpoint::load(rt, &path, cfg).unwrap();
+
+    // Greedy decisions of original and restored agents must be identical.
+    let ra = simulate(&queue, &platform, &mut agent, SimOptions { record_tasks: true });
+    let rb = simulate(&queue, &platform, &mut restored, SimOptions { record_tasks: true });
+    assert_eq!(ra.records.len(), rb.records.len());
+    for (a, b) in ra.records.iter().zip(&rb.records) {
+        assert_eq!(a.accel, b.accel, "task {}", a.task_id);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn flexai_safety_shield_improves_or_preserves_stm_rate() {
+    let rt = rt();
+    let env = EnvConfig { area: Area::Urban, distances_m: vec![50.0], seed: 33 };
+    let queue = harness::make_queues(&env).remove(0);
+    let platform = Platform::hmai();
+    let run = |shield: bool| {
+        let cfg = FlexAIConfig { seed: 33, safety_shield: shield, ..Default::default() };
+        let mut agent = FlexAI::new(rt.clone(), cfg).unwrap();
+        agent.set_training(false);
+        simulate(&queue, &platform, &mut agent, SimOptions::default()).summary
+    };
+    let with = run(true);
+    let without = run(false);
+    assert!(
+        with.stm_rate() >= without.stm_rate(),
+        "shield {} !>= pure {}",
+        with.stm_rate(),
+        without.stm_rate()
+    );
+}
