@@ -4,13 +4,19 @@
 //! meters; the braking distance follows from the probe task's wait +
 //! compute + scheduler latency + CAN + mechanical lag).
 //!
+//! The whole comparison is one `ExperimentPlan` (FlexAI + the Fig. 12
+//! baselines) executed by the `Engine` — pass `--jobs N` to run the
+//! schedulers' probe trials in parallel.
+//!
 //!     cargo run --release --example drive_route -- --dist 400 \
-//!         [--ckpt checkpoints/flexai_ub.json] [--area ub] [--seed 42]
+//!         [--ckpt checkpoints/flexai_ub.json] [--area ub] [--seed 42] [--jobs 4]
 
 use hmai::config::ExperimentConfig;
+use hmai::engine::{Engine, TrialResult};
 use hmai::harness;
 use hmai::safety::braking::{braking_distance_m, stops_within, BrakingBreakdown};
-use hmai::sim::{SimOptions, SimResult};
+use hmai::sched::{baseline_specs, SchedulerSpec};
+use hmai::sim::SimOptions;
 use hmai::util::cli::Args;
 use hmai::util::table::{f2, pct, Table};
 
@@ -23,33 +29,40 @@ fn main() -> anyhow::Result<()> {
     let brake_at = args.get_f64("brake-at", cfg.env.distances_m[0] * 0.5)?;
     let sensing_m = 250.0; // forward camera max distance (§6.1)
 
-    let platform = cfg.platform()?;
-    let queues = harness::make_queues(&cfg.env);
+    let mut schedulers = Vec::new();
+    match harness::load_runtime() {
+        Ok(_) => schedulers.push(SchedulerSpec::FlexAI {
+            checkpoint: (!cfg.checkpoint.is_empty()).then(|| cfg.checkpoint.clone()),
+        }),
+        Err(e) => eprintln!("note: FlexAI skipped ({e:#})"),
+    }
+    schedulers.extend(baseline_specs());
+
+    let plan = cfg.plan()?.schedulers(schedulers);
+    let registry = harness::registry(&cfg);
+    let results = Engine::new(&registry)
+        .jobs(cfg.jobs)
+        .sim_options(SimOptions { record_tasks: true })
+        .run(&plan)?;
+
     let v = cfg.env.area.max_velocity_ms();
     println!(
         "route: {:.0} m ({}), {} tasks; brake event at {brake_at:.0} m, v = {v:.1} m/s",
         cfg.env.distances_m[0],
         cfg.env.area.name(),
-        queues[0].len()
+        results[0].summary.tasks
     );
 
     let mut table = Table::new([
         "Scheduler", "STMRate", "T_wait (ms)", "T_sched (ms)", "T_compute (ms)",
         "Braking dist (m)", "Safe (<250 m)",
     ]);
-
-    let mut probe = |name: &str, r: &SimResult| {
-        let t_probe = brake_at / v;
-        let rec = r
-            .records
-            .iter()
-            .filter(|t| t.release_s >= t_probe && !t.model.is_tracker())
-            .min_by(|a, b| a.release_s.total_cmp(&b.release_s))
-            .expect("route long enough for probe");
+    for r in &results {
+        let rec = probe(r, brake_at / v);
         let bd = BrakingBreakdown::new(rec.wait_s, r.sched_per_task_s(), rec.compute_s);
         let dist = braking_distance_m(v, &bd);
         table.row([
-            name.to_string(),
+            r.summary.scheduler.clone(),
             pct(r.summary.stm_rate()),
             f2(bd.t_wait * 1e3),
             f2(bd.t_schedule * 1e3),
@@ -57,28 +70,12 @@ fn main() -> anyhow::Result<()> {
             f2(dist),
             if stops_within(v, &bd, sensing_m) { "yes".into() } else { "NO".into() },
         ]);
-    };
-
-    // FlexAI (checkpoint if given, fresh otherwise) ...
-    {
-        let mut cfg_f = cfg.clone();
-        cfg_f.scheduler = "flexai".into();
-        let mut s = harness::make_scheduler(&cfg_f)?;
-        let r = harness::run_queues(&queues, &platform, s.as_mut(), SimOptions {
-            record_tasks: true,
-        })
-        .remove(0);
-        probe("FlexAI", &r);
-    }
-    // ... vs every baseline.
-    for name in hmai::sched::BASELINES {
-        let mut s = hmai::sched::by_name(name, cfg.env.seed).expect("baseline");
-        let r = harness::run_queues(&queues, &platform, s.as_mut(), SimOptions {
-            record_tasks: true,
-        })
-        .remove(0);
-        probe(&s.name(), &r);
     }
     table.print();
     Ok(())
+}
+
+/// First forward-camera detection task released at or after `t_probe`.
+fn probe(r: &TrialResult, t_probe: f64) -> &hmai::sim::TaskRecord {
+    hmai::sim::first_detection_after(&r.records, t_probe).expect("route long enough for probe")
 }

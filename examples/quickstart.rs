@@ -1,23 +1,20 @@
 //! Quickstart: the smallest end-to-end use of the public API.
 //!
-//! Builds the paper's HMAI platform (4 SconvOD, 4 SconvIC, 3 MconvMC),
-//! generates a short urban driving route's task queue, schedules it with a
-//! heuristic baseline and with FlexAI (fresh DQN parameters through the
-//! AOT-compiled PJRT path), and prints the §6 metrics side by side.
+//! Builds an `ExperimentPlan` — the paper's HMAI platform (4 SconvOD,
+//! 4 SconvIC, 3 MconvMC), a short urban route's task queue, and two
+//! schedulers (Min-Min heuristic vs FlexAI through the AOT-compiled PJRT
+//! path) — and executes it on the `Engine`, printing the §6 metrics side
+//! by side.  Without `make artifacts` the FlexAI rows are skipped.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
-use std::sync::Arc;
-
-use hmai::config::EnvConfig;
+use hmai::config::ExperimentConfig;
+use hmai::engine::Engine;
 use hmai::env::Area;
 use hmai::harness;
+use hmai::plan::ExperimentPlan;
 use hmai::platform::Platform;
-use hmai::runtime::Runtime;
-use hmai::sched::flexai::{FlexAI, FlexAIConfig};
-use hmai::sched::minmin::MinMin;
-use hmai::sched::Scheduler;
-use hmai::sim::{simulate, SimOptions};
+use hmai::sched::SchedulerSpec;
 use hmai::util::table::{f2, pct, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -30,29 +27,38 @@ fn main() -> anyhow::Result<()> {
         platform.peak_tops()
     );
 
-    // 2. The environment: a 150 m urban route → one task queue (Fig. 9).
-    let env = EnvConfig { area: Area::Urban, distances_m: vec![150.0], seed: 7 };
-    let queue = harness::make_queues(&env).remove(0);
+    // 2. The plan: a 150 m urban route → one task queue (Fig. 9), swept by
+    //    Min-Min and — when the PJRT artifacts are present — FlexAI with
+    //    fresh Q-network parameters (run `--example train_flexai` for the
+    //    real agent; the deadline shield already makes the fresh agent safe).
+    let mut schedulers = vec![SchedulerSpec::MinMin];
+    match harness::load_runtime() {
+        Ok(_) => schedulers.push(SchedulerSpec::FlexAI { checkpoint: None }),
+        Err(e) => eprintln!("note: FlexAI skipped ({e:#})"),
+    }
+    let plan = ExperimentPlan::new()
+        .area(Area::Urban)
+        .distances([150.0])
+        .schedulers(schedulers)
+        .seed(7);
+
+    // 3. The engine: registry = baselines + FlexAI factory; one worker per
+    //    scheduler is plenty here.
+    let registry = harness::registry(&ExperimentConfig::default());
+    let results = Engine::new(&registry).jobs(2).run(&plan)?;
+
+    let q = plan.trials()?[0].queue();
     println!(
         "queue: {} tasks over {:.1} s ({:.0} tasks/s)",
-        queue.len(),
-        queue.route_duration_s,
-        queue.len() as f64 / queue.route_duration_s
+        q.len(),
+        q.route_duration_s,
+        q.len() as f64 / q.route_duration_s
     );
-
-    // 3. Schedulers: Min-Min heuristic vs FlexAI (untrained Q-network —
-    //    run `cargo run --release --example train_flexai` for the real
-    //    agent; the deadline shield already makes the fresh agent safe).
-    let rt = Arc::new(Runtime::load_default()?);
-    let mut flexai = FlexAI::new(rt, FlexAIConfig { seed: 7, ..Default::default() })?;
-    flexai.set_training(false);
-    let mut minmin = MinMin::new();
 
     let mut table = Table::new([
         "Scheduler", "STMRate", "Wait (s)", "Energy (J)", "R_Balance", "MS/task", "Gvalue",
     ]);
-    for sched in [&mut minmin as &mut dyn Scheduler, &mut flexai] {
-        let r = simulate(&queue, &platform, sched, SimOptions::default());
+    for r in &results {
         let s = &r.summary;
         table.row([
             s.scheduler.clone(),

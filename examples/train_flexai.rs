@@ -16,10 +16,10 @@
 //!        --eval-dist M (default 250)  --seed S  --out FILE
 
 use hmai::config::{EnvConfig, ExperimentConfig, TrainConfig};
+use hmai::engine::Engine;
 use hmai::env::Area;
 use hmai::harness;
-use hmai::sched::Scheduler;
-use hmai::sim::{simulate, SimOptions};
+use hmai::sched::{baseline_specs, SchedulerSpec};
 use hmai::util::cli::Args;
 use hmai::util::table::{f2, pct, Table};
 
@@ -91,19 +91,23 @@ fn main() -> anyhow::Result<()> {
     hmai::sched::flexai::checkpoint::save(&outcome.agent, std::path::Path::new(&out))?;
     println!("checkpoint -> {out}");
 
-    // --- Evaluate on a held-out route (Fig. 12-style) ---
+    // --- Evaluate on a held-out route (Fig. 12-style), through the
+    //     plan/engine API: FlexAI restores the checkpoint just saved, the
+    //     baselines come from the canonical table, and `--jobs` runs the
+    //     comparison trials in parallel. ---
     println!("\nheld-out evaluation: {} m route (UB)", eval_dist);
-    let platform = cfg.platform()?;
-    let queue = harness::make_queues(&cfg.env).remove(0);
-    let mut agent = outcome.agent;
-    agent.set_training(false);
+    let mut schedulers = vec![SchedulerSpec::FlexAI { checkpoint: Some(out.clone()) }];
+    schedulers.extend(baseline_specs());
+    let plan = cfg.plan()?.schedulers(schedulers);
+    let registry = harness::registry(&cfg);
+    let results = Engine::new(&registry)
+        .jobs(args.get_usize("jobs", cfg.jobs)?)
+        .run(&plan)?;
 
     let mut table = Table::new([
         "Scheduler", "STMRate", "Time (s)", "Wait (s)", "Energy (J)", "R_Balance", "MS/task",
     ]);
-    let mut run = |sched: &mut dyn Scheduler| {
-        sched.reset();
-        let r = simulate(&queue, &platform, sched, SimOptions::default());
+    for r in &results {
         let s = &r.summary;
         table.row([
             s.scheduler.clone(),
@@ -114,11 +118,6 @@ fn main() -> anyhow::Result<()> {
             f2(s.r_balance),
             f2(s.ms_per_task()),
         ]);
-    };
-    run(&mut agent);
-    for name in hmai::sched::BASELINES {
-        let mut b = hmai::sched::by_name(name, seed).expect("baseline exists");
-        run(b.as_mut());
     }
     table.print();
     Ok(())

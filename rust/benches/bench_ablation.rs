@@ -13,19 +13,24 @@
 mod common;
 
 use hmai::config::{EnvConfig, ExperimentConfig, TrainConfig};
+use hmai::env::taskgen::DeadlineMode;
 use hmai::env::Area;
 use hmai::harness;
+use hmai::plan::queue_for;
 use hmai::platform::Platform;
 use hmai::sim::{simulate, SimOptions};
 use hmai::util::bench::section;
 use hmai::util::table::{f2, pct, Table};
 
 fn main() {
+    if let Err(e) = harness::load_runtime() {
+        eprintln!("[bench] skipping ablation: {e:#}");
+        return;
+    }
     let scale = common::scale() / 0.2;
     let train_dist = 100.0 * scale.max(0.5);
     let eval_dist = 200.0 * scale.max(0.5);
-    let eval_env = EnvConfig { area: Area::Urban, distances_m: vec![eval_dist], seed: 42 };
-    let queue = harness::make_queues(&eval_env).remove(0);
+    let queue = queue_for(Area::Urban, eval_dist, 0, DeadlineMode::Rss, 42);
     let platform = Platform::hmai();
 
     section(&format!(

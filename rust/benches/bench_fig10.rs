@@ -11,8 +11,9 @@
 mod common;
 
 use hmai::accel::{energy::idle_power_w, t4};
+use hmai::env::taskgen::DeadlineMode;
 use hmai::env::Area;
-use hmai::harness;
+use hmai::plan::queue_for;
 use hmai::platform::Platform;
 use hmai::sched::sa::Sa;
 use hmai::sim::{simulate, SimOptions};
@@ -29,7 +30,12 @@ struct PlatformRow {
 
 fn main() {
     let env = common::env(Area::Urban);
-    let queues = harness::make_queues(&env);
+    let queues: Vec<_> = env
+        .distances_m
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| queue_for(env.area, d, i, DeadlineMode::Rss, env.seed))
+        .collect();
     println!(
         "5 urban queues, {} tasks total (HMAI_BENCH_SCALE={})",
         queues.iter().map(|q| q.len()).sum::<usize>(),

@@ -15,6 +15,10 @@ use hmai::util::bench::section;
 use hmai::util::stats::mean;
 
 fn main() {
+    if let Err(e) = harness::load_runtime() {
+        eprintln!("[bench] skipping fig11: {e:#}");
+        return;
+    }
     let dist = 100.0 * (common::scale() / 0.2).max(0.5);
     let cfg = ExperimentConfig {
         env: EnvConfig { area: Area::Urban, distances_m: vec![dist], seed: 42 },

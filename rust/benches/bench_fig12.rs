@@ -6,18 +6,18 @@
 //! R_Balance; ATA the only baseline beating FlexAI on MS; worst-case and
 //! GA far behind on time/balance.
 //!
-//! Set HMAI_BENCH_AREAS=ub to restrict areas, HMAI_BENCH_SCALE to resize.
+//! Runs entirely through `ExperimentPlan`/`Engine` (trials execute on the
+//! worker pool; FlexAI trials restore one shared trained checkpoint).
+//! Set HMAI_BENCH_AREAS to restrict areas, HMAI_BENCH_SCALE to resize,
+//! HMAI_BENCH_JOBS to pin the worker count.
 
 #[path = "common.rs"]
 mod common;
 
+use hmai::engine::Engine;
 use hmai::env::Area;
-use hmai::harness;
-use hmai::metrics::summary::RunSummary;
-use hmai::sim::SimOptions;
+use hmai::metrics::summary::SweepGroup;
 use hmai::util::bench::section;
-use hmai::util::stats::geomean;
-use hmai::util::table::{f2, pct, Table};
 
 fn areas() -> Vec<Area> {
     let spec = std::env::var("HMAI_BENCH_AREAS").unwrap_or_else(|_| "ub,uhw,hw".into());
@@ -25,66 +25,52 @@ fn areas() -> Vec<Area> {
 }
 
 fn main() {
+    let reg = common::registry();
     for area in areas() {
-        let env = common::env(area);
-        let queues = harness::make_queues(&env);
-        section(&format!(
-            "Fig. 12 — {} ({} queues, {} tasks total)",
-            area.name(),
-            queues.len(),
-            queues.iter().map(|q| q.len()).sum::<usize>()
-        ));
-
-        let platform = hmai::platform::Platform::hmai();
-        let mut results: Vec<(String, Vec<RunSummary>)> = Vec::new();
-        {
-            let mut agent = common::flexai(area).expect("flexai constructible");
-            let rs =
-                harness::run_queues(&queues, &platform, &mut agent, SimOptions::default());
-            results.push(("FlexAI".into(), rs.into_iter().map(|r| r.summary).collect()));
-        }
-        for mut b in common::baselines(42) {
-            let rs =
-                harness::run_queues(&queues, &platform, b.as_mut(), SimOptions::default());
-            results.push((b.name(), rs.into_iter().map(|r| r.summary).collect()));
-        }
-
-        let mut t = Table::new([
-            "Scheduler", "Time M (s)", "R_Balance M", "MS/task M", "Energy M (J)", "STMRate M",
-        ]);
-        let geo = |f: &dyn Fn(&RunSummary) -> f64, rs: &[RunSummary]| {
-            geomean(&rs.iter().map(|s| f(s).max(1e-12)).collect::<Vec<_>>())
+        let mut schedulers = Vec::new();
+        let flexai_on = match common::flexai_spec(area) {
+            Ok(spec) => {
+                schedulers.push(spec);
+                true
+            }
+            Err(e) => {
+                eprintln!("[bench] FlexAI unavailable, baselines only: {e:#}");
+                false
+            }
         };
-        for (name, rs) in &results {
-            t.row([
-                name.clone(),
-                f2(geo(&|s| s.total_time_s, rs)),
-                f2(rs.iter().map(|s| s.r_balance).sum::<f64>() / rs.len() as f64),
-                f2(rs.iter().map(|s| s.ms_per_task()).sum::<f64>() / rs.len() as f64),
-                f2(geo(&|s| s.energy_j, rs)),
-                pct(rs.iter().map(|s| s.stm_rate()).sum::<f64>() / rs.len() as f64),
-            ]);
-        }
-        t.print();
+        schedulers.extend(common::baselines());
+
+        let plan = common::plan(area).schedulers(schedulers);
+        let trials = plan.len();
+        let (_, sweep) = Engine::new(&reg)
+            .jobs(common::jobs())
+            .sweep(&plan)
+            .expect("sweep runs");
+        section(&format!(
+            "Fig. 12 — {} ({} trials through Engine, {} queues/scheduler)",
+            area.name(),
+            trials,
+            common::distances().len()
+        ));
+        hmai::reports::sweep_table(&sweep).print();
 
         // Shape assertions per area.
-        let by = |name: &str| results.iter().find(|(n, _)| n == name).map(|(_, r)| r).unwrap();
-        let flex = by("FlexAI");
-        let worst = by("WorstCase");
-        let ga = by("GA");
-        let flex_time = geo(&|s| s.total_time_s, flex);
-        assert!(
-            flex_time < geo(&|s| s.total_time_s, worst),
-            "{}: FlexAI time !< worst",
-            area.name()
-        );
-        assert!(
-            flex_time < geo(&|s| s.total_time_s, ga),
-            "{}: FlexAI time !< GA",
-            area.name()
-        );
-        let flex_stm = flex.iter().map(|s| s.stm_rate()).sum::<f64>() / flex.len() as f64;
-        assert!(flex_stm > 0.99, "{}: FlexAI STMRate {flex_stm}", area.name());
+        let by = |name: &str| -> &SweepGroup {
+            sweep.by_scheduler(name).unwrap_or_else(|| panic!("{name} missing"))
+        };
+        let worst = by("WorstCase").geomean_time_s();
+        let ga = by("GA").geomean_time_s();
+        if flexai_on {
+            let flex = by("FlexAI");
+            let flex_time = flex.geomean_time_s();
+            assert!(flex_time < worst, "{}: FlexAI time !< worst", area.name());
+            assert!(flex_time < ga, "{}: FlexAI time !< GA", area.name());
+            let flex_stm = flex.mean_stm_rate();
+            assert!(flex_stm > 0.99, "{}: FlexAI STMRate {flex_stm}", area.name());
+        } else {
+            // Baseline-only shape: the unscheduled floor is still the floor.
+            assert!(by("Min-Min").geomean_time_s() < worst, "{}", area.name());
+        }
     }
     println!("\nfig12 OK");
 }

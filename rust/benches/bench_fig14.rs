@@ -7,30 +7,49 @@
 //! T_wait ≈ 0; the worst case (and typically GA) exceeds the 250 m sensing
 //! range (collision); braking-distance reduction vs the worst baseline is
 //! the paper's headline "up to 96%".
+//!
+//! Every scheduler's probe run executes as one `Engine` trial (with task
+//! records on), so the whole figure is a single parallel sweep.
 
 #[path = "common.rs"]
 mod common;
 
+use hmai::engine::{Engine, TrialResult};
 use hmai::env::Area;
-use hmai::harness;
-use hmai::platform::Platform;
 use hmai::safety::braking::{braking_distance_m, stops_within, BrakingBreakdown};
-use hmai::sim::{SimOptions, SimResult};
+use hmai::sim::SimOptions;
 use hmai::util::bench::section;
 use hmai::util::table::{f2, pct, Table};
 
 fn main() {
     let area = Area::Urban;
-    let mut env = common::env(area);
-    env.distances_m = vec![env.distances_m[0]]; // one route
-    let brake_at = env.distances_m[0] * 0.5;
-    let queues = harness::make_queues(&env);
-    let platform = Platform::hmai();
+    let dist = common::distances()[0]; // one route
+    let brake_at = dist * 0.5;
     let v = area.max_velocity_ms();
     section(&format!(
-        "Fig. 14 — braking probe at {brake_at:.0} m of a {:.0} m route, v = {v:.1} m/s",
-        env.distances_m[0]
+        "Fig. 14 — braking probe at {brake_at:.0} m of a {dist:.0} m route, v = {v:.1} m/s"
     ));
+
+    let reg = common::registry();
+    let mut schedulers = Vec::new();
+    let flexai_on = match common::flexai_spec(area) {
+        Ok(spec) => {
+            schedulers.push(spec);
+            true
+        }
+        Err(e) => {
+            eprintln!("[bench] FlexAI unavailable, baselines only: {e:#}");
+            false
+        }
+    };
+    schedulers.extend(common::baselines());
+
+    let plan = common::plan(area).distances([dist]).schedulers(schedulers);
+    let results = Engine::new(&reg)
+        .jobs(common::jobs())
+        .sim_options(SimOptions { record_tasks: true })
+        .run(&plan)
+        .expect("sweep runs");
 
     let mut t = Table::new([
         "Scheduler", "T_wait (ms)", "T_sched (ms)", "T_compute (ms)", "Total (ms)",
@@ -38,18 +57,12 @@ fn main() {
     ]);
     let mut dists: Vec<(String, f64)> = Vec::new();
 
-    let mut probe = |name: String, r: &SimResult| {
-        let t_probe = brake_at / v;
-        let rec = r
-            .records
-            .iter()
-            .filter(|x| x.release_s >= t_probe && !x.model.is_tracker())
-            .min_by(|a, b| a.release_s.total_cmp(&b.release_s))
-            .expect("probe task exists");
+    for r in &results {
+        let rec = probe(r, brake_at / v);
         let bd = BrakingBreakdown::new(rec.wait_s, r.sched_per_task_s(), rec.compute_s);
         let d = braking_distance_m(v, &bd);
         t.row([
-            name.clone(),
+            r.summary.scheduler.clone(),
             f2(bd.t_wait * 1e3),
             f2(bd.t_schedule * 1e3),
             f2(bd.t_compute * 1e3),
@@ -58,34 +71,27 @@ fn main() {
             if stops_within(v, &bd, 250.0) { "yes".into() } else { "NO".into() },
             pct(r.summary.stm_rate()),
         ]);
-        dists.push((name, d));
-    };
-
-    {
-        let mut agent = common::flexai(area).expect("flexai constructible");
-        let r = harness::run_queues(&queues, &platform, &mut agent, SimOptions {
-            record_tasks: true,
-        })
-        .remove(0);
-        probe("FlexAI".into(), &r);
-    }
-    for mut b in common::baselines(42) {
-        let r = harness::run_queues(&queues, &platform, b.as_mut(), SimOptions {
-            record_tasks: true,
-        })
-        .remove(0);
-        probe(b.name(), &r);
+        dists.push((r.summary.scheduler.clone(), d));
     }
     t.print();
 
-    let flex = dists.iter().find(|(n, _)| n == "FlexAI").unwrap().1;
     let worst_d = dists.iter().map(|(_, d)| *d).fold(0.0, f64::max);
-    for (name, d) in &dists {
-        // Within half a percent counts as a tie (SA lands within ~5 mm).
-        assert!(flex <= *d * 1.005, "FlexAI braking {flex} m !<= {name} {d} m");
+    if flexai_on {
+        let flex = dists.iter().find(|(n, _)| n == "FlexAI").unwrap().1;
+        for (name, d) in &dists {
+            // Within half a percent counts as a tie (SA lands within ~5 mm).
+            assert!(flex <= *d * 1.005, "FlexAI braking {flex} m !<= {name} {d} m");
+        }
+        println!(
+            "\nfig14 OK: FlexAI {flex:.2} m; max reduction vs worst baseline = {}",
+            pct(1.0 - flex / worst_d)
+        );
+    } else {
+        println!("\nfig14 OK (baselines only; FlexAI skipped); worst {worst_d:.2} m");
     }
-    println!(
-        "\nfig14 OK: FlexAI {flex:.2} m; max reduction vs worst baseline = {}",
-        pct(1.0 - flex / worst_d)
-    );
+}
+
+/// First forward-camera detection task released at or after `t_probe`.
+fn probe(r: &TrialResult, t_probe: f64) -> &hmai::sim::TaskRecord {
+    hmai::sim::first_detection_after(&r.records, t_probe).expect("probe task exists")
 }

@@ -3,7 +3,8 @@
 //! Scale: the paper evaluates five 1-2 km routes per area (up to ~200k
 //! tasks each).  `HMAI_BENCH_SCALE` (default 0.2) scales the route
 //! distances so `cargo bench` completes in minutes; set it to 1.0 to
-//! regenerate the figures at full paper scale.
+//! regenerate the figures at full paper scale.  `HMAI_BENCH_JOBS` sets the
+//! engine worker count (default: all cores).
 
 #![allow(dead_code)] // each bench uses a subset of these helpers
 
@@ -12,8 +13,9 @@ use std::sync::Arc;
 use hmai::config::{EnvConfig, ExperimentConfig};
 use hmai::env::Area;
 use hmai::harness;
+use hmai::plan::ExperimentPlan;
 use hmai::sched::flexai::{checkpoint, FlexAI, FlexAIConfig};
-use hmai::sched::Scheduler;
+use hmai::sched::{Registry, SchedulerSpec};
 
 /// Route-distance scale factor.
 pub fn scale() -> f64 {
@@ -21,6 +23,14 @@ pub fn scale() -> f64 {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0.2)
+}
+
+/// Engine worker threads (0 = all cores).
+pub fn jobs() -> usize {
+    std::env::var("HMAI_BENCH_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
 }
 
 /// The paper's five route distances (m), scaled.
@@ -37,15 +47,23 @@ pub fn env(area: Area) -> EnvConfig {
     EnvConfig { area, distances_m: distances(), seed: 42 }
 }
 
+/// The standard per-area evaluation sweep (no schedulers yet).
+pub fn plan(area: Area) -> ExperimentPlan {
+    ExperimentPlan::new().area(area).distances(distances()).seed(42)
+}
+
+/// Registry with every baseline plus the FlexAI factory (greedy inference).
+pub fn registry() -> Registry {
+    harness::registry(&ExperimentConfig::default())
+}
+
 /// FlexAI for benching: loads `checkpoints/flexai_<area>.json` (or
 /// `$HMAI_CKPT`) when present; otherwise trains a quick agent in-process
 /// so the bench is self-contained.
 pub fn flexai(area: Area) -> anyhow::Result<FlexAI> {
     let rt = harness::load_runtime()?;
     let cfg = FlexAIConfig { seed: 42, ..Default::default() };
-    let path = std::env::var("HMAI_CKPT").unwrap_or_else(|_| {
-        format!("checkpoints/flexai_{}.json", area.name().to_lowercase())
-    });
+    let path = ckpt_path(area);
     if std::path::Path::new(&path).exists() {
         eprintln!("[bench] loading FlexAI checkpoint {path}");
         return checkpoint::load(rt, std::path::Path::new(&path), cfg);
@@ -65,12 +83,35 @@ pub fn flexai(area: Area) -> anyhow::Result<FlexAI> {
     Ok(out.agent)
 }
 
-/// All Fig. 12 baselines, constructed fresh.
-pub fn baselines(seed: u64) -> Vec<Box<dyn Scheduler>> {
-    hmai::sched::BASELINES
-        .iter()
-        .map(|n| hmai::sched::by_name(n, seed).expect("baseline"))
-        .collect()
+fn ckpt_path(area: Area) -> String {
+    std::env::var("HMAI_CKPT").unwrap_or_else(|_| {
+        format!("checkpoints/flexai_{}.json", area.name().to_lowercase())
+    })
+}
+
+/// A FlexAI scheduler spec usable in an `ExperimentPlan`: resolves (or
+/// trains + saves) a checkpoint and returns `FlexAI { checkpoint }`, so
+/// every engine trial restores the *same* trained agent.  Errs when the
+/// PJRT runtime/artifacts are unavailable — benches then skip FlexAI rows.
+pub fn flexai_spec(area: Area) -> anyhow::Result<SchedulerSpec> {
+    let path = ckpt_path(area);
+    if !std::path::Path::new(&path).exists() {
+        let agent = flexai(area)?; // trains the quick agent
+        let tmp = std::env::temp_dir().join(format!(
+            "hmai_bench_flexai_{}.json",
+            area.name().to_lowercase()
+        ));
+        checkpoint::save(&agent, &tmp)?;
+        return Ok(SchedulerSpec::FlexAI {
+            checkpoint: Some(tmp.to_string_lossy().into_owned()),
+        });
+    }
+    Ok(SchedulerSpec::FlexAI { checkpoint: Some(path) })
+}
+
+/// All Fig. 12 baseline specs, from the canonical table.
+pub fn baselines() -> Vec<SchedulerSpec> {
+    hmai::sched::baseline_specs()
 }
 
 /// Arc'd runtime for perf benches.

@@ -7,10 +7,13 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::env::taskgen::DeadlineMode;
 use crate::env::Area;
+use crate::plan::ExperimentPlan;
 use crate::platform::Platform;
 use crate::sched::flexai::epsilon::EpsilonSchedule;
 use crate::sched::flexai::FlexAIConfig;
+use crate::sched::SchedulerSpec;
 use crate::util::cli::Args;
 use crate::util::json::{Json, JsonObj};
 
@@ -67,6 +70,10 @@ pub struct ExperimentConfig {
     pub scheduler: String,
     /// FlexAI checkpoint to load (empty = fresh init).
     pub checkpoint: String,
+    /// Deadline regime for generated task queues.
+    pub deadline: DeadlineMode,
+    /// Engine worker threads (0 = all cores, 1 = sequential).
+    pub jobs: usize,
     pub env: EnvConfig,
     pub train: TrainConfig,
     pub flexai: FlexAIConfig,
@@ -78,6 +85,8 @@ impl Default for ExperimentConfig {
             platform: "hmai".into(),
             scheduler: "flexai".into(),
             checkpoint: String::new(),
+            deadline: DeadlineMode::Rss,
+            jobs: 1,
             env: EnvConfig::default(),
             train: TrainConfig::default(),
             flexai: FlexAIConfig::default(),
@@ -90,6 +99,34 @@ impl ExperimentConfig {
     pub fn platform(&self) -> Result<Platform> {
         Platform::parse(&self.platform)
             .with_context(|| format!("unknown platform '{}'", self.platform))
+    }
+
+    /// Resolve the scheduler name into a typed spec (FlexAI carries the
+    /// configured checkpoint).
+    pub fn scheduler_spec(&self) -> Result<SchedulerSpec> {
+        let spec = SchedulerSpec::parse(&self.scheduler)?;
+        Ok(match spec {
+            SchedulerSpec::FlexAI { .. } => SchedulerSpec::FlexAI {
+                checkpoint: if self.checkpoint.is_empty() {
+                    None
+                } else {
+                    Some(self.checkpoint.clone())
+                },
+            },
+            other => other,
+        })
+    }
+
+    /// The single-scheduler/single-platform sweep this config describes:
+    /// the configured area, distance list, deadline regime and seed.
+    pub fn plan(&self) -> Result<ExperimentPlan> {
+        Ok(ExperimentPlan::new()
+            .area(self.env.area)
+            .distances(self.env.distances_m.iter().copied())
+            .deadline(self.deadline)
+            .platform(self.platform.clone())
+            .scheduler(self.scheduler_spec()?)
+            .seed(self.env.seed))
     }
 
     /// Load from a JSON file.
@@ -115,6 +152,11 @@ impl ExperimentConfig {
                 "platform" => self.platform = v.as_str().context("platform")?.to_string(),
                 "scheduler" => self.scheduler = v.as_str().context("scheduler")?.to_string(),
                 "checkpoint" => self.checkpoint = v.as_str().context("checkpoint")?.to_string(),
+                "deadline" => {
+                    self.deadline = DeadlineMode::parse(v.as_str().context("deadline")?)
+                        .context("deadline: expected rss|frame")?
+                }
+                "jobs" => self.jobs = v.as_usize().context("jobs")?,
                 "area" => {
                     self.env.area = Area::parse(v.as_str().context("area")?)
                         .context("area: expected ub|uhw|hw")?
@@ -178,6 +220,10 @@ impl ExperimentConfig {
         if let Some(a) = args.get("area") {
             self.env.area = Area::parse(a).context("--area: expected ub|uhw|hw")?;
         }
+        if let Some(d) = args.get("deadline") {
+            self.deadline = DeadlineMode::parse(d).context("--deadline: expected rss|frame")?;
+        }
+        self.jobs = args.get_usize("jobs", self.jobs)?;
         if let Some(d) = args.get("dist") {
             self.env.distances_m = d
                 .split(',')
@@ -206,6 +252,8 @@ impl ExperimentConfig {
         o.insert("platform", Json::Str(self.platform.clone()));
         o.insert("scheduler", Json::Str(self.scheduler.clone()));
         o.insert("checkpoint", Json::Str(self.checkpoint.clone()));
+        o.insert("deadline", Json::Str(self.deadline.name().to_string()));
+        o.insert("jobs", Json::Num(self.jobs as f64));
         o.insert("area", Json::Str(self.env.area.name().to_lowercase()));
         o.insert("distances_m", Json::array_f64(&self.env.distances_m));
         o.insert("seed", Json::Num(self.env.seed as f64));
@@ -269,7 +317,7 @@ mod tests {
     fn args_override() {
         let mut c = ExperimentConfig::default();
         let args = Args::parse(
-            "--sched sa --area hw --dist 500,600 --seed 7 --episodes 9"
+            "--sched sa --area hw --dist 500,600 --seed 7 --episodes 9 --jobs 4 --deadline frame"
                 .split_whitespace()
                 .map(String::from),
         );
@@ -280,6 +328,35 @@ mod tests {
         assert_eq!(c.env.seed, 7);
         assert_eq!(c.flexai.seed, 7);
         assert_eq!(c.train.episodes, 9);
+        assert_eq!(c.jobs, 4);
+        assert_eq!(c.deadline, DeadlineMode::FrameBudget);
+    }
+
+    #[test]
+    fn scheduler_spec_resolves_aliases_and_checkpoints() {
+        let mut c = ExperimentConfig::default();
+        c.scheduler = "min-min".into();
+        assert_eq!(c.scheduler_spec().unwrap(), SchedulerSpec::MinMin);
+        c.scheduler = "flexai".into();
+        c.checkpoint = "ckpt.json".into();
+        assert_eq!(
+            c.scheduler_spec().unwrap(),
+            SchedulerSpec::FlexAI { checkpoint: Some("ckpt.json".into()) }
+        );
+        c.scheduler = "bogus".into();
+        assert!(c.scheduler_spec().is_err());
+    }
+
+    #[test]
+    fn plan_reflects_config() {
+        let mut c = ExperimentConfig::default();
+        c.scheduler = "sa".into();
+        c.env.distances_m = vec![100.0, 200.0];
+        let plan = c.plan().unwrap();
+        let trials = plan.trials().unwrap();
+        assert_eq!(trials.len(), 2);
+        assert_eq!(trials[0].scheduler, SchedulerSpec::Sa);
+        assert_eq!(trials[0].seed, c.env.seed);
     }
 
     #[test]

@@ -1,0 +1,316 @@
+//! Trial execution engine: runs an [`ExperimentPlan`](crate::plan::ExperimentPlan)
+//! on a `std::thread` worker pool (no external deps) and aggregates the
+//! streamed results into a [`SweepSummary`](crate::metrics::summary::SweepSummary).
+//!
+//! Determinism contract: every trial is independent (own queue, own
+//! scheduler instance, fork-derived seeds), results are re-ordered by trial
+//! id before aggregation, and no aggregate depends on wall-clock fields —
+//! so `jobs = N` is bit-identical to `jobs = 1` for any N.  The tests in
+//! `tests/sweep.rs` pin this down.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::env::taskgen::{DeadlineMode, TaskQueue};
+use crate::env::Area;
+use crate::metrics::summary::{RunSummary, SweepKey, SweepSummary};
+use crate::plan::{ExperimentPlan, Trial};
+use crate::sched::Registry;
+use crate::sim::{simulate, SimOptions, TaskRecord};
+
+/// Cache key for generated task queues: everything queue generation
+/// depends on.  Trials differing only in scheduler/platform share the
+/// queue instead of regenerating it (route synthesis at full paper scale
+/// is ~200k tasks per queue).
+#[derive(PartialEq, Eq, Hash, Clone, Copy)]
+struct QueueKey {
+    area: Area,
+    distance_bits: u64,
+    index: usize,
+    deadline: DeadlineMode,
+    seed: u64,
+}
+
+impl QueueKey {
+    fn of(trial: &Trial) -> QueueKey {
+        QueueKey {
+            area: trial.scenario.area,
+            distance_bits: trial.scenario.distance_m.to_bits(),
+            index: trial.queue_index,
+            deadline: trial.scenario.deadline,
+            seed: trial.seed,
+        }
+    }
+}
+
+/// Thread-safe memo of generated queues, shared across engine workers.
+#[derive(Default)]
+struct QueueCache {
+    queues: Mutex<HashMap<QueueKey, Arc<TaskQueue>>>,
+}
+
+impl QueueCache {
+    /// Get or generate the queue for `trial`.  Generation happens outside
+    /// the lock, so two workers may race to build the same queue once —
+    /// both get identical (deterministic) results and one copy is kept.
+    fn get(&self, trial: &Trial) -> Arc<TaskQueue> {
+        let key = QueueKey::of(trial);
+        if let Some(q) = self.queues.lock().expect("queue cache poisoned").get(&key) {
+            return q.clone();
+        }
+        let q = Arc::new(trial.queue());
+        self.queues
+            .lock()
+            .expect("queue cache poisoned")
+            .entry(key)
+            .or_insert(q)
+            .clone()
+    }
+}
+
+/// Outcome of one executed trial.
+#[derive(Debug)]
+pub struct TrialResult {
+    pub trial: Trial,
+    pub summary: RunSummary,
+    /// Wall-clock seconds inside the scheduler (measurement, not
+    /// deterministic — excluded from sweep fingerprints).
+    pub sched_wall_s: f64,
+    /// Scheduling invocations (bursts).
+    pub bursts: u64,
+    /// Per-task records when the engine runs with `record_tasks`.
+    pub records: Vec<TaskRecord>,
+}
+
+impl TrialResult {
+    /// Mean scheduler wall time per task (the Fig. 14 `T_schedule`).
+    pub fn sched_per_task_s(&self) -> f64 {
+        if self.summary.tasks == 0 {
+            0.0
+        } else {
+            self.sched_wall_s / self.summary.tasks as f64
+        }
+    }
+
+    /// Aggregation key: scheduler display name × platform × area × deadline.
+    pub fn sweep_key(&self) -> SweepKey {
+        SweepKey {
+            scheduler: self.summary.scheduler.clone(),
+            platform: self.summary.platform.clone(),
+            area: self.trial.scenario.area.name().to_string(),
+            deadline: self.trial.scenario.deadline.name().to_string(),
+        }
+    }
+}
+
+/// Executes plans.  Cheap to build; borrow one registry for many runs.
+pub struct Engine<'r> {
+    registry: &'r Registry,
+    jobs: usize,
+    options: SimOptions,
+}
+
+impl<'r> Engine<'r> {
+    pub fn new(registry: &'r Registry) -> Engine<'r> {
+        Engine { registry, jobs: 1, options: SimOptions::default() }
+    }
+
+    /// Worker threads (1 = run on the calling thread).  0 means "all
+    /// cores" (`std::thread::available_parallelism`).
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = if jobs == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            jobs
+        };
+        self
+    }
+
+    pub fn sim_options(mut self, options: SimOptions) -> Self {
+        self.options = options;
+        self
+    }
+
+    /// Execute one trial (queue regeneration + scheduler build + sim).
+    pub fn run_trial(&self, trial: &Trial) -> Result<TrialResult> {
+        self.run_trial_on(trial, &trial.queue())
+    }
+
+    /// Execute one trial against an already-generated queue.
+    fn run_trial_on(&self, trial: &Trial, queue: &TaskQueue) -> Result<TrialResult> {
+        let platform = trial.platform()?;
+        let mut sched = self
+            .registry
+            .build(&trial.scheduler, trial.sched_seed)
+            .with_context(|| format!("trial {} ({})", trial.id, trial.label()))?;
+        let r = simulate(queue, &platform, sched.as_mut(), self.options);
+        Ok(TrialResult {
+            trial: trial.clone(),
+            summary: r.summary,
+            sched_wall_s: r.sched_wall_s,
+            bursts: r.bursts,
+            records: r.records,
+        })
+    }
+
+    /// Run every trial of `plan`; results ordered by trial id.
+    pub fn run(&self, plan: &ExperimentPlan) -> Result<Vec<TrialResult>> {
+        self.run_with(plan, |_| {})
+    }
+
+    /// `run`, streaming each result to `on_result` as it completes
+    /// (completion order, not id order — the returned vec is id-ordered).
+    pub fn run_with<F>(&self, plan: &ExperimentPlan, mut on_result: F) -> Result<Vec<TrialResult>>
+    where
+        F: FnMut(&TrialResult),
+    {
+        let trials = plan.trials()?;
+        let n = trials.len();
+        let mut slots: Vec<Option<TrialResult>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let cache = QueueCache::default();
+
+        let jobs = self.jobs.max(1).min(n.max(1));
+        if jobs <= 1 {
+            for (i, t) in trials.iter().enumerate() {
+                let r = self.run_trial_on(t, &cache.get(t))?;
+                on_result(&r);
+                slots[i] = Some(r);
+            }
+        } else {
+            let next = AtomicUsize::new(0);
+            let abort = AtomicBool::new(false);
+            let (tx, rx) = mpsc::channel::<(usize, Result<TrialResult>)>();
+            let trials_ref = &trials;
+            let next_ref = &next;
+            let abort_ref = &abort;
+            let cache_ref = &cache;
+            let mut first_err: Option<anyhow::Error> = None;
+            std::thread::scope(|scope| {
+                for _ in 0..jobs {
+                    let tx = tx.clone();
+                    scope.spawn(move || loop {
+                        if abort_ref.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let i = next_ref.fetch_add(1, Ordering::SeqCst);
+                        if i >= trials_ref.len() {
+                            break;
+                        }
+                        let t = &trials_ref[i];
+                        let res = self.run_trial_on(t, &cache_ref.get(t));
+                        if tx.send((i, res)).is_err() {
+                            break; // receiver gone (error path)
+                        }
+                    });
+                }
+                drop(tx);
+                // The loop consumes `rx`; breaking on the first error drops
+                // it immediately, so pending worker sends fail and every
+                // worker exits before the scope joins.  At most one
+                // in-flight trial per worker still finishes.
+                for (i, res) in rx {
+                    match res {
+                        Ok(r) => {
+                            on_result(&r);
+                            slots[i] = Some(r);
+                        }
+                        Err(e) => {
+                            abort_ref.store(true, Ordering::SeqCst);
+                            first_err = Some(e);
+                            break;
+                        }
+                    }
+                }
+            });
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+        }
+        Ok(slots.into_iter().map(|s| s.expect("every trial ran")).collect())
+    }
+
+    /// Run the plan and aggregate into a `SweepSummary` (rows keyed by
+    /// scheduler × platform × area × deadline, in trial-id order).
+    pub fn sweep(&self, plan: &ExperimentPlan) -> Result<(Vec<TrialResult>, SweepSummary)> {
+        let results = self.run(plan)?;
+        let summary = SweepSummary::from_trial_results(&results);
+        Ok((results, summary))
+    }
+}
+
+impl SweepSummary {
+    /// Aggregate engine results (trial-id order) into sweep rows.
+    pub fn from_trial_results(results: &[TrialResult]) -> SweepSummary {
+        let mut s = SweepSummary::new();
+        for r in results {
+            s.push(r.sweep_key(), r.summary.clone());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::Area;
+    use crate::sched::SchedulerSpec;
+
+    fn tiny_plan() -> ExperimentPlan {
+        ExperimentPlan::new()
+            .area(Area::Urban)
+            .distances([40.0, 60.0])
+            .schedulers([SchedulerSpec::MinMin, SchedulerSpec::RoundRobin])
+            .seed(3)
+    }
+
+    #[test]
+    fn engine_runs_every_trial_in_order() {
+        let reg = Registry::new();
+        let results = Engine::new(&reg).run(&tiny_plan()).unwrap();
+        assert_eq!(results.len(), 4);
+        assert!(results.iter().enumerate().all(|(i, r)| r.trial.id == i));
+        assert!(results.iter().all(|r| r.summary.tasks > 0));
+    }
+
+    #[test]
+    fn streaming_sees_every_result() {
+        let reg = Registry::new();
+        let mut seen = 0;
+        Engine::new(&reg)
+            .jobs(2)
+            .run_with(&tiny_plan(), |_| seen += 1)
+            .unwrap();
+        assert_eq!(seen, 4);
+    }
+
+    #[test]
+    fn record_tasks_flows_through() {
+        let reg = Registry::new();
+        let plan = ExperimentPlan::new()
+            .distances([40.0])
+            .scheduler(SchedulerSpec::RoundRobin)
+            .seed(1);
+        let r = Engine::new(&reg)
+            .sim_options(SimOptions { record_tasks: true })
+            .run(&plan)
+            .unwrap()
+            .remove(0);
+        assert_eq!(r.records.len() as u64, r.summary.tasks);
+        assert!(r.sched_per_task_s() >= 0.0);
+    }
+
+    #[test]
+    fn flexai_without_runtime_is_a_clean_error() {
+        let reg = Registry::new();
+        let plan = ExperimentPlan::new()
+            .distances([40.0])
+            .scheduler(SchedulerSpec::FlexAI { checkpoint: None })
+            .seed(1);
+        let err = Engine::new(&reg).run(&plan).unwrap_err();
+        assert!(format!("{err:#}").contains("PJRT"), "{err:#}");
+    }
+}

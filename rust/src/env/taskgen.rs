@@ -63,7 +63,7 @@ impl TaskQueue {
 }
 
 /// Deadline regime for task safety times.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DeadlineMode {
     /// RSS-derived safety time (§6.1) — the paper's stated model.
     Rss,
@@ -75,6 +75,23 @@ pub enum DeadlineMode {
     /// becomes visible; pure-RSS deadlines are loose enough that every
     /// load-balancing scheduler meets them on HMAI.
     FrameBudget,
+}
+
+impl DeadlineMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeadlineMode::Rss => "rss",
+            DeadlineMode::FrameBudget => "frame",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DeadlineMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "rss" => Some(DeadlineMode::Rss),
+            "frame" | "frame-budget" | "framebudget" => Some(DeadlineMode::FrameBudget),
+            _ => None,
+        }
+    }
 }
 
 /// Generate the task queue for a route (Fig. 9) under the default RSS

@@ -5,7 +5,13 @@
 //! dynamic driving environment, the RSS-derived safety criteria (Matching
 //! Score, Gvalue) and the FlexAI DQN task scheduler — with the Q-network
 //! AOT-compiled from JAX/Pallas to HLO and executed via the PJRT C API.
-//! See DESIGN.md for the full architecture and the experiment index.
+//!
+//! Experiments run through the typed sweep API: an
+//! [`plan::ExperimentPlan`] expands scenarios × platforms × schedulers ×
+//! seeds into trials, and an [`engine::Engine`] executes them on a worker
+//! pool with deterministic, `--jobs`-invariant results.  See rust/DESIGN.md
+//! for the full architecture, the experiment index and the migration table
+//! from the old `harness` helpers.
 
 pub mod util;
 pub mod accel;
@@ -18,5 +24,7 @@ pub mod sim;
 pub mod sched;
 pub mod runtime;
 pub mod config;
+pub mod plan;
+pub mod engine;
 pub mod harness;
 pub mod reports;

@@ -5,18 +5,24 @@
 //!   report <name|all>   regenerate a paper table (table1-9, table11, fig1)
 //!   env                 generate a route + task queue, print statistics
 //!   platform            homogeneous-vs-heterogeneous exploration (Fig. 2)
-//!   schedule            run a scheduler over task queues (Fig. 12/13 rows)
+//!   schedule            sweep a scheduler over task queues (Fig. 12/13)
 //!   train               train the FlexAI DQN, save a checkpoint (Fig. 11)
 //!   braking             braking-distance probe (Fig. 14)
+//!
+//! `schedule`, `platform` and `braking` run through the typed
+//! `ExperimentPlan`/`Engine` API; `--jobs N` executes trials on N worker
+//! threads with bit-identical summaries to `--jobs 1`.
 
 use anyhow::{Context, Result};
 
 use hmai::config::ExperimentConfig;
+use hmai::engine::Engine;
 use hmai::env::route::{Route, RouteParams};
 use hmai::env::{taskgen, ALL_SCENARIOS};
 use hmai::harness;
 use hmai::platform::alloc;
 use hmai::safety::braking::{braking_distance_m, BrakingBreakdown};
+use hmai::sched::registry;
 use hmai::sim::{SimOptions, TaskRecord};
 use hmai::util::cli::Args;
 use hmai::util::rng::Rng;
@@ -60,22 +66,27 @@ fn usage() -> String {
          \x20   report <name|all>   regenerate a paper table\n\
          \x20   env                 route + task-queue statistics\n\
          \x20   platform            Fig. 2 homogeneous-vs-HMAI exploration\n\
-         \x20   schedule            run a scheduler over task queues\n\
+         \x20   schedule            sweep a scheduler over task queues\n\
          \x20   train               train FlexAI, save a checkpoint\n\
          \x20   braking             Fig. 14 braking-distance probe\n\nOPTIONS:\n",
     );
+    // The scheduler list comes from the one canonical table, so the usage
+    // string can never drift from what the registry accepts.
+    let sched_help = registry::usage_names();
     for o in [
-        ("--config <file>", "JSON config (defaults < file < flags)"),
-        ("--sched <name>", "flexai | minmin | ata | edp | ga | sa | worst | rr | random"),
-        ("--ckpt <file>", "FlexAI checkpoint to load"),
-        ("--platform <spec>", "hmai | 13so | 13si | 12mm | \"so,si,mm\""),
-        ("--area <a>", "ub | uhw | hw"),
-        ("--dist <m,...>", "route distances in meters"),
-        ("--seed <u64>", "top-level seed"),
-        ("--episodes <n>", "training episodes"),
-        ("--episode-dist <m>", "training route length"),
-        ("--out <file>", "checkpoint output path (train)"),
-        ("--log <level>", "error|warn|info|debug|trace"),
+        ("--config <file>", "JSON config (defaults < file < flags)".to_string()),
+        ("--sched <name>", sched_help),
+        ("--ckpt <file>", "FlexAI checkpoint to load".to_string()),
+        ("--platform <spec>", "hmai | 13so | 13si | 12mm | \"so,si,mm\"".to_string()),
+        ("--area <a>", "ub | uhw | hw".to_string()),
+        ("--dist <m,...>", "route distances in meters".to_string()),
+        ("--deadline <mode>", "rss | frame (deadline regime)".to_string()),
+        ("--jobs <n>", "engine worker threads (0 = all cores)".to_string()),
+        ("--seed <u64>", "top-level seed".to_string()),
+        ("--episodes <n>", "training episodes".to_string()),
+        ("--episode-dist <m>", "training route length".to_string()),
+        ("--out <file>", "checkpoint output path (train)".to_string()),
+        ("--log <level>", "error|warn|info|debug|trace".to_string()),
     ] {
         s.push_str(&format!("    {:<22} {}\n", o.0, o.1));
     }
@@ -111,7 +122,7 @@ fn cmd_env(args: &Args) -> Result<()> {
     for (i, &d) in cfg.env.distances_m.iter().enumerate() {
         let mut stream = rng.fork(i as u64);
         let route = Route::generate(RouteParams::for_area(cfg.env.area, d), &mut stream);
-        let q = taskgen::generate(&route);
+        let q = taskgen::generate_with_deadline(&route, cfg.deadline);
         let count = |m: hmai::workload::ModelKind| {
             q.tasks.iter().filter(|t| t.model == m).count().to_string()
         };
@@ -138,62 +149,88 @@ fn cmd_env(args: &Args) -> Result<()> {
             revs.to_string(),
         ]);
     }
-    println!("area = {}", cfg.env.area.name());
+    println!("area = {}  deadline = {}", cfg.env.area.name(), cfg.deadline.name());
     t.print();
     Ok(())
 }
 
 /// Fig. 2: energy + utilization of homogeneous platforms vs HMAI across the
-/// three UB scenarios.
+/// three UB scenarios (allocation search), followed by an `Engine` sweep of
+/// one scheduler over the same four platforms on real task queues.
 fn cmd_platform(args: &Args) -> Result<()> {
-    let cfg = config(args)?;
+    let mut cfg = config(args)?;
     let area = cfg.env.area;
     let mut t = Table::new(["Platform", "Scenario", "Feasible", "Power (W)", "Utilization"]);
-    let platforms: Vec<(String, (usize, usize, usize))> = vec![
-        ("13xSconvOD".into(), (13, 0, 0)),
-        ("13xSconvIC".into(), (0, 13, 0)),
-        ("12xMconvMC".into(), (0, 0, 12)),
-        ("HMAI(4,4,3)".into(), (4, 4, 3)),
-    ];
-    for (name, counts) in &platforms {
+    let platforms = ["13so", "13si", "12mm", "hmai"];
+    let counts_of = [(13, 0, 0), (0, 13, 0), (0, 0, 12), (4, 4, 3)];
+    let names = ["13xSconvOD", "13xSconvIC", "12xMconvMC", "HMAI(4,4,3)"];
+    for (name, counts) in names.iter().zip(counts_of) {
         for s in ALL_SCENARIOS {
             if s == hmai::env::Scenario::Reverse && !area.allows_reverse() {
                 continue;
             }
             let reqs = alloc::requirements(area, s);
-            match alloc::best_allocation(*counts, &reqs) {
+            match alloc::best_allocation(counts, &reqs) {
                 Some((a, u)) => t.row([
-                    name.clone(),
+                    name.to_string(),
                     s.name().to_string(),
                     "yes".into(),
-                    f2(alloc::power_w_provisioned(&a, &reqs, *counts)),
+                    f2(alloc::power_w_provisioned(&a, &reqs, counts)),
                     pct(u),
                 ]),
-                None => t.row([name.clone(), s.name().to_string(), "NO".into(), "-".into(), "-".into()]),
+                None => t.row([
+                    name.to_string(),
+                    s.name().to_string(),
+                    "NO".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
             };
         }
     }
     println!("area = {}", area.name());
     t.print();
+
+    // Scheduling sweep over the platform set (holds the scheduler fixed so
+    // the comparison isolates the hardware — Fig. 10's framing).  Short
+    // default route unless the user chose distances explicitly.
+    if args.get("dist").is_none() {
+        cfg.env.distances_m = vec![300.0];
+    }
+    if args.get("sched").is_none() {
+        cfg.scheduler = "sa".into();
+    }
+    let reg = harness::registry(&cfg);
+    let plan = cfg
+        .plan()?
+        .platforms(platforms.iter().map(|p| p.to_string()));
+    let (_, sweep) = Engine::new(&reg).jobs(cfg.jobs).sweep(&plan)?;
+    println!(
+        "\nscheduling sweep: {} on {:.0} m ({}), {} trials",
+        cfg.scheduler,
+        cfg.env.distances_m.iter().sum::<f64>(),
+        area.name(),
+        sweep.total_runs()
+    );
+    hmai::reports::sweep_table(&sweep).print();
     Ok(())
 }
 
 fn cmd_schedule(args: &Args) -> Result<()> {
     let cfg = config(args)?;
-    let platform = cfg.platform()?;
-    let queues = harness::make_queues(&cfg.env);
-    let mut sched = harness::make_scheduler(&cfg)?;
-    let results =
-        harness::run_queues(&queues, &platform, sched.as_mut(), SimOptions::default());
+    let reg = harness::registry(&cfg);
+    let plan = cfg.plan()?;
+    let engine = Engine::new(&reg).jobs(cfg.jobs);
+    let (results, sweep) = engine.sweep(&plan)?;
 
     let mut t = Table::new([
         "Queue", "Tasks", "STMRate", "Time (s)", "Wait (s)", "Makespan (s)", "Energy (J)",
         "R_Balance", "MS/task", "Gvalue", "Sched µs/task",
     ]);
-    for (i, r) in results.iter().enumerate() {
+    for r in &results {
         let s = &r.summary;
         t.row([
-            (i + 1).to_string(),
+            (r.trial.queue_index + 1).to_string(),
             s.tasks.to_string(),
             pct(s.stm_rate()),
             f2(s.total_time_s),
@@ -207,12 +244,16 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         ]);
     }
     println!(
-        "scheduler = {}  platform = {}  area = {}",
+        "scheduler = {}  platform = {}  area = {}  deadline = {}  jobs = {}",
         cfg.scheduler,
-        platform.name,
-        cfg.env.area.name()
+        cfg.platform,
+        cfg.env.area.name(),
+        cfg.deadline.name(),
+        cfg.jobs
     );
     t.print();
+    println!("\nsweep summary:");
+    hmai::reports::sweep_table(&sweep).print();
     Ok(())
 }
 
@@ -260,16 +301,14 @@ fn cmd_braking(args: &Args) -> Result<()> {
         cfg.env.distances_m.truncate(1);
     }
     let brake_at_m = args.get_f64("brake-at", 1000.0)?;
-    let platform = cfg.platform()?;
-    let queues = harness::make_queues(&cfg.env);
-    let mut sched = harness::make_scheduler(&cfg)?;
-    let r = harness::run_queues(
-        &queues,
-        &platform,
-        sched.as_mut(),
-        SimOptions { record_tasks: true },
-    )
-    .remove(0);
+
+    let reg = harness::registry(&cfg);
+    let plan = cfg.plan()?;
+    let r = Engine::new(&reg)
+        .jobs(cfg.jobs)
+        .sim_options(SimOptions { record_tasks: true })
+        .run(&plan)?
+        .remove(0);
 
     let v = cfg.env.area.max_velocity_ms();
     let t_probe = brake_at_m / v;
@@ -301,15 +340,13 @@ fn cmd_braking(args: &Args) -> Result<()> {
 
 /// First forward-camera detection task released at or after `t_probe`.
 fn probe_task(records: &[TaskRecord], t_probe: f64) -> Option<&TaskRecord> {
-    records
-        .iter()
-        .filter(|r| r.release_s >= t_probe && !r.model.is_tracker())
-        .min_by(|a, b| a.release_s.total_cmp(&b.release_s))
+    hmai::sim::first_detection_after(records, t_probe)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use hmai::sched::SchedulerSpec;
 
     #[test]
     fn usage_mentions_every_subcommand() {
@@ -320,6 +357,15 @@ mod tests {
     }
 
     #[test]
+    fn usage_lists_every_canonical_scheduler() {
+        let u = usage();
+        for info in hmai::sched::SCHEDULERS {
+            assert!(u.contains(info.canonical), "{} missing from usage", info.canonical);
+        }
+        assert!(u.contains("--jobs"), "--jobs missing from usage");
+    }
+
+    #[test]
     fn config_from_flags() {
         let args = Args::parse(
             ["schedule", "--sched", "minmin", "--area", "hw"].iter().map(|s| s.to_string()),
@@ -327,6 +373,26 @@ mod tests {
         let cfg = config(&args).unwrap();
         assert_eq!(cfg.scheduler, "minmin");
         assert_eq!(cfg.env.area, hmai::env::Area::Highway);
+        assert_eq!(cfg.scheduler_spec().unwrap(), SchedulerSpec::MinMin);
+    }
+
+    #[test]
+    fn schedule_plan_runs_through_engine() {
+        // A miniature `hmai schedule` end-to-end (baseline scheduler).
+        let args = Args::parse(
+            ["schedule", "--sched", "rr", "--dist", "40", "--seed", "3"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = config(&args).unwrap();
+        let reg = harness::registry(&cfg);
+        let (results, sweep) = Engine::new(&reg)
+            .jobs(cfg.jobs)
+            .sweep(&cfg.plan().unwrap())
+            .unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(sweep.total_runs(), 1);
+        assert_eq!(sweep.groups[0].key.scheduler, "RoundRobin");
     }
 
     #[test]

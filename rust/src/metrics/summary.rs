@@ -1,7 +1,9 @@
 //! Per-run summary: the quantities Figures 12-14 report, aggregated from a
-//! simulation's task records.
+//! simulation's task records — plus the sweep-level aggregator
+//! (`SweepSummary`) the experiment engine streams trial results into.
 
 use crate::util::json::Json;
+use crate::util::stats::geomean;
 
 use super::{stm_rate, PlatformMetrics};
 
@@ -101,6 +103,181 @@ impl RunSummary {
             ("max_response_s", Json::Num(self.max_response_s)),
         ])
     }
+
+    /// Fold this run's *deterministic* fields into an FNV-1a hash.
+    /// Wall-clock fields (`sched_s`, and `total_time_s` which includes it)
+    /// are excluded, so the fingerprint is invariant under `--jobs`.
+    pub fn fold_fingerprint(&self, mut h: u64) -> u64 {
+        let mut word = |w: u64| {
+            h ^= w;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        };
+        for b in self.scheduler.bytes().chain(self.platform.bytes()) {
+            word(b as u64);
+        }
+        word(self.tasks);
+        word(self.tasks_met);
+        for f in [
+            self.energy_j,
+            self.makespan_s,
+            self.wait_s,
+            self.compute_s,
+            self.r_balance,
+            self.ms_total,
+            self.gvalue,
+            self.mean_response_s,
+            self.max_response_s,
+        ] {
+            word(f.to_bits());
+        }
+        h
+    }
+
+    /// Deterministic wait + compute time (the Fig. 12(a) "time" metric
+    /// without the measured scheduler wall clock).
+    pub fn work_time_s(&self) -> f64 {
+        self.wait_s + self.compute_s
+    }
+}
+
+/// Grouping key of a sweep row: everything a trial can vary besides the
+/// queue replicate (distance index and seed aggregate *within* a row).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SweepKey {
+    pub scheduler: String,
+    pub platform: String,
+    pub area: String,
+    pub deadline: String,
+}
+
+/// One row of a sweep: all run summaries sharing a `SweepKey`, in trial-id
+/// order, plus the aggregate statistics the figures report.
+#[derive(Debug, Clone)]
+pub struct SweepGroup {
+    pub key: SweepKey,
+    pub runs: Vec<RunSummary>,
+}
+
+impl SweepGroup {
+    pub fn trials(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// Geometric mean of wait+compute time (Fig. 12(a)'s M column, minus
+    /// the nondeterministic scheduler wall clock).
+    pub fn geomean_time_s(&self) -> f64 {
+        geomean(&self.runs.iter().map(|s| s.work_time_s().max(1e-12)).collect::<Vec<_>>())
+    }
+
+    /// Geometric mean energy (Fig. 12(d)).
+    pub fn geomean_energy_j(&self) -> f64 {
+        geomean(&self.runs.iter().map(|s| s.energy_j.max(1e-12)).collect::<Vec<_>>())
+    }
+
+    pub fn mean_stm_rate(&self) -> f64 {
+        self.mean(|s| s.stm_rate())
+    }
+
+    pub fn mean_r_balance(&self) -> f64 {
+        self.mean(|s| s.r_balance)
+    }
+
+    pub fn mean_ms_per_task(&self) -> f64 {
+        self.mean(|s| s.ms_per_task())
+    }
+
+    pub fn mean_gvalue(&self) -> f64 {
+        self.mean(|s| s.gvalue)
+    }
+
+    fn mean<F: Fn(&RunSummary) -> f64>(&self, f: F) -> f64 {
+        if self.runs.is_empty() {
+            return 0.0;
+        }
+        self.runs.iter().map(f).sum::<f64>() / self.runs.len() as f64
+    }
+}
+
+/// Aggregate of a whole sweep: rows in first-seen (trial-id) order.
+#[derive(Debug, Clone, Default)]
+pub struct SweepSummary {
+    pub groups: Vec<SweepGroup>,
+}
+
+impl SweepSummary {
+    pub fn new() -> SweepSummary {
+        SweepSummary { groups: Vec::new() }
+    }
+
+    /// Stream one run into its group (creating the group on first sight —
+    /// insertion order is trial-id order when fed sequentially).
+    pub fn push(&mut self, key: SweepKey, run: RunSummary) {
+        match self.groups.iter_mut().find(|g| g.key == key) {
+            Some(g) => g.runs.push(run),
+            None => self.groups.push(SweepGroup { key, runs: vec![run] }),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    /// Total runs across all groups.
+    pub fn total_runs(&self) -> usize {
+        self.groups.iter().map(|g| g.runs.len()).sum()
+    }
+
+    /// Find a group by scheduler display name (first match).
+    pub fn by_scheduler(&self, scheduler: &str) -> Option<&SweepGroup> {
+        self.groups.iter().find(|g| g.key.scheduler == scheduler)
+    }
+
+    /// Order-and-bit-exact fingerprint over every deterministic field of
+    /// every run.  `Engine` guarantees this is identical for any `--jobs`.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV offset basis
+        for g in &self.groups {
+            for b in g
+                .key
+                .scheduler
+                .bytes()
+                .chain(g.key.platform.bytes())
+                .chain(g.key.area.bytes())
+                .chain(g.key.deadline.bytes())
+            {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+            for run in &g.runs {
+                h = run.fold_fingerprint(h);
+            }
+        }
+        h
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.groups
+                .iter()
+                .map(|g| {
+                    Json::from_pairs(vec![
+                        ("scheduler", Json::Str(g.key.scheduler.clone())),
+                        ("platform", Json::Str(g.key.platform.clone())),
+                        ("area", Json::Str(g.key.area.clone())),
+                        ("deadline", Json::Str(g.key.deadline.clone())),
+                        ("trials", Json::Num(g.trials() as f64)),
+                        ("geomean_time_s", Json::Num(g.geomean_time_s())),
+                        ("geomean_energy_j", Json::Num(g.geomean_energy_j())),
+                        ("mean_stm_rate", Json::Num(g.mean_stm_rate())),
+                        ("mean_r_balance", Json::Num(g.mean_r_balance())),
+                        ("mean_ms_per_task", Json::Num(g.mean_ms_per_task())),
+                        ("mean_gvalue", Json::Num(g.mean_gvalue())),
+                        ("runs", Json::Arr(g.runs.iter().map(|r| r.to_json()).collect())),
+                    ])
+                })
+                .collect(),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -123,6 +300,58 @@ mod tests {
         assert!((s.total_time_s - (0.5 + 3.0 + 0.1)).abs() < 1e-12);
         assert!((s.stm_rate() - 0.5).abs() < 1e-12);
         assert!((s.ms_per_task() - 0.0).abs() < 1e-12);
+    }
+
+    fn key(sched: &str) -> SweepKey {
+        SweepKey {
+            scheduler: sched.to_string(),
+            platform: "p".to_string(),
+            area: "UB".to_string(),
+            deadline: "rss".to_string(),
+        }
+    }
+
+    #[test]
+    fn sweep_groups_by_key_in_insertion_order() {
+        let mut sw = SweepSummary::new();
+        sw.push(key("a"), summary());
+        sw.push(key("b"), summary());
+        sw.push(key("a"), summary());
+        assert_eq!(sw.groups.len(), 2);
+        assert_eq!(sw.total_runs(), 3);
+        assert_eq!(sw.groups[0].key.scheduler, "a");
+        assert_eq!(sw.by_scheduler("a").unwrap().trials(), 2);
+        assert!(sw.by_scheduler("zzz").is_none());
+    }
+
+    #[test]
+    fn fingerprint_ignores_wall_clock_but_not_results() {
+        let mk = |sched_s: f64, energy_bump: f64| {
+            let mut s = summary();
+            s.sched_s = sched_s;
+            s.total_time_s += sched_s;
+            s.energy_j += energy_bump;
+            let mut sw = SweepSummary::new();
+            sw.push(key("a"), s);
+            sw
+        };
+        assert_eq!(mk(0.1, 0.0).fingerprint(), mk(9.9, 0.0).fingerprint());
+        assert_ne!(mk(0.1, 0.0).fingerprint(), mk(0.1, 1.0).fingerprint());
+    }
+
+    #[test]
+    fn sweep_aggregates_match_hand_math() {
+        let mut sw = SweepSummary::new();
+        sw.push(key("a"), summary());
+        sw.push(key("a"), summary());
+        let g = sw.by_scheduler("a").unwrap();
+        let s = summary();
+        assert!((g.geomean_time_s() - s.work_time_s()).abs() < 1e-9);
+        assert!((g.mean_stm_rate() - s.stm_rate()).abs() < 1e-12);
+        assert!((g.geomean_energy_j() - s.energy_j).abs() < 1e-9);
+        // JSON renders one row with both runs.
+        let j = sw.to_json().to_string();
+        assert!(j.contains("geomean_time_s"));
     }
 
     #[test]

@@ -1,0 +1,350 @@
+//! Typed experiment plans: the sweep the paper's figures are made of —
+//! scenarios (area × route distance × deadline regime) × platforms ×
+//! scheduler specs × seed replicates, expanded into independent [`Trial`]s.
+//!
+//! Every trial is self-contained: it knows how to regenerate its own task
+//! queue and platform, and carries a deterministically derived scheduler
+//! seed.  That independence is what lets `engine::Engine` execute trials on
+//! any number of worker threads with bit-identical results.
+//!
+//! Queue-seed derivation is the seed repo's original scheme (kept so every
+//! figure reproduces unchanged): queue `i` of a distance list is generated
+//! from the `i`-th `Rng::fork` of `Rng::new(seed)`, so adding distances
+//! never perturbs earlier queues.  Seed replicates beyond the base seed are
+//! also `Rng::fork`-derived (see [`ExperimentPlan::replicates`]).
+
+use anyhow::{Context, Result};
+
+use crate::env::route::{Route, RouteParams};
+use crate::env::taskgen::{self, DeadlineMode, TaskQueue};
+use crate::env::Area;
+use crate::platform::Platform;
+use crate::sched::SchedulerSpec;
+use crate::util::rng::Rng;
+
+/// One (area, route distance, deadline regime) cell of a sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub area: Area,
+    pub distance_m: f64,
+    pub deadline: DeadlineMode,
+}
+
+/// Build the task queue for queue-index `index` of a distance list, using
+/// the same seed derivation as the legacy `harness::make_queues`: skip the
+/// first `index` parent draws, then fork stream `index`.
+pub fn queue_for(
+    area: Area,
+    distance_m: f64,
+    index: usize,
+    deadline: DeadlineMode,
+    seed: u64,
+) -> TaskQueue {
+    let mut rng = Rng::new(seed);
+    for _ in 0..index {
+        rng.next_u64(); // each earlier fork consumed one parent draw
+    }
+    let mut stream = rng.fork(index as u64);
+    let route = Route::generate(RouteParams::for_area(area, distance_m), &mut stream);
+    taskgen::generate_with_deadline(&route, deadline)
+}
+
+/// One fully-specified unit of work: one scheduler on one task queue on one
+/// platform.  `Engine` runs trials; `id` is the deterministic expansion
+/// index results are re-ordered by.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub id: usize,
+    pub scenario: Scenario,
+    /// Index of `scenario.distance_m` within the plan's distance list
+    /// (drives queue-seed derivation).
+    pub queue_index: usize,
+    /// Platform spec string (`Platform::parse` form).
+    pub platform: String,
+    pub scheduler: SchedulerSpec,
+    /// Environment seed (queue generation).
+    pub seed: u64,
+    /// Scheduler-construction seed.  Equal to `seed` for the base
+    /// replicate — the legacy behavior, where `reset()` re-seeded every
+    /// queue identically — and `Rng::fork`-derived for later replicates.
+    pub sched_seed: u64,
+}
+
+impl Trial {
+    /// Regenerate this trial's task queue (deterministic).
+    pub fn queue(&self) -> TaskQueue {
+        queue_for(
+            self.scenario.area,
+            self.scenario.distance_m,
+            self.queue_index,
+            self.scenario.deadline,
+            self.seed,
+        )
+    }
+
+    /// Resolve this trial's platform.
+    pub fn platform(&self) -> Result<Platform> {
+        Platform::parse(&self.platform)
+            .with_context(|| format!("trial {}: unknown platform '{}'", self.id, self.platform))
+    }
+
+    /// Short human label (progress lines).
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}@{}m/{}/q{}/seed{}",
+            self.scheduler.canonical(),
+            self.scenario.area.name(),
+            self.scenario.distance_m,
+            self.scenario.deadline.name(),
+            self.queue_index + 1,
+            self.seed
+        )
+    }
+}
+
+/// Builder for a sweep.  Defaults: urban area, the paper's five eval
+/// distances, RSS deadlines, the HMAI platform, seed 42, no schedulers
+/// (callers must pick at least one).
+#[derive(Debug, Clone)]
+pub struct ExperimentPlan {
+    areas: Vec<Area>,
+    distances_m: Vec<f64>,
+    deadlines: Vec<DeadlineMode>,
+    platforms: Vec<String>,
+    schedulers: Vec<SchedulerSpec>,
+    seeds: Vec<u64>,
+}
+
+impl Default for ExperimentPlan {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExperimentPlan {
+    pub fn new() -> ExperimentPlan {
+        ExperimentPlan {
+            areas: vec![Area::Urban],
+            distances_m: vec![1000.0, 1250.0, 1500.0, 1750.0, 2000.0],
+            deadlines: vec![DeadlineMode::Rss],
+            platforms: vec!["hmai".to_string()],
+            schedulers: Vec::new(),
+            seeds: vec![42],
+        }
+    }
+
+    pub fn areas<I: IntoIterator<Item = Area>>(mut self, areas: I) -> Self {
+        self.areas = areas.into_iter().collect();
+        self
+    }
+
+    pub fn area(self, area: Area) -> Self {
+        self.areas([area])
+    }
+
+    pub fn distances<I: IntoIterator<Item = f64>>(mut self, d: I) -> Self {
+        self.distances_m = d.into_iter().collect();
+        self
+    }
+
+    pub fn deadlines<I: IntoIterator<Item = DeadlineMode>>(mut self, m: I) -> Self {
+        self.deadlines = m.into_iter().collect();
+        self
+    }
+
+    pub fn deadline(self, m: DeadlineMode) -> Self {
+        self.deadlines([m])
+    }
+
+    pub fn platforms<I, S>(mut self, p: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.platforms = p.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn platform<S: Into<String>>(self, p: S) -> Self {
+        self.platforms([p.into()])
+    }
+
+    pub fn schedulers<I: IntoIterator<Item = SchedulerSpec>>(mut self, s: I) -> Self {
+        self.schedulers = s.into_iter().collect();
+        self
+    }
+
+    pub fn scheduler(self, s: SchedulerSpec) -> Self {
+        self.schedulers([s])
+    }
+
+    /// Add a scheduler to the sweep (keeps earlier ones).
+    pub fn also_scheduler(mut self, s: SchedulerSpec) -> Self {
+        self.schedulers.push(s);
+        self
+    }
+
+    pub fn seeds<I: IntoIterator<Item = u64>>(mut self, s: I) -> Self {
+        self.seeds = s.into_iter().collect();
+        self
+    }
+
+    pub fn seed(self, s: u64) -> Self {
+        self.seeds([s])
+    }
+
+    /// `n` seed replicates derived from `base` via `Rng::fork`: replicate 0
+    /// is `base` itself (legacy-compatible), replicate k > 0 is the k-th
+    /// forked stream.
+    pub fn replicates(mut self, base: u64, n: usize) -> Self {
+        let mut parent = Rng::new(base);
+        self.seeds = (0..n)
+            .map(|k| if k == 0 { base } else { parent.fork(k as u64).next_u64() })
+            .collect();
+        self
+    }
+
+    /// Number of trials this plan expands to.
+    pub fn len(&self) -> usize {
+        self.seeds.len()
+            * self.platforms.len()
+            * self.schedulers.len()
+            * self.areas.len()
+            * self.deadlines.len()
+            * self.distances_m.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand into trials (validates schedulers and platform specs).
+    ///
+    /// Expansion order — seeds ▸ platforms ▸ schedulers ▸ areas ▸
+    /// deadlines ▸ distances — is part of the API: trial ids, and therefore
+    /// result ordering and `SweepSummary` row order, follow it.
+    pub fn trials(&self) -> Result<Vec<Trial>> {
+        anyhow::ensure!(!self.schedulers.is_empty(), "plan has no schedulers");
+        anyhow::ensure!(!self.distances_m.is_empty(), "plan has no route distances");
+        for p in &self.platforms {
+            Platform::parse(p).with_context(|| format!("plan: unknown platform '{p}'"))?;
+        }
+        let mut out = Vec::with_capacity(self.len());
+        for &seed in &self.seeds {
+            for platform in &self.platforms {
+                for sched in &self.schedulers {
+                    for &area in &self.areas {
+                        for &deadline in &self.deadlines {
+                            for (qi, &distance_m) in self.distances_m.iter().enumerate() {
+                                out.push(Trial {
+                                    id: out.len(),
+                                    scenario: Scenario { area, distance_m, deadline },
+                                    queue_index: qi,
+                                    platform: platform.clone(),
+                                    scheduler: sched.clone(),
+                                    seed,
+                                    sched_seed: seed,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_is_the_full_cross_product() {
+        let plan = ExperimentPlan::new()
+            .areas([Area::Urban, Area::Highway])
+            .distances([100.0, 200.0, 300.0])
+            .deadlines([DeadlineMode::Rss, DeadlineMode::FrameBudget])
+            .platforms(["hmai", "13so"])
+            .schedulers([SchedulerSpec::MinMin, SchedulerSpec::Sa])
+            .seeds([1, 2]);
+        let trials = plan.trials().unwrap();
+        assert_eq!(trials.len(), 2 * 3 * 2 * 2 * 2 * 2);
+        assert_eq!(trials.len(), plan.len());
+        // Ids are the expansion order.
+        assert!(trials.iter().enumerate().all(|(i, t)| t.id == i));
+        // Distances cycle fastest.
+        assert_eq!(trials[0].scenario.distance_m, 100.0);
+        assert_eq!(trials[1].scenario.distance_m, 200.0);
+        assert_eq!(trials[1].queue_index, 1);
+    }
+
+    #[test]
+    fn queue_derivation_matches_legacy_make_queues() {
+        // Legacy scheme: one parent rng, fork per distance index.
+        let (seed, area) = (5, Area::Urban);
+        let dists = [100.0, 200.0, 300.0];
+        let mut parent = Rng::new(seed);
+        let legacy: Vec<TaskQueue> = dists
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| {
+                let mut stream = parent.fork(i as u64);
+                let route = Route::generate(RouteParams::for_area(area, d), &mut stream);
+                taskgen::generate(&route)
+            })
+            .collect();
+        for (i, &d) in dists.iter().enumerate() {
+            let q = queue_for(area, d, i, DeadlineMode::Rss, seed);
+            assert_eq!(q.len(), legacy[i].len(), "queue {i}");
+            for (a, b) in q.tasks.iter().zip(&legacy[i].tasks) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.release_s.to_bits(), b.release_s.to_bits());
+                assert_eq!(a.model, b.model);
+            }
+        }
+    }
+
+    #[test]
+    fn trial_queue_is_deterministic() {
+        let plan = ExperimentPlan::new()
+            .distances([80.0, 120.0])
+            .scheduler(SchedulerSpec::RoundRobin)
+            .seed(9);
+        let trials = plan.trials().unwrap();
+        for t in &trials {
+            let a = t.queue();
+            let b = t.queue();
+            assert_eq!(a.len(), b.len());
+            assert!(a.len() > 0);
+        }
+        // Different queue indices produce different queues.
+        assert_ne!(trials[0].queue().len(), trials[1].queue().len());
+    }
+
+    #[test]
+    fn replicates_fork_deterministically() {
+        let a = ExperimentPlan::new().replicates(7, 3);
+        let b = ExperimentPlan::new().replicates(7, 3);
+        let (ta, tb) = (
+            a.scheduler(SchedulerSpec::MinMin).trials().unwrap(),
+            b.scheduler(SchedulerSpec::MinMin).trials().unwrap(),
+        );
+        let seeds_a: Vec<u64> = ta.iter().map(|t| t.seed).collect();
+        let seeds_b: Vec<u64> = tb.iter().map(|t| t.seed).collect();
+        assert_eq!(seeds_a, seeds_b);
+        assert_eq!(ta[0].seed, 7, "replicate 0 is the base seed");
+        let uniq: std::collections::BTreeSet<u64> = seeds_a.iter().copied().collect();
+        assert_eq!(uniq.len(), 3, "replicate seeds are distinct");
+    }
+
+    #[test]
+    fn empty_plans_are_rejected() {
+        assert!(ExperimentPlan::new().trials().is_err(), "no schedulers");
+        assert!(ExperimentPlan::new()
+            .scheduler(SchedulerSpec::MinMin)
+            .platform("not-a-platform")
+            .trials()
+            .is_err());
+    }
+}

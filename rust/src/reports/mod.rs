@@ -9,10 +9,36 @@ use crate::accel::{cost, AccelKind, ALL_ACCELS};
 use crate::env::camera_hz::{camera_hz, model_fps_requirement};
 use crate::env::objects::table2_rows;
 use crate::env::{Area, Scenario, ALL_GROUPS, ALL_SCENARIOS};
+use crate::metrics::summary::SweepSummary;
 use crate::platform::alloc;
-use crate::util::table::{f1, f2, Table};
+use crate::util::table::{f1, f2, pct, Table};
 use crate::workload::accuracy::TABLE3;
 use crate::workload::{model, ALL_MODELS};
+
+/// Render a sweep (`Engine` output) as the Fig. 12-style comparison table:
+/// one row per scheduler × platform × area × deadline group, aggregate
+/// columns over that group's queues/seeds.
+pub fn sweep_table(s: &SweepSummary) -> Table {
+    let mut t = Table::new([
+        "Scheduler", "Platform", "Area", "DL", "Queues", "Time M (s)", "Energy M (J)",
+        "R_Balance", "MS/task", "STMRate",
+    ]);
+    for g in &s.groups {
+        t.row([
+            g.key.scheduler.clone(),
+            g.key.platform.clone(),
+            g.key.area.clone(),
+            g.key.deadline.clone(),
+            g.trials().to_string(),
+            f2(g.geomean_time_s()),
+            f1(g.geomean_energy_j()),
+            f2(g.mean_r_balance()),
+            f2(g.mean_ms_per_task()),
+            pct(g.mean_stm_rate()),
+        ]);
+    }
+    t
+}
 
 /// Table 1: MACs, weights+neurons, layer counts of the three CNNs.
 pub fn table1() -> Table {
@@ -279,6 +305,27 @@ mod tests {
         let s = table9().render();
         assert!(s.contains('%'));
         assert!(s.contains("SO") || s.contains("SI") || s.contains("MM"));
+    }
+
+    #[test]
+    fn sweep_table_renders_group_rows() {
+        use crate::metrics::summary::{RunSummary, SweepKey};
+        use crate::metrics::{NormScales, PlatformMetrics};
+        let m = PlatformMetrics::new(2, NormScales::unit());
+        let run = RunSummary::from_metrics("Min-Min", "HMAI", &m, 0, 0.0, 0.0, 0.0, 0.0);
+        let mut sw = SweepSummary::new();
+        sw.push(
+            SweepKey {
+                scheduler: "Min-Min".into(),
+                platform: "HMAI".into(),
+                area: "UB".into(),
+                deadline: "rss".into(),
+            },
+            run,
+        );
+        let s = sweep_table(&sw).render();
+        assert!(s.contains("Min-Min"), "{s}");
+        assert!(s.contains("STMRate"), "{s}");
     }
 
     #[test]

@@ -1,31 +1,45 @@
-//! PJRT runtime: load the AOT artifacts `make artifacts` produced
-//! (`artifacts/*.hlo.txt` + `meta.json`) and execute them from the rust
-//! request path.  Python never runs here — the Q-network forward pass, the
-//! full DQN train step and the parameter init are all compiled HLO.
+//! Q-network runtime: the contract between the scheduler and the compiled
+//! AOT artifacts (`qnet_infer`, `qnet_infer_batch`, `qnet_train`,
+//! `qnet_init`).
 //!
-//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+//! Two interchangeable implementations sit behind the same `Runtime` API:
 //!
-//! Execution uses `execute_b` over *device-resident* buffers, never the
-//! literal-argument `execute`: the vendored C shim of `execute` leaks every
-//! input device buffer (`buffer.release()` without a matching free), and
-//! re-uploading ~210 KB of parameters per decision is also the single
-//! largest hot-path cost.  Parameters are uploaded once per version and
-//! cached; per-call inputs are small owned buffers that free on drop.
+//! * **`pjrt`** (feature `pjrt`): loads `artifacts/*.hlo.txt` + `meta.json`
+//!   produced by `make artifacts` and executes them through the PJRT C API
+//!   (`xla` bindings).  See `pjrt.rs` for the HLO-text interchange and the
+//!   device-buffer caching rationale.
+//! * **stub** (default): a no-dependency placeholder whose `load()` fails
+//!   with a clear message.  Everything that doesn't need FlexAI — the
+//!   environment, platform model, baselines, plan/engine sweeps, reports —
+//!   works without the feature; FlexAI paths error out (and tests
+//!   self-skip) instead of failing to build.
 
 pub mod meta;
 pub mod params;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
 
-use anyhow::{Context, Result};
-use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;
+
+use std::path::PathBuf;
 
 pub use meta::Meta;
 pub use params::Params;
+
+/// Default artifact location relative to the repo root.  Honours
+/// `HMAI_ARTIFACTS` for tests/benches run from other cwds.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("HMAI_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from("artifacts")
+}
 
 /// One replay-batch of transitions, laid out exactly as `qnet_train`
 /// expects: `s[B,IN] a[B] r[B] s2[B,IN] done[B]`.
@@ -48,297 +62,5 @@ impl TrainBatch {
             s2: vec![0.0; b * meta.in_dim],
             done: vec![0.0; b],
         }
-    }
-}
-
-/// The compiled Q-network executables on the PJRT CPU client.
-pub struct Runtime {
-    client: PjRtClient,
-    infer: PjRtLoadedExecutable,
-    infer_batch: PjRtLoadedExecutable,
-    train: PjRtLoadedExecutable,
-    init: PjRtLoadedExecutable,
-    /// Device-resident parameter buffers keyed by `Params::version()`.
-    param_cache: Mutex<HashMap<u64, std::sync::Arc<Vec<PjRtBuffer>>>>,
-    pub meta: Meta,
-}
-
-/// Entries kept in the device parameter cache (EvalNet + TargNet + slack).
-const PARAM_CACHE_CAP: usize = 6;
-
-impl Runtime {
-    /// Default artifact location relative to the repo root.
-    pub fn default_dir() -> PathBuf {
-        // Honour HMAI_ARTIFACTS for tests/benches run from other cwds.
-        if let Ok(d) = std::env::var("HMAI_ARTIFACTS") {
-            return PathBuf::from(d);
-        }
-        PathBuf::from("artifacts")
-    }
-
-    /// Load and compile every entry point from `dir`.
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        let meta = Meta::load(&dir.join("meta.json"))
-            .with_context(|| format!("loading {}/meta.json (run `make artifacts`)", dir.display()))?;
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let compile = |name: &str| -> Result<PjRtLoadedExecutable> {
-            let path = dir.join(format!("{name}.hlo.txt"));
-            let proto = HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = XlaComputation::from_proto(&proto);
-            client.compile(&comp).with_context(|| format!("compiling {name}"))
-        };
-        Ok(Runtime {
-            infer: compile("qnet_infer")?,
-            infer_batch: compile("qnet_infer_batch")?,
-            train: compile("qnet_train")?,
-            init: compile("qnet_init")?,
-            param_cache: Mutex::new(HashMap::new()),
-            client,
-            meta,
-        })
-    }
-
-    /// Load from the default directory.
-    pub fn load_default() -> Result<Runtime> {
-        Self::load(&Self::default_dir())
-    }
-
-    /// Upload an f32 tensor to the device.
-    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
-    }
-
-    /// Device-resident buffers for a parameter set, uploaded once per
-    /// `Params::version()` and shared afterwards.
-    fn device_params(&self, params: &Params) -> Result<std::sync::Arc<Vec<PjRtBuffer>>> {
-        let mut cache = self.param_cache.lock().expect("param cache poisoned");
-        if let Some(bufs) = cache.get(&params.version()) {
-            return Ok(bufs.clone());
-        }
-        let mut bufs = Vec::with_capacity(params.tensors().len());
-        for (t, s) in params.tensors().iter().zip(params.shapes()) {
-            bufs.push(self.upload_f32(t, s)?);
-        }
-        if cache.len() >= PARAM_CACHE_CAP {
-            cache.clear(); // stale versions; live Arcs stay valid
-        }
-        let bufs = std::sync::Arc::new(bufs);
-        cache.insert(params.version(), bufs.clone());
-        Ok(bufs)
-    }
-
-    /// Run an executable over device buffers and return the tuple elements.
-    fn run(&self, exe: &PjRtLoadedExecutable, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
-        let out = exe.execute_b::<&PjRtBuffer>(args)?;
-        let lit = out[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple()?)
-    }
-
-    /// Seeded parameter init (`qnet_init` entry).
-    pub fn init_params(&self, seed: i32) -> Result<Params> {
-        let seed_buf = self.client.buffer_from_host_buffer(&[seed], &[], None)?;
-        let out = self.run(&self.init, &[&seed_buf])?;
-        Params::from_literals(&self.meta, out)
-    }
-
-    /// Q(s, ·) for one state (`qnet_infer`): `state.len() == in_dim`,
-    /// returns `out_dim` Q values.
-    pub fn infer(&self, params: &Params, state: &[f32]) -> Result<Vec<f32>> {
-        anyhow::ensure!(
-            state.len() == self.meta.in_dim,
-            "state len {} != in_dim {}",
-            state.len(),
-            self.meta.in_dim
-        );
-        let dev = self.device_params(params)?;
-        let x = self.upload_f32(state, &[1, self.meta.in_dim])?;
-        let mut args: Vec<&PjRtBuffer> = dev.iter().collect();
-        args.push(&x);
-        let mut out = self.run(&self.infer, &args)?;
-        anyhow::ensure!(out.len() == 1, "infer returned {} outputs", out.len());
-        Ok(out.pop().expect("one output").to_vec::<f32>()?)
-    }
-
-    /// Q(s, ·) for a burst of `infer_batch` states (`qnet_infer_batch`):
-    /// `states.len() == infer_batch * in_dim`, returns row-major
-    /// `[infer_batch, out_dim]` Q values.
-    pub fn infer_batch(&self, params: &Params, states: &[f32]) -> Result<Vec<f32>> {
-        let want = self.meta.infer_batch * self.meta.in_dim;
-        anyhow::ensure!(states.len() == want, "states len {} != {}", states.len(), want);
-        let dev = self.device_params(params)?;
-        let x = self.upload_f32(states, &[self.meta.infer_batch, self.meta.in_dim])?;
-        let mut args: Vec<&PjRtBuffer> = dev.iter().collect();
-        args.push(&x);
-        let mut out = self.run(&self.infer_batch, &args)?;
-        anyhow::ensure!(out.len() == 1, "infer_batch returned {} outputs", out.len());
-        Ok(out.pop().expect("one output").to_vec::<f32>()?)
-    }
-
-    /// One DQN SGD step (`qnet_train`): EvalNet params are updated against
-    /// the frozen TargNet; returns (new EvalNet params, scalar TD loss).
-    pub fn train_step(
-        &self,
-        params: &Params,
-        targ: &Params,
-        batch: &TrainBatch,
-    ) -> Result<(Params, f32)> {
-        let m = &self.meta;
-        anyhow::ensure!(batch.s.len() == m.train_batch * m.in_dim, "bad batch.s");
-        anyhow::ensure!(batch.a.len() == m.train_batch, "bad batch.a");
-        anyhow::ensure!(batch.r.len() == m.train_batch, "bad batch.r");
-        anyhow::ensure!(batch.s2.len() == m.train_batch * m.in_dim, "bad batch.s2");
-        anyhow::ensure!(batch.done.len() == m.train_batch, "bad batch.done");
-        let dev_p = self.device_params(params)?;
-        let dev_t = self.device_params(targ)?;
-        let s = self.upload_f32(&batch.s, &[m.train_batch, m.in_dim])?;
-        let a = self.client.buffer_from_host_buffer(&batch.a, &[m.train_batch], None)?;
-        let r = self.upload_f32(&batch.r, &[m.train_batch])?;
-        let s2 = self.upload_f32(&batch.s2, &[m.train_batch, m.in_dim])?;
-        let done = self.upload_f32(&batch.done, &[m.train_batch])?;
-
-        let mut args: Vec<&PjRtBuffer> = dev_p.iter().collect();
-        args.extend(dev_t.iter());
-        args.extend([&s, &a, &r, &s2, &done]);
-
-        let mut out = self.run(&self.train, &args)?;
-        anyhow::ensure!(
-            out.len() == m.param_shapes.len() + 1,
-            "train returned {} outputs",
-            out.len()
-        );
-        let loss_lit = out.pop().expect("loss output");
-        let loss = loss_lit.to_vec::<f32>()?[0];
-        let new_params = Params::from_literals(m, out)?;
-        Ok((new_params, loss))
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn runtime() -> Runtime {
-        // lib tests run from the repo root.
-        Runtime::load_default().expect("artifacts present (make artifacts)")
-    }
-
-    #[test]
-    fn loads_and_inits() {
-        let rt = runtime();
-        assert_eq!(rt.meta.in_dim, rt.meta.task_feats + rt.meta.slot_feats * rt.meta.n_slots);
-        let p = rt.init_params(7).unwrap();
-        assert_eq!(p.tensors().len(), rt.meta.param_shapes.len());
-        // He init: non-degenerate weights, zero biases.
-        let w1 = &p.tensors()[0];
-        assert!(w1.iter().any(|&x| x != 0.0));
-        assert!(p.tensors()[1].iter().all(|&x| x == 0.0));
-        // Seeded determinism.
-        let p2 = rt.init_params(7).unwrap();
-        assert_eq!(p.tensors()[0], p2.tensors()[0]);
-        let p3 = rt.init_params(8).unwrap();
-        assert_ne!(p.tensors()[0], p3.tensors()[0]);
-    }
-
-    #[test]
-    fn infer_shapes_and_finiteness() {
-        let rt = runtime();
-        let p = rt.init_params(1).unwrap();
-        let state = vec![0.1f32; rt.meta.in_dim];
-        let q = rt.infer(&p, &state).unwrap();
-        assert_eq!(q.len(), rt.meta.out_dim);
-        assert!(q.iter().all(|x| x.is_finite()));
-        // Batch path agrees with the single path on replicated rows.
-        let mut states = Vec::new();
-        for _ in 0..rt.meta.infer_batch {
-            states.extend_from_slice(&state);
-        }
-        let qb = rt.infer_batch(&p, &states).unwrap();
-        assert_eq!(qb.len(), rt.meta.infer_batch * rt.meta.out_dim);
-        for row in qb.chunks(rt.meta.out_dim) {
-            for (a, b) in row.iter().zip(&q) {
-                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
-            }
-        }
-    }
-
-    #[test]
-    fn train_step_reduces_td_loss_on_fixed_batch() {
-        let rt = runtime();
-        let mut p = rt.init_params(3).unwrap();
-        let targ = p.clone();
-        // Synthetic batch with a consistent target.
-        let mut batch = TrainBatch::zeros(&rt.meta);
-        for (i, v) in batch.s.iter_mut().enumerate() {
-            *v = ((i % 17) as f32) / 17.0;
-        }
-        batch.s2.copy_from_slice(&batch.s);
-        for (i, a) in batch.a.iter_mut().enumerate() {
-            *a = (i % rt.meta.out_dim) as i32;
-        }
-        for r in batch.r.iter_mut() {
-            *r = 1.0;
-        }
-        let (_, first_loss) = rt.train_step(&p, &targ, &batch).unwrap();
-        let mut last = first_loss;
-        for _ in 0..20 {
-            let (np, l) = rt.train_step(&p, &targ, &batch).unwrap();
-            p = np;
-            last = l;
-        }
-        assert!(last.is_finite());
-        assert!(last < first_loss, "loss {first_loss} -> {last} did not fall");
-    }
-
-    #[test]
-    fn rejects_bad_shapes() {
-        let rt = runtime();
-        let p = rt.init_params(0).unwrap();
-        assert!(rt.infer(&p, &[0.0; 3]).is_err());
-        assert!(rt.infer_batch(&p, &[0.0; 3]).is_err());
-        let mut batch = TrainBatch::zeros(&rt.meta);
-        batch.a.pop();
-        assert!(rt.train_step(&p, &p, &batch).is_err());
-    }
-
-    #[test]
-    fn param_cache_reuses_uploads_and_evicts() {
-        let rt = runtime();
-        let p = rt.init_params(2).unwrap();
-        let d1 = rt.device_params(&p).unwrap();
-        let d2 = rt.device_params(&p).unwrap();
-        assert!(std::sync::Arc::ptr_eq(&d1, &d2), "same version must share buffers");
-        // Flood the cache past capacity; the original stays usable via Arc.
-        for seed in 10..20 {
-            let q = rt.init_params(seed).unwrap();
-            rt.device_params(&q).unwrap();
-        }
-        let state = vec![0.2f32; rt.meta.in_dim];
-        assert!(rt.infer(&p, &state).is_ok());
-    }
-
-    #[test]
-    fn no_rss_growth_over_many_inferences() {
-        // Regression test for the vendored `execute` input-buffer leak:
-        // 2000 inferences must not grow RSS by more than a few MB.
-        let rss_kb = || -> f64 {
-            let s = std::fs::read_to_string("/proc/self/statm").unwrap();
-            let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
-            pages * 4.096
-        };
-        let rt = runtime();
-        let p = rt.init_params(1).unwrap();
-        let state = vec![0.1f32; rt.meta.in_dim];
-        for _ in 0..100 {
-            rt.infer(&p, &state).unwrap(); // warmup allocator pools
-        }
-        let before = rss_kb();
-        for _ in 0..2000 {
-            rt.infer(&p, &state).unwrap();
-        }
-        let grown = rss_kb() - before;
-        assert!(grown < 64_000.0, "RSS grew {grown} KB over 2000 inferences");
     }
 }

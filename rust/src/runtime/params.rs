@@ -8,10 +8,10 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
-use xla::Literal;
 
 use crate::util::json::{Json, JsonObj};
 
+#[cfg(feature = "pjrt")]
 use super::Meta;
 
 static NEXT_VERSION: AtomicU64 = AtomicU64::new(1);
@@ -49,8 +49,9 @@ impl Params {
         })
     }
 
-    /// Build from executable outputs in meta order.
-    pub fn from_literals(meta: &Meta, lits: Vec<Literal>) -> Result<Params> {
+    /// Build from executable outputs in meta order (PJRT builds only).
+    #[cfg(feature = "pjrt")]
+    pub fn from_literals(meta: &Meta, lits: Vec<xla::Literal>) -> Result<Params> {
         anyhow::ensure!(
             lits.len() == meta.param_shapes.len(),
             "got {} literals, want {}",

@@ -1,0 +1,73 @@
+//! Stub runtime (feature `pjrt` disabled): presents the exact `Runtime`
+//! API of `pjrt.rs` so FlexAI and the harness compile unchanged, but every
+//! entry point fails with a message explaining how to enable the real path.
+//!
+//! `load()` always errs, so no `Runtime` value (and hence no FlexAI agent)
+//! can exist in a stub build: the unreachable compute methods only keep the
+//! API surface identical.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use super::{default_artifact_dir, Meta, Params, TrainBatch};
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: hmai was built without the `pjrt` feature \
+     (enable the `xla` dependency in rust/Cargo.toml and build with \
+     `--features pjrt`, after `make artifacts`)";
+
+/// Placeholder for the compiled Q-network executables.
+pub struct Runtime {
+    pub meta: Meta,
+}
+
+impl Runtime {
+    /// Default artifact location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        default_artifact_dir()
+    }
+
+    /// Always fails in stub builds.
+    pub fn load(_dir: &Path) -> Result<Runtime> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Always fails in stub builds.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn init_params(&self, _seed: i32) -> Result<Params> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn infer(&self, _params: &Params, _state: &[f32]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn infer_batch(&self, _params: &Params, _states: &[f32]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn train_step(
+        &self,
+        _params: &Params,
+        _targ: &Params,
+        _batch: &TrainBatch,
+    ) -> Result<(Params, f32)> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_fails_with_guidance() {
+        let err = Runtime::load_default().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "{msg}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -9,12 +9,17 @@ pub mod flexai;
 pub mod ga;
 pub mod minmin;
 pub mod random;
+pub mod registry;
 pub mod roundrobin;
 pub mod sa;
 pub mod worst;
 
 use crate::env::taskgen::Task;
 use crate::sim::ShadowState;
+
+pub use registry::{
+    baseline_names, baseline_specs, BuildCtx, Registry, SchedulerInfo, SchedulerSpec, SCHEDULERS,
+};
 
 /// A task-mapping policy.  The engine hands the scheduler one *burst* (all
 /// tasks released at the same instant — up to one frame from each of the 30
@@ -49,25 +54,6 @@ where
     out
 }
 
-/// Construct a scheduler by name.  FlexAI is not constructible here (it
-/// needs the PJRT runtime and a checkpoint); use `flexai::FlexAI` directly.
-pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
-    match name.to_ascii_lowercase().as_str() {
-        "minmin" | "min-min" => Some(Box::new(minmin::MinMin::new())),
-        "ata" => Some(Box::new(ata::Ata::new())),
-        "edp" => Some(Box::new(edp::Edp::new())),
-        "ga" => Some(Box::new(ga::Ga::new(seed))),
-        "sa" => Some(Box::new(sa::Sa::new(seed))),
-        "worst" | "worse" | "unscheduled" => Some(Box::new(worst::WorstCase::new())),
-        "rr" | "roundrobin" | "round-robin" => Some(Box::new(roundrobin::RoundRobin::new())),
-        "rand" | "random" | "w-rand" => Some(Box::new(random::RandomSched::new(seed))),
-        _ => None,
-    }
-}
-
-/// All baseline scheduler names (Fig. 12 comparison set, minus FlexAI).
-pub const BASELINES: [&str; 5] = ["ata", "ga", "minmin", "sa", "worst"];
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,19 +74,20 @@ mod tests {
     /// deterministic for a fixed seed.
     #[test]
     fn registry_constructs_and_assigns_in_range() {
+        let reg = Registry::new();
         let q = small_queue(1);
         let platform = Platform::hmai();
         let state = ShadowState::new(&platform, NormScales::unit());
         let burst: Vec<_> = q.tasks.iter().take(30).cloned().collect();
         for name in ["minmin", "ata", "edp", "ga", "sa", "worst", "rr", "random"] {
-            let mut s = by_name(name, 7).unwrap_or_else(|| panic!("{name} not found"));
+            let mut s = reg.build_by_name(name, 7).unwrap_or_else(|e| panic!("{name}: {e:#}"));
             let a = s.schedule_batch(&burst, &state);
             assert_eq!(a.len(), burst.len(), "{name}");
             assert!(a.iter().all(|&i| i < platform.len()), "{name}");
-            let mut s2 = by_name(name, 7).unwrap();
+            let mut s2 = reg.build_by_name(name, 7).unwrap();
             assert_eq!(a, s2.schedule_batch(&burst, &state), "{name} not deterministic");
         }
-        assert!(by_name("nope", 0).is_none());
+        assert!(reg.build_by_name("nope", 0).is_err());
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! Typed scheduler construction: the canonical name table, `SchedulerSpec`
+//! and the extensible `Registry` of factory objects.
+//!
+//! This replaces the stringly `by_name` lookups that used to be duplicated
+//! (with drifting alias sets) across `sched`, `harness` and the CLI usage
+//! text.  There is exactly one table — `SCHEDULERS` — and the registry, the
+//! usage string and the Fig. 12 baseline set are all derived from it.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::{ata, edp, ga, minmin, random, roundrobin, sa, worst, Scheduler};
+
+/// One row of the canonical scheduler table.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerInfo {
+    /// Canonical short name (CLI `--sched` value, registry key).
+    pub canonical: &'static str,
+    /// Accepted aliases (historical / paper spellings).
+    pub aliases: &'static [&'static str],
+    /// Display name used in figures and report tables.
+    pub display: &'static str,
+    /// Member of the Fig. 12 baseline comparison set.
+    pub baseline: bool,
+    /// One-line help for the usage string.
+    pub help: &'static str,
+}
+
+/// THE canonical scheduler table — single source of truth for the registry,
+/// `hmai help`, and the baseline set.
+pub const SCHEDULERS: &[SchedulerInfo] = &[
+    SchedulerInfo {
+        canonical: "flexai",
+        aliases: &["dqn"],
+        display: "FlexAI",
+        baseline: false,
+        help: "DQN scheduler (needs PJRT artifacts)",
+    },
+    SchedulerInfo {
+        canonical: "minmin",
+        aliases: &["min-min"],
+        display: "Min-Min",
+        baseline: true,
+        help: "earliest-completion heuristic",
+    },
+    SchedulerInfo {
+        canonical: "ata",
+        aliases: &[],
+        display: "ATA",
+        baseline: true,
+        help: "accuracy-targeted assignment",
+    },
+    SchedulerInfo {
+        canonical: "edp",
+        aliases: &["energy-delay"],
+        display: "EDP",
+        baseline: false,
+        help: "energy-delay-product heuristic",
+    },
+    SchedulerInfo {
+        canonical: "ga",
+        aliases: &["genetic"],
+        display: "GA",
+        baseline: true,
+        help: "genetic algorithm",
+    },
+    SchedulerInfo {
+        canonical: "sa",
+        aliases: &["annealing"],
+        display: "SA",
+        baseline: true,
+        help: "simulated annealing",
+    },
+    SchedulerInfo {
+        canonical: "worst",
+        aliases: &["worse", "unscheduled", "worstcase"],
+        display: "WorstCase",
+        baseline: true,
+        help: "unscheduled worst case",
+    },
+    SchedulerInfo {
+        canonical: "rr",
+        aliases: &["roundrobin", "round-robin"],
+        display: "RoundRobin",
+        baseline: false,
+        help: "round robin",
+    },
+    SchedulerInfo {
+        canonical: "random",
+        aliases: &["rand", "w-rand"],
+        display: "Random",
+        baseline: false,
+        help: "uniform random (W-rand)",
+    },
+];
+
+/// Look up a table row by canonical name or alias (case-insensitive).
+pub fn lookup(name: &str) -> Option<&'static SchedulerInfo> {
+    let lc = name.to_ascii_lowercase();
+    SCHEDULERS
+        .iter()
+        .find(|s| s.canonical == lc || s.aliases.contains(&lc.as_str()))
+}
+
+/// Canonical names of the Fig. 12 baseline comparison set, in table order.
+pub fn baseline_names() -> Vec<&'static str> {
+    SCHEDULERS.iter().filter(|s| s.baseline).map(|s| s.canonical).collect()
+}
+
+/// Baseline specs, in table order (the Fig. 12 comparison set).
+pub fn baseline_specs() -> Vec<SchedulerSpec> {
+    baseline_names()
+        .into_iter()
+        .map(|n| SchedulerSpec::parse(n).expect("table names parse"))
+        .collect()
+}
+
+/// `name | name | ...` scheduler list for usage strings, from the table.
+pub fn usage_names() -> String {
+    SCHEDULERS.iter().map(|s| s.canonical).collect::<Vec<_>>().join(" | ")
+}
+
+/// A typed scheduler choice — what `ExperimentPlan` sweeps over.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum SchedulerSpec {
+    /// FlexAI, optionally restoring a checkpoint (None = fresh parameters,
+    /// greedy inference).
+    FlexAI { checkpoint: Option<String> },
+    MinMin,
+    Ata,
+    Edp,
+    Ga,
+    Sa,
+    Worst,
+    RoundRobin,
+    Random,
+}
+
+impl SchedulerSpec {
+    /// Parse a canonical name or alias from the `SCHEDULERS` table.
+    pub fn parse(name: &str) -> Result<SchedulerSpec> {
+        let info = lookup(name).with_context(|| {
+            format!("unknown scheduler '{}' (known: {})", name, usage_names())
+        })?;
+        Ok(match info.canonical {
+            "flexai" => SchedulerSpec::FlexAI { checkpoint: None },
+            "minmin" => SchedulerSpec::MinMin,
+            "ata" => SchedulerSpec::Ata,
+            "edp" => SchedulerSpec::Edp,
+            "ga" => SchedulerSpec::Ga,
+            "sa" => SchedulerSpec::Sa,
+            "worst" => SchedulerSpec::Worst,
+            "rr" => SchedulerSpec::RoundRobin,
+            "random" => SchedulerSpec::Random,
+            other => unreachable!("table entry '{other}' not mapped"),
+        })
+    }
+
+    /// Canonical table name for this spec.
+    pub fn canonical(&self) -> &'static str {
+        match self {
+            SchedulerSpec::FlexAI { .. } => "flexai",
+            SchedulerSpec::MinMin => "minmin",
+            SchedulerSpec::Ata => "ata",
+            SchedulerSpec::Edp => "edp",
+            SchedulerSpec::Ga => "ga",
+            SchedulerSpec::Sa => "sa",
+            SchedulerSpec::Worst => "worst",
+            SchedulerSpec::RoundRobin => "rr",
+            SchedulerSpec::Random => "random",
+        }
+    }
+
+    /// Display name (figure legends), from the table.
+    pub fn display(&self) -> &'static str {
+        lookup(self.canonical()).expect("canonical names are in the table").display
+    }
+}
+
+/// Construction context handed to factories: the per-trial seed.
+#[derive(Debug, Clone, Copy)]
+pub struct BuildCtx {
+    pub seed: u64,
+}
+
+/// A scheduler factory.  `Send + Sync` so the `Engine` can call factories
+/// from worker threads; the produced `Box<dyn Scheduler>` never crosses a
+/// thread boundary (each worker builds, runs and drops its own instance).
+pub type Factory = Arc<dyn Fn(&SchedulerSpec, &BuildCtx) -> Result<Box<dyn Scheduler>> + Send + Sync>;
+
+/// Extensible scheduler registry: canonical name → factory.
+///
+/// `Registry::new()` registers every built-in baseline.  FlexAI is not
+/// constructible without a PJRT runtime, so its runtime-providing factory
+/// registers separately (`harness::flexai_factory`); the factory loads the
+/// runtime on whichever worker thread builds the agent.
+#[derive(Clone)]
+pub struct Registry {
+    factories: BTreeMap<&'static str, Factory>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    /// Registry with every built-in (non-FlexAI) scheduler registered.
+    pub fn new() -> Registry {
+        fn boxed<S: Scheduler + 'static>(s: S) -> Result<Box<dyn Scheduler>> {
+            Ok(Box::new(s))
+        }
+        let mut r = Registry { factories: BTreeMap::new() };
+        r.register("minmin", Arc::new(|_, _| boxed(minmin::MinMin::new())));
+        r.register("ata", Arc::new(|_, _| boxed(ata::Ata::new())));
+        r.register("edp", Arc::new(|_, _| boxed(edp::Edp::new())));
+        r.register("ga", Arc::new(|_, c| boxed(ga::Ga::new(c.seed))));
+        r.register("sa", Arc::new(|_, c| boxed(sa::Sa::new(c.seed))));
+        r.register("worst", Arc::new(|_, _| boxed(worst::WorstCase::new())));
+        r.register("rr", Arc::new(|_, _| boxed(roundrobin::RoundRobin::new())));
+        r.register("random", Arc::new(|_, c| boxed(random::RandomSched::new(c.seed))));
+        r
+    }
+
+    /// Register (or replace) the factory for a canonical table name.
+    /// Panics on names absent from `SCHEDULERS` — factories for unknown
+    /// schedulers would be unreachable from specs.
+    pub fn register(&mut self, canonical: &'static str, factory: Factory) {
+        assert!(
+            SCHEDULERS.iter().any(|s| s.canonical == canonical),
+            "'{canonical}' is not in the canonical SCHEDULERS table"
+        );
+        self.factories.insert(canonical, factory);
+    }
+
+    /// Canonical names with a registered factory, in sorted order.
+    pub fn registered(&self) -> Vec<&'static str> {
+        self.factories.keys().copied().collect()
+    }
+
+    /// Build a scheduler for `spec` with the per-trial `seed`.
+    pub fn build(&self, spec: &SchedulerSpec, seed: u64) -> Result<Box<dyn Scheduler>> {
+        let name = spec.canonical();
+        let f = self.factories.get(name).with_context(|| {
+            if name == "flexai" {
+                "scheduler 'flexai' needs a PJRT runtime — use a registry with a \
+                 FlexAI factory registered (see harness::registry)"
+                    .to_string()
+            } else {
+                format!("no factory registered for scheduler '{name}'")
+            }
+        })?;
+        f(spec, &BuildCtx { seed })
+    }
+
+    /// Parse + build in one step (CLI convenience).
+    pub fn build_by_name(&self, name: &str, seed: u64) -> Result<Box<dyn Scheduler>> {
+        self.build(&SchedulerSpec::parse(name)?, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_table_row_parses_to_its_canonical_spec() {
+        for info in SCHEDULERS {
+            let spec = SchedulerSpec::parse(info.canonical).unwrap();
+            assert_eq!(spec.canonical(), info.canonical);
+            assert_eq!(spec.display(), info.display);
+            for alias in info.aliases {
+                let via_alias = SchedulerSpec::parse(alias).unwrap();
+                assert_eq!(via_alias.canonical(), info.canonical, "alias {alias}");
+            }
+            // Case-insensitive.
+            let upper = SchedulerSpec::parse(&info.canonical.to_ascii_uppercase()).unwrap();
+            assert_eq!(upper.canonical(), info.canonical);
+        }
+        assert!(SchedulerSpec::parse("nope").is_err());
+    }
+
+    #[test]
+    fn aliases_never_collide() {
+        let mut seen = std::collections::BTreeSet::new();
+        for info in SCHEDULERS {
+            assert!(seen.insert(info.canonical), "dup canonical {}", info.canonical);
+            for a in info.aliases {
+                assert!(seen.insert(a), "alias '{a}' collides");
+            }
+        }
+    }
+
+    #[test]
+    fn registry_builds_every_non_flexai_scheduler() {
+        let reg = Registry::new();
+        for info in SCHEDULERS {
+            let spec = SchedulerSpec::parse(info.canonical).unwrap();
+            if info.canonical == "flexai" {
+                let err = reg.build(&spec, 7).unwrap_err();
+                assert!(err.to_string().contains("PJRT"), "{err:#}");
+            } else {
+                let s = reg.build(&spec, 7).unwrap();
+                assert_eq!(s.name(), info.display, "{}", info.canonical);
+            }
+        }
+        assert!(reg.build_by_name("bogus", 0).is_err());
+    }
+
+    #[test]
+    fn seeded_schedulers_are_deterministic_per_seed() {
+        use crate::metrics::NormScales;
+        use crate::platform::Platform;
+        use crate::sim::ShadowState;
+
+        let reg = Registry::new();
+        let q = crate::sched::tests::small_queue(1);
+        let platform = Platform::hmai();
+        let state = ShadowState::new(&platform, NormScales::unit());
+        let burst: Vec<_> = q.tasks.iter().take(30).cloned().collect();
+        for name in ["ga", "sa", "random"] {
+            let mut a = reg.build_by_name(name, 9).unwrap();
+            let mut b = reg.build_by_name(name, 9).unwrap();
+            assert_eq!(
+                a.schedule_batch(&burst, &state),
+                b.schedule_batch(&burst, &state),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn baseline_set_is_the_fig12_comparison() {
+        assert_eq!(baseline_names(), vec!["minmin", "ata", "ga", "sa", "worst"]);
+        assert_eq!(baseline_specs().len(), 5);
+    }
+
+    #[test]
+    fn usage_names_cover_the_table() {
+        let u = usage_names();
+        for info in SCHEDULERS {
+            assert!(u.contains(info.canonical), "{} missing", info.canonical);
+        }
+    }
+}

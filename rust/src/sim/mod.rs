@@ -77,6 +77,16 @@ impl SimResult {
     }
 }
 
+/// First detection (non-tracker) task released at or after `t_probe` —
+/// the Fig. 14 braking-probe selection, shared by the CLI, the braking
+/// bench and the drive_route example.
+pub fn first_detection_after(records: &[TaskRecord], t_probe: f64) -> Option<&TaskRecord> {
+    records
+        .iter()
+        .filter(|r| r.release_s >= t_probe && !r.model.is_tracker())
+        .min_by(|a, b| a.release_s.total_cmp(&b.release_s))
+}
+
 /// Run `queue` on `platform` under `scheduler`.
 ///
 /// Tasks are processed in release order, grouped into bursts of identical

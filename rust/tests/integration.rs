@@ -2,28 +2,32 @@
 //! metrics, for every scheduler, plus the conservation and ordering
 //! properties the figures rely on.
 
-use hmai::config::EnvConfig;
-use hmai::env::taskgen::TaskQueue;
+use hmai::env::taskgen::{DeadlineMode, TaskQueue};
 use hmai::env::{Area, ALL_AREAS};
-use hmai::harness;
 use hmai::metrics::NormScales;
+use hmai::plan::queue_for;
 use hmai::platform::Platform;
-use hmai::sched::{by_name, Scheduler, BASELINES};
+use hmai::sched::{baseline_names, Registry, Scheduler};
 use hmai::sim::{simulate, simulate_with_scales, SimOptions};
 
 fn queue(area: Area, dist: f64, seed: u64) -> TaskQueue {
-    harness::make_queues(&EnvConfig { area, distances_m: vec![dist], seed }).remove(0)
+    queue_for(area, dist, 0, DeadlineMode::Rss, seed)
+}
+
+fn build(reg: &Registry, name: &str, seed: u64) -> Box<dyn Scheduler> {
+    reg.build_by_name(name, seed).unwrap_or_else(|e| panic!("{name}: {e:#}"))
 }
 
 const ALL_SCHEDS: [&str; 8] = ["minmin", "ata", "edp", "ga", "sa", "worst", "rr", "random"];
 
 #[test]
 fn every_scheduler_processes_every_task_in_every_area() {
+    let reg = Registry::new();
     for area in ALL_AREAS {
         let q = queue(area, 60.0, 9);
         let platform = Platform::hmai();
         for name in ALL_SCHEDS {
-            let mut s = by_name(name, 3).unwrap();
+            let mut s = build(&reg, name, 3);
             let r = simulate(&q, &platform, s.as_mut(), SimOptions { record_tasks: true });
             assert_eq!(r.summary.tasks as usize, q.len(), "{name} {area:?}");
             assert_eq!(r.records.len(), q.len(), "{name} {area:?}");
@@ -44,8 +48,9 @@ fn every_scheduler_processes_every_task_in_every_area() {
 
 #[test]
 fn summary_wait_equals_record_wait() {
+    let reg = Registry::new();
     let q = queue(Area::Urban, 50.0, 1);
-    let mut s = by_name("sa", 1).unwrap();
+    let mut s = build(&reg, "sa", 1);
     let r = simulate(&q, &Platform::hmai(), s.as_mut(), SimOptions { record_tasks: true });
     let wait: f64 = r.records.iter().map(|rec| rec.wait_s).sum();
     assert!((wait - r.summary.wait_s).abs() < 1e-6);
@@ -53,11 +58,12 @@ fn summary_wait_equals_record_wait() {
 
 #[test]
 fn fixed_scales_reproduce_default_scales() {
+    let reg = Registry::new();
     let q = queue(Area::Urban, 40.0, 2);
     let platform = Platform::hmai();
     let scales = NormScales::for_queue(&q, &platform);
-    let mut a = by_name("minmin", 0).unwrap();
-    let mut b = by_name("minmin", 0).unwrap();
+    let mut a = build(&reg, "minmin", 0);
+    let mut b = build(&reg, "minmin", 0);
     let ra = simulate(&q, &platform, a.as_mut(), SimOptions::default());
     let rb = simulate_with_scales(&q, &platform, b.as_mut(), SimOptions::default(), scales);
     assert_eq!(ra.summary.energy_j, rb.summary.energy_j);
@@ -68,12 +74,13 @@ fn fixed_scales_reproduce_default_scales() {
 fn worst_case_is_the_floor() {
     // The unscheduled worst case has the worst makespan and R_Balance of
     // all schedulers (the Fig. 12 floor).
+    let reg = Registry::new();
     let q = queue(Area::Urban, 80.0, 3);
     let platform = Platform::hmai();
-    let mut worst = by_name("worst", 0).unwrap();
+    let mut worst = build(&reg, "worst", 0);
     let wc = simulate(&q, &platform, worst.as_mut(), SimOptions::default());
     for name in ["minmin", "sa", "ata", "edp", "rr"] {
-        let mut s = by_name(name, 0).unwrap();
+        let mut s = build(&reg, name, 0);
         let r = simulate(&q, &platform, s.as_mut(), SimOptions::default());
         assert!(
             r.summary.makespan_s < wc.summary.makespan_s,
@@ -89,10 +96,11 @@ fn worst_case_is_the_floor() {
 #[test]
 fn ata_leads_baselines_on_ms() {
     // Table 11 / §8.3: ATA is the only baseline optimized toward MS.
+    let reg = Registry::new();
     let q = queue(Area::Urban, 80.0, 4);
     let platform = Platform::hmai();
     let run = |name: &str| {
-        let mut s = by_name(name, 0).unwrap();
+        let mut s = build(&reg, name, 0);
         simulate(&q, &platform, s.as_mut(), SimOptions::default()).summary
     };
     let ata = run("ata");
@@ -106,11 +114,12 @@ fn ata_leads_baselines_on_ms() {
 
 #[test]
 fn larger_platform_reduces_waiting() {
+    let reg = Registry::new();
     let q = queue(Area::Urban, 60.0, 5);
     let small = Platform::from_counts("small", 2, 2, 2);
     let large = Platform::from_counts("large", 8, 8, 6);
-    let mut s1 = by_name("sa", 1).unwrap();
-    let mut s2 = by_name("sa", 1).unwrap();
+    let mut s1 = build(&reg, "sa", 1);
+    let mut s2 = build(&reg, "sa", 1);
     let r_small = simulate(&q, &small, s1.as_mut(), SimOptions::default());
     let r_large = simulate(&q, &large, s2.as_mut(), SimOptions::default());
     assert!(r_large.summary.wait_s < r_small.summary.wait_s);
@@ -118,17 +127,26 @@ fn larger_platform_reduces_waiting() {
 }
 
 #[test]
-fn harness_run_queues_resets_between_queues() {
-    let env = EnvConfig { area: Area::Urban, distances_m: vec![40.0], seed: 6 };
-    let q = harness::make_queues(&env).remove(0);
-    let queues = vec![q.clone(), q]; // identical queues, stateful scheduler
+fn fresh_per_trial_construction_matches_reset_semantics() {
+    // The engine builds a fresh scheduler per trial; the legacy harness
+    // reused one instance with reset() between queues.  For seeded
+    // schedulers both must agree, because reset() re-seeds from scratch.
+    let reg = Registry::new();
+    let q = queue(Area::Urban, 40.0, 6);
     let platform = Platform::hmai();
-    // A stateful scheduler (random) must produce identical summaries on
-    // identical queues thanks to reset().
-    let mut s = by_name("random", 11).unwrap();
-    let rs = harness::run_queues(&queues, &platform, s.as_mut(), SimOptions::default());
-    assert_eq!(rs[0].summary.energy_j, rs[1].summary.energy_j);
-    assert_eq!(rs[0].summary.tasks_met, rs[1].summary.tasks_met);
+    for name in ["random", "ga", "sa", "rr"] {
+        // Legacy style: one instance, reset between identical queues.
+        let mut reused = build(&reg, name, 11);
+        let r1 = simulate(&q, &platform, reused.as_mut(), SimOptions::default());
+        reused.reset();
+        let r2 = simulate(&q, &platform, reused.as_mut(), SimOptions::default());
+        // Engine style: fresh instance per queue.
+        let mut fresh = build(&reg, name, 11);
+        let r3 = simulate(&q, &platform, fresh.as_mut(), SimOptions::default());
+        assert_eq!(r1.summary.energy_j, r2.summary.energy_j, "{name} reset");
+        assert_eq!(r1.summary.energy_j, r3.summary.energy_j, "{name} fresh");
+        assert_eq!(r1.summary.tasks_met, r3.summary.tasks_met, "{name} fresh");
+    }
 }
 
 #[test]
@@ -143,22 +161,24 @@ fn highway_queues_have_no_reverse_tasks() {
 #[test]
 fn stm_rate_is_monotone_in_deadline_slack() {
     // Scaling every safety time up can only improve STMRate.
+    let reg = Registry::new();
     let mut q = queue(Area::Urban, 60.0, 8);
     let platform = Platform::hmai();
-    let mut s = by_name("rr", 0).unwrap();
+    let mut s = build(&reg, "rr", 0);
     let base = simulate(&q, &platform, s.as_mut(), SimOptions::default());
     for t in q.tasks.iter_mut() {
         t.safety_time_s *= 3.0;
     }
-    let mut s2 = by_name("rr", 0).unwrap();
+    let mut s2 = build(&reg, "rr", 0);
     let relaxed = simulate(&q, &platform, s2.as_mut(), SimOptions::default());
     assert!(relaxed.summary.stm_rate() >= base.summary.stm_rate());
 }
 
 #[test]
 fn scheduler_trait_objects_are_nameable() {
-    for name in BASELINES {
-        let s: Box<dyn Scheduler> = by_name(name, 0).unwrap();
+    let reg = Registry::new();
+    for name in baseline_names() {
+        let s: Box<dyn Scheduler> = build(&reg, name, 0);
         assert!(!s.name().is_empty());
     }
 }

@@ -190,6 +190,7 @@ fn allocation_search_soundness_random() {
 /// platforms and random bursts, for every constructible scheduler.
 #[test]
 fn schedulers_in_range_on_random_platforms() {
+    let reg = hmai::sched::Registry::new();
     let mut rng = Rng::new(0xdead);
     for trial in 0..15 {
         let platform = random_platform(&mut rng);
@@ -202,7 +203,7 @@ fn schedulers_in_range_on_random_platforms() {
             })
             .collect();
         for name in ["minmin", "ata", "edp", "ga", "sa", "worst", "rr", "random"] {
-            let mut s = hmai::sched::by_name(name, trial).unwrap();
+            let mut s = reg.build_by_name(name, trial).unwrap();
             let a = s.schedule_batch(&burst, &state);
             assert_eq!(a.len(), burst.len(), "{name}");
             assert!(a.iter().all(|&i| i < platform.len()), "{name} out of range");

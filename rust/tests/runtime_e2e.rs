@@ -3,20 +3,28 @@
 //! independent pure-rust re-implementation of the Q-network math, and the
 //! FlexAI train/checkpoint/serve cycle is exercised through PJRT.
 //!
-//! These tests require `make artifacts`.
+//! These tests require `make artifacts` (and the `pjrt` build feature);
+//! without either they skip with a message instead of failing.
 
 use std::sync::Arc;
 
-use hmai::config::EnvConfig;
+use hmai::env::taskgen::DeadlineMode;
 use hmai::env::Area;
-use hmai::harness;
+use hmai::plan::queue_for;
 use hmai::platform::Platform;
 use hmai::runtime::{Params, Runtime, TrainBatch};
 use hmai::sched::flexai::{checkpoint, FlexAI, FlexAIConfig};
 use hmai::sim::{simulate, SimOptions};
 
-fn rt() -> Arc<Runtime> {
-    Arc::new(Runtime::load_default().expect("run `make artifacts` first"))
+/// Skip (with a message) when PJRT artifacts are unavailable.
+fn rt() -> Option<Arc<Runtime>> {
+    match Runtime::load_default() {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("skipping runtime e2e test: {e:#}");
+            None
+        }
+    }
 }
 
 /// Independent rust reference of the Q-network forward pass:
@@ -44,7 +52,7 @@ fn reference_forward(params: &Params, x: &[f32], meta: &hmai::runtime::Meta) -> 
 
 #[test]
 fn compiled_qnet_matches_rust_reference() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let params = rt.init_params(11).unwrap();
     // A few structured states, not just noise.
     let mut states: Vec<Vec<f32>> = Vec::new();
@@ -71,7 +79,7 @@ fn compiled_qnet_matches_rust_reference() {
 fn train_step_matches_sgd_direction() {
     // After one compiled train step on a batch whose TD target exceeds
     // Q(s,a), Q(s,a) must move toward the target (plain SGD property).
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let params = rt.init_params(3).unwrap();
     let targ = params.clone();
     let mut batch = TrainBatch::zeros(&rt.meta);
@@ -102,7 +110,7 @@ fn train_step_matches_sgd_direction() {
 fn gamma_zero_done_batch_converges_to_reward() {
     // With done=1 everywhere the TD target is exactly r; repeated steps on
     // the same batch must drive Q(s,a) to r.
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let mut params = rt.init_params(5).unwrap();
     let targ = params.clone();
     let mut batch = TrainBatch::zeros(&rt.meta);
@@ -132,9 +140,8 @@ fn gamma_zero_done_batch_converges_to_reward() {
 
 #[test]
 fn trained_agent_roundtrips_through_checkpoint_identically() {
-    let rt = rt();
-    let env = EnvConfig { area: Area::Urban, distances_m: vec![40.0], seed: 21 };
-    let queue = harness::make_queues(&env).remove(0);
+    let Some(rt) = rt() else { return };
+    let queue = queue_for(Area::Urban, 40.0, 0, DeadlineMode::Rss, 21);
     let platform = Platform::hmai();
 
     // Short in-process training.
@@ -163,9 +170,8 @@ fn trained_agent_roundtrips_through_checkpoint_identically() {
 
 #[test]
 fn flexai_safety_shield_improves_or_preserves_stm_rate() {
-    let rt = rt();
-    let env = EnvConfig { area: Area::Urban, distances_m: vec![50.0], seed: 33 };
-    let queue = harness::make_queues(&env).remove(0);
+    let Some(rt) = rt() else { return };
+    let queue = queue_for(Area::Urban, 50.0, 0, DeadlineMode::Rss, 33);
     let platform = Platform::hmai();
     let run = |shield: bool| {
         let cfg = FlexAIConfig { seed: 33, safety_shield: shield, ..Default::default() };

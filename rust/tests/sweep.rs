@@ -1,0 +1,155 @@
+//! The determinism and registry contracts of the typed sweep API:
+//! parallel `Engine` output is bit-identical to sequential execution, and
+//! the scheduler registry round-trips every canonical name and alias.
+
+use hmai::engine::Engine;
+use hmai::env::taskgen::DeadlineMode;
+use hmai::env::Area;
+use hmai::metrics::summary::SweepSummary;
+use hmai::plan::ExperimentPlan;
+use hmai::sched::{Registry, SchedulerSpec, SCHEDULERS};
+use hmai::sim::SimOptions;
+
+/// A sweep touching every axis: 2 areas × 2 distances × 2 deadline
+/// regimes × 2 platforms × 4 schedulers (incl. every seeded one) = 64
+/// trials — small routes so the whole matrix stays fast.
+fn wide_plan() -> ExperimentPlan {
+    ExperimentPlan::new()
+        .areas([Area::Urban, Area::Highway])
+        .distances([40.0, 60.0])
+        .deadlines([DeadlineMode::Rss, DeadlineMode::FrameBudget])
+        .platforms(["hmai", "2,2,2"])
+        .schedulers([
+            SchedulerSpec::MinMin,
+            SchedulerSpec::Ga,
+            SchedulerSpec::Sa,
+            SchedulerSpec::Random,
+        ])
+        .seed(42)
+}
+
+#[test]
+fn parallel_engine_is_bit_identical_to_sequential() {
+    let reg = Registry::new();
+    let plan = wide_plan();
+    let (seq, seq_sweep) = Engine::new(&reg).jobs(1).sweep(&plan).unwrap();
+    for jobs in [2, 4] {
+        let (par, par_sweep) = Engine::new(&reg).jobs(jobs).sweep(&plan).unwrap();
+        assert_eq!(seq.len(), par.len(), "jobs={jobs}");
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.trial.id, b.trial.id);
+            let (x, y) = (&a.summary, &b.summary);
+            assert_eq!(x.scheduler, y.scheduler);
+            assert_eq!(x.platform, y.platform);
+            assert_eq!(x.tasks, y.tasks, "trial {}", a.trial.id);
+            assert_eq!(x.tasks_met, y.tasks_met, "trial {}", a.trial.id);
+            // Bit-exact floating-point equality, not epsilon comparison.
+            for (fa, fb, field) in [
+                (x.energy_j, y.energy_j, "energy_j"),
+                (x.makespan_s, y.makespan_s, "makespan_s"),
+                (x.wait_s, y.wait_s, "wait_s"),
+                (x.compute_s, y.compute_s, "compute_s"),
+                (x.r_balance, y.r_balance, "r_balance"),
+                (x.ms_total, y.ms_total, "ms_total"),
+                (x.gvalue, y.gvalue, "gvalue"),
+                (x.mean_response_s, y.mean_response_s, "mean_response_s"),
+                (x.max_response_s, y.max_response_s, "max_response_s"),
+            ] {
+                assert_eq!(
+                    fa.to_bits(),
+                    fb.to_bits(),
+                    "trial {} field {field}: {fa} vs {fb} (jobs={jobs})",
+                    a.trial.id
+                );
+            }
+        }
+        assert_eq!(
+            seq_sweep.fingerprint(),
+            par_sweep.fingerprint(),
+            "sweep fingerprint drifted at jobs={jobs}"
+        );
+    }
+}
+
+#[test]
+fn engine_rerun_is_bit_identical() {
+    // Same plan, same registry, run twice: identical fingerprints (no
+    // hidden global state in schedulers or queue generation).
+    let reg = Registry::new();
+    let plan = ExperimentPlan::new()
+        .distances([50.0])
+        .schedulers([SchedulerSpec::Sa, SchedulerSpec::Random])
+        .seed(9);
+    let (_, a) = Engine::new(&reg).jobs(2).sweep(&plan).unwrap();
+    let (_, b) = Engine::new(&reg).jobs(2).sweep(&plan).unwrap();
+    assert_eq!(a.fingerprint(), b.fingerprint());
+}
+
+#[test]
+fn record_tasks_identical_across_jobs() {
+    let reg = Registry::new();
+    let plan = ExperimentPlan::new()
+        .distances([40.0, 50.0])
+        .schedulers([SchedulerSpec::RoundRobin, SchedulerSpec::MinMin])
+        .seed(4);
+    let run = |jobs| {
+        Engine::new(&reg)
+            .jobs(jobs)
+            .sim_options(SimOptions { record_tasks: true })
+            .run(&plan)
+            .unwrap()
+    };
+    let (seq, par) = (run(1), run(3));
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.records.len(), b.records.len());
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.task_id, rb.task_id);
+            assert_eq!(ra.accel, rb.accel, "trial {} task {}", a.trial.id, ra.task_id);
+            assert_eq!(ra.finish_s.to_bits(), rb.finish_s.to_bits());
+        }
+    }
+}
+
+#[test]
+fn registry_round_trips_every_name_and_alias() {
+    let reg = Registry::new();
+    for info in SCHEDULERS {
+        for name in std::iter::once(&info.canonical).chain(info.aliases) {
+            let spec = SchedulerSpec::parse(name)
+                .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert_eq!(spec.canonical(), info.canonical, "{name}");
+            if info.canonical == "flexai" {
+                // Registered only via harness::registry; the base registry
+                // must fail with a clear pointer, not a panic.
+                let err = reg.build(&spec, 1).unwrap_err();
+                assert!(format!("{err:#}").contains("PJRT"), "{err:#}");
+            } else {
+                let s = reg.build(&spec, 1).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+                assert_eq!(s.name(), info.display, "{name}");
+            }
+        }
+    }
+    // Unknown names error (never panic) and name the known set.
+    let err = reg.build_by_name("definitely-not-a-scheduler", 0).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown scheduler"), "{msg}");
+    assert!(msg.contains("minmin"), "{msg}");
+}
+
+#[test]
+fn sweep_summary_groups_follow_trial_order() {
+    let reg = Registry::new();
+    let plan = ExperimentPlan::new()
+        .distances([40.0, 60.0])
+        .schedulers([SchedulerSpec::MinMin, SchedulerSpec::Worst])
+        .seed(2);
+    let (results, sweep) = Engine::new(&reg).jobs(2).sweep(&plan).unwrap();
+    assert_eq!(results.len(), 4);
+    assert_eq!(sweep.groups.len(), 2, "one group per scheduler");
+    assert_eq!(sweep.groups[0].key.scheduler, "Min-Min");
+    assert_eq!(sweep.groups[1].key.scheduler, "WorstCase");
+    assert_eq!(sweep.total_runs(), 4);
+    // Rebuilding the summary from the ordered results is idempotent.
+    let again = SweepSummary::from_trial_results(&results);
+    assert_eq!(again.fingerprint(), sweep.fingerprint());
+}
