@@ -6,10 +6,14 @@
 //!
 //! The whole comparison is one `ExperimentPlan` (FlexAI + the Fig. 12
 //! baselines) executed by the `Engine` — pass `--jobs N` to run the
-//! schedulers' probe trials in parallel.
+//! schedulers' probe trials in parallel.  `--scenario <name>` drives the
+//! route through a scenario-library archetype (`env::scenario`: e.g.
+//! night-rain's degraded camera rates or sensor-dropout's mid-route
+//! camera blackout) instead of the plain `--area` route.
 //!
 //!     cargo run --release --example drive_route -- --dist 400 \
-//!         [--ckpt checkpoints/flexai_ub.json] [--area ub] [--seed 42] [--jobs 4]
+//!         [--ckpt checkpoints/flexai_ub.json] [--area ub | --scenario night-rain] \
+//!         [--seed 42] [--jobs 4]
 
 use hmai::config::ExperimentConfig;
 use hmai::engine::{Engine, TrialResult};
@@ -45,24 +49,34 @@ fn main() -> anyhow::Result<()> {
         .sim_options(SimOptions { record_tasks: true })
         .run(&plan)?;
 
-    let v = cfg.env.area.max_velocity_ms();
     println!(
-        "route: {:.0} m ({}), {} tasks; brake event at {brake_at:.0} m, v = {v:.1} m/s",
+        "route: {:.0} m, {} tasks; brake event at {brake_at:.0} m",
         cfg.env.distances_m[0],
-        cfg.env.area.name(),
         results[0].summary.tasks
     );
 
     let mut table = Table::new([
-        "Scheduler", "STMRate", "T_wait (ms)", "T_sched (ms)", "T_compute (ms)",
+        "Scheduler", "Scenario", "STMRate", "T_wait (ms)", "T_sched (ms)", "T_compute (ms)",
         "Braking dist (m)", "Safe (<250 m)",
     ]);
     for r in &results {
-        let rec = probe(r, brake_at / v);
+        // Map the brake point to the trial's own clock: a library
+        // archetype walks its legs at their own speeds, so the probe
+        // lands in the correct leg of a composite route.
+        let (t_probe, area) = match &r.trial.scenario.archetype {
+            Some(arch) => arch.at_distance(r.trial.scenario.distance_m, brake_at),
+            None => {
+                let area = r.trial.scenario.area;
+                (brake_at / area.max_velocity_ms(), area)
+            }
+        };
+        let v = area.max_velocity_ms();
+        let rec = probe(r, t_probe);
         let bd = BrakingBreakdown::new(rec.wait_s, r.sched_per_task_s(), rec.compute_s);
         let dist = braking_distance_m(v, &bd);
         table.row([
             r.summary.scheduler.clone(),
+            r.trial.scenario.scenario_name(),
             pct(r.summary.stm_rate()),
             f2(bd.t_wait * 1e3),
             f2(bd.t_schedule * 1e3),

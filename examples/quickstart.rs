@@ -6,6 +6,10 @@
 //! path) — and executes it on the `Engine`, printing the §6 metrics side
 //! by side.  Without `make artifacts` the FlexAI rows are skipped.
 //!
+//! Beyond the single urban route shown here, `plan.scenarios([...])`
+//! sweeps the scenario-variability library (`env::scenario`) — see
+//! `--example scenario_tour` for the full archetype catalogue.
+//!
 //!     make artifacts && cargo run --release --example quickstart
 
 use hmai::config::ExperimentConfig;

@@ -1,0 +1,82 @@
+//! Tour of the scenario-variability library: every archetype — named route
+//! archetypes (urban-rush, highway-cruise, night-rain at degraded camera
+//! rates, mid-route sensor-dropout, multi-area composites) and the §7
+//! camera-rig variants (12/20/30 cameras) — compiled down to the concrete
+//! `RouteParams`/`Segment` timeline, then swept by every registered
+//! scheduler through the typed `ExperimentPlan`/`Engine` API.
+//!
+//! The same library drives `hmai schedule --scenario <name|all>`,
+//! `hmai env --scenario all`, `hmai braking --scenario all` and
+//! `cargo bench --bench bench_scenarios`.
+//!
+//!     cargo run --release --example scenario_tour -- \
+//!         [--dist 300] [--seed 42] [--jobs 4] [--scenario urban-rush,night-rain]
+//!
+//! Without `make artifacts`, FlexAI is skipped and the tour covers the
+//! remaining registered schedulers.
+
+use hmai::config::ExperimentConfig;
+use hmai::engine::Engine;
+use hmai::env::scenario;
+use hmai::env::taskgen::DeadlineMode;
+use hmai::plan::ExperimentPlan;
+use hmai::sched::SchedulerSpec;
+use hmai::util::cli::Args;
+use hmai::util::table::{f1, f2, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let dist = args.get_f64("dist", 300.0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let jobs = args.get_usize("jobs", 0)?;
+    let names: Vec<String> = match args.get("scenario") {
+        None => scenario::names(),
+        Some(s) if s.eq_ignore_ascii_case("all") => scenario::names(),
+        Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+    };
+
+    // 1. Compile each archetype and show what it turned into: legs,
+    //    camera rig, rate scale, dropout windows, and the resulting
+    //    task-queue shape (the archetype → RouteParams/Segment pipeline).
+    println!("scenario library ({} archetypes selected):\n", names.len());
+    let mut t = Table::new([
+        "Scenario", "Description", "Legs", "Cameras", "Hz x", "Tasks", "Tasks/s",
+    ]);
+    for name in &names {
+        let arch = scenario::find(name)?;
+        let q = arch.queue_for(dist, 0, DeadlineMode::Rss, seed);
+        let legs: Vec<String> =
+            arch.legs.iter().map(|l| l.area.name().to_string()).collect();
+        t.row([
+            arch.name.clone(),
+            arch.help.to_string(),
+            legs.join("+"),
+            arch.rig.total().to_string(),
+            f2(arch.hz_scale),
+            q.len().to_string(),
+            f1(q.len() as f64 / q.route_duration_s),
+        ]);
+    }
+    t.print();
+
+    // 2. Sweep the selected archetypes with every registered scheduler
+    //    (FlexAI rides along when the PJRT runtime is available).
+    let registry = hmai::harness::registry(&ExperimentConfig::default());
+    let mut schedulers: Vec<SchedulerSpec> = Vec::new();
+    match hmai::harness::load_runtime() {
+        Ok(_) => schedulers.push(SchedulerSpec::FlexAI { checkpoint: None }),
+        Err(e) => eprintln!("note: FlexAI skipped ({e:#})"),
+    }
+    schedulers.extend(hmai::harness::registered_non_flexai_specs(&registry));
+
+    let plan = ExperimentPlan::new()
+        .scenarios(names)
+        .distances([dist])
+        .schedulers(schedulers)
+        .seed(seed);
+    println!("\nsweeping {} trials (jobs = {jobs})...", plan.len());
+    let (_, sweep) = Engine::new(&registry).jobs(jobs).sweep(&plan)?;
+    println!("\nper-scenario breakdown:");
+    hmai::reports::sweep_table(&sweep).print();
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Scenario-variability sweep: every library archetype × every registered
+//! scheduler through the `Engine`, printing per-archetype queue statistics
+//! and the per-scenario breakdown table.  FlexAI joins the sweep when the
+//! PJRT artifacts are available (same checkpoint resolution as fig12);
+//! otherwise the sweep covers the remaining registered schedulers.
+//!
+//! Set HMAI_BENCH_SCALE to resize routes, HMAI_BENCH_JOBS to pin workers.
+
+#[path = "common.rs"]
+mod common;
+
+use hmai::engine::Engine;
+use hmai::env::scenario;
+use hmai::env::taskgen::DeadlineMode;
+use hmai::env::Area;
+use hmai::plan::ExperimentPlan;
+use hmai::sched::SchedulerSpec;
+use hmai::util::bench::section;
+use hmai::util::table::{f1, f2, Table};
+
+fn main() {
+    let dist = 300.0 * (common::scale() / 0.2).max(0.2);
+
+    section(&format!("scenario library — queue statistics at {dist:.0} m"));
+    let mut t = Table::new(["Scenario", "Legs", "Cameras", "Hz x", "Dropouts", "Tasks", "Tasks/s"]);
+    for arch in scenario::library() {
+        let q = arch.queue_for(dist, 0, DeadlineMode::Rss, 42);
+        t.row([
+            arch.name.clone(),
+            arch.legs.len().to_string(),
+            arch.rig.total().to_string(),
+            f2(arch.hz_scale),
+            arch.dropouts.len().to_string(),
+            q.len().to_string(),
+            f1(q.len() as f64 / q.route_duration_s),
+        ]);
+    }
+    t.print();
+
+    // Every registered scheduler sweeps the whole library.  FlexAI's
+    // factory is registered but needs artifacts: include it only when a
+    // runtime resolves, like the fig12/fig14 benches.
+    let reg = common::registry();
+    let mut schedulers: Vec<SchedulerSpec> = Vec::new();
+    match common::flexai_spec(Area::Urban) {
+        Ok(spec) => schedulers.push(spec),
+        Err(e) => eprintln!("[bench] FlexAI unavailable, remaining schedulers only: {e:#}"),
+    }
+    schedulers.extend(hmai::harness::registered_non_flexai_specs(&reg));
+
+    let plan = ExperimentPlan::new()
+        .all_scenarios()
+        .distances([dist])
+        .schedulers(schedulers)
+        .seed(42);
+    section(&format!(
+        "scenario × scheduler sweep ({} archetypes × {} schedulers = {} trials)",
+        scenario::names().len(),
+        plan.len() / scenario::names().len(),
+        plan.len()
+    ));
+    let t0 = std::time::Instant::now();
+    let (results, sweep) = Engine::new(&reg)
+        .jobs(common::jobs())
+        .sweep(&plan)
+        .expect("sweep runs");
+    println!("{} trials in {:.1} s", results.len(), t0.elapsed().as_secs_f64());
+    hmai::reports::sweep_table(&sweep).print();
+
+    // Shape: one sweep row per (scheduler, archetype) and a stable,
+    // jobs-invariant fingerprint (the tests pin jobs-invariance; here we
+    // print it so regressions are visible in bench logs).
+    assert_eq!(sweep.total_runs(), results.len());
+    println!("\nsweep fingerprint: {:016x}", sweep.fingerprint());
+    println!("bench_scenarios OK");
+}

@@ -236,27 +236,14 @@ pub fn task_cost(accel: AccelKind, kind: ModelKind) -> TaskCost {
     c
 }
 
-lazy_static::lazy_static! {
-    /// Cached 3x3 cost matrix [accel][model] — the scheduler hot path reads
-    /// this; never recomputed per decision.
-    static ref COST_MATRIX: Vec<((AccelKind, ModelKind), TaskCost)> = {
-        let mut v = Vec::new();
-        for a in ALL_ACCELS {
-            for m in ALL_MODELS {
-                v.push(((a, m), task_cost(a, m)));
-            }
-        }
-        v
-    };
-}
-
-/// Cached lookup of `task_cost` (hot path).
+/// Cached lookup of `task_cost` (hot path): a 3x3 matrix indexed by
+/// `(accel.index(), kind.index())`, built once — O(1) per decision instead
+/// of recomputing the cycle model.
 pub fn cost(accel: AccelKind, kind: ModelKind) -> TaskCost {
-    COST_MATRIX
-        .iter()
-        .find(|((a, m), _)| *a == accel && *m == kind)
-        .map(|(_, c)| *c)
-        .expect("cost matrix covers all pairs")
+    static COST_MATRIX: std::sync::OnceLock<[[TaskCost; 3]; 3]> = std::sync::OnceLock::new();
+    let matrix =
+        COST_MATRIX.get_or_init(|| ALL_ACCELS.map(|a| ALL_MODELS.map(|m| task_cost(a, m))));
+    matrix[accel.index()][kind.index()]
 }
 
 #[cfg(test)]

@@ -72,6 +72,9 @@ pub struct ExperimentConfig {
     pub checkpoint: String,
     /// Deadline regime for generated task queues.
     pub deadline: DeadlineMode,
+    /// Scenario-library archetype names to sweep (empty = the plain
+    /// area/distance axis).  CLI: `--scenario <name[,name...]|all>`.
+    pub scenarios: Vec<String>,
     /// Engine worker threads (0 = all cores, 1 = sequential).
     pub jobs: usize,
     pub env: EnvConfig,
@@ -86,6 +89,7 @@ impl Default for ExperimentConfig {
             scheduler: "flexai".into(),
             checkpoint: String::new(),
             deadline: DeadlineMode::Rss,
+            scenarios: Vec::new(),
             jobs: 1,
             env: EnvConfig::default(),
             train: TrainConfig::default(),
@@ -118,15 +122,20 @@ impl ExperimentConfig {
     }
 
     /// The single-scheduler/single-platform sweep this config describes:
-    /// the configured area, distance list, deadline regime and seed.
+    /// the configured area (or scenario-library archetypes), distance
+    /// list, deadline regime and seed.
     pub fn plan(&self) -> Result<ExperimentPlan> {
-        Ok(ExperimentPlan::new()
+        let mut plan = ExperimentPlan::new()
             .area(self.env.area)
             .distances(self.env.distances_m.iter().copied())
             .deadline(self.deadline)
             .platform(self.platform.clone())
             .scheduler(self.scheduler_spec()?)
-            .seed(self.env.seed))
+            .seed(self.env.seed);
+        if !self.scenarios.is_empty() {
+            plan = plan.scenarios(self.scenarios.iter().cloned());
+        }
+        Ok(plan)
     }
 
     /// Load from a JSON file.
@@ -157,6 +166,14 @@ impl ExperimentConfig {
                         .context("deadline: expected rss|frame")?
                 }
                 "jobs" => self.jobs = v.as_usize().context("jobs")?,
+                "scenarios" => {
+                    self.scenarios = v
+                        .as_arr()
+                        .context("scenarios")?
+                        .iter()
+                        .filter_map(|x| x.as_str().map(str::to_string))
+                        .collect();
+                }
                 "area" => {
                     self.env.area = Area::parse(v.as_str().context("area")?)
                         .context("area: expected ub|uhw|hw")?
@@ -223,8 +240,19 @@ impl ExperimentConfig {
         if let Some(d) = args.get("deadline") {
             self.deadline = DeadlineMode::parse(d).context("--deadline: expected rss|frame")?;
         }
+        if let Some(s) = args.get("scenario") {
+            self.scenarios = if s.eq_ignore_ascii_case("all") {
+                crate::env::scenario::names()
+            } else {
+                s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
+            };
+            for name in &self.scenarios {
+                crate::env::scenario::find(name).context("--scenario")?;
+            }
+        }
         self.jobs = args.get_usize("jobs", self.jobs)?;
-        if let Some(d) = args.get("dist") {
+        // `--distance` is an alias for `--dist`.
+        if let Some(d) = args.get("dist").or_else(|| args.get("distance")) {
             self.env.distances_m = d
                 .split(',')
                 .map(|x| x.trim().parse::<f64>().context("--dist: bad number"))
@@ -254,6 +282,10 @@ impl ExperimentConfig {
         o.insert("checkpoint", Json::Str(self.checkpoint.clone()));
         o.insert("deadline", Json::Str(self.deadline.name().to_string()));
         o.insert("jobs", Json::Num(self.jobs as f64));
+        o.insert(
+            "scenarios",
+            Json::Arr(self.scenarios.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
         o.insert("area", Json::Str(self.env.area.name().to_lowercase()));
         o.insert("distances_m", Json::array_f64(&self.env.distances_m));
         o.insert("seed", Json::Num(self.env.seed as f64));
@@ -357,6 +389,40 @@ mod tests {
         assert_eq!(trials.len(), 2);
         assert_eq!(trials[0].scheduler, SchedulerSpec::Sa);
         assert_eq!(trials[0].seed, c.env.seed);
+    }
+
+    #[test]
+    fn scenario_flag_expands_and_validates() {
+        let mut c = ExperimentConfig::default();
+        let args = Args::parse(
+            "--scenario urban-rush,night-rain --distance 200".split_whitespace().map(String::from),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.scenarios, vec!["urban-rush".to_string(), "night-rain".to_string()]);
+        assert_eq!(c.env.distances_m, vec![200.0]); // --distance aliases --dist
+        c.scheduler = "minmin".into();
+        let trials = c.plan().unwrap().trials().unwrap();
+        assert_eq!(trials.len(), 2);
+        assert!(trials.iter().all(|t| t.scenario.archetype.is_some()));
+
+        let mut all = ExperimentConfig::default();
+        all.apply_args(&Args::parse(["--scenario".to_string(), "all".to_string()])).unwrap();
+        assert_eq!(all.scenarios, crate::env::scenario::names());
+
+        let mut bad = ExperimentConfig::default();
+        let err = bad
+            .apply_args(&Args::parse(["--scenario".to_string(), "nope".to_string()]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown scenario"), "{err:#}");
+    }
+
+    #[test]
+    fn scenarios_roundtrip_through_json() {
+        let mut c = ExperimentConfig::default();
+        c.scenarios = vec!["night-rain".into(), "cross-country".into()];
+        c.flexai.seed = c.env.seed;
+        let c2 = ExperimentConfig::from_json_text(&c.to_json().to_string()).unwrap();
+        assert_eq!(c, c2);
     }
 
     #[test]

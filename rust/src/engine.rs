@@ -25,8 +25,10 @@ use crate::sim::{simulate, SimOptions, TaskRecord};
 /// depends on.  Trials differing only in scheduler/platform share the
 /// queue instead of regenerating it (route synthesis at full paper scale
 /// is ~200k tasks per queue).
-#[derive(PartialEq, Eq, Hash, Clone, Copy)]
+#[derive(PartialEq, Eq, Hash, Clone)]
 struct QueueKey {
+    /// Library archetype name, when the trial is a scenario-library cell.
+    scenario: Option<String>,
     area: Area,
     distance_bits: u64,
     index: usize,
@@ -37,6 +39,7 @@ struct QueueKey {
 impl QueueKey {
     fn of(trial: &Trial) -> QueueKey {
         QueueKey {
+            scenario: trial.scenario.archetype.as_ref().map(|a| a.name.clone()),
             area: trial.scenario.area,
             distance_bits: trial.scenario.distance_m.to_bits(),
             index: trial.queue_index,
@@ -95,11 +98,13 @@ impl TrialResult {
         }
     }
 
-    /// Aggregation key: scheduler display name × platform × area × deadline.
+    /// Aggregation key: scheduler display name × platform × scenario ×
+    /// area × deadline (scenario is "-" for plain area/distance cells).
     pub fn sweep_key(&self) -> SweepKey {
         SweepKey {
             scheduler: self.summary.scheduler.clone(),
             platform: self.summary.platform.clone(),
+            scenario: self.trial.scenario.scenario_name(),
             area: self.trial.scenario.area.name().to_string(),
             deadline: self.trial.scenario.deadline.name().to_string(),
         }
@@ -301,6 +306,24 @@ mod tests {
             .remove(0);
         assert_eq!(r.records.len() as u64, r.summary.tasks);
         assert!(r.sched_per_task_s() >= 0.0);
+    }
+
+    #[test]
+    fn scenario_plans_run_and_group_per_scenario() {
+        let reg = Registry::new();
+        let plan = ExperimentPlan::new()
+            .scenarios(["urban-rush", "night-rain"])
+            .distances([50.0])
+            .scheduler(SchedulerSpec::RoundRobin)
+            .seed(2);
+        let (results, sweep) = Engine::new(&reg).jobs(2).sweep(&plan).unwrap();
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|r| r.summary.tasks > 0));
+        // One sweep row per archetype (the per-scenario breakdown).
+        assert_eq!(sweep.groups.len(), 2);
+        let scenarios: Vec<&str> =
+            sweep.groups.iter().map(|g| g.key.scenario.as_str()).collect();
+        assert_eq!(scenarios, ["urban-rush", "night-rain"]);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 pub mod camera_hz;
 pub mod objects;
 pub mod route;
+pub mod scenario;
 pub mod taskgen;
 
 /// Driving area (§2.2): urban, undivided-highway, highway.

@@ -69,9 +69,15 @@ impl Route {
         let duration_s = params.distance_m / params.velocity_ms;
         let mut events: Vec<Segment> = Vec::new();
 
-        let n_turns = rng.int_range(0, params.max_times_turn.min(6));
+        // Effective caps scale with the configured maxima (3/5 of max
+        // turns, 3/10 of max reverses): Table 13 defaults (10 / 10) keep
+        // the seed repo's effective caps (6 turns, 3 reverses), so legacy
+        // routes are bit-identical, while scenario-library overrides
+        // (env::scenario `turn_scale` / `reverse_scale`) can raise or
+        // lower the density.
+        let n_turns = rng.int_range(0, params.max_times_turn * 3 / 5);
         let n_revs = if params.area.allows_reverse() {
-            rng.int_range(0, params.max_times_reverse.min(3))
+            rng.int_range(0, params.max_times_reverse * 3 / 10)
         } else {
             0
         };

@@ -1,0 +1,607 @@
+//! Scenario-variability library — the ROADMAP's "as many scenarios as you
+//! can imagine" step.
+//!
+//! A library of named route **archetypes** (rush-hour urban, highway
+//! cruise, multi-area composites, degraded night-rain camera rates,
+//! mid-route sensor dropout/recovery) plus parameterized **camera rigs**
+//! (the 12/20/30-camera variants of §7).  Each archetype *compiles down*
+//! to the existing [`RouteParams`]/`Segment` timeline — one concrete
+//! [`Route`] per leg — and a [`CameraProfile`], so `taskgen` and the
+//! simulator need no semantic changes: the default profile reproduces the
+//! legacy Table 4 queue bit-for-bit.
+//!
+//! Wiring: `plan::ExperimentPlan::scenarios([...])` sweeps archetypes by
+//! name, the CLI exposes `--scenario <name|all>` on `schedule` /
+//! `platform` / `braking` / `env`, and `metrics::summary::SweepKey` /
+//! `reports::sweep_table` carry a per-scenario breakdown column.
+
+use anyhow::{Context, Result};
+
+use super::route::{Route, RouteParams, Segment};
+use super::taskgen::{self, DeadlineMode, Task, TaskQueue};
+use super::{Area, CameraGroup};
+use crate::util::rng::Rng;
+
+/// Cameras per function group, in `ALL_GROUPS` order (FC, FLSC, RLSC,
+/// FRSC, RRSC, RC).  Table 4's 30-camera rig is the default; §7 also
+/// evaluates 20- and 12-camera vehicles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CameraRig {
+    pub counts: [usize; 6],
+}
+
+impl CameraRig {
+    /// Table 4: 11 + 4 + 4 + 4 + 4 + 3 = 30 cameras.
+    pub const fn full30() -> CameraRig {
+        CameraRig { counts: [11, 4, 4, 4, 4, 3] }
+    }
+
+    /// A 20-camera rig (§7): thinner forward array, single rear camera.
+    pub const fn mid20() -> CameraRig {
+        CameraRig { counts: [7, 3, 3, 3, 3, 1] }
+    }
+
+    /// A 12-camera rig (§7): minimal coverage of every function group.
+    pub const fn min12() -> CameraRig {
+        CameraRig { counts: [3, 2, 2, 2, 2, 1] }
+    }
+
+    /// Rig preset for one of the paper's camera counts (12 / 20 / 30).
+    pub fn for_total(total: usize) -> Option<CameraRig> {
+        match total {
+            12 => Some(Self::min12()),
+            20 => Some(Self::mid20()),
+            30 => Some(Self::full30()),
+            _ => None,
+        }
+    }
+
+    /// Cameras in one function group.
+    pub fn count(&self, group: CameraGroup) -> usize {
+        self.counts[group_index(group)]
+    }
+
+    /// Total cameras on the vehicle.
+    pub fn total(&self) -> usize {
+        self.counts.iter().sum()
+    }
+}
+
+impl Default for CameraRig {
+    fn default() -> Self {
+        Self::full30()
+    }
+}
+
+/// Index of a group within `ALL_GROUPS` (and `CameraRig::counts`).
+fn group_index(group: CameraGroup) -> usize {
+    match group {
+        CameraGroup::Fc => 0,
+        CameraGroup::Flsc => 1,
+        CameraGroup::Rlsc => 2,
+        CameraGroup::Frsc => 3,
+        CameraGroup::Rrsc => 4,
+        CameraGroup::Rc => 5,
+    }
+}
+
+/// Camera-side generation knobs threaded through `taskgen`: the rig and a
+/// global frame-rate scale (night-rain degradation — cameras drop to a
+/// fraction of their Camera_HZ rate).  `Default` reproduces the legacy
+/// Table 4 behaviour bit-for-bit (`hz * 1.0` is exact in IEEE 754).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CameraProfile {
+    pub rig: CameraRig,
+    pub hz_scale: f64,
+}
+
+impl Default for CameraProfile {
+    fn default() -> Self {
+        CameraProfile { rig: CameraRig::full30(), hz_scale: 1.0 }
+    }
+}
+
+/// A mid-route sensor-dropout window: cameras of `group` (`None` = every
+/// group) emit no frames while the window is active and resume on
+/// recovery.  Bounds are fractions of the total route duration, so the
+/// same archetype scales to any route distance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Dropout {
+    pub group: Option<CameraGroup>,
+    pub start_frac: f64,
+    pub end_frac: f64,
+}
+
+/// One leg of an archetype's (possibly multi-area) composite route.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LegSpec {
+    pub area: Area,
+    /// Share of the total route distance (normalized over the archetype).
+    pub weight: f64,
+    /// Scale on Table 13's max turn count for this leg.
+    pub turn_scale: f64,
+    /// Scale on Table 13's max reverse count for this leg.
+    pub reverse_scale: f64,
+}
+
+impl LegSpec {
+    pub fn new(area: Area, weight: f64) -> LegSpec {
+        LegSpec { area, weight, turn_scale: 1.0, reverse_scale: 1.0 }
+    }
+}
+
+/// A named scenario archetype: route legs × camera rig × frame-rate scale
+/// × dropout events.  `compile` turns it into concrete per-leg routes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Archetype {
+    /// Library name (CLI `--scenario` value), lowercase.
+    pub name: String,
+    /// One-line description for usage text and the tour example.
+    pub help: &'static str,
+    pub legs: Vec<LegSpec>,
+    pub rig: CameraRig,
+    pub hz_scale: f64,
+    pub dropouts: Vec<Dropout>,
+}
+
+impl Archetype {
+    /// Dominant (highest-weight, earliest on ties) leg area — the sweep
+    /// table's "Area" column for library trials.
+    pub fn primary_area(&self) -> Area {
+        let mut best: Option<LegSpec> = None;
+        for leg in &self.legs {
+            if best.map(|b| leg.weight > b.weight).unwrap_or(true) {
+                best = Some(*leg);
+            }
+        }
+        best.map(|l| l.area).unwrap_or(Area::Urban)
+    }
+
+    /// Compile to concrete per-leg routes for a total distance, consuming
+    /// `rng` — deterministic for a given stream.
+    pub fn compile(&self, distance_m: f64, rng: &mut Rng) -> CompiledScenario {
+        let total_w: f64 = self.legs.iter().map(|l| l.weight).sum::<f64>().max(1e-12);
+        let mut legs = Vec::with_capacity(self.legs.len());
+        let mut offset_s = 0.0;
+        for spec in &self.legs {
+            let mut params = RouteParams::for_area(spec.area, distance_m * spec.weight / total_w);
+            params.max_times_turn = scale_count(params.max_times_turn, spec.turn_scale);
+            params.max_times_reverse = scale_count(params.max_times_reverse, spec.reverse_scale);
+            let route = Route::generate(params, rng);
+            let start_s = offset_s;
+            offset_s += route.duration_s;
+            legs.push(CompiledLeg { start_s, route });
+        }
+        CompiledScenario {
+            name: self.name.clone(),
+            profile: CameraProfile { rig: self.rig, hz_scale: self.hz_scale },
+            dropouts: self.dropouts.clone(),
+            duration_s: offset_s,
+            legs,
+        }
+    }
+
+    /// (composite-clock time, leg area) at route position `at_m` of a
+    /// `distance_m` route: each leg is driven at its own area's cruise
+    /// velocity, matching `Route::generate`'s duration model — so a
+    /// brake point in meters lands in the correct leg of a multi-area
+    /// composite instead of being converted at one global speed.
+    pub fn at_distance(&self, distance_m: f64, at_m: f64) -> (f64, Area) {
+        let total_w: f64 = self.legs.iter().map(|l| l.weight).sum::<f64>().max(1e-12);
+        let mut t = 0.0;
+        let mut remaining = at_m.max(0.0);
+        let mut last_area = self.primary_area();
+        for leg in &self.legs {
+            let d = distance_m * leg.weight / total_w;
+            let v = leg.area.max_velocity_ms();
+            last_area = leg.area;
+            if remaining <= d {
+                return (t + remaining / v, leg.area);
+            }
+            remaining -= d;
+            t += d / v;
+        }
+        (t, last_area)
+    }
+
+    /// Task queue `index` of a distance list, using the same `Rng::fork`
+    /// seed derivation as `plan::queue_for` (skip `index` parent draws,
+    /// fork stream `index`) — so library queues compose into plans with
+    /// the legacy determinism contract.
+    pub fn queue_for(
+        &self,
+        distance_m: f64,
+        index: usize,
+        mode: DeadlineMode,
+        seed: u64,
+    ) -> TaskQueue {
+        let mut rng = Rng::new(seed);
+        for _ in 0..index {
+            rng.next_u64(); // each earlier fork consumed one parent draw
+        }
+        let mut stream = rng.fork(index as u64);
+        self.compile(distance_m, &mut stream).queue(mode)
+    }
+}
+
+fn scale_count(base: usize, scale: f64) -> usize {
+    (base as f64 * scale).round() as usize
+}
+
+/// One compiled leg: a concrete route whose timeline starts at `start_s`
+/// on the composite clock.
+#[derive(Debug, Clone)]
+pub struct CompiledLeg {
+    pub start_s: f64,
+    pub route: Route,
+}
+
+/// A compiled scenario: per-leg routes + camera profile + dropout windows.
+/// `queue` produces the merged task queue through the unchanged `taskgen`.
+#[derive(Debug, Clone)]
+pub struct CompiledScenario {
+    pub name: String,
+    pub profile: CameraProfile,
+    pub dropouts: Vec<Dropout>,
+    pub duration_s: f64,
+    pub legs: Vec<CompiledLeg>,
+}
+
+impl CompiledScenario {
+    /// All scenario segments across legs, with absolute start times.
+    pub fn segments(&self) -> Vec<Segment> {
+        let mut out = Vec::new();
+        for leg in &self.legs {
+            for s in &leg.route.segments {
+                out.push(Segment {
+                    scenario: s.scenario,
+                    start_s: s.start_s + leg.start_s,
+                    duration_s: s.duration_s,
+                });
+            }
+        }
+        out
+    }
+
+    fn dropout_active(&self, group: CameraGroup, t: f64) -> bool {
+        self.dropouts.iter().any(|d| {
+            d.group.map(|g| g == group).unwrap_or(true)
+                && t >= d.start_frac * self.duration_s
+                && t < d.end_frac * self.duration_s
+        })
+    }
+
+    /// Merged task queue under `mode`: each leg generated by the unchanged
+    /// `taskgen` (with this scenario's camera profile), time-offset onto
+    /// the composite clock, dropout-filtered, then re-identified in
+    /// release order.
+    pub fn queue(&self, mode: DeadlineMode) -> TaskQueue {
+        let mut tasks: Vec<(usize, Task)> = Vec::new();
+        for (leg_idx, leg) in self.legs.iter().enumerate() {
+            let q = taskgen::generate_with_profile(&leg.route, mode, self.profile);
+            for mut t in q.tasks {
+                t.release_s += leg.start_s;
+                tasks.push((leg_idx, t));
+            }
+        }
+        tasks.retain(|(_, t)| !self.dropout_active(t.group, t.release_s));
+        // Release order; ties broken by (leg, per-leg id) for determinism.
+        tasks.sort_by(|(la, a), (lb, b)| {
+            a.release_s.total_cmp(&b.release_s).then(la.cmp(lb)).then(a.id.cmp(&b.id))
+        });
+        let mut out: Vec<Task> = tasks.into_iter().map(|(_, t)| t).collect();
+        for (i, t) in out.iter_mut().enumerate() {
+            t.id = i as u32;
+        }
+        TaskQueue { tasks: out, route_duration_s: self.duration_s }
+    }
+}
+
+/// THE scenario library.  Names are stable CLI/API surface; add new
+/// archetypes here and every layer (plan expansion, `--scenario all`,
+/// sweep reports, the fingerprint tests, bench_scenarios, scenario_tour)
+/// picks them up.
+pub fn library() -> Vec<Archetype> {
+    let plain = |name: &str, help: &'static str, legs: Vec<LegSpec>| Archetype {
+        name: name.to_string(),
+        help,
+        legs,
+        rig: CameraRig::full30(),
+        hz_scale: 1.0,
+        dropouts: Vec::new(),
+    };
+    let rush_legs = || {
+        vec![LegSpec {
+            area: Area::Urban,
+            weight: 1.0,
+            turn_scale: 2.0,
+            reverse_scale: 2.0,
+        }]
+    };
+    vec![
+        Archetype {
+            name: "urban-rush".into(),
+            help: "dense urban traffic: double turn/reverse density",
+            legs: rush_legs(),
+            rig: CameraRig::full30(),
+            hz_scale: 1.0,
+            dropouts: Vec::new(),
+        },
+        plain(
+            "highway-cruise",
+            "steady highway cruising, sparse lane changes",
+            vec![LegSpec {
+                area: Area::Highway,
+                weight: 1.0,
+                turn_scale: 0.5,
+                reverse_scale: 0.0,
+            }],
+        ),
+        plain(
+            "suburban-mixed",
+            "half urban, half undivided-highway commute",
+            vec![LegSpec::new(Area::Urban, 0.5), LegSpec::new(Area::UndividedHighway, 0.5)],
+        ),
+        Archetype {
+            name: "night-rain".into(),
+            help: "urban route at half camera rates (degraded visibility)",
+            legs: vec![LegSpec::new(Area::Urban, 1.0)],
+            rig: CameraRig::full30(),
+            hz_scale: 0.5,
+            dropouts: Vec::new(),
+        },
+        Archetype {
+            name: "sensor-dropout".into(),
+            help: "urban route; forward cameras dark for the middle fifth, then recover",
+            legs: vec![LegSpec::new(Area::Urban, 1.0)],
+            rig: CameraRig::full30(),
+            hz_scale: 1.0,
+            dropouts: vec![Dropout {
+                group: Some(CameraGroup::Fc),
+                start_frac: 0.4,
+                end_frac: 0.6,
+            }],
+        },
+        plain(
+            "cross-country",
+            "urban → undivided-highway → highway composite",
+            vec![
+                LegSpec::new(Area::Urban, 0.3),
+                LegSpec::new(Area::UndividedHighway, 0.3),
+                LegSpec::new(Area::Highway, 0.4),
+            ],
+        ),
+        Archetype {
+            name: "urban-rush-20cam".into(),
+            help: "urban-rush on the 20-camera rig (§7)",
+            legs: rush_legs(),
+            rig: CameraRig::mid20(),
+            hz_scale: 1.0,
+            dropouts: Vec::new(),
+        },
+        Archetype {
+            name: "urban-rush-12cam".into(),
+            help: "urban-rush on the 12-camera rig (§7)",
+            legs: rush_legs(),
+            rig: CameraRig::min12(),
+            hz_scale: 1.0,
+            dropouts: Vec::new(),
+        },
+    ]
+}
+
+/// Library archetype names, in library order.
+pub fn names() -> Vec<String> {
+    library().into_iter().map(|a| a.name).collect()
+}
+
+/// Look up an archetype by name (case-insensitive).
+pub fn find(name: &str) -> Result<Archetype> {
+    let lc = name.to_ascii_lowercase();
+    library().into_iter().find(|a| a.name == lc).with_context(|| {
+        format!("unknown scenario '{}' (known: {})", name, names().join(", "))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::Scenario;
+
+    #[test]
+    fn library_names_are_unique_and_findable() {
+        let lib = library();
+        let mut seen = std::collections::BTreeSet::new();
+        for a in &lib {
+            assert!(seen.insert(a.name.clone()), "dup name {}", a.name);
+            assert!(!a.legs.is_empty(), "{} has no legs", a.name);
+            let found = find(&a.name).unwrap();
+            assert_eq!(found.name, a.name);
+            // Case-insensitive.
+            assert_eq!(find(&a.name.to_ascii_uppercase()).unwrap().name, a.name);
+        }
+        let err = find("definitely-not-a-scenario").unwrap_err();
+        assert!(format!("{err:#}").contains("urban-rush"), "{err:#}");
+    }
+
+    #[test]
+    fn rig_presets_total_12_20_30() {
+        assert_eq!(CameraRig::full30().total(), 30);
+        assert_eq!(CameraRig::mid20().total(), 20);
+        assert_eq!(CameraRig::min12().total(), 12);
+        for n in [12, 20, 30] {
+            assert_eq!(CameraRig::for_total(n).unwrap().total(), n);
+        }
+        assert!(CameraRig::for_total(7).is_none());
+        // Rig counts agree with the CameraGroup table for the full rig.
+        for g in crate::env::ALL_GROUPS {
+            assert_eq!(CameraRig::full30().count(g), g.count(), "{g:?}");
+        }
+    }
+
+    #[test]
+    fn default_profile_is_bit_identical_to_legacy_taskgen() {
+        let route = Route::generate(
+            RouteParams::for_area(Area::Urban, 120.0),
+            &mut Rng::new(11),
+        );
+        let legacy = taskgen::generate_with_deadline(&route, DeadlineMode::Rss);
+        let profiled =
+            taskgen::generate_with_profile(&route, DeadlineMode::Rss, CameraProfile::default());
+        assert_eq!(legacy.len(), profiled.len());
+        for (a, b) in legacy.tasks.iter().zip(&profiled.tasks) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.release_s.to_bits(), b.release_s.to_bits());
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.safety_time_s.to_bits(), b.safety_time_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn compile_covers_duration_with_contiguous_segments() {
+        for arch in library() {
+            let c = arch.compile(300.0, &mut Rng::new(3));
+            let legs_total: f64 = c.legs.iter().map(|l| l.route.duration_s).sum();
+            assert!((c.duration_s - legs_total).abs() < 1e-9, "{}", arch.name);
+            let mut t = 0.0;
+            for s in c.segments() {
+                assert!((s.start_s - t).abs() < 1e-6, "{}: gap at {t}", arch.name);
+                t = s.end_s();
+            }
+            assert!((t - c.duration_s).abs() < 1e-6, "{}", arch.name);
+        }
+    }
+
+    #[test]
+    fn queues_are_deterministic_per_seed() {
+        for arch in library() {
+            let a = arch.queue_for(150.0, 2, DeadlineMode::Rss, 9);
+            let b = arch.queue_for(150.0, 2, DeadlineMode::Rss, 9);
+            assert_eq!(a.len(), b.len(), "{}", arch.name);
+            assert!(!a.is_empty(), "{} produced an empty queue", arch.name);
+            for (x, y) in a.tasks.iter().zip(&b.tasks) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.release_s.to_bits(), y.release_s.to_bits());
+                assert_eq!(x.model, y.model);
+            }
+            // Queue ids are the contiguous re-identification.
+            assert!(a.tasks.iter().enumerate().all(|(i, t)| t.id == i as u32));
+            assert!(a.tasks.windows(2).all(|w| w[0].release_s <= w[1].release_s));
+        }
+    }
+
+    #[test]
+    fn night_rain_halves_the_task_rate() {
+        let plain = find("suburban-mixed").unwrap(); // any full-rate urbanish route
+        let rain = find("night-rain").unwrap();
+        let urban = Archetype {
+            name: "urban-plain".into(),
+            help: "",
+            legs: vec![LegSpec::new(Area::Urban, 1.0)],
+            ..plain.clone()
+        };
+        let q_full = urban.queue_for(300.0, 0, DeadlineMode::Rss, 5);
+        let q_rain = rain.queue_for(300.0, 0, DeadlineMode::Rss, 5);
+        let rate = |q: &TaskQueue| q.len() as f64 / q.route_duration_s;
+        let ratio = rate(&q_rain) / rate(&q_full);
+        assert!((0.4..0.62).contains(&ratio), "rate ratio = {ratio}");
+    }
+
+    #[test]
+    fn sensor_dropout_blacks_out_fc_then_recovers() {
+        let arch = find("sensor-dropout").unwrap();
+        let q = arch.queue_for(400.0, 0, DeadlineMode::Rss, 7);
+        let dur = q.route_duration_s;
+        let (w0, w1) = (0.4 * dur, 0.6 * dur);
+        let fc = |lo: f64, hi: f64| {
+            q.tasks
+                .iter()
+                .filter(|t| {
+                    t.group == CameraGroup::Fc && t.release_s >= lo && t.release_s < hi
+                })
+                .count()
+        };
+        assert_eq!(fc(w0, w1), 0, "FC tasks inside the dropout window");
+        assert!(fc(0.0, w0) > 0, "no FC tasks before dropout");
+        assert!(fc(w1, dur) > 0, "FC never recovered");
+        // Other groups keep emitting through the window.
+        assert!(q
+            .tasks
+            .iter()
+            .any(|t| t.group != CameraGroup::Fc && t.release_s >= w0 && t.release_s < w1));
+    }
+
+    #[test]
+    fn smaller_rigs_produce_fewer_tasks() {
+        let q30 = find("urban-rush").unwrap().queue_for(200.0, 0, DeadlineMode::Rss, 4);
+        let q20 = find("urban-rush-20cam").unwrap().queue_for(200.0, 0, DeadlineMode::Rss, 4);
+        let q12 = find("urban-rush-12cam").unwrap().queue_for(200.0, 0, DeadlineMode::Rss, 4);
+        assert!(q30.len() > q20.len(), "{} !> {}", q30.len(), q20.len());
+        assert!(q20.len() > q12.len(), "{} !> {}", q20.len(), q12.len());
+    }
+
+    #[test]
+    fn cross_country_concatenates_all_three_areas() {
+        let arch = find("cross-country").unwrap();
+        assert_eq!(arch.primary_area(), Area::Highway); // dominant 0.4 leg
+        let c = arch.compile(600.0, &mut Rng::new(1));
+        assert_eq!(c.legs.len(), 3);
+        assert_eq!(c.legs[0].route.params.area, Area::Urban);
+        assert_eq!(c.legs[2].route.params.area, Area::Highway);
+        // Legs sit end-to-end on the composite clock.
+        for w in c.legs.windows(2) {
+            assert!((w[1].start_s - (w[0].start_s + w[0].route.duration_s)).abs() < 1e-9);
+        }
+        // The highway leg never reverses.
+        let hw_start = c.legs[2].start_s;
+        let q = c.queue(DeadlineMode::Rss);
+        assert!(q
+            .tasks
+            .iter()
+            .filter(|t| t.release_s >= hw_start)
+            .all(|t| t.scenario != Scenario::Reverse));
+    }
+
+    #[test]
+    fn at_distance_walks_legs_at_their_own_speeds() {
+        let arch = find("cross-country").unwrap();
+        // Leg split of a 1000 m route: 300 m UB, 300 m UHW, 400 m HW.
+        let (t0, a0) = arch.at_distance(1000.0, 0.0);
+        assert_eq!(t0, 0.0);
+        assert_eq!(a0, Area::Urban);
+        let (_, a_mid) = arch.at_distance(1000.0, 450.0);
+        assert_eq!(a_mid, Area::UndividedHighway);
+        let (_, a_end) = arch.at_distance(1000.0, 950.0);
+        assert_eq!(a_end, Area::Highway);
+        // End-of-route time equals the compiled composite duration.
+        let (t_end, _) = arch.at_distance(1000.0, 1000.0);
+        let c = arch.compile(1000.0, &mut Rng::new(2));
+        assert!((t_end - c.duration_s).abs() < 1e-9, "{t_end} vs {}", c.duration_s);
+        // Single-leg archetypes reduce to distance / cruise speed.
+        let urban = find("urban-rush").unwrap();
+        let (t, a) = urban.at_distance(500.0, 250.0);
+        assert_eq!(a, Area::Urban);
+        assert!((t - 250.0 / Area::Urban.max_velocity_ms()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn urban_rush_is_denser_than_plain_urban() {
+        // Doubled turn density must show up in the compiled timeline
+        // (across seeds — any single seed can draw few turns).
+        let rush = find("urban-rush").unwrap();
+        let mut rush_turns = 0usize;
+        let mut plain_turns = 0usize;
+        for seed in 0..10 {
+            let c = rush.compile(1000.0, &mut Rng::new(seed));
+            rush_turns +=
+                c.segments().iter().filter(|s| s.scenario == Scenario::Turn).count();
+            let plain = Route::generate(
+                RouteParams::for_area(Area::Urban, 1000.0),
+                &mut Rng::new(seed),
+            );
+            plain_turns +=
+                plain.segments.iter().filter(|s| s.scenario == Scenario::Turn).count();
+        }
+        assert!(rush_turns > plain_turns, "rush {rush_turns} !> plain {plain_turns}");
+    }
+}

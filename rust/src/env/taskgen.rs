@@ -6,6 +6,7 @@
 
 use super::camera_hz::camera_hz;
 use super::route::Route;
+use super::scenario::CameraProfile;
 use super::{CameraGroup, Scenario, ALL_GROUPS};
 use crate::safety::ms::TaskCategory;
 use crate::safety::rss::safety_time;
@@ -102,12 +103,25 @@ pub fn generate(route: &Route) -> TaskQueue {
 
 /// Generate the task queue for a route with an explicit deadline regime.
 pub fn generate_with_deadline(route: &Route, mode: DeadlineMode) -> TaskQueue {
+    generate_with_profile(route, mode, CameraProfile::default())
+}
+
+/// Generate with an explicit camera profile (scenario library): the rig
+/// sets cameras per group (12/20/30-camera vehicles, §7) and `hz_scale`
+/// uniformly degrades frame rates (night-rain).  The default profile is
+/// bit-identical to `generate_with_deadline` — the frame-clock walk,
+/// YOLO/SSD alternation and deadline rules are unchanged.
+pub fn generate_with_profile(
+    route: &Route,
+    mode: DeadlineMode,
+    profile: CameraProfile,
+) -> TaskQueue {
     let area = route.params.area;
     let mut tasks: Vec<Task> = Vec::new();
     let mut id: u32 = 0;
 
     for group in ALL_GROUPS {
-        for cam_idx in 0..group.count() as u8 {
+        for cam_idx in 0..profile.rig.count(group) as u8 {
             // Walk this camera's frame clock through the route, re-sampling
             // the rate whenever the scenario changes.
             let mut t = 0.0_f64;
@@ -116,7 +130,7 @@ pub fn generate_with_deadline(route: &Route, mode: DeadlineMode) -> TaskQueue {
             let mut det_flip = (cam_idx as u32) % 2 == 0;
             while t < route.duration_s {
                 let scenario = route.scenario_at(t);
-                let hz = camera_hz(area, scenario, group);
+                let hz = camera_hz(area, scenario, group) * profile.hz_scale;
                 if hz <= 0.0 {
                     // Camera idle in this scenario: skip to next segment.
                     let seg_end = route
@@ -258,6 +272,37 @@ mod tests {
         let t = &q.tasks[0];
         assert!(t.amount_gmacs() > 1.0);
         assert!(t.layer_num() >= 11);
+    }
+
+    #[test]
+    fn profile_rig_and_rate_scale_apply() {
+        use crate::env::scenario::{CameraProfile, CameraRig};
+        let route = Route::generate(RouteParams::for_area(Area::Urban, 150.0), &mut Rng::new(9));
+        let full = generate_with_profile(&route, DeadlineMode::Rss, CameraProfile::default());
+        let small = generate_with_profile(
+            &route,
+            DeadlineMode::Rss,
+            CameraProfile { rig: CameraRig::min12(), hz_scale: 1.0 },
+        );
+        assert!(small.len() < full.len() / 2, "{} vs {}", small.len(), full.len());
+        let slow = generate_with_profile(
+            &route,
+            DeadlineMode::Rss,
+            CameraProfile { rig: CameraRig::full30(), hz_scale: 0.5 },
+        );
+        let ratio = slow.len() as f64 / full.len() as f64;
+        assert!((0.4..0.62).contains(&ratio), "ratio = {ratio}");
+        // Frame-budget deadlines see the degraded rate (longer budget).
+        let fb_full = generate_with_profile(&route, DeadlineMode::FrameBudget, CameraProfile::default());
+        let fb_slow = generate_with_profile(
+            &route,
+            DeadlineMode::FrameBudget,
+            CameraProfile { rig: CameraRig::full30(), hz_scale: 0.5 },
+        );
+        let min_st = |q: &TaskQueue| {
+            q.tasks.iter().map(|t| t.safety_time_s).fold(f64::INFINITY, f64::min)
+        };
+        assert!(min_st(&fb_slow) >= min_st(&fb_full));
     }
 
     #[test]

@@ -92,6 +92,18 @@ pub fn registry(cfg: &ExperimentConfig) -> Registry {
     r
 }
 
+/// Specs for every scheduler with a registered factory *except* FlexAI,
+/// which needs a runtime-resolved checkpoint — callers prepend their own
+/// FlexAI spec when the PJRT runtime is available (see bench_scenarios /
+/// scenario_tour).
+pub fn registered_non_flexai_specs(reg: &Registry) -> Vec<SchedulerSpec> {
+    reg.registered()
+        .into_iter()
+        .filter(|n| *n != "flexai")
+        .map(|n| SchedulerSpec::parse(n).expect("registered names parse"))
+        .collect()
+}
+
 /// Result of a FlexAI training run.
 pub struct TrainOutcome {
     pub agent: FlexAI,
@@ -152,6 +164,17 @@ mod tests {
                 msg.contains("artifacts") || msg.contains("pjrt"),
                 "unexpected flexai error: {msg}"
             );
+        }
+    }
+
+    #[test]
+    fn non_flexai_specs_cover_every_registered_baseline() {
+        let reg = registry(&ExperimentConfig::default());
+        let specs = registered_non_flexai_specs(&reg);
+        assert_eq!(specs.len(), reg.registered().len() - 1, "only flexai excluded");
+        for spec in &specs {
+            assert_ne!(spec.canonical(), "flexai");
+            assert!(reg.build(spec, 1).is_ok(), "{}", spec.canonical());
         }
     }
 

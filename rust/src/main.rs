@@ -18,7 +18,7 @@ use anyhow::{Context, Result};
 use hmai::config::ExperimentConfig;
 use hmai::engine::Engine;
 use hmai::env::route::{Route, RouteParams};
-use hmai::env::{taskgen, ALL_SCENARIOS};
+use hmai::env::{scenario, taskgen, ALL_SCENARIOS};
 use hmai::harness;
 use hmai::platform::alloc;
 use hmai::safety::braking::{braking_distance_m, BrakingBreakdown};
@@ -79,7 +79,11 @@ fn usage() -> String {
         ("--ckpt <file>", "FlexAI checkpoint to load".to_string()),
         ("--platform <spec>", "hmai | 13so | 13si | 12mm | \"so,si,mm\"".to_string()),
         ("--area <a>", "ub | uhw | hw".to_string()),
-        ("--dist <m,...>", "route distances in meters".to_string()),
+        (
+            "--scenario <n|all>",
+            format!("scenario library: {}", scenario::names().join(" | ")),
+        ),
+        ("--dist <m,...>", "route distances in meters (alias: --distance)".to_string()),
         ("--deadline <mode>", "rss | frame (deadline regime)".to_string()),
         ("--jobs <n>", "engine worker threads (0 = all cores)".to_string()),
         ("--seed <u64>", "top-level seed".to_string()),
@@ -99,6 +103,20 @@ fn config(args: &Args) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
+/// `schedule`/`braking` default to FlexAI (the paper's headline agent);
+/// when no `--sched` was given and the PJRT runtime is unavailable, fall
+/// back to Min-Min so the CLI — including `schedule --scenario all` —
+/// works out of the box instead of erroring on missing artifacts.
+fn default_sched_fallback(cfg: &mut ExperimentConfig, args: &Args) {
+    if args.get("sched").is_none()
+        && registry::lookup(&cfg.scheduler).map(|i| i.canonical) == Some("flexai")
+        && harness::load_runtime().is_err()
+    {
+        eprintln!("note: FlexAI runtime unavailable — using minmin (pass --sched to override)");
+        cfg.scheduler = "minmin".into();
+    }
+}
+
 fn cmd_report(args: &Args) -> Result<()> {
     let name = args.rest().first().map(String::as_str).unwrap_or("all");
     if name == "all" {
@@ -114,6 +132,9 @@ fn cmd_report(args: &Args) -> Result<()> {
 
 fn cmd_env(args: &Args) -> Result<()> {
     let cfg = config(args)?;
+    if !cfg.scenarios.is_empty() {
+        return cmd_env_scenarios(&cfg);
+    }
     let mut rng = Rng::new(cfg.env.seed);
     let mut t = Table::new([
         "Queue", "Distance (m)", "Duration (s)", "Tasks", "Tasks/s", "YOLO", "SSD", "GOTURN",
@@ -150,6 +171,34 @@ fn cmd_env(args: &Args) -> Result<()> {
         ]);
     }
     println!("area = {}  deadline = {}", cfg.env.area.name(), cfg.deadline.name());
+    t.print();
+    Ok(())
+}
+
+/// `hmai env --scenario <names|all>`: per-archetype queue statistics of
+/// the scenario library (compiled routes, rigs, task rates).
+fn cmd_env_scenarios(cfg: &ExperimentConfig) -> Result<()> {
+    let mut t = Table::new([
+        "Scenario", "Distance (m)", "Duration (s)", "Legs", "Cameras", "Hz x", "Tasks",
+        "Tasks/s",
+    ]);
+    for name in &cfg.scenarios {
+        let arch = scenario::find(name)?;
+        for (i, &d) in cfg.env.distances_m.iter().enumerate() {
+            let q = arch.queue_for(d, i, cfg.deadline, cfg.env.seed);
+            t.row([
+                arch.name.clone(),
+                f1(d),
+                f1(q.route_duration_s),
+                arch.legs.len().to_string(),
+                arch.rig.total().to_string(),
+                f2(arch.hz_scale),
+                q.len().to_string(),
+                f1(q.len() as f64 / q.route_duration_s),
+            ]);
+        }
+    }
+    println!("deadline = {}  seed = {}", cfg.deadline.name(), cfg.env.seed);
     t.print();
     Ok(())
 }
@@ -217,19 +266,21 @@ fn cmd_platform(args: &Args) -> Result<()> {
 }
 
 fn cmd_schedule(args: &Args) -> Result<()> {
-    let cfg = config(args)?;
+    let mut cfg = config(args)?;
+    default_sched_fallback(&mut cfg, args);
     let reg = harness::registry(&cfg);
     let plan = cfg.plan()?;
     let engine = Engine::new(&reg).jobs(cfg.jobs);
     let (results, sweep) = engine.sweep(&plan)?;
 
     let mut t = Table::new([
-        "Queue", "Tasks", "STMRate", "Time (s)", "Wait (s)", "Makespan (s)", "Energy (J)",
-        "R_Balance", "MS/task", "Gvalue", "Sched µs/task",
+        "Scenario", "Queue", "Tasks", "STMRate", "Time (s)", "Wait (s)", "Makespan (s)",
+        "Energy (J)", "R_Balance", "MS/task", "Gvalue", "Sched µs/task",
     ]);
     for r in &results {
         let s = &r.summary;
         t.row([
+            r.trial.scenario.scenario_name(),
             (r.trial.queue_index + 1).to_string(),
             s.tasks.to_string(),
             pct(s.stm_rate()),
@@ -243,16 +294,21 @@ fn cmd_schedule(args: &Args) -> Result<()> {
             f2(r.sched_per_task_s() * 1e6),
         ]);
     }
+    let place = if cfg.scenarios.is_empty() {
+        format!("area = {}", cfg.env.area.name())
+    } else {
+        format!("scenarios = {}", cfg.scenarios.join(","))
+    };
     println!(
-        "scheduler = {}  platform = {}  area = {}  deadline = {}  jobs = {}",
+        "scheduler = {}  platform = {}  {}  deadline = {}  jobs = {}",
         cfg.scheduler,
         cfg.platform,
-        cfg.env.area.name(),
+        place,
         cfg.deadline.name(),
         cfg.jobs
     );
     t.print();
-    println!("\nsweep summary:");
+    println!("\nsweep summary (per-scenario breakdown):");
     hmai::reports::sweep_table(&sweep).print();
     Ok(())
 }
@@ -292,48 +348,67 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Fig. 14: a brake event at `--brake-at` meters (default 1000 m); the
-/// braking distance follows from the probe task's wait/compute plus the
-/// measured scheduler runtime, CAN latency and mechanical lag.
+/// Fig. 14: a brake event at `--brake-at` meters (default: half the
+/// route, so the probe always exists); the braking distance follows from
+/// the probe task's wait/compute plus the measured scheduler runtime, CAN
+/// latency and mechanical lag.  With `--scenario <names|all>` the probe
+/// runs once per archetype and prints a per-scenario breakdown.
 fn cmd_braking(args: &Args) -> Result<()> {
     let mut cfg = config(args)?;
+    default_sched_fallback(&mut cfg, args);
     if cfg.env.distances_m.len() > 1 {
         cfg.env.distances_m.truncate(1);
     }
-    let brake_at_m = args.get_f64("brake-at", 1000.0)?;
+    let brake_at_m = args.get_f64("brake-at", cfg.env.distances_m[0] * 0.5)?;
 
     let reg = harness::registry(&cfg);
     let plan = cfg.plan()?;
-    let r = Engine::new(&reg)
+    let results = Engine::new(&reg)
         .jobs(cfg.jobs)
         .sim_options(SimOptions { record_tasks: true })
-        .run(&plan)?
-        .remove(0);
-
-    let v = cfg.env.area.max_velocity_ms();
-    let t_probe = brake_at_m / v;
-    let rec = probe_task(&r.records, t_probe)
-        .context("route too short for the brake point (increase --dist)")?;
-    let bd = BrakingBreakdown::new(rec.wait_s, r.sched_per_task_s(), rec.compute_s);
-    let dist = braking_distance_m(v, &bd);
+        .run(&plan)?;
+    anyhow::ensure!(!results.is_empty(), "plan expanded to no trials");
 
     println!(
-        "scheduler = {}  area = {}  brake point = {brake_at_m} m  v = {:.1} m/s",
-        cfg.scheduler,
-        cfg.env.area.name(),
-        v
+        "scheduler = {}  brake point = {brake_at_m} m of {} m",
+        cfg.scheduler, cfg.env.distances_m[0]
     );
-    let mut t = Table::new(["T_wait (ms)", "T_sched (ms)", "T_compute (ms)", "T_data (ms)",
-        "T_mech (ms)", "Total (ms)", "Braking distance (m)"]);
-    t.row([
-        f2(bd.t_wait * 1e3),
-        f2(bd.t_schedule * 1e3),
-        f2(bd.t_compute * 1e3),
-        f2(bd.t_data * 1e3),
-        f2(bd.t_mech * 1e3),
-        f2(bd.total() * 1e3),
-        f2(dist),
+    let mut t = Table::new([
+        "Scenario", "Area", "v (m/s)", "T_wait (ms)", "T_sched (ms)", "T_compute (ms)",
+        "T_data (ms)", "T_mech (ms)", "Total (ms)", "Braking distance (m)",
     ]);
+    for r in &results {
+        // Probe at the brake point on the trial's own cruise clock: a
+        // library archetype walks its legs at their own speeds, so the
+        // brake point lands in the correct leg of a composite route.
+        let (t_probe, area) = match &r.trial.scenario.archetype {
+            Some(arch) => arch.at_distance(r.trial.scenario.distance_m, brake_at_m),
+            None => {
+                let area = r.trial.scenario.area;
+                (brake_at_m / area.max_velocity_ms(), area)
+            }
+        };
+        let v = area.max_velocity_ms();
+        let rec = probe_task(&r.records, t_probe).with_context(|| {
+            format!(
+                "trial {}: route too short for the brake point (increase --dist)",
+                r.trial.label()
+            )
+        })?;
+        let bd = BrakingBreakdown::new(rec.wait_s, r.sched_per_task_s(), rec.compute_s);
+        t.row([
+            r.trial.scenario.scenario_name(),
+            area.name().to_string(),
+            f1(v),
+            f2(bd.t_wait * 1e3),
+            f2(bd.t_schedule * 1e3),
+            f2(bd.t_compute * 1e3),
+            f2(bd.t_data * 1e3),
+            f2(bd.t_mech * 1e3),
+            f2(bd.total() * 1e3),
+            f2(braking_distance_m(v, &bd)),
+        ]);
+    }
     t.print();
     Ok(())
 }
@@ -363,6 +438,34 @@ mod tests {
             assert!(u.contains(info.canonical), "{} missing from usage", info.canonical);
         }
         assert!(u.contains("--jobs"), "--jobs missing from usage");
+    }
+
+    #[test]
+    fn usage_lists_every_scenario_archetype() {
+        let u = usage();
+        assert!(u.contains("--scenario"), "--scenario missing from usage");
+        for name in hmai::env::scenario::names() {
+            assert!(u.contains(&name), "{name} missing from usage");
+        }
+    }
+
+    #[test]
+    fn scenario_schedule_runs_through_engine() {
+        // A miniature `hmai schedule --scenario all --distance 50`.
+        let args = Args::parse(
+            ["schedule", "--sched", "rr", "--scenario", "all", "--distance", "50"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = config(&args).unwrap();
+        let reg = harness::registry(&cfg);
+        let (results, sweep) = Engine::new(&reg)
+            .jobs(2)
+            .sweep(&cfg.plan().unwrap())
+            .unwrap();
+        let n = hmai::env::scenario::names().len();
+        assert_eq!(results.len(), n);
+        assert_eq!(sweep.groups.len(), n, "one sweep row per archetype");
     }
 
     #[test]

@@ -142,10 +142,13 @@ impl RunSummary {
 
 /// Grouping key of a sweep row: everything a trial can vary besides the
 /// queue replicate (distance index and seed aggregate *within* a row).
+/// `scenario` is the library archetype name ("-" for plain area cells) —
+/// the per-scenario breakdown dimension of the sweep table.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct SweepKey {
     pub scheduler: String,
     pub platform: String,
+    pub scenario: String,
     pub area: String,
     pub deadline: String,
 }
@@ -242,6 +245,7 @@ impl SweepSummary {
                 .scheduler
                 .bytes()
                 .chain(g.key.platform.bytes())
+                .chain(g.key.scenario.bytes())
                 .chain(g.key.area.bytes())
                 .chain(g.key.deadline.bytes())
             {
@@ -263,6 +267,7 @@ impl SweepSummary {
                     Json::from_pairs(vec![
                         ("scheduler", Json::Str(g.key.scheduler.clone())),
                         ("platform", Json::Str(g.key.platform.clone())),
+                        ("scenario", Json::Str(g.key.scenario.clone())),
                         ("area", Json::Str(g.key.area.clone())),
                         ("deadline", Json::Str(g.key.deadline.clone())),
                         ("trials", Json::Num(g.trials() as f64)),
@@ -306,9 +311,24 @@ mod tests {
         SweepKey {
             scheduler: sched.to_string(),
             platform: "p".to_string(),
+            scenario: "-".to_string(),
             area: "UB".to_string(),
             deadline: "rss".to_string(),
         }
+    }
+
+    #[test]
+    fn scenario_splits_sweep_groups_and_fingerprints() {
+        let mut a = SweepSummary::new();
+        a.push(key("x"), summary());
+        let mut b = SweepSummary::new();
+        b.push(SweepKey { scenario: "night-rain".into(), ..key("x") }, summary());
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        // Different scenarios never merge into one row.
+        let mut c = SweepSummary::new();
+        c.push(key("x"), summary());
+        c.push(SweepKey { scenario: "night-rain".into(), ..key("x") }, summary());
+        assert_eq!(c.groups.len(), 2);
     }
 
     #[test]

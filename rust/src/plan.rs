@@ -16,18 +16,33 @@
 use anyhow::{Context, Result};
 
 use crate::env::route::{Route, RouteParams};
+use crate::env::scenario::{self, Archetype};
 use crate::env::taskgen::{self, DeadlineMode, TaskQueue};
 use crate::env::Area;
 use crate::platform::Platform;
 use crate::sched::SchedulerSpec;
 use crate::util::rng::Rng;
 
-/// One (area, route distance, deadline regime) cell of a sweep.
+/// One scenario cell of a sweep: either a plain (area, distance, deadline)
+/// cell — the legacy axis — or a library archetype
+/// ([`env::scenario`](crate::env::scenario)) resolved at plan expansion,
+/// with `area` set to the archetype's primary area for reporting.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
+    /// Library archetype, when this cell came from
+    /// `ExperimentPlan::scenarios` (None = plain area/distance cell).
+    pub archetype: Option<Archetype>,
     pub area: Area,
     pub distance_m: f64,
     pub deadline: DeadlineMode,
+}
+
+impl Scenario {
+    /// Sweep-table label: the archetype name for library cells, "-" for
+    /// plain area/distance cells.
+    pub fn scenario_name(&self) -> String {
+        self.archetype.as_ref().map(|a| a.name.clone()).unwrap_or_else(|| "-".to_string())
+    }
 }
 
 /// Build the task queue for queue-index `index` of a distance list, using
@@ -71,15 +86,25 @@ pub struct Trial {
 }
 
 impl Trial {
-    /// Regenerate this trial's task queue (deterministic).
+    /// Regenerate this trial's task queue (deterministic).  Library
+    /// scenarios compile their archetype with the same fork-derived stream
+    /// the legacy path uses, so both axes share one determinism contract.
     pub fn queue(&self) -> TaskQueue {
-        queue_for(
-            self.scenario.area,
-            self.scenario.distance_m,
-            self.queue_index,
-            self.scenario.deadline,
-            self.seed,
-        )
+        match &self.scenario.archetype {
+            Some(arch) => arch.queue_for(
+                self.scenario.distance_m,
+                self.queue_index,
+                self.scenario.deadline,
+                self.seed,
+            ),
+            None => queue_for(
+                self.scenario.area,
+                self.scenario.distance_m,
+                self.queue_index,
+                self.scenario.deadline,
+                self.seed,
+            ),
+        }
     }
 
     /// Resolve this trial's platform.
@@ -90,10 +115,16 @@ impl Trial {
 
     /// Short human label (progress lines).
     pub fn label(&self) -> String {
+        let place = self
+            .scenario
+            .archetype
+            .as_ref()
+            .map(|a| a.name.clone())
+            .unwrap_or_else(|| self.scenario.area.name().to_string());
         format!(
             "{}/{}@{}m/{}/q{}/seed{}",
             self.scheduler.canonical(),
-            self.scenario.area.name(),
+            place,
             self.scenario.distance_m,
             self.scenario.deadline.name(),
             self.queue_index + 1,
@@ -105,9 +136,14 @@ impl Trial {
 /// Builder for a sweep.  Defaults: urban area, the paper's five eval
 /// distances, RSS deadlines, the HMAI platform, seed 42, no schedulers
 /// (callers must pick at least one).
+///
+/// `scenarios` sweeps library archetypes by name; when non-empty it
+/// replaces the plain `areas` axis in the cross product (each archetype
+/// carries its own area mix).
 #[derive(Debug, Clone)]
 pub struct ExperimentPlan {
     areas: Vec<Area>,
+    scenarios: Vec<String>,
     distances_m: Vec<f64>,
     deadlines: Vec<DeadlineMode>,
     platforms: Vec<String>,
@@ -125,6 +161,7 @@ impl ExperimentPlan {
     pub fn new() -> ExperimentPlan {
         ExperimentPlan {
             areas: vec![Area::Urban],
+            scenarios: Vec::new(),
             distances_m: vec![1000.0, 1250.0, 1500.0, 1750.0, 2000.0],
             deadlines: vec![DeadlineMode::Rss],
             platforms: vec!["hmai".to_string()],
@@ -140,6 +177,23 @@ impl ExperimentPlan {
 
     pub fn area(self, area: Area) -> Self {
         self.areas([area])
+    }
+
+    /// Sweep library scenario archetypes by name (resolved and validated
+    /// at `trials()`).  Non-empty replaces the `areas` axis.
+    pub fn scenarios<I, S>(mut self, names: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.scenarios = names.into_iter().map(Into::into).collect();
+        self
+    }
+
+    /// Sweep every archetype in the scenario library.
+    pub fn all_scenarios(self) -> Self {
+        let names = scenario::names();
+        self.scenarios(names)
     }
 
     pub fn distances<I: IntoIterator<Item = f64>>(mut self, d: I) -> Self {
@@ -206,10 +260,12 @@ impl ExperimentPlan {
 
     /// Number of trials this plan expands to.
     pub fn len(&self) -> usize {
+        let scenario_axis =
+            if self.scenarios.is_empty() { self.areas.len() } else { self.scenarios.len() };
         self.seeds.len()
             * self.platforms.len()
             * self.schedulers.len()
-            * self.areas.len()
+            * scenario_axis
             * self.deadlines.len()
             * self.distances_m.len()
     }
@@ -218,27 +274,47 @@ impl ExperimentPlan {
         self.len() == 0
     }
 
-    /// Expand into trials (validates schedulers and platform specs).
+    /// Expand into trials (validates schedulers, platform specs and
+    /// library scenario names).
     ///
-    /// Expansion order — seeds ▸ platforms ▸ schedulers ▸ areas ▸
-    /// deadlines ▸ distances — is part of the API: trial ids, and therefore
-    /// result ordering and `SweepSummary` row order, follow it.
+    /// Expansion order — seeds ▸ platforms ▸ schedulers ▸ scenarios (or
+    /// areas) ▸ deadlines ▸ distances — is part of the API: trial ids, and
+    /// therefore result ordering and `SweepSummary` row order, follow it.
     pub fn trials(&self) -> Result<Vec<Trial>> {
         anyhow::ensure!(!self.schedulers.is_empty(), "plan has no schedulers");
         anyhow::ensure!(!self.distances_m.is_empty(), "plan has no route distances");
         for p in &self.platforms {
             Platform::parse(p).with_context(|| format!("plan: unknown platform '{p}'"))?;
         }
+        let archetypes: Vec<Archetype> =
+            self.scenarios.iter().map(|n| scenario::find(n)).collect::<Result<_>>()?;
+        // The scenario axis: each library archetype, or each plain area.
+        let cells: Vec<(Option<Archetype>, Area)> = if archetypes.is_empty() {
+            self.areas.iter().map(|&a| (None, a)).collect()
+        } else {
+            archetypes
+                .into_iter()
+                .map(|a| {
+                    let area = a.primary_area();
+                    (Some(a), area)
+                })
+                .collect()
+        };
         let mut out = Vec::with_capacity(self.len());
         for &seed in &self.seeds {
             for platform in &self.platforms {
                 for sched in &self.schedulers {
-                    for &area in &self.areas {
+                    for (archetype, area) in &cells {
                         for &deadline in &self.deadlines {
                             for (qi, &distance_m) in self.distances_m.iter().enumerate() {
                                 out.push(Trial {
                                     id: out.len(),
-                                    scenario: Scenario { area, distance_m, deadline },
+                                    scenario: Scenario {
+                                        archetype: archetype.clone(),
+                                        area: *area,
+                                        distance_m,
+                                        deadline,
+                                    },
                                     queue_index: qi,
                                     platform: platform.clone(),
                                     scheduler: sched.clone(),
@@ -316,7 +392,7 @@ mod tests {
             let a = t.queue();
             let b = t.queue();
             assert_eq!(a.len(), b.len());
-            assert!(a.len() > 0);
+            assert!(!a.is_empty());
         }
         // Different queue indices produce different queues.
         assert_ne!(trials[0].queue().len(), trials[1].queue().len());
@@ -336,6 +412,64 @@ mod tests {
         assert_eq!(ta[0].seed, 7, "replicate 0 is the base seed");
         let uniq: std::collections::BTreeSet<u64> = seeds_a.iter().copied().collect();
         assert_eq!(uniq.len(), 3, "replicate seeds are distinct");
+    }
+
+    #[test]
+    fn scenario_axis_replaces_areas_in_the_cross_product() {
+        let plan = ExperimentPlan::new()
+            .areas([Area::Urban, Area::Highway]) // overridden by scenarios
+            .scenarios(["urban-rush", "night-rain", "cross-country"])
+            .distances([100.0, 200.0])
+            .schedulers([SchedulerSpec::MinMin, SchedulerSpec::RoundRobin])
+            .seed(1);
+        assert_eq!(plan.len(), 3 * 2 * 2);
+        let trials = plan.trials().unwrap();
+        assert_eq!(trials.len(), plan.len());
+        assert!(trials.iter().all(|t| t.scenario.archetype.is_some()));
+        assert_eq!(trials[0].scenario.scenario_name(), "urban-rush");
+        // The archetype's primary area labels the cell.
+        let cc = trials
+            .iter()
+            .find(|t| t.scenario.scenario_name() == "cross-country")
+            .unwrap();
+        assert_eq!(cc.scenario.area, Area::Highway);
+        assert!(cc.label().contains("cross-country"));
+    }
+
+    #[test]
+    fn scenario_trial_queues_are_deterministic() {
+        let plan = ExperimentPlan::new()
+            .scenarios(["sensor-dropout"])
+            .distances([120.0])
+            .scheduler(SchedulerSpec::MinMin)
+            .seed(8);
+        let t = &plan.trials().unwrap()[0];
+        let (a, b) = (t.queue(), t.queue());
+        assert!(!a.is_empty());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.release_s.to_bits(), y.release_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn all_scenarios_covers_the_library() {
+        let plan = ExperimentPlan::new()
+            .all_scenarios()
+            .distances([50.0])
+            .scheduler(SchedulerSpec::RoundRobin);
+        let trials = plan.trials().unwrap();
+        assert_eq!(trials.len(), crate::env::scenario::names().len());
+    }
+
+    #[test]
+    fn unknown_scenario_is_rejected() {
+        let err = ExperimentPlan::new()
+            .scenarios(["not-a-scenario"])
+            .scheduler(SchedulerSpec::MinMin)
+            .trials()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown scenario"), "{err:#}");
     }
 
     #[test]

@@ -80,7 +80,9 @@ impl Platform {
             _ => {}
         }
         let parts: Vec<usize> = s.split(',').filter_map(|p| p.trim().parse().ok()).collect();
-        if parts.len() == 3 {
+        // A platform needs at least one accelerator: "0,0,0" would make
+        // every scheduler's assignment unsatisfiable and panic the sim.
+        if parts.len() == 3 && parts.iter().sum::<usize>() > 0 {
             Some(Platform::from_counts(
                 &format!("custom({},{},{})", parts[0], parts[1], parts[2]),
                 parts[0],
@@ -143,5 +145,8 @@ mod tests {
         assert_eq!(Platform::parse("hmai").unwrap().len(), 11);
         assert_eq!(Platform::parse("2,1,1").unwrap().len(), 4);
         assert!(Platform::parse("nonsense").is_none());
+        // Zero-accelerator platforms are rejected at the parse boundary
+        // (schedulers additionally fall back gracefully when handed one).
+        assert!(Platform::parse("0,0,0").is_none());
     }
 }

@@ -16,17 +16,20 @@ use crate::workload::accuracy::TABLE3;
 use crate::workload::{model, ALL_MODELS};
 
 /// Render a sweep (`Engine` output) as the Fig. 12-style comparison table:
-/// one row per scheduler × platform × area × deadline group, aggregate
-/// columns over that group's queues/seeds.
+/// one row per scheduler × platform × scenario × area × deadline group,
+/// aggregate columns over that group's queues/seeds.  The Scenario column
+/// is the per-archetype breakdown of the scenario-variability library
+/// ("-" for plain area/distance sweeps).
 pub fn sweep_table(s: &SweepSummary) -> Table {
     let mut t = Table::new([
-        "Scheduler", "Platform", "Area", "DL", "Queues", "Time M (s)", "Energy M (J)",
-        "R_Balance", "MS/task", "STMRate",
+        "Scheduler", "Platform", "Scenario", "Area", "DL", "Queues", "Time M (s)",
+        "Energy M (J)", "R_Balance", "MS/task", "STMRate",
     ]);
     for g in &s.groups {
         t.row([
             g.key.scheduler.clone(),
             g.key.platform.clone(),
+            g.key.scenario.clone(),
             g.key.area.clone(),
             g.key.deadline.clone(),
             g.trials().to_string(),
@@ -318,6 +321,7 @@ mod tests {
             SweepKey {
                 scheduler: "Min-Min".into(),
                 platform: "HMAI".into(),
+                scenario: "night-rain".into(),
                 area: "UB".into(),
                 deadline: "rss".into(),
             },
@@ -326,6 +330,8 @@ mod tests {
         let s = sweep_table(&sw).render();
         assert!(s.contains("Min-Min"), "{s}");
         assert!(s.contains("STMRate"), "{s}");
+        assert!(s.contains("Scenario"), "{s}");
+        assert!(s.contains("night-rain"), "{s}");
     }
 
     #[test]

@@ -27,6 +27,12 @@ impl Scheduler for MinMin {
     }
 
     fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
+        if state.is_empty() {
+            // Degenerate zero-accelerator platform: there is no completion
+            // time to minimize — fall back to accel 0 for every task
+            // instead of panicking mid-sweep.
+            return vec![0; tasks.len()];
+        }
         let mut rolling = state.clone();
         let mut out = vec![usize::MAX; tasks.len()];
         let mut unassigned: Vec<usize> = (0..tasks.len()).collect();
@@ -42,7 +48,9 @@ impl Scheduler for MinMin {
                     }
                 }
             }
-            let (pos, accel, _) = best.expect("non-empty platform");
+            let Some((pos, accel, _)) = best else {
+                break; // unreachable: platform non-empty is checked above
+            };
             let ti = unassigned.swap_remove(pos);
             rolling.apply(&tasks[ti], accel);
             out[ti] = accel;
@@ -88,6 +96,17 @@ mod tests {
         );
         assert!(mm.summary.makespan_s < wc.summary.makespan_s);
         assert!(mm.summary.wait_s < wc.summary.wait_s);
+    }
+
+    #[test]
+    fn zero_accelerator_platform_does_not_panic() {
+        // Regression: the global-min search used to unwrap an empty min.
+        let platform = Platform::from_counts("empty", 0, 0, 0);
+        let state = ShadowState::new(&platform, NormScales::unit());
+        let q = crate::sched::tests::small_queue(1);
+        let burst: Vec<_> = q.tasks.iter().take(5).cloned().collect();
+        let a = MinMin::new().schedule_batch(&burst, &state);
+        assert_eq!(a, vec![0; 5]);
     }
 
     #[test]

@@ -54,6 +54,12 @@ impl Scheduler for Sa {
 
     fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
         let n = state.len();
+        if n == 0 {
+            // Degenerate zero-accelerator platform: the greedy start (and
+            // every neighbor draw) would index an empty accelerator list —
+            // fall back to accel 0 for every task instead of panicking.
+            return vec![0; tasks.len()];
+        }
         // Greedy earliest-completion start.
         let mut current = sequential(tasks, state, |task, s| {
             let mut best = 0;
@@ -155,6 +161,17 @@ mod tests {
             sa.summary.wait_s,
             ga.summary.wait_s
         );
+    }
+
+    #[test]
+    fn zero_accelerator_platform_does_not_panic() {
+        // Regression: the greedy start used to roll an empty platform.
+        let platform = Platform::from_counts("empty", 0, 0, 0);
+        let state = ShadowState::new(&platform, NormScales::unit());
+        let q = small_queue(1);
+        let burst: Vec<_> = q.tasks.iter().take(4).cloned().collect();
+        let a = Sa::new(7).schedule_batch(&burst, &state);
+        assert_eq!(a, vec![0; 4]);
     }
 
     #[test]

@@ -80,11 +80,18 @@ impl SimResult {
 /// First detection (non-tracker) task released at or after `t_probe` —
 /// the Fig. 14 braking-probe selection, shared by the CLI, the braking
 /// bench and the drive_route example.
+///
+/// `records` is sorted by release time (the simulator emits records in
+/// release order), so the probe binary-searches the release boundary
+/// (`partition_point`) and takes the first detection record after it —
+/// O(log n + gap) per probe instead of the old full `filter().min_by()`
+/// pass.  Behavior matches the old scan exactly, including ties: releases
+/// are sorted, so the first non-tracker at or past the boundary has the
+/// minimal release, and `Iterator::min_by` returns the *first* of equal
+/// minima — also the first in iteration order.
 pub fn first_detection_after(records: &[TaskRecord], t_probe: f64) -> Option<&TaskRecord> {
-    records
-        .iter()
-        .filter(|r| r.release_s >= t_probe && !r.model.is_tracker())
-        .min_by(|a, b| a.release_s.total_cmp(&b.release_s))
+    let start = records.partition_point(|r| r.release_s < t_probe);
+    records[start..].iter().find(|r| !r.model.is_tracker())
 }
 
 /// Run `queue` on `platform` under `scheduler`.
@@ -250,6 +257,64 @@ mod tests {
         assert_eq!(a.summary.energy_j, b.summary.energy_j);
         assert_eq!(a.summary.makespan_s, b.summary.makespan_s);
         assert_eq!(a.summary.tasks_met, b.summary.tasks_met);
+    }
+
+    /// The old O(n) probe selection, kept as the reference implementation.
+    fn linear_scan_probe(records: &[TaskRecord], t_probe: f64) -> Option<&TaskRecord> {
+        records
+            .iter()
+            .filter(|r| r.release_s >= t_probe && !r.model.is_tracker())
+            .min_by(|a, b| a.release_s.total_cmp(&b.release_s))
+    }
+
+    #[test]
+    fn probe_matches_old_linear_scan() {
+        let q = queue(80.0, 6);
+        let mut s = RoundRobin::new();
+        let r = simulate(&q, &Platform::hmai(), &mut s, SimOptions { record_tasks: true });
+        let end = q.route_duration_s;
+        for k in 0..50 {
+            let t_probe = end * k as f64 / 40.0; // includes probes past the end
+            let fast = first_detection_after(&r.records, t_probe).map(|x| x.task_id);
+            let slow = linear_scan_probe(&r.records, t_probe).map(|x| x.task_id);
+            assert_eq!(fast, slow, "probe at t={t_probe}");
+        }
+    }
+
+    #[test]
+    fn probe_tie_behavior_matches_min_by() {
+        // Synthetic release-tie run: detection / tracker records sharing a
+        // release time.  min_by keeps the FIRST equal minimum, so the
+        // probe must return the first detection of the tie run.
+        let mk = |id: u32, rel: f64, model: ModelKind| TaskRecord {
+            task_id: id,
+            model,
+            accel: 0,
+            release_s: rel,
+            start_s: rel,
+            finish_s: rel + 0.01,
+            wait_s: 0.0,
+            compute_s: 0.01,
+            response_s: 0.01,
+            energy_j: 0.1,
+            ms: 0.5,
+            safety_time_s: 0.1,
+            met_deadline: true,
+        };
+        let recs = vec![
+            mk(0, 1.0, ModelKind::Yolo),
+            mk(1, 2.0, ModelKind::Goturn),
+            mk(2, 2.0, ModelKind::Yolo),
+            mk(3, 2.0, ModelKind::Ssd),
+            mk(4, 3.0, ModelKind::Yolo),
+        ];
+        for t_probe in [0.0, 1.5, 2.0, 2.5, 3.0, 9.0] {
+            let fast = first_detection_after(&recs, t_probe).map(|x| x.task_id);
+            let slow = linear_scan_probe(&recs, t_probe).map(|x| x.task_id);
+            assert_eq!(fast, slow, "t_probe={t_probe}");
+        }
+        assert_eq!(first_detection_after(&recs, 2.0).unwrap().task_id, 2);
+        assert!(first_detection_after(&recs, 9.0).is_none());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! pay for logging when the level is off (guarded by an atomic load).
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -17,9 +18,7 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
-lazy_static::lazy_static! {
-    static ref START: Instant = Instant::now();
-}
+static START: OnceLock<Instant> = OnceLock::new();
 
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
@@ -47,7 +46,7 @@ pub fn log(level: Level, target: &str, msg: std::fmt::Arguments) {
     if !enabled(level) {
         return;
     }
-    let t = START.elapsed().as_secs_f64();
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
     let tag = match level {
         Level::Error => "ERROR",
         Level::Warn => "WARN ",

@@ -8,6 +8,8 @@ pub mod layer;
 pub mod ssd;
 pub mod yolo;
 
+use std::sync::OnceLock;
+
 pub use layer::{Layer, LayerKind};
 
 /// The three CNN task types in the driving-automation workload mix.
@@ -90,18 +92,15 @@ impl Model {
     }
 }
 
-lazy_static::lazy_static! {
-    static ref YOLO: Model = Model::build(ModelKind::Yolo);
-    static ref SSD: Model = Model::build(ModelKind::Ssd);
-    static ref GOTURN: Model = Model::build(ModelKind::Goturn);
-}
-
 /// Cached model lookup (layer lists are immutable after construction).
 pub fn model(kind: ModelKind) -> &'static Model {
+    static YOLO: OnceLock<Model> = OnceLock::new();
+    static SSD: OnceLock<Model> = OnceLock::new();
+    static GOTURN: OnceLock<Model> = OnceLock::new();
     match kind {
-        ModelKind::Yolo => &YOLO,
-        ModelKind::Ssd => &SSD,
-        ModelKind::Goturn => &GOTURN,
+        ModelKind::Yolo => YOLO.get_or_init(|| Model::build(ModelKind::Yolo)),
+        ModelKind::Ssd => SSD.get_or_init(|| Model::build(ModelKind::Ssd)),
+        ModelKind::Goturn => GOTURN.get_or_init(|| Model::build(ModelKind::Goturn)),
     }
 }
 

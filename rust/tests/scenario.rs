@@ -1,0 +1,80 @@
+//! Golden determinism contract of the scenario-variability library,
+//! mirroring tests/sweep.rs: for every archetype, the same seed yields a
+//! bit-identical `SweepSummary::fingerprint` across `--jobs 1` and
+//! `--jobs N`, across reruns, and distinct archetypes never collide into
+//! one sweep row.
+
+use hmai::engine::Engine;
+use hmai::env::scenario;
+use hmai::plan::ExperimentPlan;
+use hmai::sched::{Registry, SchedulerSpec};
+
+fn plan_for(name: &str) -> ExperimentPlan {
+    ExperimentPlan::new()
+        .scenarios([name.to_string()])
+        .distances([50.0, 75.0])
+        .schedulers([SchedulerSpec::MinMin, SchedulerSpec::Random])
+        .seed(42)
+}
+
+#[test]
+fn every_archetype_fingerprint_is_jobs_invariant() {
+    let reg = Registry::new();
+    for name in scenario::names() {
+        let plan = plan_for(&name);
+        let (seq_results, seq) = Engine::new(&reg).jobs(1).sweep(&plan).unwrap();
+        assert!(seq_results.iter().all(|r| r.summary.tasks > 0), "{name}: empty trial");
+        for jobs in [2, 4] {
+            let (_, par) = Engine::new(&reg).jobs(jobs).sweep(&plan).unwrap();
+            assert_eq!(
+                seq.fingerprint(),
+                par.fingerprint(),
+                "{name}: fingerprint drifted at jobs={jobs}"
+            );
+        }
+        // Rerun-stable: no hidden state in archetype compilation.
+        let (_, again) = Engine::new(&reg).jobs(1).sweep(&plan).unwrap();
+        assert_eq!(seq.fingerprint(), again.fingerprint(), "{name}: rerun drifted");
+    }
+}
+
+#[test]
+fn archetypes_have_distinct_fingerprints() {
+    // Different archetypes produce different workloads — their sweep
+    // fingerprints must differ (a collision would mean the scenario axis
+    // is not actually reaching queue generation).
+    let reg = Registry::new();
+    let mut prints = std::collections::BTreeMap::new();
+    for name in scenario::names() {
+        let plan = ExperimentPlan::new()
+            .scenarios([name.clone()])
+            .distances([60.0])
+            .scheduler(SchedulerSpec::MinMin)
+            .seed(7);
+        let (_, sweep) = Engine::new(&reg).jobs(1).sweep(&plan).unwrap();
+        if let Some(other) = prints.insert(sweep.fingerprint(), name.clone()) {
+            panic!("{name} and {other} share a fingerprint");
+        }
+    }
+}
+
+#[test]
+fn scenario_cross_product_keeps_one_row_per_archetype() {
+    let reg = Registry::new();
+    let plan = ExperimentPlan::new()
+        .all_scenarios()
+        .distances([50.0])
+        .scheduler(SchedulerSpec::RoundRobin)
+        .seed(3);
+    let (results, sweep) = Engine::new(&reg).jobs(3).sweep(&plan).unwrap();
+    let names = scenario::names();
+    assert_eq!(results.len(), names.len());
+    assert_eq!(sweep.groups.len(), names.len());
+    let rows: Vec<String> = sweep.groups.iter().map(|g| g.key.scenario.clone()).collect();
+    assert_eq!(rows, names, "sweep rows follow library order");
+    // The rendered sweep table carries the per-scenario breakdown.
+    let rendered = hmai::reports::sweep_table(&sweep).render();
+    for name in &names {
+        assert!(rendered.contains(name.as_str()), "{name} missing:\n{rendered}");
+    }
+}
