@@ -9,11 +9,14 @@
 //! schedulers' probe trials in parallel.  `--scenario <name>` drives the
 //! route through a scenario-library archetype (`env::scenario`: e.g.
 //! night-rain's degraded camera rates or sensor-dropout's mid-route
-//! camera blackout) instead of the plain `--area` route.
+//! camera blackout) instead of the plain `--area` route, and `--events`
+//! applies the archetype's platform events (try
+//! `--scenario accel-failure --events` to watch braking distances move
+//! when an accelerator dies mid-route).
 //!
 //!     cargo run --release --example drive_route -- --dist 400 \
 //!         [--ckpt checkpoints/flexai_ub.json] [--area ub | --scenario night-rain] \
-//!         [--seed 42] [--jobs 4]
+//!         [--events] [--seed 42] [--jobs 4]
 
 use hmai::config::ExperimentConfig;
 use hmai::engine::{Engine, TrialResult};
@@ -46,6 +49,7 @@ fn main() -> anyhow::Result<()> {
     let registry = harness::registry(&cfg);
     let results = Engine::new(&registry)
         .jobs(cfg.jobs)
+        .events(cfg.events)
         .sim_options(SimOptions { record_tasks: true })
         .run(&plan)?;
 

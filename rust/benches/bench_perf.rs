@@ -2,6 +2,12 @@
 //! decision pipeline (featurize → PJRT Q-inference → pick), the DQN train
 //! step, the discrete-event engine, and the baseline schedulers'
 //! per-decision costs.
+//!
+//! The engine-primitive and baseline-scheduler sections run with or
+//! without the PJRT runtime; the compiled-executable sections join when
+//! the artifacts are available.  Results are also written to
+//! `BENCH_PERF.json` (via `util::json`) so CI can track a machine-readable
+//! perf trajectory.
 
 #[path = "common.rs"]
 mod common;
@@ -16,23 +22,19 @@ use hmai::sched::flexai::featurize::featurize;
 use hmai::sched::{Registry, Scheduler};
 use hmai::sim::{simulate, ShadowState, SimOptions};
 use hmai::util::bench::{section, Bencher};
+use hmai::util::json::Json;
+
+const JSON_PATH: &str = "BENCH_PERF.json";
 
 fn main() -> anyhow::Result<()> {
-    let rt = match common::runtime() {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("[bench] skipping perf bench: {e:#}");
-            return Ok(());
-        }
-    };
     let platform = Platform::hmai();
     let queue = queue_for(Area::Urban, 60.0, 0, DeadlineMode::Rss, 1);
     let scales = NormScales::for_queue(&queue, &platform);
-    let mut state = ShadowState::new(&platform, scales);
+    let state = ShadowState::new(&platform, scales);
     let task = queue.tasks[0].clone();
+    let mut b = Bencher::new();
 
     section("L3 engine primitives");
-    let mut b = Bencher::new();
     b.bench("ShadowState::clone (11 accels)", || {
         std::hint::black_box(state.clone());
     });
@@ -40,33 +42,45 @@ fn main() -> anyhow::Result<()> {
         let mut s = state.clone();
         std::hint::black_box(s.apply(&task, 3));
     });
-    let mut feat = vec![0.0f32; rt.meta.in_dim];
-    b.bench("featurize (134-dim state)", || {
-        std::hint::black_box(featurize(&task, &state, &rt.meta, &mut feat));
-    });
 
-    section("L2/L1 compiled executables (PJRT CPU)");
-    let params = rt.init_params(1)?;
-    featurize(&task, &state, &rt.meta, &mut feat);
-    b.bench("qnet_infer (1x134 -> 16 Q)", || {
-        std::hint::black_box(rt.infer(&params, &feat).unwrap());
-    });
-    let mut states = Vec::new();
-    for _ in 0..rt.meta.infer_batch {
-        states.extend_from_slice(&feat);
+    // The compiled-executable sections need the PJRT runtime; without it
+    // the bench still measures (and reports) everything runtime-free.
+    let rt = match common::runtime() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("[bench] PJRT sections skipped: {e:#}");
+            None
+        }
+    };
+    if let Some(rt) = &rt {
+        let mut feat = vec![0.0f32; rt.meta.in_dim];
+        b.bench("featurize (134-dim state)", || {
+            std::hint::black_box(featurize(&task, &state, &rt.meta, &mut feat));
+        });
+
+        section("L2/L1 compiled executables (PJRT CPU)");
+        let params = rt.init_params(1)?;
+        featurize(&task, &state, &rt.meta, &mut feat);
+        b.bench("qnet_infer (1x134 -> 16 Q)", || {
+            std::hint::black_box(rt.infer(&params, &feat).unwrap());
+        });
+        let mut states = Vec::new();
+        for _ in 0..rt.meta.infer_batch {
+            states.extend_from_slice(&feat);
+        }
+        b.bench("qnet_infer_batch (30x134)", || {
+            std::hint::black_box(rt.infer_batch(&params, &states).unwrap());
+        });
+        let mut batch = TrainBatch::zeros(&rt.meta);
+        for (i, v) in batch.s.iter_mut().enumerate() {
+            *v = (i % 13) as f32 / 13.0;
+        }
+        batch.s2.copy_from_slice(&batch.s);
+        let targ = params.clone();
+        b.bench("qnet_train (batch 64, SGD step)", || {
+            std::hint::black_box(rt.train_step(&params, &targ, &batch).unwrap());
+        });
     }
-    b.bench("qnet_infer_batch (30x134)", || {
-        std::hint::black_box(rt.infer_batch(&params, &states).unwrap());
-    });
-    let mut batch = TrainBatch::zeros(&rt.meta);
-    for (i, v) in batch.s.iter_mut().enumerate() {
-        *v = (i % 13) as f32 / 13.0;
-    }
-    batch.s2.copy_from_slice(&batch.s);
-    let targ = params.clone();
-    b.bench("qnet_train (batch 64, SGD step)", || {
-        std::hint::black_box(rt.train_step(&params, &targ, &batch).unwrap());
-    });
 
     section("end-to-end scheduling throughput (tasks/s)");
     let reg = Registry::new();
@@ -76,12 +90,9 @@ fn main() -> anyhow::Result<()> {
         let r = b.bench(&format!("{name}: 30-task burst"), || {
             std::hint::black_box(s.schedule_batch(&burst, &state));
         });
-        println!(
-            "    -> {:.0} decisions/s",
-            30.0 / r.mean()
-        );
+        println!("    -> {:.0} decisions/s", 30.0 / r.mean());
     }
-    {
+    if let Some(rt) = &rt {
         let mut agent = hmai::sched::flexai::FlexAI::new(
             rt.clone(),
             hmai::sched::flexai::FlexAIConfig { seed: 1, ..Default::default() },
@@ -99,6 +110,27 @@ fn main() -> anyhow::Result<()> {
         minmin.reset();
         std::hint::black_box(simulate(&queue, &platform, &mut minmin, SimOptions::default()));
     });
-    state.advance(0.0);
+
+    // Machine-readable perf trajectory: one row per benchmark.
+    let rows: Vec<Json> = b
+        .results()
+        .iter()
+        .map(|r| {
+            Json::from_pairs(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("mean_s", Json::Num(r.mean())),
+                ("p50_s", Json::Num(r.p50())),
+                ("p95_s", Json::Num(r.p95())),
+                ("iters", Json::Num(r.samples.len() as f64)),
+            ])
+        })
+        .collect();
+    let report = Json::from_pairs(vec![
+        ("bench", Json::Str("bench_perf".to_string())),
+        ("pjrt_runtime", Json::Bool(rt.is_some())),
+        ("results", Json::Arr(rows)),
+    ]);
+    report.write_to(std::path::Path::new(JSON_PATH))?;
+    println!("\njson -> {JSON_PATH}");
     Ok(())
 }

@@ -16,13 +16,18 @@ use hmai::env::Area;
 use hmai::plan::ExperimentPlan;
 use hmai::sched::SchedulerSpec;
 use hmai::util::bench::section;
+use hmai::util::json::Json;
 use hmai::util::table::{f1, f2, Table};
+
+const JSON_PATH: &str = "BENCH_SCENARIOS.json";
 
 fn main() {
     let dist = 300.0 * (common::scale() / 0.2).max(0.2);
 
     section(&format!("scenario library — queue statistics at {dist:.0} m"));
-    let mut t = Table::new(["Scenario", "Legs", "Cameras", "Hz x", "Dropouts", "Tasks", "Tasks/s"]);
+    let mut t = Table::new([
+        "Scenario", "Legs", "Cameras", "Hz x", "Dropouts", "Events", "Tasks", "Tasks/s",
+    ]);
     for arch in scenario::library() {
         let q = arch.queue_for(dist, 0, DeadlineMode::Rss, 42);
         t.row([
@@ -31,6 +36,7 @@ fn main() {
             arch.rig.total().to_string(),
             f2(arch.hz_scale),
             arch.dropouts.len().to_string(),
+            arch.events.len().to_string(),
             q.len().to_string(),
             f1(q.len() as f64 / q.route_duration_s),
         ]);
@@ -54,23 +60,41 @@ fn main() {
         .schedulers(schedulers)
         .seed(42);
     section(&format!(
-        "scenario × scheduler sweep ({} archetypes × {} schedulers = {} trials)",
+        "scenario × scheduler sweep ({} archetypes × {} schedulers = {} trials, events on)",
         scenario::names().len(),
         plan.len() / scenario::names().len(),
         plan.len()
     ));
     let t0 = std::time::Instant::now();
-    let (results, sweep) = Engine::new(&reg)
+    // Streaming sweep: trials fold into the summary and drop immediately
+    // (no retained SimResults), with platform events live so the fault
+    // archetypes (accel-failure, thermal-throttle) actually fail hardware.
+    let sweep = Engine::new(&reg)
         .jobs(common::jobs())
-        .sweep(&plan)
+        .events(true)
+        .sweep_streaming(&plan)
         .expect("sweep runs");
-    println!("{} trials in {:.1} s", results.len(), t0.elapsed().as_secs_f64());
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    println!("{} trials in {elapsed_s:.1} s", sweep.total_runs());
     hmai::reports::sweep_table(&sweep).print();
 
     // Shape: one sweep row per (scheduler, archetype) and a stable,
     // jobs-invariant fingerprint (the tests pin jobs-invariance; here we
     // print it so regressions are visible in bench logs).
-    assert_eq!(sweep.total_runs(), results.len());
+    assert_eq!(sweep.total_runs(), plan.len());
     println!("\nsweep fingerprint: {:016x}", sweep.fingerprint());
+
+    // Machine-readable trajectory, through the shared util::json writer.
+    let report = Json::from_pairs(vec![
+        ("bench", Json::Str("bench_scenarios".to_string())),
+        ("distance_m", Json::Num(dist)),
+        ("events", Json::Bool(true)),
+        ("trials", Json::Num(sweep.total_runs() as f64)),
+        ("elapsed_s", Json::Num(elapsed_s)),
+        ("fingerprint", Json::Str(format!("{:016x}", sweep.fingerprint()))),
+        ("sweep", sweep.to_json()),
+    ]);
+    report.write_to(std::path::Path::new(JSON_PATH)).expect("write bench json");
+    println!("json -> {JSON_PATH}");
     println!("bench_scenarios OK");
 }

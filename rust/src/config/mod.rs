@@ -75,6 +75,9 @@ pub struct ExperimentConfig {
     /// Scenario-library archetype names to sweep (empty = the plain
     /// area/distance axis).  CLI: `--scenario <name[,name...]|all>`.
     pub scenarios: Vec<String>,
+    /// Apply scenario-declared platform events (accelerator failure /
+    /// recovery / derating) to each trial's simulation.  CLI: `--events`.
+    pub events: bool,
     /// Engine worker threads (0 = all cores, 1 = sequential).
     pub jobs: usize,
     pub env: EnvConfig,
@@ -90,6 +93,7 @@ impl Default for ExperimentConfig {
             checkpoint: String::new(),
             deadline: DeadlineMode::Rss,
             scenarios: Vec::new(),
+            events: false,
             jobs: 1,
             env: EnvConfig::default(),
             train: TrainConfig::default(),
@@ -166,6 +170,7 @@ impl ExperimentConfig {
                         .context("deadline: expected rss|frame")?
                 }
                 "jobs" => self.jobs = v.as_usize().context("jobs")?,
+                "events" => self.events = v.as_bool().context("events")?,
                 "scenarios" => {
                     self.scenarios = v
                         .as_arr()
@@ -250,6 +255,9 @@ impl ExperimentConfig {
                 crate::env::scenario::find(name).context("--scenario")?;
             }
         }
+        if args.flag("events") {
+            self.events = true;
+        }
         self.jobs = args.get_usize("jobs", self.jobs)?;
         // `--distance` is an alias for `--dist`.
         if let Some(d) = args.get("dist").or_else(|| args.get("distance")) {
@@ -282,6 +290,7 @@ impl ExperimentConfig {
         o.insert("checkpoint", Json::Str(self.checkpoint.clone()));
         o.insert("deadline", Json::Str(self.deadline.name().to_string()));
         o.insert("jobs", Json::Num(self.jobs as f64));
+        o.insert("events", Json::Bool(self.events));
         o.insert(
             "scenarios",
             Json::Arr(self.scenarios.iter().map(|s| Json::Str(s.clone())).collect()),
@@ -420,9 +429,22 @@ mod tests {
     fn scenarios_roundtrip_through_json() {
         let mut c = ExperimentConfig::default();
         c.scenarios = vec!["night-rain".into(), "cross-country".into()];
+        c.events = true;
         c.flexai.seed = c.env.seed;
         let c2 = ExperimentConfig::from_json_text(&c.to_json().to_string()).unwrap();
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn events_flag_enables_platform_events() {
+        let mut c = ExperimentConfig::default();
+        assert!(!c.events);
+        let args = Args::parse(
+            "--scenario accel-failure --distance 80 --events".split_whitespace().map(String::from),
+        );
+        c.apply_args(&args).unwrap();
+        assert!(c.events);
+        assert_eq!(c.scenarios, vec!["accel-failure".to_string()]);
     }
 
     #[test]

@@ -7,8 +7,17 @@
 //! id before aggregation, and no aggregate depends on wall-clock fields —
 //! so `jobs = N` is bit-identical to `jobs = 1` for any N.  The tests in
 //! `tests/sweep.rs` pin this down.
+//!
+//! Sweeps stream: [`Engine::run_streamed`] delivers owned results in trial
+//! id order and [`Engine::sweep_streaming`] folds each into the summary
+//! and drops it immediately, so a sweep's peak memory tracks the
+//! out-of-order completion window instead of every `SimResult` of the
+//! plan.  With
+//! [`Engine::events`] enabled, trials whose scenario archetype declares
+//! [`PlatformEvent`](crate::sim::events::PlatformEvent)s run them against
+//! the simulation (accelerator failure / recovery / derating mid-route).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
@@ -17,9 +26,10 @@ use anyhow::{Context, Result};
 use crate::env::taskgen::{DeadlineMode, TaskQueue};
 use crate::env::Area;
 use crate::metrics::summary::{RunSummary, SweepKey, SweepSummary};
+use crate::metrics::NormScales;
 use crate::plan::{ExperimentPlan, Trial};
 use crate::sched::Registry;
-use crate::sim::{simulate, SimOptions, TaskRecord};
+use crate::sim::{simulate_observed_with_scales, SimObserver, SimOptions, TaskRecord};
 
 /// Cache key for generated task queues: everything queue generation
 /// depends on.  Trials differing only in scheduler/platform share the
@@ -116,11 +126,12 @@ pub struct Engine<'r> {
     registry: &'r Registry,
     jobs: usize,
     options: SimOptions,
+    events: bool,
 }
 
 impl<'r> Engine<'r> {
     pub fn new(registry: &'r Registry) -> Engine<'r> {
-        Engine { registry, jobs: 1, options: SimOptions::default() }
+        Engine { registry, jobs: 1, options: SimOptions::default(), events: false }
     }
 
     /// Worker threads (1 = run on the calling thread).  0 means "all
@@ -139,19 +150,89 @@ impl<'r> Engine<'r> {
         self
     }
 
+    /// Run scenario-declared platform events (accelerator failure /
+    /// recovery / derating) against each trial's simulation.  Off by
+    /// default: every pre-events result is reproduced bit-for-bit unless
+    /// the caller opts in (CLI: `--events`).
+    pub fn events(mut self, on: bool) -> Self {
+        self.events = on;
+        self
+    }
+
     /// Execute one trial (queue regeneration + scheduler build + sim).
     pub fn run_trial(&self, trial: &Trial) -> Result<TrialResult> {
-        self.run_trial_on(trial, &trial.queue())
+        self.run_trial_on(trial, &trial.queue(), &mut [])
+    }
+
+    /// Execute one trial with streaming observers attached to its
+    /// simulation (e.g. a [`BrakingProbe`](crate::sim::BrakingProbe) —
+    /// the braking CLI captures its probe task this way instead of
+    /// retaining every record of every trial).
+    pub fn run_trial_observed(
+        &self,
+        trial: &Trial,
+        observers: &mut [&mut dyn SimObserver],
+    ) -> Result<TrialResult> {
+        self.run_trial_on(trial, &trial.queue(), observers)
+    }
+
+    /// Run `trials` on the worker pool (`jobs` as usual), each simulation
+    /// watched by its own observer built by `make` on the worker thread;
+    /// `(result, observer)` pairs return in trial order.  This is the
+    /// parallel form of [`Engine::run_trial_observed`] — the braking CLI
+    /// probes every trial concurrently without retaining any records.
+    /// (No queue cache: observed trials rarely share queues, and each
+    /// observer owns its trial end to end.)
+    pub fn run_trials_observed<O, F>(
+        &self,
+        trials: &[Trial],
+        make: F,
+    ) -> Result<Vec<(TrialResult, O)>>
+    where
+        O: SimObserver + Send,
+        F: Fn(&Trial) -> O + Sync,
+    {
+        let mut slots: Vec<Option<(TrialResult, O)>> = Vec::with_capacity(trials.len());
+        slots.resize_with(trials.len(), || None);
+        self.execute_tasks(
+            trials.len(),
+            |i| {
+                let t = &trials[i];
+                let mut obs = make(t);
+                let r = self.run_trial_on(t, &t.queue(), &mut [&mut obs])?;
+                Ok((r, obs))
+            },
+            |i, pair| slots[i] = Some(pair),
+        )?;
+        Ok(slots.into_iter().map(|s| s.expect("every trial ran")).collect())
     }
 
     /// Execute one trial against an already-generated queue.
-    fn run_trial_on(&self, trial: &Trial, queue: &TaskQueue) -> Result<TrialResult> {
+    fn run_trial_on(
+        &self,
+        trial: &Trial,
+        queue: &TaskQueue,
+        observers: &mut [&mut dyn SimObserver],
+    ) -> Result<TrialResult> {
         let platform = trial.platform()?;
         let mut sched = self
             .registry
             .build(&trial.scheduler, trial.sched_seed)
             .with_context(|| format!("trial {} ({})", trial.id, trial.label()))?;
-        let r = simulate(queue, &platform, sched.as_mut(), self.options);
+        let events = match (&trial.scenario.archetype, self.events) {
+            (Some(arch), true) => arch.platform_events(queue.route_duration_s),
+            _ => Vec::new(),
+        };
+        let scales = NormScales::for_queue(queue, &platform);
+        let r = simulate_observed_with_scales(
+            queue,
+            &platform,
+            sched.as_mut(),
+            self.options,
+            scales,
+            events,
+            observers,
+        );
         Ok(TrialResult {
             trial: trial.clone(),
             summary: r.summary,
@@ -166,6 +247,84 @@ impl<'r> Engine<'r> {
         self.run_with(plan, |_| {})
     }
 
+    /// The one worker-pool core every parallel path shares: run `work(i)`
+    /// for `i in 0..n` on `jobs` workers, delivering each payload to
+    /// `deliver` on the calling thread in *completion* order.
+    fn execute_tasks<T, W, F>(&self, n: usize, work: W, mut deliver: F) -> Result<()>
+    where
+        T: Send,
+        W: Fn(usize) -> Result<T> + Sync,
+        F: FnMut(usize, T),
+    {
+        let jobs = self.jobs.max(1).min(n.max(1));
+        if jobs <= 1 {
+            for i in 0..n {
+                deliver(i, work(i)?);
+            }
+            return Ok(());
+        }
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        let (tx, rx) = mpsc::channel::<(usize, Result<T>)>();
+        let next_ref = &next;
+        let abort_ref = &abort;
+        let work_ref = &work;
+        let mut first_err: Option<anyhow::Error> = None;
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                let tx = tx.clone();
+                scope.spawn(move || loop {
+                    if abort_ref.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let i = next_ref.fetch_add(1, Ordering::SeqCst);
+                    if i >= n {
+                        break;
+                    }
+                    if tx.send((i, work_ref(i))).is_err() {
+                        break; // receiver gone (error path)
+                    }
+                });
+            }
+            drop(tx);
+            // The loop consumes `rx`; breaking on the first error drops
+            // it immediately, so pending worker sends fail and every
+            // worker exits before the scope joins.  At most one
+            // in-flight task per worker still finishes.
+            for (i, res) in rx {
+                match res {
+                    Ok(t) => deliver(i, t),
+                    Err(e) => {
+                        abort_ref.store(true, Ordering::SeqCst);
+                        first_err = Some(e);
+                        break;
+                    }
+                }
+            }
+        });
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Execute `trials` (with the shared queue cache), delivering each
+    /// `TrialResult` in completion order.
+    fn execute<F>(&self, trials: &[Trial], deliver: F) -> Result<()>
+    where
+        F: FnMut(usize, TrialResult),
+    {
+        let cache = QueueCache::default();
+        self.execute_tasks(
+            trials.len(),
+            |i| {
+                let t = &trials[i];
+                self.run_trial_on(t, &cache.get(t), &mut [])
+            },
+            deliver,
+        )
+    }
+
     /// `run`, streaming each result to `on_result` as it completes
     /// (completion order, not id order — the returned vec is id-ordered).
     pub fn run_with<F>(&self, plan: &ExperimentPlan, mut on_result: F) -> Result<Vec<TrialResult>>
@@ -176,74 +335,61 @@ impl<'r> Engine<'r> {
         let n = trials.len();
         let mut slots: Vec<Option<TrialResult>> = Vec::with_capacity(n);
         slots.resize_with(n, || None);
-        let cache = QueueCache::default();
-
-        let jobs = self.jobs.max(1).min(n.max(1));
-        if jobs <= 1 {
-            for (i, t) in trials.iter().enumerate() {
-                let r = self.run_trial_on(t, &cache.get(t))?;
-                on_result(&r);
-                slots[i] = Some(r);
-            }
-        } else {
-            let next = AtomicUsize::new(0);
-            let abort = AtomicBool::new(false);
-            let (tx, rx) = mpsc::channel::<(usize, Result<TrialResult>)>();
-            let trials_ref = &trials;
-            let next_ref = &next;
-            let abort_ref = &abort;
-            let cache_ref = &cache;
-            let mut first_err: Option<anyhow::Error> = None;
-            std::thread::scope(|scope| {
-                for _ in 0..jobs {
-                    let tx = tx.clone();
-                    scope.spawn(move || loop {
-                        if abort_ref.load(Ordering::SeqCst) {
-                            break;
-                        }
-                        let i = next_ref.fetch_add(1, Ordering::SeqCst);
-                        if i >= trials_ref.len() {
-                            break;
-                        }
-                        let t = &trials_ref[i];
-                        let res = self.run_trial_on(t, &cache_ref.get(t));
-                        if tx.send((i, res)).is_err() {
-                            break; // receiver gone (error path)
-                        }
-                    });
-                }
-                drop(tx);
-                // The loop consumes `rx`; breaking on the first error drops
-                // it immediately, so pending worker sends fail and every
-                // worker exits before the scope joins.  At most one
-                // in-flight trial per worker still finishes.
-                for (i, res) in rx {
-                    match res {
-                        Ok(r) => {
-                            on_result(&r);
-                            slots[i] = Some(r);
-                        }
-                        Err(e) => {
-                            abort_ref.store(true, Ordering::SeqCst);
-                            first_err = Some(e);
-                            break;
-                        }
-                    }
-                }
-            });
-            if let Some(e) = first_err {
-                return Err(e);
-            }
-        }
+        self.execute(&trials, |i, r| {
+            on_result(&r);
+            slots[i] = Some(r);
+        })?;
         Ok(slots.into_iter().map(|s| s.expect("every trial ran")).collect())
+    }
+
+    /// Stream owned results to `sink` in *trial-id* order, retaining
+    /// nothing after delivery.  Out-of-order completions wait in a
+    /// re-sequencing buffer — typically a handful of results (the
+    /// in-flight window), though a pathologically slow early trial can let
+    /// later ones pile up behind it (the pool applies no backpressure).
+    /// Even then this never retains *more* than [`Engine::run`], which
+    /// always holds every result.
+    pub fn run_streamed<F>(&self, plan: &ExperimentPlan, mut sink: F) -> Result<usize>
+    where
+        F: FnMut(TrialResult),
+    {
+        let trials = plan.trials()?;
+        let n = trials.len();
+        let mut pending: BTreeMap<usize, TrialResult> = BTreeMap::new();
+        let mut next_emit = 0usize;
+        self.execute(&trials, |i, r| {
+            pending.insert(i, r);
+            while let Some(r) = pending.remove(&next_emit) {
+                sink(r);
+                next_emit += 1;
+            }
+        })?;
+        debug_assert!(pending.is_empty(), "re-sequencing buffer drained");
+        Ok(n)
     }
 
     /// Run the plan and aggregate into a `SweepSummary` (rows keyed by
     /// scheduler × platform × area × deadline, in trial-id order).
+    ///
+    /// Retains every `TrialResult` for callers that render per-trial rows;
+    /// use [`Engine::sweep_streaming`] when only the aggregate is needed.
     pub fn sweep(&self, plan: &ExperimentPlan) -> Result<(Vec<TrialResult>, SweepSummary)> {
         let results = self.run(plan)?;
         let summary = SweepSummary::from_trial_results(&results);
         Ok((results, summary))
+    }
+
+    /// Aggregate-only sweep: every trial outcome is folded into the
+    /// summary and dropped immediately (the fix for sweeps that used to
+    /// hold all records/state until aggregation).  Bit-identical rows and
+    /// fingerprint to [`Engine::sweep`].
+    pub fn sweep_streaming(&self, plan: &ExperimentPlan) -> Result<SweepSummary> {
+        let mut summary = SweepSummary::new();
+        self.run_streamed(plan, |r| {
+            let key = r.sweep_key();
+            summary.push(key, r.summary);
+        })?;
+        Ok(summary)
     }
 }
 
@@ -324,6 +470,119 @@ mod tests {
         let scenarios: Vec<&str> =
             sweep.groups.iter().map(|g| g.key.scenario.as_str()).collect();
         assert_eq!(scenarios, ["urban-rush", "night-rain"]);
+    }
+
+    #[test]
+    fn run_streamed_delivers_in_trial_id_order() {
+        let reg = Registry::new();
+        let plan = tiny_plan();
+        let mut ids = Vec::new();
+        let n = Engine::new(&reg)
+            .jobs(3)
+            .run_streamed(&plan, |r| ids.push(r.trial.id))
+            .unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn sweep_streaming_is_bit_identical_to_sweep() {
+        let reg = Registry::new();
+        let plan = tiny_plan();
+        for jobs in [1, 3] {
+            let (_, retained) = Engine::new(&reg).jobs(jobs).sweep(&plan).unwrap();
+            let streamed = Engine::new(&reg).jobs(jobs).sweep_streaming(&plan).unwrap();
+            assert_eq!(retained.fingerprint(), streamed.fingerprint(), "jobs={jobs}");
+            assert_eq!(retained.groups.len(), streamed.groups.len());
+        }
+    }
+
+    #[test]
+    fn events_reroute_scenario_faults_and_stay_deterministic() {
+        let reg = Registry::new();
+        let plan = ExperimentPlan::new()
+            .scenarios(["accel-failure"])
+            .distances([60.0])
+            .scheduler(SchedulerSpec::MinMin)
+            .seed(5);
+        // Events off: bit-identical to the plain urban run (default).
+        let off_a = Engine::new(&reg).sweep_streaming(&plan).unwrap();
+        let off_b = Engine::new(&reg).events(false).sweep_streaming(&plan).unwrap();
+        assert_eq!(off_a.fingerprint(), off_b.fingerprint());
+        // Events on: the outage changes the outcome, deterministically
+        // and --jobs-invariantly.
+        let on = Engine::new(&reg).events(true).sweep_streaming(&plan).unwrap();
+        assert_ne!(on.fingerprint(), off_a.fingerprint(), "failure must be visible");
+        let on_par = Engine::new(&reg).events(true).jobs(2).sweep_streaming(&plan).unwrap();
+        assert_eq!(on.fingerprint(), on_par.fingerprint());
+        // And the failed accelerator gets no work while it is down.
+        let trials = plan.trials().unwrap();
+        let trial = &trials[0];
+        let r = Engine::new(&reg)
+            .events(true)
+            .sim_options(SimOptions { record_tasks: true })
+            .run_trial(trial)
+            .unwrap();
+        let dur = trial.queue().route_duration_s;
+        let (t_fail, t_rec) = (0.35 * dur + 1e-6, 0.70 * dur - 1e-6);
+        let window: Vec<_> = r
+            .records
+            .iter()
+            .filter(|x| x.release_s >= t_fail && x.release_s < t_rec)
+            .collect();
+        assert!(!window.is_empty());
+        assert!(window.iter().all(|x| x.accel != 0), "work on a failed accel");
+    }
+
+    #[test]
+    fn run_trial_observed_streams_without_record_retention() {
+        let reg = Registry::new();
+        let plan = ExperimentPlan::new()
+            .distances([50.0])
+            .scheduler(SchedulerSpec::RoundRobin)
+            .seed(6);
+        let trials = plan.trials().unwrap();
+        let trial = &trials[0];
+        let mut probe = crate::sim::BrakingProbe::new(1.0);
+        let r = Engine::new(&reg).run_trial_observed(trial, &mut [&mut probe]).unwrap();
+        assert!(r.records.is_empty(), "no records retained");
+        let rec = probe.captured().expect("probe task found");
+        // The probe matches the record-based selection.
+        let full = Engine::new(&reg)
+            .sim_options(SimOptions { record_tasks: true })
+            .run_trial(trial)
+            .unwrap();
+        let want = crate::sim::first_detection_after(&full.records, 1.0).unwrap();
+        assert_eq!(rec.task_id, want.task_id);
+        assert_eq!(rec.wait_s.to_bits(), want.wait_s.to_bits());
+    }
+
+    #[test]
+    fn run_trials_observed_is_parallel_order_stable() {
+        let reg = Registry::new();
+        let plan = ExperimentPlan::new()
+            .distances([40.0, 50.0, 60.0])
+            .schedulers([SchedulerSpec::RoundRobin, SchedulerSpec::MinMin])
+            .seed(2);
+        let trials = plan.trials().unwrap();
+        let run = |jobs: usize| {
+            Engine::new(&reg)
+                .jobs(jobs)
+                .run_trials_observed(&trials, |_| crate::sim::BrakingProbe::new(0.5))
+                .unwrap()
+        };
+        let (seq, par) = (run(1), run(3));
+        assert_eq!(seq.len(), trials.len());
+        for ((a, pa), (b, pb)) in seq.iter().zip(&par) {
+            assert_eq!(a.trial.id, b.trial.id, "trial order");
+            assert_eq!(a.summary.energy_j.to_bits(), b.summary.energy_j.to_bits());
+            assert_eq!(
+                pa.captured().map(|x| x.task_id),
+                pb.captured().map(|x| x.task_id),
+                "probe drifted across jobs"
+            );
+            assert!(a.records.is_empty() && b.records.is_empty());
+        }
     }
 
     #[test]

@@ -10,16 +10,25 @@
 //! simulator need no semantic changes: the default profile reproduces the
 //! legacy Table 4 queue bit-for-bit.
 //!
+//! Archetypes can also declare timed **platform events** ([`EventSpec`]:
+//! accelerator failure / recovery / frequency derating as route-duration
+//! fractions) — the fault archetypes `accel-failure` and
+//! `thermal-throttle` exercise them; the engine applies them to the
+//! simulation's `ShadowState` between bursts when run with events enabled
+//! (CLI `--events`).
+//!
 //! Wiring: `plan::ExperimentPlan::scenarios([...])` sweeps archetypes by
-//! name, the CLI exposes `--scenario <name|all>` on `schedule` /
-//! `platform` / `braking` / `env`, and `metrics::summary::SweepKey` /
-//! `reports::sweep_table` carry a per-scenario breakdown column.
+//! name, the CLI exposes `--scenario <name|all>` (and `env list`) on
+//! `schedule` / `platform` / `braking` / `env`, and
+//! `metrics::summary::SweepKey` / `reports::sweep_table` carry a
+//! per-scenario breakdown column.
 
 use anyhow::{Context, Result};
 
 use super::route::{Route, RouteParams, Segment};
 use super::taskgen::{self, DeadlineMode, Task, TaskQueue};
 use super::{Area, CameraGroup};
+use crate::sim::events::{EventAction, PlatformEvent};
 use crate::util::rng::Rng;
 
 /// Cameras per function group, in `ALL_GROUPS` order (FC, FLSC, RLSC,
@@ -112,6 +121,18 @@ pub struct Dropout {
     pub end_frac: f64,
 }
 
+/// A timed platform event declared by an archetype: `action` fires when
+/// the route clock reaches `at_frac` of the total route duration, so the
+/// same archetype scales to any route distance (like [`Dropout`], but on
+/// the *compute* side — [`sim::events`](crate::sim::events) applies it to
+/// the platform state between bursts when the engine runs with events
+/// enabled).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EventSpec {
+    pub at_frac: f64,
+    pub action: EventAction,
+}
+
 /// One leg of an archetype's (possibly multi-area) composite route.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LegSpec {
@@ -142,6 +163,9 @@ pub struct Archetype {
     pub rig: CameraRig,
     pub hz_scale: f64,
     pub dropouts: Vec<Dropout>,
+    /// Timed platform-capacity events (accelerator failure / recovery /
+    /// derating), as route-duration fractions.
+    pub events: Vec<EventSpec>,
 }
 
 impl Archetype {
@@ -202,6 +226,16 @@ impl Archetype {
             t += d / v;
         }
         (t, last_area)
+    }
+
+    /// Compile this archetype's event specs to absolute route-clock
+    /// [`PlatformEvent`]s for a queue of `duration_s` (the engine calls
+    /// this with the generated queue's own composite duration).
+    pub fn platform_events(&self, duration_s: f64) -> Vec<PlatformEvent> {
+        self.events
+            .iter()
+            .map(|e| PlatformEvent { at_s: e.at_frac * duration_s, action: e.action })
+            .collect()
     }
 
     /// Task queue `index` of a distance list, using the same `Rng::fork`
@@ -309,6 +343,7 @@ pub fn library() -> Vec<Archetype> {
         rig: CameraRig::full30(),
         hz_scale: 1.0,
         dropouts: Vec::new(),
+        events: Vec::new(),
     };
     let rush_legs = || {
         vec![LegSpec {
@@ -326,6 +361,7 @@ pub fn library() -> Vec<Archetype> {
             rig: CameraRig::full30(),
             hz_scale: 1.0,
             dropouts: Vec::new(),
+            events: Vec::new(),
         },
         plain(
             "highway-cruise",
@@ -349,6 +385,7 @@ pub fn library() -> Vec<Archetype> {
             rig: CameraRig::full30(),
             hz_scale: 0.5,
             dropouts: Vec::new(),
+            events: Vec::new(),
         },
         Archetype {
             name: "sensor-dropout".into(),
@@ -361,6 +398,7 @@ pub fn library() -> Vec<Archetype> {
                 start_frac: 0.4,
                 end_frac: 0.6,
             }],
+            events: Vec::new(),
         },
         plain(
             "cross-country",
@@ -378,6 +416,7 @@ pub fn library() -> Vec<Archetype> {
             rig: CameraRig::mid20(),
             hz_scale: 1.0,
             dropouts: Vec::new(),
+            events: Vec::new(),
         },
         Archetype {
             name: "urban-rush-12cam".into(),
@@ -386,6 +425,33 @@ pub fn library() -> Vec<Archetype> {
             rig: CameraRig::min12(),
             hz_scale: 1.0,
             dropouts: Vec::new(),
+            events: Vec::new(),
+        },
+        Archetype {
+            name: "accel-failure".into(),
+            help: "urban route; accelerator 0 fails at 35% of the route, recovers at 70%",
+            legs: vec![LegSpec::new(Area::Urban, 1.0)],
+            rig: CameraRig::full30(),
+            hz_scale: 1.0,
+            dropouts: Vec::new(),
+            events: vec![
+                EventSpec { at_frac: 0.35, action: EventAction::Fail { accel: 0 } },
+                EventSpec { at_frac: 0.70, action: EventAction::Recover { accel: 0 } },
+            ],
+        },
+        Archetype {
+            name: "thermal-throttle".into(),
+            help: "urban route; accelerators 0 and 4 derate to half speed for the middle half",
+            legs: vec![LegSpec::new(Area::Urban, 1.0)],
+            rig: CameraRig::full30(),
+            hz_scale: 1.0,
+            dropouts: Vec::new(),
+            events: vec![
+                EventSpec { at_frac: 0.25, action: EventAction::Derate { accel: 0, speed: 0.5 } },
+                EventSpec { at_frac: 0.25, action: EventAction::Derate { accel: 4, speed: 0.5 } },
+                EventSpec { at_frac: 0.75, action: EventAction::Recover { accel: 0 } },
+                EventSpec { at_frac: 0.75, action: EventAction::Recover { accel: 4 } },
+            ],
         },
     ]
 }
@@ -582,6 +648,27 @@ mod tests {
         let (t, a) = urban.at_distance(500.0, 250.0);
         assert_eq!(a, Area::Urban);
         assert!((t - 250.0 / Area::Urban.max_velocity_ms()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fault_archetypes_compile_events_to_absolute_times() {
+        let fail = find("accel-failure").unwrap();
+        assert_eq!(fail.events.len(), 2);
+        let evts = fail.platform_events(1000.0);
+        assert_eq!(evts.len(), 2);
+        assert!((evts[0].at_s - 350.0).abs() < 1e-9);
+        assert!((evts[1].at_s - 700.0).abs() < 1e-9);
+        assert_eq!(evts[0].action, EventAction::Fail { accel: 0 });
+        assert_eq!(evts[1].action, EventAction::Recover { accel: 0 });
+
+        let throttle = find("thermal-throttle").unwrap();
+        let evts = throttle.platform_events(400.0);
+        assert_eq!(evts.len(), 4);
+        assert!(evts
+            .iter()
+            .any(|e| e.action == EventAction::Derate { accel: 4, speed: 0.5 }));
+        // Event-free archetypes stay event-free.
+        assert!(find("urban-rush").unwrap().platform_events(500.0).is_empty());
     }
 
     #[test]

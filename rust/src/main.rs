@@ -20,11 +20,13 @@ use hmai::engine::Engine;
 use hmai::env::route::{Route, RouteParams};
 use hmai::env::{scenario, taskgen, ALL_SCENARIOS};
 use hmai::harness;
+use hmai::metrics::summary::SweepSummary;
 use hmai::platform::alloc;
 use hmai::safety::braking::{braking_distance_m, BrakingBreakdown};
 use hmai::sched::registry;
-use hmai::sim::{SimOptions, TaskRecord};
+use hmai::sim::BrakingProbe;
 use hmai::util::cli::Args;
+use hmai::util::json::Json;
 use hmai::util::rng::Rng;
 use hmai::util::table::{f1, f2, pct, Table};
 
@@ -64,7 +66,7 @@ fn usage() -> String {
         "hmai — HMAI platform model + FlexAI scheduler (paper reproduction)\n\n\
          USAGE:\n    hmai <SUBCOMMAND> [OPTIONS]\n\nSUBCOMMANDS:\n\
          \x20   report <name|all>   regenerate a paper table\n\
-         \x20   env                 route + task-queue statistics\n\
+         \x20   env [list]          route + task-queue statistics (list: the scenario library)\n\
          \x20   platform            Fig. 2 homogeneous-vs-HMAI exploration\n\
          \x20   schedule            sweep a scheduler over task queues\n\
          \x20   train               train FlexAI, save a checkpoint\n\
@@ -82,6 +84,15 @@ fn usage() -> String {
         (
             "--scenario <n|all>",
             format!("scenario library: {}", scenario::names().join(" | ")),
+        ),
+        (
+            "--events",
+            "apply scenario platform events (accel failure/derating; see `env list`)"
+                .to_string(),
+        ),
+        (
+            "--json <path>",
+            "write the full sweep summary as JSON (schedule/platform/braking)".to_string(),
         ),
         ("--dist <m,...>", "route distances in meters (alias: --distance)".to_string()),
         ("--deadline <mode>", "rss | frame (deadline regime)".to_string()),
@@ -130,7 +141,90 @@ fn cmd_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Write a `--json` report through the shared `util::json` writer.
+fn write_json_report(args: &Args, report: Json) -> Result<()> {
+    if let Some(path) = args.get("json") {
+        report
+            .write_to(std::path::Path::new(path))
+            .with_context(|| format!("writing --json {path}"))?;
+        println!("json -> {path}");
+    }
+    Ok(())
+}
+
+/// Sweep-report JSON shared by `schedule`/`platform`/`braking`: the full
+/// `SweepSummary` (every `SweepKey` row with its per-scenario breakdown
+/// and runs) plus the config and the jobs-invariant fingerprint.
+fn sweep_json(command: &str, cfg: &ExperimentConfig, sweep: &SweepSummary) -> Json {
+    Json::from_pairs(vec![
+        ("command", Json::Str(command.to_string())),
+        ("fingerprint", Json::Str(format!("{:016x}", sweep.fingerprint()))),
+        ("config", cfg.to_json()),
+        ("sweep", sweep.to_json()),
+    ])
+}
+
+/// Whether `--events` can actually fire for this config: some selected
+/// scenario archetype must declare platform events.  Warns (once) when
+/// events were requested but nothing can apply them, so the printed
+/// "events = on/off" status is always truthful.
+fn events_effective(cfg: &ExperimentConfig) -> bool {
+    if !cfg.events {
+        return false;
+    }
+    let any = cfg
+        .scenarios
+        .iter()
+        .filter_map(|n| scenario::find(n).ok())
+        .any(|a| !a.events.is_empty());
+    if !any {
+        eprintln!(
+            "note: --events has no effect — no selected scenario declares platform events \
+             (see `hmai env list`)"
+        );
+    }
+    any
+}
+
+/// `hmai env list`: the scenario library, one row per archetype — names,
+/// composition, and the platform events behind `--events` — so nobody has
+/// to read `env/scenario.rs` to discover what `--scenario` accepts.
+fn cmd_env_list() -> Result<()> {
+    let mut t = Table::new([
+        "Scenario", "Legs", "Cameras", "Hz x", "Dropouts", "Events", "Description",
+    ]);
+    for arch in scenario::library() {
+        let events = if arch.events.is_empty() {
+            "-".to_string()
+        } else {
+            arch.events
+                .iter()
+                .map(|e| format!("{}@{:.0}%", e.action.describe(), e.at_frac * 100.0))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        t.row([
+            arch.name.clone(),
+            arch.legs.len().to_string(),
+            arch.rig.total().to_string(),
+            f2(arch.hz_scale),
+            arch.dropouts.len().to_string(),
+            events,
+            arch.help.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nusage: --scenario <name[,name...]|all>; --events applies the Events column \
+         to the platform mid-route"
+    );
+    Ok(())
+}
+
 fn cmd_env(args: &Args) -> Result<()> {
+    if args.rest().first().map(String::as_str) == Some("list") {
+        return cmd_env_list();
+    }
     let cfg = config(args)?;
     if !cfg.scenarios.is_empty() {
         return cmd_env_scenarios(&cfg);
@@ -179,8 +273,8 @@ fn cmd_env(args: &Args) -> Result<()> {
 /// the scenario library (compiled routes, rigs, task rates).
 fn cmd_env_scenarios(cfg: &ExperimentConfig) -> Result<()> {
     let mut t = Table::new([
-        "Scenario", "Distance (m)", "Duration (s)", "Legs", "Cameras", "Hz x", "Tasks",
-        "Tasks/s",
+        "Scenario", "Distance (m)", "Duration (s)", "Legs", "Cameras", "Hz x", "Events",
+        "Tasks", "Tasks/s",
     ]);
     for name in &cfg.scenarios {
         let arch = scenario::find(name)?;
@@ -193,6 +287,7 @@ fn cmd_env_scenarios(cfg: &ExperimentConfig) -> Result<()> {
                 arch.legs.len().to_string(),
                 arch.rig.total().to_string(),
                 f2(arch.hz_scale),
+                arch.events.len().to_string(),
                 q.len().to_string(),
                 f1(q.len() as f64 / q.route_duration_s),
             ]);
@@ -253,7 +348,9 @@ fn cmd_platform(args: &Args) -> Result<()> {
     let plan = cfg
         .plan()?
         .platforms(platforms.iter().map(|p| p.to_string()));
-    let (_, sweep) = Engine::new(&reg).jobs(cfg.jobs).sweep(&plan)?;
+    // Aggregate-only sweep: stream trials straight into the summary.
+    let events_on = events_effective(&cfg);
+    let sweep = Engine::new(&reg).jobs(cfg.jobs).events(events_on).sweep_streaming(&plan)?;
     println!(
         "\nscheduling sweep: {} on {:.0} m ({}), {} trials",
         cfg.scheduler,
@@ -262,6 +359,7 @@ fn cmd_platform(args: &Args) -> Result<()> {
         sweep.total_runs()
     );
     hmai::reports::sweep_table(&sweep).print();
+    write_json_report(args, sweep_json("platform", &cfg, &sweep))?;
     Ok(())
 }
 
@@ -270,7 +368,8 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     default_sched_fallback(&mut cfg, args);
     let reg = harness::registry(&cfg);
     let plan = cfg.plan()?;
-    let engine = Engine::new(&reg).jobs(cfg.jobs);
+    let events_on = events_effective(&cfg);
+    let engine = Engine::new(&reg).jobs(cfg.jobs).events(events_on);
     let (results, sweep) = engine.sweep(&plan)?;
 
     let mut t = Table::new([
@@ -300,16 +399,18 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         format!("scenarios = {}", cfg.scenarios.join(","))
     };
     println!(
-        "scheduler = {}  platform = {}  {}  deadline = {}  jobs = {}",
+        "scheduler = {}  platform = {}  {}  deadline = {}  jobs = {}  events = {}",
         cfg.scheduler,
         cfg.platform,
         place,
         cfg.deadline.name(),
-        cfg.jobs
+        cfg.jobs,
+        if events_on { "on" } else { "off" }
     );
     t.print();
     println!("\nsweep summary (per-scenario breakdown):");
     hmai::reports::sweep_table(&sweep).print();
+    write_json_report(args, sweep_json("schedule", &cfg, &sweep))?;
     Ok(())
 }
 
@@ -348,11 +449,29 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Brake point on a trial's own cruise clock: a library archetype walks
+/// its legs at their own speeds, so the point lands in the correct leg of
+/// a composite route.  Returns (probe time, area at the brake point).
+fn probe_point(trial: &hmai::plan::Trial, brake_at_m: f64) -> (f64, hmai::env::Area) {
+    match &trial.scenario.archetype {
+        Some(arch) => arch.at_distance(trial.scenario.distance_m, brake_at_m),
+        None => {
+            let area = trial.scenario.area;
+            (brake_at_m / area.max_velocity_ms(), area)
+        }
+    }
+}
+
 /// Fig. 14: a brake event at `--brake-at` meters (default: half the
 /// route, so the probe always exists); the braking distance follows from
 /// the probe task's wait/compute plus the measured scheduler runtime, CAN
 /// latency and mechanical lag.  With `--scenario <names|all>` the probe
 /// runs once per archetype and prints a per-scenario breakdown.
+///
+/// Each trial runs with a streaming [`BrakingProbe`] observer on the
+/// engine's worker pool (`--jobs`), capturing the probe task on the fly —
+/// no per-task record vector is ever retained (the old path held every
+/// record of every trial until the end).
 fn cmd_braking(args: &Args) -> Result<()> {
     let mut cfg = config(args)?;
     default_sched_fallback(&mut cfg, args);
@@ -362,42 +481,41 @@ fn cmd_braking(args: &Args) -> Result<()> {
     let brake_at_m = args.get_f64("brake-at", cfg.env.distances_m[0] * 0.5)?;
 
     let reg = harness::registry(&cfg);
-    let plan = cfg.plan()?;
-    let results = Engine::new(&reg)
-        .jobs(cfg.jobs)
-        .sim_options(SimOptions { record_tasks: true })
-        .run(&plan)?;
-    anyhow::ensure!(!results.is_empty(), "plan expanded to no trials");
+    let trials = cfg.plan()?.trials()?;
+    anyhow::ensure!(!trials.is_empty(), "plan expanded to no trials");
+    let events_on = events_effective(&cfg);
+    let engine = Engine::new(&reg).jobs(cfg.jobs).events(events_on);
 
     println!(
-        "scheduler = {}  brake point = {brake_at_m} m of {} m",
-        cfg.scheduler, cfg.env.distances_m[0]
+        "scheduler = {}  brake point = {brake_at_m} m of {} m  events = {}",
+        cfg.scheduler,
+        cfg.env.distances_m[0],
+        if events_on { "on" } else { "off" }
     );
     let mut t = Table::new([
         "Scenario", "Area", "v (m/s)", "T_wait (ms)", "T_sched (ms)", "T_compute (ms)",
         "T_data (ms)", "T_mech (ms)", "Total (ms)", "Braking distance (m)",
     ]);
-    for r in &results {
-        // Probe at the brake point on the trial's own cruise clock: a
-        // library archetype walks its legs at their own speeds, so the
-        // brake point lands in the correct leg of a composite route.
-        let (t_probe, area) = match &r.trial.scenario.archetype {
-            Some(arch) => arch.at_distance(r.trial.scenario.distance_m, brake_at_m),
-            None => {
-                let area = r.trial.scenario.area;
-                (brake_at_m / area.max_velocity_ms(), area)
-            }
-        };
+    let mut sweep = SweepSummary::new();
+    let want_json = args.get("json").is_some();
+    let mut braking_rows = Vec::new();
+    // One streaming probe per trial, trials on the engine's worker pool.
+    let results = engine
+        .run_trials_observed(&trials, |trial| BrakingProbe::new(probe_point(trial, brake_at_m).0))?;
+    for (r, probe) in results {
+        let trial = &r.trial;
+        let (_, area) = probe_point(trial, brake_at_m);
         let v = area.max_velocity_ms();
-        let rec = probe_task(&r.records, t_probe).with_context(|| {
+        let rec = probe.captured().with_context(|| {
             format!(
                 "trial {}: route too short for the brake point (increase --dist)",
-                r.trial.label()
+                trial.label()
             )
         })?;
         let bd = BrakingBreakdown::new(rec.wait_s, r.sched_per_task_s(), rec.compute_s);
+        let distance_m = braking_distance_m(v, &bd);
         t.row([
-            r.trial.scenario.scenario_name(),
+            trial.scenario.scenario_name(),
             area.name().to_string(),
             f1(v),
             f2(bd.t_wait * 1e3),
@@ -406,22 +524,40 @@ fn cmd_braking(args: &Args) -> Result<()> {
             f2(bd.t_data * 1e3),
             f2(bd.t_mech * 1e3),
             f2(bd.total() * 1e3),
-            f2(braking_distance_m(v, &bd)),
+            f2(distance_m),
         ]);
+        if want_json {
+            braking_rows.push(Json::from_pairs(vec![
+                ("scenario", Json::Str(trial.scenario.scenario_name())),
+                ("area", Json::Str(area.name().to_string())),
+                ("v_ms", Json::Num(v)),
+                ("t_wait_s", Json::Num(bd.t_wait)),
+                ("t_schedule_s", Json::Num(bd.t_schedule)),
+                ("t_compute_s", Json::Num(bd.t_compute)),
+                ("t_data_s", Json::Num(bd.t_data)),
+                ("t_mech_s", Json::Num(bd.t_mech)),
+                ("total_s", Json::Num(bd.total())),
+                ("braking_distance_m", Json::Num(distance_m)),
+            ]));
+        }
+        sweep.push(r.sweep_key(), r.summary);
     }
     t.print();
+    if want_json {
+        let mut report = sweep_json("braking", &cfg, &sweep);
+        if let Json::Obj(o) = &mut report {
+            o.insert("braking", Json::Arr(braking_rows));
+        }
+        write_json_report(args, report)?;
+    }
     Ok(())
-}
-
-/// First forward-camera detection task released at or after `t_probe`.
-fn probe_task(records: &[TaskRecord], t_probe: f64) -> Option<&TaskRecord> {
-    hmai::sim::first_detection_after(records, t_probe)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use hmai::sched::SchedulerSpec;
+    use hmai::sim::TaskRecord;
 
     #[test]
     fn usage_mentions_every_subcommand() {
@@ -517,7 +653,82 @@ mod tests {
         };
         use hmai::workload::ModelKind::*;
         let recs = vec![mk(0, 1.0, Yolo), mk(1, 2.0, Goturn), mk(2, 2.5, Ssd), mk(3, 3.0, Yolo)];
-        assert_eq!(probe_task(&recs, 2.0).unwrap().task_id, 2);
-        assert!(probe_task(&recs, 10.0).is_none());
+        assert_eq!(hmai::sim::first_detection_after(&recs, 2.0).unwrap().task_id, 2);
+        assert!(hmai::sim::first_detection_after(&recs, 10.0).is_none());
+    }
+
+    #[test]
+    fn usage_lists_events_and_json_flags() {
+        let u = usage();
+        assert!(u.contains("--events"), "--events missing from usage");
+        assert!(u.contains("--json"), "--json missing from usage");
+        assert!(u.contains("env [list]"), "env list missing from usage");
+    }
+
+    #[test]
+    fn env_list_renders_every_archetype_with_its_events() {
+        // The discoverability contract: `env list` must enumerate every
+        // registered archetype, and fault archetypes must show their
+        // events inline.
+        let mut t = Table::new(["Scenario", "Events"]);
+        for arch in scenario::library() {
+            let events = if arch.events.is_empty() {
+                "-".to_string()
+            } else {
+                arch.events
+                    .iter()
+                    .map(|e| e.action.describe())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            };
+            t.row([arch.name.clone(), events]);
+        }
+        let rendered = t.render();
+        for name in scenario::names() {
+            assert!(rendered.contains(&name), "{name} missing");
+        }
+        assert!(rendered.contains("fail a0"), "accel-failure events missing");
+        assert!(rendered.contains("derate a4"), "thermal-throttle events missing");
+        // The real command runs end to end.
+        cmd_env_list().unwrap();
+    }
+
+    #[test]
+    fn events_effective_is_truthful() {
+        let mut c = ExperimentConfig::default();
+        assert!(!events_effective(&c), "off by default");
+        c.events = true;
+        assert!(!events_effective(&c), "no scenarios -> nothing can fire");
+        c.scenarios = vec!["night-rain".into()];
+        assert!(!events_effective(&c), "night-rain declares no platform events");
+        c.scenarios = vec!["night-rain".into(), "accel-failure".into()];
+        assert!(events_effective(&c), "accel-failure declares events");
+    }
+
+    #[test]
+    fn braking_probe_path_matches_record_scan() {
+        // The streaming braking probe must select the same task the old
+        // record-retaining path did.
+        let args = Args::parse(
+            ["braking", "--sched", "rr", "--dist", "60", "--seed", "3"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = config(&args).unwrap();
+        let reg = harness::registry(&cfg);
+        let trials = cfg.plan().unwrap().trials().unwrap();
+        let trial = &trials[0];
+        let t_probe = 30.0 / trial.scenario.area.max_velocity_ms();
+        let mut probe = BrakingProbe::new(t_probe);
+        let r = Engine::new(&reg).run_trial_observed(trial, &mut [&mut probe]).unwrap();
+        assert!(r.records.is_empty());
+        let rec = probe.captured().expect("probe found");
+        let full = Engine::new(&reg)
+            .sim_options(hmai::sim::SimOptions { record_tasks: true })
+            .run_trial(trial)
+            .unwrap();
+        let want = hmai::sim::first_detection_after(&full.records, t_probe).unwrap();
+        assert_eq!(rec.task_id, want.task_id);
+        assert_eq!(rec.compute_s.to_bits(), want.compute_s.to_bits());
     }
 }

@@ -443,7 +443,8 @@ mod tests {
             .distances([120.0])
             .scheduler(SchedulerSpec::MinMin)
             .seed(8);
-        let t = &plan.trials().unwrap()[0];
+        let trials = plan.trials().unwrap();
+        let t = &trials[0];
         let (a, b) = (t.queue(), t.queue());
         assert!(!a.is_empty());
         assert_eq!(a.len(), b.len());

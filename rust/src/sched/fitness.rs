@@ -25,7 +25,15 @@ pub fn rollout_cost(tasks: &[Task], assignment: &[usize], state: &ShadowState) -
     // burst composition.
     let (mut best_t, mut best_e) = (0.0, 0.0);
     for (task, &a) in tasks.iter().zip(assignment) {
-        energy += rolling.apply(task, a).energy_j;
+        let applied = rolling.apply(task, a);
+        if !applied.response_s.is_finite() {
+            // Mapping any task to a failed accelerator loses it: the
+            // candidate is unexecutable, so it prices at +inf (dead slots
+            // leave the rollout's drain untouched, so without this guard
+            // they would look *free*).
+            return f64::INFINITY;
+        }
+        energy += applied.energy_j;
         let mut bt = f64::INFINITY;
         let mut be = f64::INFINITY;
         for i in 0..state.len() {

@@ -190,19 +190,32 @@ impl FlexAI {
         qd_start: &[f64],
     ) -> usize {
         debug_assert!(n_valid > 0);
+        // Earliest-completion argmin over the valid slots, seeded at
+        // `from` (a failed slot predicts +inf completion, so it can never
+        // win) — the guided-exploration heuristic and the failed-draw
+        // redirect share it so the two can never drift apart.
+        let earliest_completion = |from: usize| -> usize {
+            let mut best = from;
+            for i in 0..n_valid {
+                if rolling.est_completion(task, i) < rolling.est_completion(task, best) {
+                    best = i;
+                }
+            }
+            best
+        };
         let eps = self.current_epsilon();
         if eps > 0.0 && self.rng.chance(eps) {
             if self.cfg.guided_explore && self.rng.chance(0.5) {
-                // Earliest-completion heuristic step.
-                let mut best = 0;
-                for i in 1..n_valid {
-                    if rolling.est_completion(task, i) < rolling.est_completion(task, best) {
-                        best = i;
-                    }
-                }
-                return best;
+                return earliest_completion(0);
             }
-            return self.rng.below(n_valid);
+            let a = self.rng.below(n_valid);
+            if rolling.is_up(a) {
+                return a;
+            }
+            // A uniform draw landed on a failed accelerator: redirect to
+            // the earliest-completion up slot — deterministic and without
+            // an extra rng draw, so healthy-platform streams are unchanged.
+            return earliest_completion(a);
         }
         let t_task = rolling.metrics.scales.t_task.max(1e-12);
         let score = |i: usize| -> f64 {
@@ -225,6 +238,13 @@ impl FlexAI {
             if let Some(a) = argmax(&safe) {
                 return a;
             }
+        }
+        // The Q vector knows nothing about platform events, so the greedy
+        // argmax masks failed slots explicitly; only an all-down platform
+        // falls back to the unrestricted argmax.
+        let up = |i: usize| rolling.is_up(i);
+        if let Some(a) = argmax(&up) {
+            return a;
         }
         argmax(&|_| true).expect("n_valid > 0")
     }

@@ -13,7 +13,7 @@ use crate::sim::ShadowState;
 use crate::util::rng::Rng;
 
 use super::fitness::rollout_cost;
-use super::Scheduler;
+use super::{draw_up, Scheduler};
 
 /// GA hyper-parameters.
 #[derive(Debug, Clone, Copy)]
@@ -77,13 +77,14 @@ impl Scheduler for Ga {
 
     fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
         let n = state.len();
+        let ups = state.up_accels();
         let p = self.params;
 
         // Random initial population (no greedy seeding — see module docs).
         let mut pop: Vec<(Vec<usize>, f64)> = (0..p.population)
             .map(|_| {
                 let genome: Vec<usize> =
-                    tasks.iter().map(|_| self.rng.below(n)).collect();
+                    tasks.iter().map(|_| draw_up(&mut self.rng, n, &ups)).collect();
                 let cost = rollout_cost(tasks, &genome, state);
                 (genome, cost)
             })
@@ -107,7 +108,7 @@ impl Scheduler for Ga {
                 };
                 for g in child.iter_mut() {
                     if self.rng.chance(p.mutation_p) {
-                        *g = self.rng.below(n);
+                        *g = draw_up(&mut self.rng, n, &ups);
                     }
                 }
                 let cost = rollout_cost(tasks, &child, state);
@@ -150,6 +151,18 @@ mod tests {
         }
         rand_cost /= 20.0;
         assert!(ga_cost < rand_cost, "ga {ga_cost} vs random {rand_cost}");
+    }
+
+    #[test]
+    fn genomes_never_touch_failed_accels() {
+        let q = small_queue(3);
+        let platform = Platform::hmai();
+        let mut state = ShadowState::new(&platform, NormScales::unit());
+        state.set_speed(2, 0.0);
+        state.set_speed(7, 0.0);
+        let burst: Vec<_> = q.tasks.iter().take(20).cloned().collect();
+        let a = Ga::new(4).schedule_batch(&burst, &state);
+        assert!(a.iter().all(|&i| i != 2 && i != 7), "GA mapped a dead slot: {a:?}");
     }
 
     #[test]

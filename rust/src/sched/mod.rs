@@ -16,6 +16,7 @@ pub mod worst;
 
 use crate::env::taskgen::Task;
 use crate::sim::ShadowState;
+use crate::util::rng::Rng;
 
 pub use registry::{
     baseline_names, baseline_specs, BuildCtx, Registry, SchedulerInfo, SchedulerSpec, SCHEDULERS,
@@ -34,6 +35,20 @@ pub trait Scheduler {
 
     /// Reset any per-queue state (called between task queues/episodes).
     fn reset(&mut self) {}
+}
+
+/// Draw one accelerator index for the stochastic schedulers (GA genomes,
+/// SA neighbor moves).  On a healthy platform (`ups.len() == n`) this is
+/// the plain uniform draw — identical rng stream and results to the
+/// pre-platform-events code; when accelerators are down the draw covers
+/// the up set only, so no candidate ever maps a task to a dead slot.  An
+/// empty up set (every accelerator down) falls back to the full range.
+pub(crate) fn draw_up(rng: &mut Rng, n: usize, ups: &[usize]) -> usize {
+    if ups.len() == n || ups.is_empty() {
+        rng.below(n)
+    } else {
+        ups[rng.below(ups.len())]
+    }
 }
 
 /// Drive a per-task policy over a burst: the closure picks an accelerator

@@ -25,7 +25,23 @@ impl Scheduler for RandomSched {
     }
 
     fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
-        tasks.iter().map(|_| self.rng.below(state.len())).collect()
+        let n = state.len();
+        let ups = state.up_accels();
+        tasks
+            .iter()
+            .map(|_| {
+                // One draw per task regardless of platform health, so the
+                // rng stream (and every event-free result) is unchanged;
+                // draws landing on a failed accelerator remap onto the up
+                // set deterministically.
+                let a = self.rng.below(n);
+                if ups.len() == n || ups.is_empty() || state.is_up(a) {
+                    a
+                } else {
+                    ups[a % ups.len()]
+                }
+            })
+            .collect()
     }
 
     fn reset(&mut self) {
@@ -53,5 +69,23 @@ mod tests {
         }
         s.reset();
         assert_eq!(s.schedule_batch(&burst, &state), a);
+    }
+
+    #[test]
+    fn remaps_draws_off_failed_accels() {
+        let platform = Platform::hmai();
+        let mut state = ShadowState::new(&platform, NormScales::unit());
+        let q = crate::sched::tests::small_queue(4);
+        let burst: Vec<_> = q.tasks.iter().take(100).cloned().collect();
+        state.set_speed(5, 0.0);
+        let mut s = RandomSched::new(3);
+        let a = s.schedule_batch(&burst, &state);
+        assert!(a.iter().all(|&i| i != 5), "drew a failed accel");
+        assert!(a.iter().all(|&i| i < platform.len()));
+        // Healthy-platform results are untouched by the remap path.
+        let fresh = ShadowState::new(&platform, NormScales::unit());
+        let mut s1 = RandomSched::new(3);
+        let mut s2 = RandomSched::new(3);
+        assert_eq!(s1.schedule_batch(&burst, &fresh), s2.schedule_batch(&burst, &fresh));
     }
 }

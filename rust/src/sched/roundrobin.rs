@@ -24,11 +24,22 @@ impl Scheduler for RoundRobin {
     }
 
     fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
+        let n = state.len();
         tasks
             .iter()
             .map(|_| {
-                let a = self.next;
-                self.next = (self.next + 1) % state.len();
+                // Rotate to the next *up* accelerator (platform events can
+                // fail one mid-route); with everything up this is the
+                // plain `next, next+1, ...` cycle, and with everything
+                // down the scan falls through to the original pick.
+                let mut a = self.next % n;
+                for _ in 0..n {
+                    if state.is_up(a) {
+                        break;
+                    }
+                    a = (a + 1) % n;
+                }
+                self.next = (a + 1) % n;
                 a
             })
             .collect()
@@ -57,5 +68,24 @@ mod tests {
         assert_eq!(a[11], 0);
         rr.reset();
         assert_eq!(rr.schedule_batch(&burst[..1], &state), vec![0]);
+    }
+
+    #[test]
+    fn skips_failed_accels_and_resumes_on_recovery() {
+        let platform = Platform::hmai();
+        let mut state = ShadowState::new(&platform, NormScales::unit());
+        let q = crate::sched::tests::small_queue(2);
+        let burst: Vec<_> = q.tasks.iter().take(11).cloned().collect();
+        state.set_speed(0, 0.0);
+        state.set_speed(3, 0.0);
+        let mut rr = RoundRobin::new();
+        let a = rr.schedule_batch(&burst, &state);
+        assert!(a.iter().all(|&i| i != 0 && i != 3), "assigned a failed accel: {a:?}");
+        assert_eq!(a[0], 1, "cursor rolls past the dead slot");
+        // Recovery: the cycle includes every accelerator again.
+        state.set_speed(0, 1.0);
+        state.set_speed(3, 1.0);
+        let b = rr.schedule_batch(&burst, &state);
+        assert!(b.contains(&0) && b.contains(&3));
     }
 }

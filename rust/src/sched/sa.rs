@@ -11,7 +11,7 @@ use crate::sim::ShadowState;
 use crate::util::rng::Rng;
 
 use super::fitness::rollout_cost;
-use super::{sequential, Scheduler};
+use super::{draw_up, sequential, Scheduler};
 
 /// SA hyper-parameters.
 #[derive(Debug, Clone, Copy)]
@@ -60,7 +60,9 @@ impl Scheduler for Sa {
             // fall back to accel 0 for every task instead of panicking.
             return vec![0; tasks.len()];
         }
-        // Greedy earliest-completion start.
+        let ups = state.up_accels();
+        // Greedy earliest-completion start (a failed accelerator predicts
+        // an infinite completion time, so the greedy pick routes past it).
         let mut current = sequential(tasks, state, |task, s| {
             let mut best = 0;
             let mut best_ct = f64::INFINITY;
@@ -83,10 +85,10 @@ impl Scheduler for Sa {
         let mut temp = (cur_cost * self.params.t0_frac).max(1e-12);
 
         for _ in 0..self.params.steps {
-            // Neighbor: reassign one random task to a random accelerator.
+            // Neighbor: reassign one random task to a random up accelerator.
             let i = self.rng.below(tasks.len());
             let old = current[i];
-            let new = self.rng.below(n);
+            let new = draw_up(&mut self.rng, n, &ups);
             if new == old {
                 temp *= self.params.cooling;
                 continue;
@@ -161,6 +163,18 @@ mod tests {
             sa.summary.wait_s,
             ga.summary.wait_s
         );
+    }
+
+    #[test]
+    fn anneals_around_failed_accels() {
+        let q = small_queue(4);
+        let platform = Platform::hmai();
+        let mut state = ShadowState::new(&platform, NormScales::unit());
+        state.set_speed(1, 0.0);
+        state.set_speed(9, 0.0);
+        let burst: Vec<_> = q.tasks.iter().take(24).cloned().collect();
+        let a = Sa::new(6).schedule_batch(&burst, &state);
+        assert!(a.iter().all(|&i| i != 1 && i != 9), "SA mapped a dead slot: {a:?}");
     }
 
     #[test]

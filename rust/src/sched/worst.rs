@@ -25,13 +25,19 @@ impl Scheduler for WorstCase {
 
     fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
         sequential(tasks, state, |_, s| {
-            let mut best = 0;
-            for i in 1..s.len() {
-                if s.queue_delay(i) > s.queue_delay(best) {
-                    best = i;
+            // Most-backlogged *up* accelerator (worst case still has to be
+            // a case the platform can execute); ties keep the lowest index,
+            // and an all-down platform degenerates to accel 0 as before.
+            let mut best: Option<usize> = None;
+            for i in 0..s.len() {
+                if !s.is_up(i) {
+                    continue;
+                }
+                if best.map(|b| s.queue_delay(i) > s.queue_delay(b)).unwrap_or(true) {
+                    best = Some(i);
                 }
             }
-            best
+            best.unwrap_or(0)
         })
     }
 }
@@ -52,5 +58,16 @@ mod tests {
         let a = s.schedule_batch(&burst, &state);
         // From an idle platform, everything lands on accel 0.
         assert!(a.iter().all(|&i| i == 0));
+    }
+
+    #[test]
+    fn piles_onto_an_up_accel_when_zero_fails() {
+        let platform = Platform::hmai();
+        let mut state = ShadowState::new(&platform, NormScales::unit());
+        state.set_speed(0, 0.0);
+        let q = crate::sched::tests::small_queue(2);
+        let burst: Vec<_> = q.tasks.iter().take(10).cloned().collect();
+        let a = WorstCase::new().schedule_batch(&burst, &state);
+        assert!(a.iter().all(|&i| i == 1), "worst case moves to the next up accel: {a:?}");
     }
 }

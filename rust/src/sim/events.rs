@@ -1,0 +1,152 @@
+//! Timed platform events — the runtime-variability half of the paper's
+//! premise: available compute changes *mid-route* (an accelerator fails
+//! and recovers, thermal pressure derates a clock) while the workload
+//! keeps streaming.
+//!
+//! Events carry an absolute route-clock time and a [`ShadowState`] edit.
+//! The [`Sim`](crate::sim::Sim) stepper drains an [`EventTimeline`]
+//! *between bursts*: every event with `at_s <= now` is applied before the
+//! scheduler sees the state, so schedulers transparently observe capacity
+//! changes through the same `ShadowState` they always read — no scheduler
+//! API change.  Scenario archetypes declare events as route-duration
+//! fractions (`env::scenario::EventSpec`) and compile them to absolute
+//! times per queue.
+
+use super::shadow::ShadowState;
+
+/// What an event does to the platform.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventAction {
+    /// Accelerator drops out of service: new work routes elsewhere.
+    Fail { accel: usize },
+    /// Accelerator returns to nominal speed.
+    Recover { accel: usize },
+    /// Accelerator derates to `speed` × nominal (0 < speed < 1: compute
+    /// time divides by `speed`; energy is unchanged — the work is the
+    /// same, only slower).
+    Derate { accel: usize, speed: f64 },
+}
+
+impl EventAction {
+    /// Apply this action to a platform state.
+    pub fn apply(&self, state: &mut ShadowState) {
+        match *self {
+            EventAction::Fail { accel } => state.set_speed(accel, 0.0),
+            EventAction::Recover { accel } => state.set_speed(accel, 1.0),
+            EventAction::Derate { accel, speed } => state.set_speed(accel, speed),
+        }
+    }
+
+    /// Short human label (`env list`, progress lines).
+    pub fn describe(&self) -> String {
+        match *self {
+            EventAction::Fail { accel } => format!("fail a{accel}"),
+            EventAction::Recover { accel } => format!("recover a{accel}"),
+            EventAction::Derate { accel, speed } => format!("derate a{accel}x{speed}"),
+        }
+    }
+}
+
+/// One timed platform event on the route clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlatformEvent {
+    pub at_s: f64,
+    pub action: EventAction,
+}
+
+/// A time-sorted queue of platform events with a drain cursor.  An empty
+/// timeline is free on the simulation hot path (one index compare per
+/// burst).
+#[derive(Debug, Clone, Default)]
+pub struct EventTimeline {
+    events: Vec<PlatformEvent>,
+    next: usize,
+}
+
+impl EventTimeline {
+    /// Build a timeline; events are stably sorted by time so same-instant
+    /// events apply in declaration order.
+    pub fn new(mut events: Vec<PlatformEvent>) -> EventTimeline {
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        EventTimeline { events, next: 0 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Events not yet applied.
+    pub fn remaining(&self) -> usize {
+        self.events.len() - self.next
+    }
+
+    /// Apply every event with `at_s <= t` to `state`; returns how many
+    /// fired.  Idempotent per event: the cursor only moves forward.
+    pub fn apply_until(&mut self, t: f64, state: &mut ShadowState) -> usize {
+        let start = self.next;
+        while let Some(e) = self.events.get(self.next) {
+            if e.at_s > t {
+                break;
+            }
+            e.action.apply(state);
+            self.next += 1;
+        }
+        self.next - start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::NormScales;
+    use crate::platform::Platform;
+
+    fn state() -> ShadowState {
+        ShadowState::new(&Platform::hmai(), NormScales::unit())
+    }
+
+    #[test]
+    fn timeline_sorts_and_drains_in_order() {
+        let mut tl = EventTimeline::new(vec![
+            PlatformEvent { at_s: 5.0, action: EventAction::Recover { accel: 0 } },
+            PlatformEvent { at_s: 1.0, action: EventAction::Fail { accel: 0 } },
+        ]);
+        assert_eq!(tl.len(), 2);
+        let mut s = state();
+        assert_eq!(tl.apply_until(0.5, &mut s), 0);
+        assert!(s.is_up(0));
+        assert_eq!(tl.apply_until(1.0, &mut s), 1);
+        assert!(!s.is_up(0), "fail fired at its timestamp");
+        assert_eq!(tl.apply_until(2.0, &mut s), 0, "cursor does not re-fire");
+        assert_eq!(tl.remaining(), 1);
+        assert_eq!(tl.apply_until(100.0, &mut s), 1);
+        assert!(s.is_up(0), "recovery fired");
+        assert_eq!(tl.remaining(), 0);
+    }
+
+    #[test]
+    fn same_instant_events_apply_in_declaration_order() {
+        // Stable sort: a fail+derate pair at the same time lands with the
+        // later declaration winning.
+        let mut tl = EventTimeline::new(vec![
+            PlatformEvent { at_s: 2.0, action: EventAction::Fail { accel: 1 } },
+            PlatformEvent { at_s: 2.0, action: EventAction::Derate { accel: 1, speed: 0.5 } },
+        ]);
+        let mut s = state();
+        assert_eq!(tl.apply_until(2.0, &mut s), 2);
+        assert!((s.speed[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn derate_action_sets_fractional_speed() {
+        let mut s = state();
+        EventAction::Derate { accel: 2, speed: 0.25 }.apply(&mut s);
+        assert!((s.speed[2] - 0.25).abs() < 1e-12);
+        assert!(s.is_up(2));
+        assert!(EventAction::Fail { accel: 2 }.describe().contains("a2"));
+    }
+}

@@ -2,18 +2,32 @@
 //! platform: tasks arrive on their camera frame clocks, the scheduler maps
 //! each burst to accelerators, and per-accelerator FIFO queues determine
 //! waiting, response times and the §6/§7.2 metrics.
+//!
+//! The core is the streaming [`Sim`] stepper: one [`Sim::step`] call
+//! schedules and applies one release burst, draining any pending
+//! [`events::PlatformEvent`]s (accelerator failure / recovery / derating)
+//! into the [`ShadowState`] first, so schedulers see capacity change
+//! mid-route.  [`observer::SimObserver`]s consume the route as it unfolds;
+//! the one-shot [`simulate`] is a thin, bit-identical convenience wrapper
+//! over the stepper.
 
+pub mod events;
+pub mod observer;
 pub mod shadow;
 
 use std::time::Instant;
 
-use crate::env::taskgen::TaskQueue;
+use crate::env::taskgen::{Task, TaskQueue};
 use crate::metrics::summary::RunSummary;
 use crate::metrics::NormScales;
 use crate::platform::Platform;
 use crate::sched::Scheduler;
 use crate::workload::ModelKind;
 
+pub use events::{EventAction, EventTimeline, PlatformEvent};
+pub use observer::{
+    BrakingProbe, DeadlineAbort, Progress, RecordCollector, SimFlow, SimObserver,
+};
 pub use shadow::{Applied, ShadowState};
 
 /// Release times within this window belong to the same burst (all cameras
@@ -37,6 +51,28 @@ pub struct TaskRecord {
     pub ms: f64,
     pub safety_time_s: f64,
     pub met_deadline: bool,
+}
+
+impl TaskRecord {
+    /// The one record constructor every observer shares, so a record of a
+    /// (task, applied) pair can never disagree between consumers.
+    pub fn of(task: &Task, a: &Applied) -> TaskRecord {
+        TaskRecord {
+            task_id: task.id,
+            model: task.model,
+            accel: a.accel,
+            release_s: task.release_s,
+            start_s: a.start_s,
+            finish_s: a.finish_s,
+            wait_s: a.wait_s,
+            compute_s: a.compute_s,
+            response_s: a.response_s,
+            energy_j: a.energy_j,
+            ms: a.ms,
+            safety_time_s: task.safety_time_s,
+            met_deadline: a.met_deadline,
+        }
+    }
 }
 
 /// Simulation options.
@@ -94,11 +130,222 @@ pub fn first_detection_after(records: &[TaskRecord], t_probe: f64) -> Option<&Ta
     records[start..].iter().find(|r| !r.model.is_tracker())
 }
 
+/// One scheduled-and-applied release burst, as handed to observers (and
+/// returned by [`Sim::step`]).  Borrows the stepper's scratch buffers —
+/// consume it before the next `step`.
+#[derive(Debug)]
+pub struct BurstOutcome<'a> {
+    /// 0-based burst index.
+    pub index: u64,
+    /// Release time of the burst (the route clock at scheduling).
+    pub release_s: f64,
+    /// The tasks of the burst, in queue order.
+    pub tasks: &'a [Task],
+    /// The scheduler's accelerator choice per task.
+    pub assignment: &'a [usize],
+    /// What executing each choice did to the platform.
+    pub applied: &'a [Applied],
+    /// Wall-clock seconds inside the scheduler for this burst.
+    pub sched_elapsed_s: f64,
+    /// Platform events that fired before this burst was scheduled.
+    pub events_applied: usize,
+    /// Platform state *after* the burst executed.
+    pub state: &'a ShadowState,
+}
+
+/// Incremental simulation stepper.  Each [`Sim::step`]: drain due platform
+/// events into the state, collect the next release burst, let `scheduler`
+/// map it, execute the mapping, and return the [`BurstOutcome`].
+///
+/// `state` is public on purpose: between steps a caller may inject its own
+/// capacity changes (the [`EventTimeline`] is exactly that, pre-scheduled).
+pub struct Sim<'q> {
+    tasks: &'q [Task],
+    platform_name: String,
+    /// The live platform state schedulers see (mutable between steps).
+    pub state: ShadowState,
+    events: EventTimeline,
+    i: usize,
+    bursts: u64,
+    processed: u64,
+    /// Tasks that actually completed (finite response) — the mean-response
+    /// denominator; equals `processed` unless platform events lost tasks.
+    completed: u64,
+    met: u64,
+    wait_s: f64,
+    response_sum: f64,
+    response_max: f64,
+    sched_wall_s: f64,
+    // Per-burst scratch, reused across steps and lent out via BurstOutcome.
+    assignment: Vec<usize>,
+    applied: Vec<Applied>,
+}
+
+impl<'q> Sim<'q> {
+    pub fn new(queue: &'q TaskQueue, platform: &Platform, scales: NormScales) -> Sim<'q> {
+        Sim {
+            tasks: &queue.tasks,
+            platform_name: platform.name.clone(),
+            state: ShadowState::new(platform, scales),
+            events: EventTimeline::default(),
+            i: 0,
+            bursts: 0,
+            processed: 0,
+            completed: 0,
+            met: 0,
+            wait_s: 0.0,
+            response_sum: 0.0,
+            response_max: 0.0,
+            sched_wall_s: 0.0,
+            assignment: Vec::new(),
+            applied: Vec::new(),
+        }
+    }
+
+    /// Attach timed platform events (applied between bursts).
+    pub fn with_events(mut self, events: Vec<PlatformEvent>) -> Sim<'q> {
+        self.events = EventTimeline::new(events);
+        self
+    }
+
+    /// All tasks processed?
+    pub fn is_done(&self) -> bool {
+        self.i >= self.tasks.len()
+    }
+
+    /// Bursts scheduled so far.
+    pub fn bursts(&self) -> u64 {
+        self.bursts
+    }
+
+    /// Tasks applied so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule and execute the next burst; `None` once the queue is done.
+    pub fn step(&mut self, scheduler: &mut dyn Scheduler) -> Option<BurstOutcome<'_>> {
+        if self.i >= self.tasks.len() {
+            return None;
+        }
+        // Collect the burst [i, j): all tasks released together.
+        let tasks = self.tasks;
+        let i = self.i;
+        let t0 = tasks[i].release_s;
+        let mut j = i + 1;
+        while j < tasks.len() && tasks[j].release_s - t0 <= BURST_EPS_S {
+            j += 1;
+        }
+        let burst = &tasks[i..j];
+        self.state.advance(t0);
+        let now = self.state.now;
+        let events_applied = self.events.apply_until(now, &mut self.state);
+
+        let clk = Instant::now();
+        self.assignment = scheduler.schedule_batch(burst, &self.state);
+        let sched_elapsed_s = clk.elapsed().as_secs_f64();
+        self.sched_wall_s += sched_elapsed_s;
+        self.bursts += 1;
+        debug_assert_eq!(self.assignment.len(), burst.len());
+
+        self.applied.clear();
+        for (task, &accel) in burst.iter().zip(&self.assignment) {
+            let a = self.state.apply(task, accel);
+            self.wait_s += a.wait_s;
+            if a.met_deadline {
+                self.met += 1;
+            }
+            // Tasks lost to a failed accelerator respond "never" (+inf);
+            // they count as missed deadlines (and MS = -1) but stay out of
+            // the response accumulators *and* the mean's denominator, so
+            // mean/max response describe the completed work only.
+            // Event-free runs take this branch always.
+            if a.response_s.is_finite() {
+                self.response_sum += a.response_s;
+                self.response_max = self.response_max.max(a.response_s);
+                self.completed += 1;
+            }
+            self.applied.push(a);
+        }
+        self.processed += burst.len() as u64;
+        self.i = j;
+
+        Some(BurstOutcome {
+            index: self.bursts - 1,
+            release_s: t0,
+            tasks: burst,
+            assignment: &self.assignment,
+            applied: &self.applied,
+            sched_elapsed_s,
+            events_applied,
+            state: &self.state,
+        })
+    }
+
+    /// Finish the run: fold the accumulators into a [`SimResult`] (with an
+    /// empty record vector — attach a [`RecordCollector`] for records).
+    pub fn into_result(self, scheduler_name: &str) -> SimResult {
+        // Mean response over *completed* tasks (== all processed tasks on
+        // an event-free run, so `simulate()` stays bit-identical).
+        let n = self.completed as f64;
+        let summary = RunSummary::from_metrics(
+            scheduler_name,
+            &self.platform_name,
+            &self.state.metrics,
+            self.met,
+            self.wait_s,
+            self.sched_wall_s,
+            if n > 0.0 { self.response_sum / n } else { 0.0 },
+            self.response_max,
+        );
+        SimResult {
+            summary,
+            final_state: self.state,
+            records: Vec::new(),
+            sched_wall_s: self.sched_wall_s,
+            bursts: self.bursts,
+        }
+    }
+
+    /// Drive the stepper to completion (or an observer stop), notifying
+    /// `observers` per burst and per task, then `on_end` exactly once.
+    pub fn run(
+        mut self,
+        scheduler: &mut dyn Scheduler,
+        observers: &mut [&mut dyn SimObserver],
+    ) -> SimResult {
+        let mut stop = false;
+        while !stop {
+            let Some(b) = self.step(scheduler) else { break };
+            for obs in observers.iter_mut() {
+                if obs.on_burst(&b) == SimFlow::Stop {
+                    stop = true;
+                }
+            }
+            for (task, a) in b.tasks.iter().zip(b.applied.iter()) {
+                for obs in observers.iter_mut() {
+                    obs.on_task(task, a);
+                }
+            }
+        }
+        let result = self.into_result(&scheduler.name());
+        for obs in observers.iter_mut() {
+            obs.on_end(&result.summary, &result.final_state);
+        }
+        result
+    }
+}
+
 /// Run `queue` on `platform` under `scheduler`.
 ///
 /// Tasks are processed in release order, grouped into bursts of identical
 /// release time; the scheduler sees the exact `ShadowState` the engine
 /// executes on, so scheduler-side predictions are exact.
+///
+/// This is a thin wrapper over the [`Sim`] stepper (no events, a
+/// [`RecordCollector`] when `opts.record_tasks`) and is bit-identical to
+/// the pre-stepper one-shot loop — `tests/stream.rs` pins the equivalence
+/// and `tests/scenario.rs` the per-archetype fingerprints.
 pub fn simulate(
     queue: &TaskQueue,
     platform: &Platform,
@@ -118,78 +365,34 @@ pub fn simulate_with_scales(
     opts: SimOptions,
     scales: NormScales,
 ) -> SimResult {
-    let mut state = ShadowState::new(platform, scales);
-    let mut records = Vec::new();
-    if opts.record_tasks {
-        records.reserve(queue.len());
+    simulate_observed_with_scales(queue, platform, scheduler, opts, scales, Vec::new(), &mut [])
+}
+
+/// Full-control entry point: externally-fixed scales, a platform-event
+/// timeline, and caller observers.  Everything else (`simulate`, the
+/// engine, the braking probes) layers on this.
+pub fn simulate_observed_with_scales(
+    queue: &TaskQueue,
+    platform: &Platform,
+    scheduler: &mut dyn Scheduler,
+    opts: SimOptions,
+    scales: NormScales,
+    events: Vec<PlatformEvent>,
+    observers: &mut [&mut dyn SimObserver],
+) -> SimResult {
+    let sim = Sim::new(queue, platform, scales).with_events(events);
+    if !opts.record_tasks {
+        return sim.run(scheduler, observers);
     }
-
-    let mut wait_s = 0.0;
-    let mut met: u64 = 0;
-    let mut response_sum = 0.0;
-    let mut response_max = 0.0_f64;
-    let mut sched_wall = 0.0;
-    let mut bursts: u64 = 0;
-
-    let tasks = &queue.tasks;
-    let mut i = 0;
-    while i < tasks.len() {
-        // Collect the burst [i, j): all tasks released together.
-        let t0 = tasks[i].release_s;
-        let mut j = i + 1;
-        while j < tasks.len() && tasks[j].release_s - t0 <= BURST_EPS_S {
-            j += 1;
-        }
-        let burst = &tasks[i..j];
-        state.advance(t0);
-
-        let clk = Instant::now();
-        let assignment = scheduler.schedule_batch(burst, &state);
-        sched_wall += clk.elapsed().as_secs_f64();
-        bursts += 1;
-        debug_assert_eq!(assignment.len(), burst.len());
-
-        for (task, &accel) in burst.iter().zip(&assignment) {
-            let a = state.apply(task, accel);
-            wait_s += a.wait_s;
-            if a.met_deadline {
-                met += 1;
-            }
-            response_sum += a.response_s;
-            response_max = response_max.max(a.response_s);
-            if opts.record_tasks {
-                records.push(TaskRecord {
-                    task_id: task.id,
-                    model: task.model,
-                    accel,
-                    release_s: task.release_s,
-                    start_s: a.start_s,
-                    finish_s: a.finish_s,
-                    wait_s: a.wait_s,
-                    compute_s: a.compute_s,
-                    response_s: a.response_s,
-                    energy_j: a.energy_j,
-                    ms: a.ms,
-                    safety_time_s: task.safety_time_s,
-                    met_deadline: a.met_deadline,
-                });
-            }
-        }
-        i = j;
+    let mut collector = RecordCollector::with_capacity(queue.len());
+    let mut all: Vec<&mut dyn SimObserver> = Vec::with_capacity(observers.len() + 1);
+    all.push(&mut collector);
+    for obs in observers.iter_mut() {
+        all.push(&mut **obs);
     }
-
-    let n = queue.len() as f64;
-    let summary = RunSummary::from_metrics(
-        &scheduler.name(),
-        &platform.name,
-        &state.metrics,
-        met,
-        wait_s,
-        sched_wall,
-        if n > 0.0 { response_sum / n } else { 0.0 },
-        response_max,
-    );
-    SimResult { summary, final_state: state, records, sched_wall_s: sched_wall, bursts }
+    let mut result = sim.run(scheduler, &mut all);
+    result.records = collector.into_records();
+    result
 }
 
 #[cfg(test)]
@@ -315,6 +518,162 @@ mod tests {
         }
         assert_eq!(first_detection_after(&recs, 2.0).unwrap().task_id, 2);
         assert!(first_detection_after(&recs, 9.0).is_none());
+    }
+
+    #[test]
+    fn stepper_is_bit_identical_to_simulate() {
+        let q = queue(60.0, 7);
+        let platform = Platform::hmai();
+        let mut s1 = RoundRobin::new();
+        let oneshot = simulate(&q, &platform, &mut s1, SimOptions { record_tasks: true });
+
+        let mut s2 = RoundRobin::new();
+        let scales = NormScales::for_queue(&q, &platform);
+        let mut sim = Sim::new(&q, &platform, scales);
+        let mut bursts = 0u64;
+        let mut tasks = 0usize;
+        while let Some(b) = sim.step(&mut s2) {
+            assert_eq!(b.index, bursts);
+            assert_eq!(b.tasks.len(), b.assignment.len());
+            assert_eq!(b.tasks.len(), b.applied.len());
+            assert_eq!(b.events_applied, 0);
+            bursts += 1;
+            tasks += b.tasks.len();
+        }
+        assert!(sim.is_done());
+        assert_eq!(sim.processed(), tasks as u64);
+        let stepped = sim.into_result(&s2.name());
+
+        assert_eq!(oneshot.bursts, bursts);
+        assert_eq!(oneshot.summary.tasks, stepped.summary.tasks);
+        assert_eq!(oneshot.summary.tasks_met, stepped.summary.tasks_met);
+        for (a, b) in [
+            (oneshot.summary.energy_j, stepped.summary.energy_j),
+            (oneshot.summary.makespan_s, stepped.summary.makespan_s),
+            (oneshot.summary.wait_s, stepped.summary.wait_s),
+            (oneshot.summary.compute_s, stepped.summary.compute_s),
+            (oneshot.summary.r_balance, stepped.summary.r_balance),
+            (oneshot.summary.ms_total, stepped.summary.ms_total),
+            (oneshot.summary.gvalue, stepped.summary.gvalue),
+            (oneshot.summary.mean_response_s, stepped.summary.mean_response_s),
+            (oneshot.summary.max_response_s, stepped.summary.max_response_s),
+        ] {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn record_collector_reproduces_inline_records() {
+        let q = queue(50.0, 8);
+        let platform = Platform::hmai();
+        let mut s1 = RoundRobin::new();
+        let r = simulate(&q, &platform, &mut s1, SimOptions { record_tasks: true });
+
+        let mut s2 = RoundRobin::new();
+        let scales = NormScales::for_queue(&q, &platform);
+        let mut collector = RecordCollector::new();
+        Sim::new(&q, &platform, scales).run(&mut s2, &mut [&mut collector]);
+        let recs = collector.into_records();
+        assert_eq!(recs.len(), r.records.len());
+        for (a, b) in recs.iter().zip(&r.records) {
+            assert_eq!(a.task_id, b.task_id);
+            assert_eq!(a.accel, b.accel);
+            assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+            assert_eq!(a.wait_s.to_bits(), b.wait_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn deadline_abort_stops_the_run_early() {
+        // One slow accelerator drowns instantly under an urban queue, so
+        // the aborting run processes a strict prefix of the full one.
+        let q = queue(60.0, 9);
+        let platform = Platform::from_counts("tiny", 1, 0, 0);
+        let mut s1 = RoundRobin::new();
+        let full = simulate(&q, &platform, &mut s1, SimOptions::default());
+        assert!(full.summary.tasks_met < full.summary.tasks, "setup must miss deadlines");
+
+        let mut s2 = RoundRobin::new();
+        let scales = NormScales::for_queue(&q, &platform);
+        let mut abort = DeadlineAbort::after(1);
+        let r = Sim::new(&q, &platform, scales).run(&mut s2, &mut [&mut abort]);
+        assert!(abort.triggered());
+        assert!(abort.misses() >= 1);
+        assert!(
+            r.summary.tasks < full.summary.tasks,
+            "abort at {} of {}",
+            r.summary.tasks,
+            full.summary.tasks
+        );
+        assert!(r.bursts < full.bursts);
+    }
+
+    #[test]
+    fn braking_probe_matches_record_scan() {
+        let q = queue(80.0, 10);
+        let platform = Platform::hmai();
+        let mut s1 = RoundRobin::new();
+        let r = simulate(&q, &platform, &mut s1, SimOptions { record_tasks: true });
+        let end = q.route_duration_s;
+        for k in [0usize, 7, 20, 39] {
+            let t_probe = end * k as f64 / 40.0;
+            let mut s2 = RoundRobin::new();
+            let scales = NormScales::for_queue(&q, &platform);
+            let mut probe = BrakingProbe::new(t_probe);
+            Sim::new(&q, &platform, scales).run(&mut s2, &mut [&mut probe]);
+            let want = first_detection_after(&r.records, t_probe).map(|x| x.task_id);
+            assert_eq!(probe.captured().map(|x| x.task_id), want, "t={t_probe}");
+        }
+    }
+
+    #[test]
+    fn events_fire_between_bursts_and_reroute_work() {
+        let q = queue(60.0, 11);
+        let platform = Platform::hmai();
+        let dur = q.route_duration_s;
+        let (t_fail, t_rec) = (0.25 * dur, 0.75 * dur);
+        let events = vec![
+            PlatformEvent { at_s: t_fail, action: EventAction::Fail { accel: 0 } },
+            PlatformEvent { at_s: t_rec, action: EventAction::Recover { accel: 0 } },
+        ];
+        let mut s = RoundRobin::new();
+        let scales = NormScales::for_queue(&q, &platform);
+        let r = simulate_observed_with_scales(
+            &q,
+            &platform,
+            &mut s,
+            SimOptions { record_tasks: true },
+            scales,
+            events,
+            &mut [],
+        );
+        let margin = 1e-6;
+        let in_window: Vec<_> = r
+            .records
+            .iter()
+            .filter(|x| x.release_s >= t_fail + margin && x.release_s < t_rec - margin)
+            .collect();
+        assert!(!in_window.is_empty(), "window must contain tasks");
+        assert!(
+            in_window.iter().all(|x| x.accel != 0),
+            "no assignments to the failed accelerator while it is down"
+        );
+        // The accelerator serves traffic on both sides of the outage.
+        assert!(r.records.iter().any(|x| x.release_s < t_fail && x.accel == 0));
+        assert!(r.records.iter().any(|x| x.release_s >= t_rec + margin && x.accel == 0));
+    }
+
+    #[test]
+    fn progress_observer_ticks_every_n_bursts() {
+        let q = queue(40.0, 12);
+        let platform = Platform::hmai();
+        let mut s = RoundRobin::new();
+        let scales = NormScales::for_queue(&q, &platform);
+        let mut ticks = Vec::new();
+        let mut progress = Progress::every(10, |bursts, _t, tasks| ticks.push((bursts, tasks)));
+        let r = Sim::new(&q, &platform, scales).run(&mut s, &mut [&mut progress]);
+        assert_eq!(ticks.len() as u64, r.bursts / 10);
+        assert!(ticks.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 < w[1].1));
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! Streaming simulation observers: consume a route *as it unfolds*
+//! instead of post-processing a retained `Vec<TaskRecord>`.
+//!
+//! The [`Sim`](crate::sim::Sim) stepper notifies observers once per burst
+//! ([`SimObserver::on_burst`], which can stop the run early) and once per
+//! applied task ([`SimObserver::on_task`]); [`SimObserver::on_end`] fires
+//! exactly once with the finished summary.  Stock observers cover the
+//! call sites that previously needed `SimOptions { record_tasks: true }`:
+//! [`RecordCollector`] reproduces the full record vector bit-for-bit,
+//! [`BrakingProbe`] captures the Fig. 14 probe task without retaining
+//! anything else, [`DeadlineAbort`] ends a hopeless run early, and
+//! [`Progress`] streams periodic progress for long sweeps.
+
+use crate::env::taskgen::Task;
+use crate::metrics::summary::RunSummary;
+
+use super::shadow::{Applied, ShadowState};
+use super::{BurstOutcome, TaskRecord};
+
+/// Observer verdict after a burst: keep stepping or stop the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimFlow {
+    Continue,
+    Stop,
+}
+
+/// Callbacks driven by the [`Sim`](crate::sim::Sim) stepper.  All methods
+/// default to no-ops so observers implement only what they need.
+pub trait SimObserver {
+    /// One scheduled-and-applied burst; return [`SimFlow::Stop`] to end
+    /// the run after this burst (remaining tasks are never scheduled).
+    fn on_burst(&mut self, _burst: &BurstOutcome<'_>) -> SimFlow {
+        SimFlow::Continue
+    }
+
+    /// One applied task (fires after `on_burst`, in burst order).
+    fn on_task(&mut self, _task: &Task, _applied: &Applied) {}
+
+    /// The run is over (end of queue or an observer stop).
+    fn on_end(&mut self, _summary: &RunSummary, _final_state: &ShadowState) {}
+}
+
+/// Collects the classic per-task record vector — the observer behind
+/// `SimOptions { record_tasks: true }`.
+#[derive(Debug, Default)]
+pub struct RecordCollector {
+    records: Vec<TaskRecord>,
+}
+
+impl RecordCollector {
+    pub fn new() -> RecordCollector {
+        RecordCollector { records: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> RecordCollector {
+        RecordCollector { records: Vec::with_capacity(n) }
+    }
+
+    pub fn records(&self) -> &[TaskRecord] {
+        &self.records
+    }
+
+    pub fn into_records(self) -> Vec<TaskRecord> {
+        self.records
+    }
+}
+
+impl SimObserver for RecordCollector {
+    fn on_task(&mut self, task: &Task, a: &Applied) {
+        self.records.push(TaskRecord::of(task, a));
+    }
+}
+
+/// Streaming Fig. 14 braking probe: captures the first *detection*
+/// (non-tracker) task released at or after `t_probe` — the exact
+/// [`first_detection_after`](crate::sim::first_detection_after) selection,
+/// taken on the fly so the run retains one record instead of all of them.
+#[derive(Debug)]
+pub struct BrakingProbe {
+    t_probe: f64,
+    captured: Option<TaskRecord>,
+}
+
+impl BrakingProbe {
+    pub fn new(t_probe: f64) -> BrakingProbe {
+        BrakingProbe { t_probe, captured: None }
+    }
+
+    /// The probe task, if the route reached `t_probe`.
+    pub fn captured(&self) -> Option<&TaskRecord> {
+        self.captured.as_ref()
+    }
+}
+
+impl SimObserver for BrakingProbe {
+    fn on_task(&mut self, task: &Task, a: &Applied) {
+        // Tasks stream in release order, so the first match is the probe.
+        if self.captured.is_none()
+            && task.release_s >= self.t_probe
+            && !task.model.is_tracker()
+        {
+            self.captured = Some(TaskRecord::of(task, a));
+        }
+    }
+}
+
+/// Early exit once `allowed` deadlines have been missed — a sweep over a
+/// hopeless (scheduler, platform) cell stops paying for the rest of the
+/// route.  The resulting summary covers only the processed prefix.
+#[derive(Debug)]
+pub struct DeadlineAbort {
+    allowed: u64,
+    misses: u64,
+}
+
+impl DeadlineAbort {
+    /// Stop after `allowed` missed deadlines (1 = stop on the first miss).
+    pub fn after(allowed: u64) -> DeadlineAbort {
+        DeadlineAbort { allowed: allowed.max(1), misses: 0 }
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn triggered(&self) -> bool {
+        self.misses >= self.allowed
+    }
+}
+
+impl SimObserver for DeadlineAbort {
+    fn on_burst(&mut self, b: &BurstOutcome<'_>) -> SimFlow {
+        self.misses += b.applied.iter().filter(|a| !a.met_deadline).count() as u64;
+        if self.triggered() {
+            SimFlow::Stop
+        } else {
+            SimFlow::Continue
+        }
+    }
+}
+
+/// Periodic progress reporting: invokes the callback every `every` bursts
+/// with (bursts so far, route clock, tasks so far) — what the engine and
+/// long-running examples surface instead of polling retained results.
+pub struct Progress<F: FnMut(u64, f64, u64)> {
+    every: u64,
+    tasks: u64,
+    callback: F,
+}
+
+impl<F: FnMut(u64, f64, u64)> Progress<F> {
+    pub fn every(every: u64, callback: F) -> Progress<F> {
+        Progress { every: every.max(1), tasks: 0, callback }
+    }
+}
+
+impl<F: FnMut(u64, f64, u64)> SimObserver for Progress<F> {
+    fn on_burst(&mut self, b: &BurstOutcome<'_>) -> SimFlow {
+        self.tasks += b.tasks.len() as u64;
+        if (b.index + 1) % self.every == 0 {
+            (self.callback)(b.index + 1, b.release_s, self.tasks);
+        }
+        SimFlow::Continue
+    }
+}

@@ -36,6 +36,13 @@ pub struct Applied {
 /// Deterministic platform state: per-accelerator FIFO backlog plus the §7.2
 /// running metrics.  Cloning is cheap (a few `Vec<f64>` of length N), which
 /// is what GA/SA rollouts and Min-Min need.
+///
+/// `speed` is the runtime capacity model behind
+/// [`sim::events`](crate::sim::events): 1.0 is nominal, a value in (0, 1)
+/// is a frequency-derated accelerator (compute time divides by it), and
+/// 0.0 is a failed accelerator — `est_response`/`est_completion` go to
+/// `+inf` there, so state-aware schedulers route around it, and the
+/// state-blind baselines consult `is_up`/`up_accels` explicitly.
 #[derive(Debug, Clone)]
 pub struct ShadowState {
     pub kinds: Vec<AccelKind>,
@@ -43,6 +50,8 @@ pub struct ShadowState {
     pub now: f64,
     /// Time at which each accelerator drains its queue.
     pub busy_until: Vec<f64>,
+    /// Per-accelerator speed factor: 1.0 nominal, (0, 1) derated, 0.0 down.
+    pub speed: Vec<f64>,
     pub metrics: PlatformMetrics,
 }
 
@@ -54,7 +63,27 @@ impl ShadowState {
             kinds,
             now: 0.0,
             busy_until: vec![0.0; n],
+            speed: vec![1.0; n],
             metrics: PlatformMetrics::new(n, scales),
+        }
+    }
+
+    /// Is accelerator `i` accepting work (not failed)?
+    pub fn is_up(&self, i: usize) -> bool {
+        self.speed[i] > 0.0
+    }
+
+    /// Indices of accelerators currently accepting work.
+    pub fn up_accels(&self) -> Vec<usize> {
+        (0..self.speed.len()).filter(|&i| self.is_up(i)).collect()
+    }
+
+    /// Set accelerator `i`'s speed factor (0.0 = failed, 1.0 = nominal).
+    /// Out-of-range indices are ignored so scenario events written for a
+    /// large platform degrade gracefully on a smaller one.
+    pub fn set_speed(&mut self, i: usize, speed: f64) {
+        if let Some(s) = self.speed.get_mut(i) {
+            *s = speed.clamp(0.0, 1.0);
         }
     }
 
@@ -71,9 +100,13 @@ impl ShadowState {
         (self.busy_until[i] - self.now).max(0.0)
     }
 
-    /// Predicted response time (wait + compute) of `task` on accelerator `i`.
+    /// Predicted response time (wait + compute) of `task` on accelerator
+    /// `i`.  A derated accelerator stretches compute time by 1/speed; a
+    /// failed one predicts `+inf`, which is what steers min-seeking
+    /// schedulers away from it.  (Division by a speed of exactly 1.0 is
+    /// bit-exact in IEEE 754, so the nominal path is unchanged.)
     pub fn est_response(&self, task: &Task, i: usize) -> f64 {
-        self.queue_delay(i) + cost(self.kinds[i], task.model).time_s
+        self.queue_delay(i) + cost(self.kinds[i], task.model).time_s / self.speed[i]
     }
 
     /// Predicted completion-time point on the route clock.
@@ -108,8 +141,36 @@ impl ShadowState {
     pub fn apply(&mut self, task: &Task, accel: usize) -> Applied {
         debug_assert!(accel < self.kinds.len());
         let c = cost(self.kinds[accel], task.model);
+        let speed = self.speed[accel];
+        if speed <= 0.0 {
+            // A failed accelerator accepts no work: the task is *lost*
+            // (infinite response, missed deadline, MS = -1, no energy)
+            // but the dead slot's FIFO and response accumulators are not
+            // poisoned — service resumes cleanly when a Recover event
+            // fires.  Schedulers only reach this on an all-down platform
+            // (their fallback paths); rollouts probing a dead slot see
+            // the infinite response and price the genome accordingly.
+            let ms = matching_score(task.category, f64::INFINITY, task.safety_time_s);
+            let r_j = self.busy_fraction_at(self.now);
+            self.metrics.per_accel[accel].update(0.0, 0.0, 0.0, ms, r_j);
+            return Applied {
+                accel,
+                start_s: self.now,
+                finish_s: f64::INFINITY,
+                wait_s: 0.0,
+                compute_s: f64::INFINITY,
+                response_s: f64::INFINITY,
+                energy_j: 0.0,
+                ms,
+                r_j,
+                met_deadline: false,
+            };
+        }
+        // Speed-scaled execution: 1.0 nominal (bit-exact), (0,1) derated.
+        // Energy is the task's work, not its duration, so it is not scaled.
+        let compute = c.time_s / speed;
         let start = self.busy_until[accel].max(self.now);
-        let finish = start + c.time_s;
+        let finish = start + compute;
         self.busy_until[accel] = finish;
 
         let wait = start - self.now;
@@ -118,14 +179,14 @@ impl ShadowState {
         // r_j: busy fraction right after dispatch — "the higher R_Balance,
         // the less idle accelerators in HMAI at every moment" (§6.2).
         let r_j = self.busy_fraction_at(self.now);
-        self.metrics.per_accel[accel].update(c.energy_j, c.time_s, response, ms, r_j);
+        self.metrics.per_accel[accel].update(c.energy_j, compute, response, ms, r_j);
 
         Applied {
             accel,
             start_s: start,
             finish_s: finish,
             wait_s: wait,
-            compute_s: c.time_s,
+            compute_s: compute,
             response_s: response,
             energy_j: c.energy_j,
             ms,
@@ -226,6 +287,64 @@ mod tests {
         assert!((a1.r_j - 1.0 / 11.0).abs() < 1e-12);
         let a2 = s.apply(&t, 1);
         assert!((a2.r_j - 2.0 / 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nominal_speed_is_bit_exact() {
+        // speed = 1.0 must not perturb a single bit of the timing model.
+        let t = task(ModelKind::Yolo, 0.0, 1.0);
+        let mut a = shadow();
+        let mut b = shadow();
+        b.set_speed(2, 1.0); // explicit no-op write
+        let ra = a.apply(&t, 2);
+        let rb = b.apply(&t, 2);
+        assert_eq!(ra.finish_s.to_bits(), rb.finish_s.to_bits());
+        assert_eq!(ra.compute_s.to_bits(), rb.compute_s.to_bits());
+        assert_eq!(a.est_response(&t, 2).to_bits(), b.est_response(&t, 2).to_bits());
+    }
+
+    #[test]
+    fn derated_accel_stretches_compute() {
+        let t = task(ModelKind::Yolo, 0.0, 10.0);
+        let mut s = shadow();
+        let nominal = s.clone().apply(&t, 0).compute_s;
+        s.set_speed(0, 0.5);
+        let a = s.apply(&t, 0);
+        assert!((a.compute_s - 2.0 * nominal).abs() < 1e-12);
+        assert!(s.is_up(0), "derated is still up");
+    }
+
+    #[test]
+    fn failed_accel_predicts_infinite_response() {
+        let t = task(ModelKind::Ssd, 0.0, 1.0);
+        let mut s = shadow();
+        s.set_speed(3, 0.0);
+        assert!(!s.is_up(3));
+        assert!(s.est_response(&t, 3).is_infinite());
+        assert!(s.est_completion(&t, 3).is_infinite());
+        let ups = s.up_accels();
+        assert_eq!(ups.len(), s.len() - 1);
+        assert!(!ups.contains(&3));
+        // Applying anyway (a fallback on an all-down platform, or a
+        // rollout probing the dead slot) loses the task: missed deadline,
+        // MS = -1, no energy — and the dead FIFO stays untouched, so the
+        // outage cannot poison the accelerator past its recovery.
+        let a = s.apply(&t, 3);
+        assert!(!a.met_deadline);
+        assert_eq!(a.ms, -1.0);
+        assert!(a.response_s.is_infinite());
+        assert_eq!(a.energy_j, 0.0);
+        assert_eq!(s.busy_until[3], 0.0, "dead FIFO must stay clean");
+        // Recovery restores service: new work completes finitely.
+        s.set_speed(3, 1.0);
+        assert!(s.is_up(3));
+        assert!(s.est_response(&t, 3).is_finite());
+        let b = s.apply(&t, 3);
+        assert!(b.response_s.is_finite());
+        assert!(s.metrics.per_accel[3].busy_s.is_finite());
+        // Out-of-range event indices are ignored.
+        s.set_speed(999, 0.0);
+        assert_eq!(s.up_accels().len(), s.len());
     }
 
     #[test]

@@ -62,16 +62,30 @@ impl JsonObj {
     }
 }
 
-/// Parse / access error.
-#[derive(Debug, thiserror::Error)]
+/// Parse / access error.  (Hand-implemented `Display`/`Error`: the
+/// offline vendor set has no `thiserror`.)
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {pos}: {msg}")]
     Parse { pos: usize, msg: String },
-    #[error("json: missing key '{0}'")]
     MissingKey(String),
-    #[error("json: type mismatch at '{key}': expected {expected}")]
     Type { key: String, expected: &'static str },
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse { pos, msg } => {
+                write!(f, "json parse error at byte {pos}: {msg}")
+            }
+            JsonError::MissingKey(key) => write!(f, "json: missing key '{key}'"),
+            JsonError::Type { key, expected } => {
+                write!(f, "json: type mismatch at '{key}': expected {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // -- constructors ------------------------------------------------------
@@ -212,6 +226,13 @@ impl Json {
         self.write(&mut s, Some(2), 0);
         s.push('\n');
         s
+    }
+
+    /// Write the pretty rendering to a file — the one JSON writer behind
+    /// the CLI's `--json <path>` reports and the `BENCH_*.json` artifacts,
+    /// so every machine-readable output shares one format.
+    pub fn write_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_pretty())
     }
 
     fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
@@ -581,6 +602,29 @@ mod tests {
         assert_eq!(v.get_f32_vec("a").unwrap(), vec![1.5, 2.5]);
         assert!(matches!(v.get("missing"), Err(JsonError::MissingKey(_))));
         assert!(v.get_f64("s").is_err());
+    }
+
+    #[test]
+    fn error_display_names_the_problem() {
+        let e = Json::parse("{").unwrap_err();
+        assert!(format!("{e}").contains("json parse error"));
+        let v = Json::parse("{}").unwrap();
+        assert!(format!("{}", v.get("k").unwrap_err()).contains("missing key 'k'"));
+        assert!(format!("{}", v.get_f64("k").unwrap_err()).contains("k"));
+        // anyhow interop: JsonError is a std Error.
+        let _: &dyn std::error::Error = &e;
+    }
+
+    #[test]
+    fn write_to_roundtrips_through_a_file() {
+        let dir = std::env::temp_dir().join("hmai_json_write_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        let v = Json::parse(r#"{"a": [1, 2], "b": "x"}"#).unwrap();
+        v.write_to(&path).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v, back);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,0 +1,249 @@
+//! Golden equivalence suite for the streaming simulation core: the `Sim`
+//! stepper (and the observer-driven `simulate()` built on it) must
+//! reproduce the one-shot results bit-for-bit for every scenario
+//! archetype (`f64::to_bits` identity, same fingerprints `tests/scenario.rs`
+//! pins), and the new fault archetypes must be `--jobs`-invariant with
+//! platform events enabled while never assigning work to a failed
+//! accelerator.
+
+use hmai::engine::Engine;
+use hmai::env::scenario;
+use hmai::env::taskgen::DeadlineMode;
+use hmai::metrics::summary::RunSummary;
+use hmai::metrics::NormScales;
+use hmai::plan::ExperimentPlan;
+use hmai::platform::Platform;
+use hmai::sched::{Registry, SchedulerSpec};
+use hmai::sim::{simulate, RecordCollector, Sim, SimObserver, SimOptions};
+
+/// Assert two run summaries are equal down to the last mantissa bit.
+fn assert_summaries_bit_identical(a: &RunSummary, b: &RunSummary, ctx: &str) {
+    assert_eq!(a.tasks, b.tasks, "{ctx}: tasks");
+    assert_eq!(a.tasks_met, b.tasks_met, "{ctx}: tasks_met");
+    for (x, y, field) in [
+        (a.energy_j, b.energy_j, "energy_j"),
+        (a.makespan_s, b.makespan_s, "makespan_s"),
+        (a.wait_s, b.wait_s, "wait_s"),
+        (a.compute_s, b.compute_s, "compute_s"),
+        (a.r_balance, b.r_balance, "r_balance"),
+        (a.ms_total, b.ms_total, "ms_total"),
+        (a.gvalue, b.gvalue, "gvalue"),
+        (a.mean_response_s, b.mean_response_s, "mean_response_s"),
+        (a.max_response_s, b.max_response_s, "max_response_s"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {field} ({x} vs {y})");
+    }
+}
+
+#[test]
+fn stepper_matches_simulate_for_every_archetype() {
+    let reg = Registry::new();
+    let platform = Platform::hmai();
+    for name in scenario::names() {
+        let arch = scenario::find(&name).unwrap();
+        let q = arch.queue_for(100.0, 0, DeadlineMode::Rss, 42);
+
+        let mut s1 = reg.build_by_name("minmin", 1).unwrap();
+        let oneshot = simulate(&q, &platform, s1.as_mut(), SimOptions { record_tasks: true });
+
+        let mut s2 = reg.build_by_name("minmin", 1).unwrap();
+        let scales = NormScales::for_queue(&q, &platform);
+        let mut sim = Sim::new(&q, &platform, scales);
+        let mut collector = RecordCollector::with_capacity(q.len());
+        let mut bursts = 0u64;
+        while let Some(b) = sim.step(s2.as_mut()) {
+            bursts += 1;
+            for (task, a) in b.tasks.iter().zip(b.applied.iter()) {
+                collector.on_task(task, a);
+            }
+        }
+        let stepped = sim.into_result(&s2.name());
+
+        assert_eq!(oneshot.bursts, bursts, "{name}: burst count");
+        assert_summaries_bit_identical(&oneshot.summary, &stepped.summary, &name);
+        let recs = collector.into_records();
+        assert_eq!(recs.len(), oneshot.records.len(), "{name}: record count");
+        for (x, y) in recs.iter().zip(&oneshot.records) {
+            assert_eq!(x.task_id, y.task_id, "{name}");
+            assert_eq!(x.accel, y.accel, "{name}: task {}", x.task_id);
+            assert_eq!(x.release_s.to_bits(), y.release_s.to_bits(), "{name}");
+            assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits(), "{name}");
+            assert_eq!(x.response_s.to_bits(), y.response_s.to_bits(), "{name}");
+        }
+    }
+}
+
+#[test]
+fn fault_archetypes_are_jobs_invariant_with_events() {
+    let reg = Registry::new();
+    for name in ["accel-failure", "thermal-throttle"] {
+        let plan = ExperimentPlan::new()
+            .scenarios([name.to_string()])
+            .distances([60.0, 90.0])
+            .schedulers([SchedulerSpec::MinMin, SchedulerSpec::RoundRobin])
+            .seed(42);
+        let seq = Engine::new(&reg).events(true).jobs(1).sweep_streaming(&plan).unwrap();
+        for jobs in [2, 4] {
+            let par = Engine::new(&reg).events(true).jobs(jobs).sweep_streaming(&plan).unwrap();
+            assert_eq!(
+                seq.fingerprint(),
+                par.fingerprint(),
+                "{name}: fingerprint drifted at jobs={jobs}"
+            );
+        }
+        // Events change the outcome relative to the event-free run of the
+        // same archetype (otherwise the fault never reached the platform).
+        let off = Engine::new(&reg).jobs(1).sweep_streaming(&plan).unwrap();
+        assert_ne!(seq.fingerprint(), off.fingerprint(), "{name}: events were a no-op");
+    }
+}
+
+#[test]
+fn no_work_lands_on_a_failed_accel_for_any_scheduler() {
+    // Every state-aware *and* state-blind baseline must route around the
+    // accel-failure outage window.
+    let reg = Registry::new();
+    let arch = scenario::find("accel-failure").unwrap();
+    for sched in ["minmin", "ata", "edp", "sa", "ga", "rr", "random", "worst"] {
+        let plan = ExperimentPlan::new()
+            .scenarios(["accel-failure"])
+            .distances([60.0])
+            .schedulers([SchedulerSpec::parse(sched).unwrap()])
+            .seed(11);
+        let trials = plan.trials().unwrap();
+        let trial = &trials[0];
+        let r = Engine::new(&reg)
+            .events(true)
+            .sim_options(SimOptions { record_tasks: true })
+            .run_trial(trial)
+            .unwrap();
+        let dur = trial.queue().route_duration_s;
+        let evts = arch.platform_events(dur);
+        let (t_fail, t_rec) = (evts[0].at_s + 1e-6, evts[1].at_s - 1e-6);
+        let window: Vec<_> = r
+            .records
+            .iter()
+            .filter(|x| x.release_s >= t_fail && x.release_s < t_rec)
+            .collect();
+        assert!(!window.is_empty(), "{sched}: empty outage window");
+        assert!(
+            window.iter().all(|x| x.accel != 0),
+            "{sched}: assigned the failed accelerator inside the outage"
+        );
+        // Traffic returns after recovery (outside the window the accel is
+        // a normal member of the platform again) — guaranteed for the
+        // cycling scheduler, spot-checked here.
+        if sched == "rr" {
+            assert!(r.records.iter().any(|x| x.release_s >= t_rec + 1e-6 && x.accel == 0));
+        }
+    }
+}
+
+#[test]
+fn outage_on_a_single_accel_platform_drops_tasks_then_recovers() {
+    // Degenerate platform: one accelerator, so during the accel-failure
+    // outage every scheduler fallback must dispatch to the dead slot.
+    // Those tasks are lost (infinite response, missed deadline, MS = -1)
+    // but the FIFO must not be poisoned: after the Recover event the
+    // accelerator serves new work with finite responses and the summary
+    // stays finite.
+    let reg = Registry::new();
+    let plan = ExperimentPlan::new()
+        .scenarios(["accel-failure"])
+        .distances([60.0])
+        .platform("1,0,0")
+        .scheduler(SchedulerSpec::RoundRobin)
+        .seed(3);
+    let trials = plan.trials().unwrap();
+    let trial = &trials[0];
+    let r = Engine::new(&reg)
+        .events(true)
+        .sim_options(SimOptions { record_tasks: true })
+        .run_trial(trial)
+        .unwrap();
+    let dur = trial.queue().route_duration_s;
+    let (t_fail, t_rec) = (0.35 * dur + 1e-6, 0.70 * dur - 1e-6);
+    assert_eq!(r.records.len() as u64, r.summary.tasks, "every task is accounted for");
+    let dropped: Vec<_> = r
+        .records
+        .iter()
+        .filter(|x| x.release_s >= t_fail && x.release_s < t_rec)
+        .collect();
+    assert!(!dropped.is_empty(), "outage window must contain tasks");
+    assert!(dropped
+        .iter()
+        .all(|x| !x.met_deadline && x.response_s.is_infinite() && x.ms == -1.0));
+    let after: Vec<_> = r
+        .records
+        .iter()
+        .filter(|x| x.release_s >= 0.70 * dur + 1e-6)
+        .collect();
+    assert!(!after.is_empty(), "route continues past recovery");
+    assert!(
+        after.iter().all(|x| x.response_s.is_finite()),
+        "recovery must restore finite service"
+    );
+    for v in [
+        r.summary.makespan_s,
+        r.summary.compute_s,
+        r.summary.mean_response_s,
+        r.summary.max_response_s,
+        r.summary.gvalue,
+    ] {
+        assert!(v.is_finite(), "summary field went non-finite: {v}");
+    }
+    // Mean response averages the *completed* tasks only — lost tasks are
+    // excluded from numerator and denominator alike, so an outage cannot
+    // make the platform look more responsive than its completed work.
+    let finite: Vec<f64> =
+        r.records.iter().map(|x| x.response_s).filter(|v| v.is_finite()).collect();
+    let expect = finite.iter().sum::<f64>() / finite.len() as f64;
+    assert_eq!(r.summary.mean_response_s.to_bits(), expect.to_bits());
+}
+
+#[test]
+fn thermal_throttle_stretches_compute_in_the_derate_window() {
+    let reg = Registry::new();
+    let plan = ExperimentPlan::new()
+        .scenarios(["thermal-throttle"])
+        .distances([60.0])
+        .scheduler(SchedulerSpec::RoundRobin)
+        .seed(13);
+    let trials = plan.trials().unwrap();
+    let trial = &trials[0];
+    let run = |events: bool| {
+        Engine::new(&reg)
+            .events(events)
+            .sim_options(SimOptions { record_tasks: true })
+            .run_trial(trial)
+            .unwrap()
+    };
+    let (with, without) = (run(true), run(false));
+    let dur = trial.queue().route_duration_s;
+    // Margins keep burst-boundary tasks (grouped within BURST_EPS of the
+    // event instant) out of both comparison windows.
+    let (t0, t1) = (0.25 * dur + 1e-6, 0.75 * dur - 1e-6);
+    let before_window = 0.25 * dur - 1e-6;
+    // RoundRobin keeps using the derated accelerators, so their in-window
+    // compute times are exactly doubled relative to the event-free run.
+    let mut compared = 0;
+    for (a, b) in with.records.iter().zip(&without.records) {
+        assert_eq!(a.task_id, b.task_id);
+        if a.accel == b.accel && (a.accel == 0 || a.accel == 4) {
+            if a.release_s >= t0 && a.release_s < t1 {
+                assert!(
+                    a.compute_s > b.compute_s * 1.5,
+                    "task {}: {} !> 1.5x {}",
+                    a.task_id,
+                    a.compute_s,
+                    b.compute_s
+                );
+                compared += 1;
+            } else if a.release_s < before_window {
+                assert_eq!(a.compute_s.to_bits(), b.compute_s.to_bits());
+            }
+        }
+    }
+    assert!(compared > 0, "no derated-window tasks compared");
+    assert!(with.summary.wait_s > without.summary.wait_s, "derating must cost wait time");
+}
