@@ -111,10 +111,30 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(simulate(&queue, &platform, &mut minmin, SimOptions::default()));
     });
 
+    section("DSE frontier (greedy, budget 3, 50 m urban-rush)");
+    let mut heavy = Bencher::heavy();
+    let dse_cfg = hmai::dse::DseConfig {
+        budget_area: 3.0,
+        distances_m: vec![50.0],
+        max_evals: 32,
+        beam: 1,
+        search: hmai::dse::SearchMode::Greedy,
+        seed: 1,
+        ..Default::default()
+    };
+    let frontier_size = std::cell::Cell::new(0usize);
+    heavy.bench("dse greedy search + Pareto frontier", || {
+        let report = hmai::dse::run(&dse_cfg, &reg).unwrap();
+        frontier_size.set(report.frontier);
+        std::hint::black_box(report);
+    });
+    println!("    -> frontier of {} non-dominated mixes", frontier_size.get());
+
     // Machine-readable perf trajectory: one row per benchmark.
     let rows: Vec<Json> = b
         .results()
         .iter()
+        .chain(heavy.results().iter())
         .map(|r| {
             Json::from_pairs(vec![
                 ("name", Json::Str(r.name.clone())),
@@ -128,6 +148,7 @@ fn main() -> anyhow::Result<()> {
     let report = Json::from_pairs(vec![
         ("bench", Json::Str("bench_perf".to_string())),
         ("pjrt_runtime", Json::Bool(rt.is_some())),
+        ("dse_frontier_size", Json::Num(frontier_size.get() as f64)),
         ("results", Json::Arr(rows)),
     ]);
     report.write_to(std::path::Path::new(JSON_PATH))?;

@@ -15,14 +15,43 @@
 //! | SSD      |  74.99  |  82.94  |  82.57  |
 //! | GOTURN   | 352.69  | 350.34  | 500.54  |
 
-use super::{AccelKind, LayerCost, MACS_PER_ACCEL};
+use super::{AccelKind, CoreSize, LayerCost, MACS_PER_ACCEL};
 use crate::workload::{Layer, LayerKind};
 
-/// PE-array geometry.
+/// PE-array geometry of a *standard* core.
 const OD_ROWS: f64 = 64.0; // SconvOD: rows hold kxk x Tc filter taps
 const OD_COLS: f64 = 64.0; // SconvOD: columns hold output channels
 const IC_PES: f64 = 4096.0; // SconvIC: 64x64 output-pixel PEs
 const MM_TC: f64 = 16.0; // MconvMC: Tm = Tc = 16 channel block
+
+/// Concrete PE-array geometry of one core, derived from its [`CoreSize`].
+/// One dimension of each array scales with the MAC budget — the kernel-tap
+/// rows (SconvOD) and the input-channel block (MconvMC) are dataflow
+/// invariants, so the *other* dimension absorbs the provisioning:
+/// SconvOD grows output-channel columns, SconvIC grows the output-pixel
+/// array, MconvMC grows the output-channel block Tm.  At `Std` every value
+/// equals the constants above (multiplication by `scale = 1.0` is exact in
+/// IEEE 754, so the standard path is bit-identical to the pre-size model).
+struct CoreGeom {
+    macs: f64,
+    od_rows: f64,
+    od_cols: f64,
+    ic_pes: f64,
+    mm_tm: f64,
+    mm_tc: f64,
+}
+
+fn geom(size: CoreSize) -> CoreGeom {
+    let s = size.scale();
+    CoreGeom {
+        macs: MACS_PER_ACCEL as f64 * s,
+        od_rows: OD_ROWS,
+        od_cols: OD_COLS * s,
+        ic_pes: IC_PES * s,
+        mm_tm: MM_TC * s,
+        mm_tc: MM_TC,
+    }
+}
 
 /// Operator class for affinity lookup.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,35 +108,36 @@ fn ceil_frac(x: f64, q: f64) -> f64 {
     x / (q * (x / q).ceil())
 }
 
-/// Structural fit (0..1): tiling-remainder waste for this layer shape.
-fn structural_fit(accel: AccelKind, l: &Layer, k: usize) -> f64 {
+/// Structural fit (0..1): tiling-remainder waste for this layer shape on
+/// a core with geometry `g`.
+fn structural_fit(accel: AccelKind, l: &Layer, k: usize, g: &CoreGeom) -> f64 {
     let (ic, oc) = (l.in_c as f64, l.out_c as f64);
     let spatial = (l.out_h * l.out_w) as f64;
     match accel {
         AccelKind::SconvOD => {
             // Rows hold kxk taps x as many input channels as fit; columns
-            // hold up to 64 output channels.
+            // hold the output channels.
             let kk = (k * k) as f64;
-            let tap_rows = kk.min(OD_ROWS);
-            let tc_fit = (OD_ROWS / kk).floor().max(1.0).min(ic);
-            let row_util = (tap_rows * tc_fit).min(OD_ROWS) / OD_ROWS
+            let tap_rows = kk.min(g.od_rows);
+            let tc_fit = (g.od_rows / kk).floor().max(1.0).min(ic);
+            let row_util = (tap_rows * tc_fit).min(g.od_rows) / g.od_rows
                 * ceil_frac(ic, tc_fit);
-            let col_util = ceil_frac(oc, OD_COLS);
+            let col_util = ceil_frac(oc, g.od_cols);
             row_util * col_util
         }
         AccelKind::SconvIC => {
             // Output pixels map onto the PE array; when the map is smaller
             // than the array, spare PEs fold in extra output channels.
-            if spatial >= IC_PES {
-                ceil_frac(spatial, IC_PES)
+            if spatial >= g.ic_pes {
+                ceil_frac(spatial, g.ic_pes)
             } else {
-                let ch_fold = (IC_PES / spatial).floor().max(1.0).min(oc);
-                (spatial * ch_fold) / IC_PES * ceil_frac(oc, ch_fold)
+                let ch_fold = (g.ic_pes / spatial).floor().max(1.0).min(oc);
+                (spatial * ch_fold) / g.ic_pes * ceil_frac(oc, ch_fold)
             }
         }
         AccelKind::MconvMC => {
             // Tm x Tc channel blocks.
-            ceil_frac(ic, MM_TC) * ceil_frac(oc, MM_TC)
+            ceil_frac(ic, g.mm_tc) * ceil_frac(oc, g.mm_tm)
         }
     }
 }
@@ -122,7 +152,7 @@ fn stride_penalty(accel: AccelKind, stride: usize) -> f64 {
 }
 
 /// EXMC / OCB / register access counts per dataflow (drives energy).
-fn access_counts(accel: AccelKind, l: &Layer, cost: &mut LayerCost) {
+fn access_counts(accel: AccelKind, l: &Layer, cost: &mut LayerCost, g: &CoreGeom) {
     let b = l.branches as f64;
     let ifmap = l.input_elems() as f64;
     let ofmap = l.neurons() as f64;
@@ -138,37 +168,48 @@ fn access_counts(accel: AccelKind, l: &Layer, cost: &mut LayerCost) {
         }
         AccelKind::SconvIC => {
             // Ifmaps propagate between PEs (IP); weights re-broadcast per
-            // spatial tile; CR (no psum storage) absorbs ifmap traffic.
-            let tiles = ((l.out_h * l.out_w) as f64 / IC_PES).ceil().max(1.0);
+            // spatial tile (a bigger array → fewer tiles → fewer weight
+            // re-fetches); CR (no psum storage) absorbs ifmap traffic.
+            let tiles = ((l.out_h * l.out_w) as f64 / g.ic_pes).ceil().max(1.0);
             cost.exmc_accesses += ifmap + ofmap + weights * tiles * b;
             // ifmap shift + psum accumulate per MAC.
             cost.reg_accesses += 2.0 * macs;
         }
         AccelKind::MconvMC => {
             // OCB present (Table 10): ifmaps staged through SRAM A1/A2,
-            // weights streamed once, psum tree accumulation.
+            // weights streamed once, psum tree accumulation (per
+            // input-channel block, which does not scale with size).
             cost.exmc_accesses += ifmap + ofmap + weights * b;
-            cost.ocb_accesses += ifmap + macs / MM_TC;
+            cost.ocb_accesses += ifmap + macs / g.mm_tc;
             cost.reg_accesses += 2.0 * macs;
         }
     }
 }
 
-/// Cycle + access cost of one layer on one sub-accelerator.
+/// Cycle + access cost of one layer on one *standard* sub-accelerator.
 pub fn layer_cost(accel: AccelKind, l: &Layer) -> LayerCost {
+    layer_cost_sized(accel, l, CoreSize::Std)
+}
+
+/// Cycle + access cost of one layer on one sub-accelerator of `size`.
+/// Data-movement layers (pool/route/shortcut/upsample/detect) stream
+/// through the fixed 256-lane EXMC interface, which does not scale with
+/// the MAC array — only compute layers speed up with core size.
+pub fn layer_cost_sized(accel: AccelKind, l: &Layer, size: CoreSize) -> LayerCost {
+    let g = geom(size);
     let mut cost = LayerCost { macs: l.macs() as f64, ..Default::default() };
     match l.kind {
         LayerKind::Conv { k, stride, .. } => {
             let eff = affinity(accel, op_class(k, &l.kind))
-                * structural_fit(accel, l, k)
+                * structural_fit(accel, l, k, &g)
                 * stride_penalty(accel, stride);
-            cost.cycles = cost.macs / (MACS_PER_ACCEL as f64 * eff.max(1e-3));
-            access_counts(accel, l, &mut cost);
+            cost.cycles = cost.macs / (g.macs * eff.max(1e-3));
+            access_counts(accel, l, &mut cost, &g);
         }
         LayerKind::Fc => {
-            let eff = affinity(accel, OpClass::Fc) * structural_fit(accel, l, 1);
-            cost.cycles = cost.macs / (MACS_PER_ACCEL as f64 * eff.max(1e-3));
-            access_counts(accel, l, &mut cost);
+            let eff = affinity(accel, OpClass::Fc) * structural_fit(accel, l, 1, &g);
+            cost.cycles = cost.macs / (g.macs * eff.max(1e-3));
+            access_counts(accel, l, &mut cost, &g);
         }
         // Data-movement layers: streamed at one element per lane per cycle
         // through the EXMC interface (memory-bound).
@@ -238,17 +279,31 @@ mod tests {
 
     #[test]
     fn structural_fit_bounds() {
+        use crate::accel::ALL_SIZES;
         use crate::workload::model;
         for m in [ModelKind::Yolo, ModelKind::Ssd, ModelKind::Goturn] {
             for l in &model(m).layers {
                 if let LayerKind::Conv { k, .. } = l.kind {
                     for a in ALL_ACCELS {
-                        let f = structural_fit(a, l, k);
-                        assert!(f > 0.0 && f <= 1.0, "{a:?} {}: fit={f}", l.name);
+                        for s in ALL_SIZES {
+                            let f = structural_fit(a, l, k, &geom(s));
+                            assert!(f > 0.0 && f <= 1.0, "{a:?} {s:?} {}: fit={f}", l.name);
+                        }
                     }
                 }
             }
         }
+    }
+
+    #[test]
+    fn std_geometry_matches_the_constants() {
+        let g = geom(crate::accel::CoreSize::Std);
+        assert_eq!(g.macs.to_bits(), (MACS_PER_ACCEL as f64).to_bits());
+        assert_eq!(g.od_rows.to_bits(), OD_ROWS.to_bits());
+        assert_eq!(g.od_cols.to_bits(), OD_COLS.to_bits());
+        assert_eq!(g.ic_pes.to_bits(), IC_PES.to_bits());
+        assert_eq!(g.mm_tm.to_bits(), MM_TC.to_bits());
+        assert_eq!(g.mm_tc.to_bits(), MM_TC.to_bits());
     }
 
     #[test]

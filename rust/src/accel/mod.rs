@@ -108,14 +108,98 @@ impl AccelKind {
     }
 }
 
-/// Common microarchitectural parameters (all three sub-accelerators are
-/// provisioned with the same peak so the dataflow, not the budget, drives
-/// the heterogeneity — mirroring the paper's iso-resource comparison).
-/// 8192 16-bit MACs @ 700 MHz ≈ 11.5 TOPS per core — about 1/3 of a Tesla
-/// FSD NPU, a plausible 12 nm budget, and the smallest peak consistent
-/// with Table 8 (GOTURN at 11 GMACs x 500 FPS needs > 5.5 TMAC/s).
+/// Common microarchitectural parameters (the paper's iso-resource
+/// comparison provisions every sub-accelerator identically so the
+/// dataflow, not the budget, drives the heterogeneity).
+/// 8192 16-bit MACs @ 700 MHz ≈ 11.5 TOPS per *standard* core — about 1/3
+/// of a Tesla FSD NPU, a plausible 12 nm budget, and the smallest peak
+/// consistent with Table 8 (GOTURN at 11 GMACs x 500 FPS needs
+/// > 5.5 TMAC/s).  [`CoreSize`] scales this budget per instance.
 pub const MACS_PER_ACCEL: u64 = 8192;
 pub const CLOCK_HZ: f64 = 700e6;
+
+/// Per-instance MAC budget (§5/§8: the heterogeneous substrate "requires a
+/// design space exploration" — core *size* is the second explorable axis
+/// next to the (SO, SI, MM) count mix).  All sizes run the same 700 MHz
+/// clock; only the PE-array provisioning scales.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum CoreSize {
+    /// 4096 MACs — half a standard core.
+    Half,
+    /// 8192 MACs — the paper's provisioning ([`MACS_PER_ACCEL`]).
+    #[default]
+    Std,
+    /// 16384 MACs — a doubled core.
+    Double,
+}
+
+pub const ALL_SIZES: [CoreSize; 3] = [CoreSize::Half, CoreSize::Std, CoreSize::Double];
+
+impl CoreSize {
+    pub fn index(&self) -> usize {
+        match self {
+            CoreSize::Half => 0,
+            CoreSize::Std => 1,
+            CoreSize::Double => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CoreSize::Half => "Half",
+            CoreSize::Std => "Std",
+            CoreSize::Double => "Double",
+        }
+    }
+
+    /// MAC budget of a core of this size.
+    pub fn macs(&self) -> u64 {
+        match self {
+            CoreSize::Half => MACS_PER_ACCEL / 2,
+            CoreSize::Std => MACS_PER_ACCEL,
+            CoreSize::Double => MACS_PER_ACCEL * 2,
+        }
+    }
+
+    /// MAC budget relative to a standard core (0.5 / 1.0 / 2.0).  Also the
+    /// per-slot capacity feature FlexAI's featurization writes (1.0 = Std,
+    /// bit-compatible with the pre-size `valid` feature).
+    pub fn scale(&self) -> f64 {
+        match self {
+            CoreSize::Half => 0.5,
+            CoreSize::Std => 1.0,
+            CoreSize::Double => 2.0,
+        }
+    }
+
+    /// Die-area estimate in *standard-core equivalents*: the MAC array and
+    /// its registers are ~3/4 of a core's area and scale with the MAC
+    /// budget; the control/NoC/EXMC periphery (~1/4) does not.  This is
+    /// the unit `hmai dse --budget` constrains.
+    pub fn area_units(&self) -> f64 {
+        0.25 + 0.75 * self.scale()
+    }
+
+    /// Platform-spec suffix (`""` for Std so legacy specs stay canonical).
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            CoreSize::Half => "@0.5x",
+            CoreSize::Std => "",
+            CoreSize::Double => "@2x",
+        }
+    }
+
+    /// Parse a spec-size token (the part after `@`): `0.5x`/`half`,
+    /// `1x`/`std`, `2x`/`double`.
+    pub fn parse(s: &str) -> Option<CoreSize> {
+        match s.to_ascii_lowercase().as_str() {
+            "0.5x" | "0.5" | "half" => Some(CoreSize::Half),
+            "1x" | "1" | "1.0x" | "std" => Some(CoreSize::Std),
+            "2x" | "2" | "2.0x" | "double" => Some(CoreSize::Double),
+            _ => None,
+        }
+    }
+}
 
 /// Per-(accelerator, network) calibration factors pinning the analytical
 /// cycle model's aggregate FPS to the paper's cycle-accurate simulator
@@ -140,9 +224,21 @@ fn calibration(accel: AccelKind, kind: ModelKind) -> f64 {
     }
 }
 
-/// Peak throughput of one sub-accelerator in TOPS (2 ops per MAC).
+/// Peak throughput of one *standard* sub-accelerator in TOPS (2 ops/MAC).
 pub fn peak_tops() -> f64 {
-    2.0 * MACS_PER_ACCEL as f64 * CLOCK_HZ / 1e12
+    peak_tops_sized(CoreSize::Std)
+}
+
+/// Peak throughput of one sub-accelerator of `size` in TOPS (2 ops/MAC).
+pub fn peak_tops_sized(size: CoreSize) -> f64 {
+    2.0 * size.macs() as f64 * CLOCK_HZ / 1e12
+}
+
+/// Peak sustained power estimate (W) of one (kind, size) core: the busy
+/// power of its most power-hungry workload.  The per-platform sum is the
+/// `hmai dse --power-cap` constraint.
+pub fn peak_power_w(kind: AccelKind, size: CoreSize) -> f64 {
+    ALL_MODELS.iter().map(|&m| cost_sized(kind, m, size).power_w()).fold(0.0, f64::max)
 }
 
 /// Cost of running one layer on one accelerator.
@@ -176,7 +272,7 @@ pub struct TaskCost {
     /// Energy in joules.
     pub energy_j: f64,
     pub cycles: f64,
-    /// Achieved MAC utilization (0..1) vs the 4096-MAC peak.
+    /// Achieved MAC utilization (0..1) vs the core's own MAC peak.
     pub utilization: f64,
 }
 
@@ -191,15 +287,18 @@ impl TaskCost {
     }
 }
 
-/// Raw full-network cost on a given sub-accelerator (cycle model + energy
-/// table), before the energy-affinity adjustment below.
-fn task_cost_raw(accel: AccelKind, kind: ModelKind) -> TaskCost {
+/// Raw full-network cost on a given sub-accelerator of a given size
+/// (cycle model + energy table), before the energy-affinity adjustment
+/// below.
+fn task_cost_raw(accel: AccelKind, kind: ModelKind, size: CoreSize) -> TaskCost {
     let net = model(kind);
     let mut total = LayerCost::default();
     for layer in &net.layers {
-        total.add(&dataflow::layer_cost(accel, layer));
+        total.add(&dataflow::layer_cost_sized(accel, layer, size));
     }
-    // Pin the aggregate to Table 8 (see `calibration`).
+    // Pin the aggregate to Table 8 (see `calibration`).  The residual is a
+    // dataflow/RTL mismatch, not a provisioning term, so the same factor
+    // applies at every size.
     total.cycles /= calibration(accel, kind);
     let time_s = total.cycles / CLOCK_HZ;
     let energy_j = energy::layer_energy_j(&total);
@@ -207,12 +306,17 @@ fn task_cost_raw(accel: AccelKind, kind: ModelKind) -> TaskCost {
         time_s,
         energy_j,
         cycles: total.cycles,
-        utilization: total.macs / (total.cycles * MACS_PER_ACCEL as f64),
+        utilization: total.macs / (total.cycles * size.macs() as f64),
     }
 }
 
-/// Full-network cost on a given sub-accelerator.  Table 8 regenerates from
-/// the `time_s` column.
+/// Full-network cost on a given sub-accelerator (standard size).  Table 8
+/// regenerates from the `time_s` column.
+pub fn task_cost(accel: AccelKind, kind: ModelKind) -> TaskCost {
+    task_cost_sized(accel, kind, CoreSize::Std)
+}
+
+/// Full-network cost on a given sub-accelerator of a given [`CoreSize`].
 ///
 /// Energy carries a *dataflow-affinity* adjustment: the dataflow that
 /// processes a model fastest is also the one whose propagation pattern
@@ -222,13 +326,15 @@ fn task_cost_raw(accel: AccelKind, kind: ModelKind) -> TaskCost {
 /// the paper's Fig. 2a (heterogeneous platforms beat homogeneous ones on
 /// energy *because* each accelerator serves its affine model): without it,
 /// a single energy-best dataflow would dominate every model and
-/// heterogeneity could never win on energy.
-pub fn task_cost(accel: AccelKind, kind: ModelKind) -> TaskCost {
-    let mut c = task_cost_raw(accel, kind);
+/// heterogeneity could never win on energy.  The anchors (`E_min`,
+/// `fps_best`) are taken *within the same core size* so the adjustment
+/// compares dataflows, never provisioning.
+pub fn task_cost_sized(accel: AccelKind, kind: ModelKind, size: CoreSize) -> TaskCost {
+    let mut c = task_cost_raw(accel, kind, size);
     let mut e_min = f64::INFINITY;
     let mut fps_best = 0.0_f64;
     for a in ALL_ACCELS {
-        let r = task_cost_raw(a, kind);
+        let r = task_cost_raw(a, kind, size);
         e_min = e_min.min(r.energy_j);
         fps_best = fps_best.max(1.0 / r.time_s);
     }
@@ -236,14 +342,58 @@ pub fn task_cost(accel: AccelKind, kind: ModelKind) -> TaskCost {
     c
 }
 
-/// Cached lookup of `task_cost` (hot path): a 3x3 matrix indexed by
-/// `(accel.index(), kind.index())`, built once — O(1) per decision instead
-/// of recomputing the cycle model.
+/// Cached lookup of the standard-size `task_cost` (hot path).
 pub fn cost(accel: AccelKind, kind: ModelKind) -> TaskCost {
-    static COST_MATRIX: std::sync::OnceLock<[[TaskCost; 3]; 3]> = std::sync::OnceLock::new();
-    let matrix =
-        COST_MATRIX.get_or_init(|| ALL_ACCELS.map(|a| ALL_MODELS.map(|m| task_cost(a, m))));
-    matrix[accel.index()][kind.index()]
+    cost_sized(accel, kind, CoreSize::Std)
+}
+
+/// Cached lookup of `task_cost_sized`: a 3x3x3 matrix indexed by
+/// `(size, accel, kind)`, built once — O(1) per decision instead of
+/// recomputing the cycle model.  The `Std` plane is bit-identical to the
+/// pre-size `cost()` matrix (pinned by `tests/coresize.rs`).
+pub fn cost_sized(accel: AccelKind, kind: ModelKind, size: CoreSize) -> TaskCost {
+    static COST_MATRIX: std::sync::OnceLock<[[[TaskCost; 3]; 3]; 3]> = std::sync::OnceLock::new();
+    let matrix = COST_MATRIX.get_or_init(|| {
+        ALL_SIZES.map(|s| ALL_ACCELS.map(|a| ALL_MODELS.map(|m| task_cost_sized(a, m, s))))
+    });
+    matrix[size.index()][accel.index()][kind.index()]
+}
+
+/// Instance-parameterized cost model: the full (model → [`TaskCost`]) row
+/// of every core of one platform, materialized at construction.  This is
+/// what replaces the global Std-only `cost()` free function on the
+/// per-decision hot paths ([`ShadowState`](crate::sim::ShadowState) holds
+/// one behind an `Arc`): a platform mixing core sizes costs exactly one
+/// indexed load per lookup, the same as the homogeneous path did.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    rows: Vec<[TaskCost; 3]>,
+}
+
+impl CostModel {
+    /// Build from the (kind, size) of each core, in slot order.
+    pub fn new<I: IntoIterator<Item = (AccelKind, CoreSize)>>(cores: I) -> CostModel {
+        CostModel {
+            rows: cores
+                .into_iter()
+                .map(|(k, s)| ALL_MODELS.map(|m| cost_sized(k, m, s)))
+                .collect(),
+        }
+    }
+
+    /// Cost of `model` on slot `slot`.
+    #[inline]
+    pub fn of(&self, slot: usize, model: ModelKind) -> TaskCost {
+        self.rows[slot][model.index()]
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
 }
 
 #[cfg(test)]
@@ -280,6 +430,65 @@ mod tests {
     fn peak_tops_sane() {
         // 8192 MACs @ 700 MHz = 11.47 TOPS per sub-accelerator.
         assert!((peak_tops() - 11.47).abs() < 0.1);
+        assert_eq!(peak_tops().to_bits(), peak_tops_sized(CoreSize::Std).to_bits());
+        assert!((peak_tops_sized(CoreSize::Half) - peak_tops() / 2.0).abs() < 1e-12);
+        assert!((peak_tops_sized(CoreSize::Double) - peak_tops() * 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn core_size_properties() {
+        assert_eq!(CoreSize::default(), CoreSize::Std);
+        for s in ALL_SIZES {
+            let token = s.suffix().trim_start_matches('@');
+            assert_eq!(CoreSize::parse(token).unwrap_or(CoreSize::Std), s);
+            assert_eq!(ALL_SIZES[s.index()], s);
+            assert!(s.area_units() > 0.0);
+        }
+        assert_eq!(CoreSize::parse("0.5x"), Some(CoreSize::Half));
+        assert_eq!(CoreSize::parse("2X"), Some(CoreSize::Double));
+        assert_eq!(CoreSize::parse("std"), Some(CoreSize::Std));
+        assert_eq!(CoreSize::parse("3x"), None);
+        // Area: fixed periphery + MAC-proportional array.
+        assert!((CoreSize::Std.area_units() - 1.0).abs() < 1e-12);
+        assert!(CoreSize::Half.area_units() > 0.5, "periphery does not halve");
+        assert!(CoreSize::Double.area_units() < 2.0, "periphery does not double");
+    }
+
+    #[test]
+    fn cost_model_matches_sized_matrix() {
+        let cm = CostModel::new([
+            (AccelKind::SconvOD, CoreSize::Half),
+            (AccelKind::SconvIC, CoreSize::Std),
+            (AccelKind::MconvMC, CoreSize::Double),
+        ]);
+        assert_eq!(cm.len(), 3);
+        for m in ALL_MODELS {
+            assert_eq!(
+                cm.of(0, m).time_s.to_bits(),
+                cost_sized(AccelKind::SconvOD, m, CoreSize::Half).time_s.to_bits()
+            );
+            assert_eq!(
+                cm.of(1, m).time_s.to_bits(),
+                cost(AccelKind::SconvIC, m).time_s.to_bits()
+            );
+            assert_eq!(
+                cm.of(2, m).energy_j.to_bits(),
+                cost_sized(AccelKind::MconvMC, m, CoreSize::Double).energy_j.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn peak_power_scales_with_size() {
+        for a in ALL_ACCELS {
+            let half = peak_power_w(a, CoreSize::Half);
+            let std = peak_power_w(a, CoreSize::Std);
+            let double = peak_power_w(a, CoreSize::Double);
+            assert!(half > 0.0);
+            // A bigger array finishes the same work faster at similar
+            // energy, so sustained power rises with size.
+            assert!(half < std && std < double, "{a:?}: {half} {std} {double}");
+        }
     }
 
     #[test]

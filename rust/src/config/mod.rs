@@ -103,10 +103,10 @@ impl Default for ExperimentConfig {
 }
 
 impl ExperimentConfig {
-    /// Resolve the platform spec.
+    /// Resolve the platform spec (descriptive errors via `try_parse`, so a
+    /// bad `--platform` string explains itself).
     pub fn platform(&self) -> Result<Platform> {
-        Platform::parse(&self.platform)
-            .with_context(|| format!("unknown platform '{}'", self.platform))
+        Platform::try_parse(&self.platform).map_err(|e| anyhow::anyhow!("--platform: {e}"))
     }
 
     /// Resolve the scheduler name into a typed spec (FlexAI carries the

@@ -1,0 +1,706 @@
+//! Design-space exploration over heterogeneous platform mixes (§5, §8):
+//! the paper argues the AV substrate "requires a design space exploration
+//! for a new form of parallelism" — this module searches the
+//! (kind × [`CoreSize`] × count) mix space under an area (and optional
+//! peak-power) budget, evaluates each candidate platform on the real
+//! [`Engine`] across a scenario-library slice, and reports the Pareto
+//! frontier of deadline-met rate vs energy vs area.
+//!
+//! Two search modes share one evaluator:
+//!   * **full** — enumerate every per-kind-uniform-size mix within the
+//!     budget (tractable for small budgets / raised `--max-evals`);
+//!   * **greedy** — beam search growing mixes one core at a time, the
+//!     mode for realistic budgets where enumeration explodes.
+//!
+//! Evaluation batches every unseen candidate into *one*
+//! [`ExperimentPlan`] whose platform axis is the candidate list and runs
+//! it through [`Engine::sweep_streaming`], so trials parallelize across
+//! `--jobs`, queues are shared through the engine's queue cache, and
+//! memory stays flat no matter how many mixes are in flight.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::accel::{self, AccelKind, CoreSize, ALL_ACCELS, ALL_SIZES};
+use crate::engine::Engine;
+use crate::env::taskgen::DeadlineMode;
+use crate::metrics::summary::SweepSummary;
+use crate::plan::ExperimentPlan;
+use crate::platform::Platform;
+use crate::sched::{Registry, SchedulerSpec};
+use crate::util::json::Json;
+use crate::util::stats::geomean;
+use crate::workload::{ModelKind, ALL_MODELS};
+
+/// How `run` explores the mix space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Full enumeration when it fits `max_evals`, greedy otherwise.
+    Auto,
+    /// Force full enumeration (shortlisted to `max_evals` by static
+    /// capacity when the space is larger — logged, never silent).
+    Full,
+    /// Force the greedy beam search.
+    Greedy,
+}
+
+impl SearchMode {
+    pub fn parse(s: &str) -> Result<SearchMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(SearchMode::Auto),
+            "full" => Ok(SearchMode::Full),
+            "greedy" | "beam" => Ok(SearchMode::Greedy),
+            other => anyhow::bail!("--search: expected auto|full|greedy, got '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchMode::Auto => "auto",
+            SearchMode::Full => "full",
+            SearchMode::Greedy => "greedy",
+        }
+    }
+}
+
+/// DSE run parameters.
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    /// Area budget in standard-core equivalents ([`CoreSize::area_units`]).
+    pub budget_area: f64,
+    /// Optional peak-power cap (W, [`Platform::peak_power_w`]).
+    pub power_cap_w: Option<f64>,
+    /// Scenario-library slice each candidate is evaluated on.
+    pub scenarios: Vec<String>,
+    pub distances_m: Vec<f64>,
+    pub deadline: DeadlineMode,
+    pub scheduler: SchedulerSpec,
+    pub seed: u64,
+    pub jobs: usize,
+    /// Hard cap on simulated candidates (truncation is logged).
+    pub max_evals: usize,
+    /// Beam width of the greedy search.
+    pub beam: usize,
+    pub search: SearchMode,
+}
+
+impl Default for DseConfig {
+    fn default() -> Self {
+        DseConfig {
+            budget_area: 12.0,
+            power_cap_w: None,
+            scenarios: vec!["urban-rush".to_string()],
+            distances_m: vec![150.0],
+            deadline: DeadlineMode::Rss,
+            scheduler: SchedulerSpec::MinMin,
+            seed: 42,
+            jobs: 1,
+            max_evals: 256,
+            beam: 2,
+            search: SearchMode::Auto,
+        }
+    }
+}
+
+/// One candidate platform mix: core count per (kind, size) cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Mix {
+    /// `counts[kind.index()][size.index()]`.
+    pub counts: [[usize; 3]; 3],
+}
+
+impl Mix {
+    /// The paper's HMAI — (4 SO, 4 SI, 3 MM), all standard cores.
+    pub fn hmai_std() -> Mix {
+        let mut m = Mix::default();
+        m.counts[AccelKind::SconvOD.index()][CoreSize::Std.index()] = 4;
+        m.counts[AccelKind::SconvIC.index()][CoreSize::Std.index()] = 4;
+        m.counts[AccelKind::MconvMC.index()][CoreSize::Std.index()] = 3;
+        m
+    }
+
+    pub fn cores(&self) -> usize {
+        self.counts.iter().flatten().sum()
+    }
+
+    pub fn area_units(&self) -> f64 {
+        self.cells().map(|(_, s, n)| n as f64 * s.area_units()).sum()
+    }
+
+    pub fn peak_power_w(&self) -> f64 {
+        self.cells().map(|(k, s, n)| n as f64 * accel::peak_power_w(k, s)).sum()
+    }
+
+    /// Aggregate best-case throughput for `model` (FPS) — the static
+    /// capacity proxy the full-mode shortlist ranks by.
+    pub fn capacity_fps(&self, model: ModelKind) -> f64 {
+        self.cells().map(|(k, s, n)| n as f64 * accel::cost_sized(k, model, s).fps()).sum()
+    }
+
+    /// Worst-model static capacity (FPS): the balanced-provisioning proxy.
+    pub fn worst_capacity_fps(&self) -> f64 {
+        ALL_MODELS.iter().map(|&m| self.capacity_fps(m)).fold(f64::INFINITY, f64::min)
+    }
+
+    /// This mix plus one more (kind, size) core.
+    pub fn with_added(&self, kind: AccelKind, size: CoreSize) -> Mix {
+        let mut m = *self;
+        m.counts[kind.index()][size.index()] += 1;
+        m
+    }
+
+    /// Non-empty (kind, size, count) cells, kind-major then size-major.
+    fn cells(&self) -> impl Iterator<Item = (AccelKind, CoreSize, usize)> + '_ {
+        ALL_ACCELS.iter().flat_map(move |&k| {
+            ALL_SIZES
+                .iter()
+                .map(move |&s| (k, s, self.counts[k.index()][s.index()]))
+                .filter(|(_, _, n)| *n > 0)
+        })
+    }
+
+    /// Platform-spec string (`Platform::try_parse` grammar), e.g.
+    /// `"so:4@2x,si:4,mm:3@0.5x"`.
+    pub fn spec(&self) -> String {
+        self.cells()
+            .map(|(k, s, n)| format!("{}:{}{}", k.short().to_ascii_lowercase(), n, s.suffix()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Resolve to a concrete [`Platform`].
+    pub fn platform(&self) -> Platform {
+        let mix: Vec<(AccelKind, CoreSize, usize)> = self.cells().collect();
+        Platform::from_mix(&format!("custom({})", self.spec()), &mix)
+    }
+}
+
+/// One evaluated candidate: static characteristics + simulated outcome.
+#[derive(Debug, Clone)]
+pub struct EvalRow {
+    pub mix: Mix,
+    pub spec: String,
+    pub cores: usize,
+    pub area: f64,
+    pub peak_power_w: f64,
+    /// Deadline-met fraction over every run of the slice (Σmet / Σtasks).
+    pub stm_rate: f64,
+    /// Geometric-mean per-queue energy (J) over the slice.
+    pub energy_j: f64,
+    /// Geometric-mean wait+compute time (s) over the slice.
+    pub time_s: f64,
+    pub r_balance: f64,
+    /// Non-dominated on (stm_rate ↑, energy_j ↓, area ↓)?
+    pub on_frontier: bool,
+}
+
+impl EvalRow {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("spec", Json::Str(self.spec.clone())),
+            ("cores", Json::Num(self.cores as f64)),
+            ("area_units", Json::Num(self.area)),
+            ("peak_power_w", Json::Num(self.peak_power_w)),
+            ("stm_rate", Json::Num(self.stm_rate)),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("time_s", Json::Num(self.time_s)),
+            ("r_balance", Json::Num(self.r_balance)),
+            ("on_frontier", Json::Bool(self.on_frontier)),
+        ])
+    }
+}
+
+/// Outcome of a DSE run: every evaluated mix (frontier rows first, then by
+/// descending deadline-met rate) plus run bookkeeping.
+#[derive(Debug)]
+pub struct DseReport {
+    pub rows: Vec<EvalRow>,
+    pub frontier: usize,
+    pub evaluated: usize,
+    pub search: &'static str,
+    pub budget_area: f64,
+    pub power_cap_w: Option<f64>,
+    /// Candidates dropped by `max_evals` (0 = exhaustive within mode).
+    pub truncated: usize,
+}
+
+impl DseReport {
+    /// Frontier rows, in report order.
+    pub fn frontier_rows(&self) -> impl Iterator<Item = &EvalRow> {
+        self.rows.iter().filter(|r| r.on_frontier)
+    }
+
+    pub fn find(&self, spec: &str) -> Option<&EvalRow> {
+        self.rows.iter().find(|r| r.spec == spec)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("budget_area", Json::Num(self.budget_area)),
+            (
+                "power_cap_w",
+                self.power_cap_w.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("search", Json::Str(self.search.to_string())),
+            ("evaluated", Json::Num(self.evaluated as f64)),
+            ("truncated", Json::Num(self.truncated as f64)),
+            ("frontier_size", Json::Num(self.frontier as f64)),
+            (
+                "frontier",
+                Json::Arr(self.frontier_rows().map(|r| r.to_json()).collect()),
+            ),
+            ("rows", Json::Arr(self.rows.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+}
+
+/// Enumerate every mix with a *uniform size per kind* (the spec-syntax
+/// shape) within the area/power budget, up to `limit` candidates.
+/// Returns `(mixes, hit_limit)`.
+pub fn enumerate(budget_area: f64, power_cap_w: Option<f64>, limit: usize) -> (Vec<Mix>, bool) {
+    let mut out = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for so_size in ALL_SIZES {
+        for si_size in ALL_SIZES {
+            for mm_size in ALL_SIZES {
+                let sizes = [so_size, si_size, mm_size];
+                let max_n = |s: CoreSize| (budget_area / s.area_units()).floor() as usize;
+                for so in 0..=max_n(so_size) {
+                    for si in 0..=max_n(si_size) {
+                        for mm in 0..=max_n(mm_size) {
+                            if so + si + mm == 0 {
+                                continue;
+                            }
+                            let mut mix = Mix::default();
+                            for (k, (&n, s)) in
+                                ALL_ACCELS.iter().zip([so, si, mm].iter().zip(sizes))
+                            {
+                                mix.counts[k.index()][s.index()] = n;
+                            }
+                            if mix.area_units() > budget_area + 1e-9 {
+                                break; // mm grows area monotonically
+                            }
+                            if let Some(cap) = power_cap_w {
+                                if mix.peak_power_w() > cap {
+                                    break; // power also grows with mm
+                                }
+                            }
+                            if seen.insert(mix) {
+                                if out.len() >= limit {
+                                    return (out, true);
+                                }
+                                out.push(mix);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, false)
+}
+
+/// Mark the Pareto frontier on (stm_rate max, energy_j min, area min).
+pub fn mark_frontier(rows: &mut [EvalRow]) -> usize {
+    let n = rows.len();
+    let mut frontier = 0;
+    for i in 0..n {
+        let dominated = (0..n).any(|j| {
+            if i == j {
+                return false;
+            }
+            let (a, b) = (&rows[i], &rows[j]);
+            b.stm_rate >= a.stm_rate
+                && b.energy_j <= a.energy_j
+                && b.area <= a.area
+                && (b.stm_rate > a.stm_rate || b.energy_j < a.energy_j || b.area < a.area)
+        });
+        rows[i].on_frontier = !dominated;
+        if !dominated {
+            frontier += 1;
+        }
+    }
+    frontier
+}
+
+/// Batched evaluator with a result cache: every unseen mix of a batch goes
+/// through one engine sweep.
+struct Evaluator<'a> {
+    cfg: &'a DseConfig,
+    registry: &'a Registry,
+    /// Evaluated rows, in first-evaluation order (deterministic).
+    rows: Vec<EvalRow>,
+    index: HashMap<Mix, usize>,
+}
+
+impl<'a> Evaluator<'a> {
+    fn new(cfg: &'a DseConfig, registry: &'a Registry) -> Evaluator<'a> {
+        Evaluator { cfg, registry, rows: Vec::new(), index: HashMap::new() }
+    }
+
+    fn evaluated(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn row(&self, mix: &Mix) -> &EvalRow {
+        &self.rows[self.index[mix]]
+    }
+
+    /// Evaluate every not-yet-seen mix of `mixes` in one engine sweep.
+    fn eval_all(&mut self, mixes: &[Mix]) -> Result<()> {
+        let mut fresh: Vec<Mix> = Vec::new();
+        for &m in mixes {
+            if !self.index.contains_key(&m) && !fresh.contains(&m) {
+                fresh.push(m);
+            }
+        }
+        if fresh.is_empty() {
+            return Ok(());
+        }
+        let specs: Vec<String> = fresh.iter().map(|m| m.spec()).collect();
+        let plan = ExperimentPlan::new()
+            .scenarios(self.cfg.scenarios.iter().cloned())
+            .distances(self.cfg.distances_m.iter().copied())
+            .deadline(self.cfg.deadline)
+            .platforms(specs.iter().cloned())
+            .scheduler(self.cfg.scheduler.clone())
+            .seed(self.cfg.seed);
+        let sweep = Engine::new(self.registry)
+            .jobs(self.cfg.jobs)
+            .sweep_streaming(&plan)
+            .context("dse candidate sweep")?;
+        for mix in fresh {
+            let row = fold_rows(&mix, &sweep)?;
+            self.index.insert(mix, self.rows.len());
+            self.rows.push(row);
+        }
+        Ok(())
+    }
+}
+
+/// Fold a candidate's sweep rows (one per scenario) into one `EvalRow`.
+fn fold_rows(mix: &Mix, sweep: &SweepSummary) -> Result<EvalRow> {
+    let name = mix.platform().name;
+    let mut met = 0u64;
+    let mut tasks = 0u64;
+    let mut energies = Vec::new();
+    let mut times = Vec::new();
+    let mut rb = Vec::new();
+    for g in sweep.groups.iter().filter(|g| g.key.platform == name) {
+        for run in &g.runs {
+            met += run.tasks_met;
+            tasks += run.tasks;
+            energies.push(run.energy_j.max(1e-12));
+            times.push(run.work_time_s().max(1e-12));
+            rb.push(run.r_balance);
+        }
+    }
+    anyhow::ensure!(!energies.is_empty(), "no sweep rows for candidate '{name}'");
+    Ok(EvalRow {
+        mix: *mix,
+        spec: mix.spec(),
+        cores: mix.cores(),
+        area: mix.area_units(),
+        peak_power_w: mix.peak_power_w(),
+        stm_rate: if tasks == 0 { 1.0 } else { met as f64 / tasks as f64 },
+        energy_j: geomean(&energies),
+        time_s: geomean(&times),
+        r_balance: rb.iter().sum::<f64>() / rb.len() as f64,
+        on_frontier: false,
+    })
+}
+
+/// Greedy beam search: grow mixes one (kind, size) core at a time, keeping
+/// the `beam` best per step (deadline-met rate, then energy, then area),
+/// until the budget admits no extension or `max_evals` is hit.  Every step
+/// adds exactly one core, so area strictly grows and the loop terminates.
+fn greedy_search(cfg: &DseConfig, ev: &mut Evaluator) -> Result<usize> {
+    let within = |m: &Mix| {
+        m.area_units() <= cfg.budget_area + 1e-9
+            && cfg.power_cap_w.map(|cap| m.peak_power_w() <= cap).unwrap_or(true)
+    };
+    let all_cells =
+        || ALL_ACCELS.iter().flat_map(|&k| ALL_SIZES.iter().map(move |&s| (k, s)));
+    // Select the `beam` best of an evaluated batch (deterministic order).
+    let select_top = |mixes: &mut Vec<Mix>, ev: &Evaluator| {
+        mixes.sort_by(|a, b| {
+            let (ra, rb) = (ev.row(a), ev.row(b));
+            rb.stm_rate
+                .total_cmp(&ra.stm_rate)
+                .then(ra.energy_j.total_cmp(&rb.energy_j))
+                .then(ra.area.total_cmp(&rb.area))
+                .then(ra.spec.cmp(&rb.spec))
+        });
+        mixes.truncate(cfg.beam);
+    };
+
+    // Seeds: every single-core mix inside the budget.
+    let mut batch: Vec<Mix> =
+        all_cells().map(|(k, s)| Mix::default().with_added(k, s)).filter(within).collect();
+    let mut truncated = 0usize;
+    loop {
+        // Cap the batch at the remaining eval budget (logged below).
+        let budget_left = cfg.max_evals.saturating_sub(ev.evaluated());
+        if batch.len() > budget_left {
+            truncated += batch.len() - budget_left;
+            batch.truncate(budget_left);
+        }
+        if batch.is_empty() {
+            break;
+        }
+        ev.eval_all(&batch)?;
+        select_top(&mut batch, ev);
+        // Extend each kept beam by one core; already-evaluated mixes
+        // cannot reappear (extensions always have one more core than any
+        // previous round).
+        let mut exts: Vec<Mix> = Vec::new();
+        for b in &batch {
+            for (k, s) in all_cells() {
+                let m = b.with_added(k, s);
+                if within(&m) && !exts.contains(&m) {
+                    exts.push(m);
+                }
+            }
+        }
+        batch = exts;
+    }
+    if truncated > 0 {
+        crate::log_warn!(
+            "dse",
+            "--max-evals {} reached; {truncated} candidate(s) not simulated (raise \
+             --max-evals or narrow --budget for an exhaustive pass)",
+            cfg.max_evals
+        );
+    }
+    Ok(truncated)
+}
+
+/// Run the exploration: enumerate or beam-search candidates, evaluate on
+/// the engine, and mark the Pareto frontier.  The HMAI (4,4,3)@Std point
+/// is always evaluated when it fits the budget, so the paper's pick can be
+/// located relative to the frontier.
+pub fn run(cfg: &DseConfig, registry: &Registry) -> Result<DseReport> {
+    anyhow::ensure!(
+        cfg.budget_area >= CoreSize::Half.area_units(),
+        "dse: --budget {} admits no core at all (a half core costs {} area units)",
+        cfg.budget_area,
+        CoreSize::Half.area_units()
+    );
+    anyhow::ensure!(!cfg.scenarios.is_empty(), "dse: at least one --scenario required");
+    anyhow::ensure!(!cfg.distances_m.is_empty(), "dse: at least one --dist required");
+    anyhow::ensure!(cfg.max_evals > 0, "dse: --max-evals must be positive");
+    anyhow::ensure!(cfg.beam > 0, "dse: --beam must be positive");
+    for name in &cfg.scenarios {
+        crate::env::scenario::find(name).context("dse --scenario")?;
+    }
+
+    let mut ev = Evaluator::new(cfg, registry);
+    let (mode, mut truncated) = match cfg.search {
+        SearchMode::Greedy => (SearchMode::Greedy, 0),
+        SearchMode::Full => (SearchMode::Full, 0),
+        SearchMode::Auto => {
+            let (_, over) = enumerate(cfg.budget_area, cfg.power_cap_w, cfg.max_evals);
+            (if over { SearchMode::Greedy } else { SearchMode::Full }, 0)
+        }
+    };
+    match mode {
+        SearchMode::Full => {
+            let (mut mixes, over) = enumerate(cfg.budget_area, cfg.power_cap_w, 200_000);
+            if over || mixes.len() > cfg.max_evals {
+                // Shortlist by worst-model static capacity (balanced
+                // provisioning) — logged, never silent.
+                let dropped = mixes.len().saturating_sub(cfg.max_evals);
+                crate::log_warn!(
+                    "dse",
+                    "full enumeration has {} candidates; simulating the top {} by worst-model \
+                     capacity ({dropped} dropped — use --search greedy or raise --max-evals)",
+                    mixes.len(),
+                    cfg.max_evals
+                );
+                // One key build per mix (the list can be huge): positive
+                // finite f64s order identically to their bit patterns, so
+                // `to_bits` keys give capacity-desc / area-asc / spec-asc.
+                mixes.sort_by_cached_key(|m| {
+                    (
+                        std::cmp::Reverse(m.worst_capacity_fps().to_bits()),
+                        m.area_units().to_bits(),
+                        m.spec(),
+                    )
+                });
+                mixes.truncate(cfg.max_evals);
+                truncated = dropped;
+            }
+            ev.eval_all(&mixes)?;
+        }
+        SearchMode::Greedy | SearchMode::Auto => {
+            truncated = greedy_search(cfg, &mut ev)?;
+        }
+    }
+
+    // The paper's HMAI point, for frontier placement (acceptance anchor).
+    let hmai = Mix::hmai_std();
+    if hmai.area_units() <= cfg.budget_area + 1e-9
+        && cfg.power_cap_w.map(|cap| hmai.peak_power_w() <= cap).unwrap_or(true)
+    {
+        ev.eval_all(&[hmai])?;
+    }
+
+    let mut rows = ev.rows;
+    let frontier = mark_frontier(&mut rows);
+    // Report order: frontier first, then by deadline-met rate desc,
+    // energy asc, area asc (deterministic tie-break on the spec).
+    rows.sort_by(|a, b| {
+        b.on_frontier
+            .cmp(&a.on_frontier)
+            .then(b.stm_rate.total_cmp(&a.stm_rate))
+            .then(a.energy_j.total_cmp(&b.energy_j))
+            .then(a.area.total_cmp(&b.area))
+            .then(a.spec.cmp(&b.spec))
+    });
+    Ok(DseReport {
+        evaluated: rows.len(),
+        frontier,
+        rows,
+        search: mode.name(),
+        budget_area: cfg.budget_area,
+        power_cap_w: cfg.power_cap_w,
+        truncated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_spec_round_trips_through_platform_parse() {
+        let mut m = Mix::hmai_std();
+        m.counts[AccelKind::SconvOD.index()][CoreSize::Double.index()] = 1;
+        m.counts[AccelKind::MconvMC.index()][CoreSize::Half.index()] = 2;
+        let spec = m.spec();
+        let p = Platform::try_parse(&spec).unwrap();
+        assert_eq!(p.len(), m.cores());
+        for k in ALL_ACCELS {
+            for s in ALL_SIZES {
+                assert_eq!(
+                    p.count_of_sized(k, s),
+                    m.counts[k.index()][s.index()],
+                    "{k:?} {s:?} in '{spec}'"
+                );
+            }
+        }
+        assert_eq!(p.name, m.platform().name);
+        assert!((p.area_units() - m.area_units()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hmai_mix_matches_platform_hmai() {
+        let m = Mix::hmai_std();
+        assert_eq!(m.cores(), 11);
+        assert!((m.area_units() - 11.0).abs() < 1e-12);
+        assert_eq!(m.spec(), "so:4,si:4,mm:3");
+        let p = m.platform();
+        assert_eq!(p.count_of(AccelKind::SconvOD), 4);
+        assert_eq!(p.count_of(AccelKind::MconvMC), 3);
+        assert!(m.worst_capacity_fps() > 0.0);
+    }
+
+    #[test]
+    fn enumerate_respects_budget_and_dedupes() {
+        let (mixes, over) = enumerate(3.0, None, 100_000);
+        assert!(!over);
+        assert!(!mixes.is_empty());
+        for m in &mixes {
+            assert!(m.area_units() <= 3.0 + 1e-9, "{}", m.spec());
+            assert!(m.cores() >= 1);
+        }
+        let set: std::collections::HashSet<_> = mixes.iter().collect();
+        assert_eq!(set.len(), mixes.len(), "duplicates enumerated");
+        // A power cap strictly shrinks the space: every Std-core busy
+        // power exceeds 1 W (pinned in accel::energy tests), so a 1 W cap
+        // must exclude at least every std/double-core mix.
+        let (capped, _) = enumerate(3.0, Some(1.0), 100_000);
+        assert!(capped.len() < mixes.len());
+        for m in &capped {
+            assert!(m.peak_power_w() <= 1.0);
+        }
+        // The limit flag fires.
+        let (some, over) = enumerate(12.0, None, 64);
+        assert_eq!(some.len(), 64);
+        assert!(over);
+    }
+
+    #[test]
+    fn frontier_marking_is_sound() {
+        let row = |stm: f64, e: f64, a: f64| EvalRow {
+            mix: Mix::default(),
+            spec: format!("{stm}-{e}-{a}"),
+            cores: 1,
+            area: a,
+            peak_power_w: 1.0,
+            stm_rate: stm,
+            energy_j: e,
+            time_s: 1.0,
+            r_balance: 0.5,
+            on_frontier: false,
+        };
+        let mut rows = vec![
+            row(0.9, 10.0, 5.0), // frontier (best stm)
+            row(0.8, 8.0, 5.0),  // frontier (cheaper energy)
+            row(0.8, 9.0, 5.0),  // dominated by the one above
+            row(0.5, 12.0, 2.0), // frontier (smallest area)
+        ];
+        let n = mark_frontier(&mut rows);
+        assert_eq!(n, 3);
+        assert!(rows[0].on_frontier && rows[1].on_frontier && rows[3].on_frontier);
+        assert!(!rows[2].on_frontier);
+    }
+
+    #[test]
+    fn tiny_greedy_run_produces_a_frontier() {
+        let reg = Registry::new();
+        let cfg = DseConfig {
+            budget_area: 2.5,
+            distances_m: vec![40.0],
+            scenarios: vec!["urban-rush".to_string()],
+            max_evals: 40,
+            beam: 1,
+            search: SearchMode::Greedy,
+            ..Default::default()
+        };
+        let report = run(&cfg, &reg).unwrap();
+        assert!(report.evaluated > 0);
+        assert!(report.frontier >= 1);
+        assert!(report.rows.iter().any(|r| r.on_frontier));
+        // Frontier rows lead the report.
+        assert!(report.rows[0].on_frontier);
+        // Every evaluated mix respects the budget.
+        for r in &report.rows {
+            assert!(r.area <= 2.5 + 1e-9, "{}", r.spec);
+            assert!(r.stm_rate >= 0.0 && r.stm_rate <= 1.0);
+            assert!(r.energy_j > 0.0);
+        }
+        // HMAI does not fit a 2.5-unit budget, so it must not be injected.
+        assert!(report.find("so:4,si:4,mm:3").is_none());
+        // Deterministic: same config, same report.
+        let again = run(&cfg, &reg).unwrap();
+        assert_eq!(again.evaluated, report.evaluated);
+        for (a, b) in report.rows.iter().zip(&again.rows) {
+            assert_eq!(a.spec, b.spec);
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            assert_eq!(a.on_frontier, b.on_frontier);
+        }
+    }
+
+    #[test]
+    fn bad_config_is_rejected() {
+        let reg = Registry::new();
+        let bad = DseConfig { scenarios: vec![], ..Default::default() };
+        assert!(run(&bad, &reg).is_err());
+        let bad = DseConfig { budget_area: 0.0, ..Default::default() };
+        assert!(run(&bad, &reg).is_err());
+        let bad = DseConfig { scenarios: vec!["nope".into()], ..Default::default() };
+        assert!(run(&bad, &reg).is_err());
+    }
+}

@@ -26,5 +26,6 @@ pub mod runtime;
 pub mod config;
 pub mod plan;
 pub mod engine;
+pub mod dse;
 pub mod harness;
 pub mod reports;

@@ -34,16 +34,23 @@ pub struct NormScales {
 impl NormScales {
     /// Scales for one (queue, platform) pair.
     pub fn for_queue(queue: &TaskQueue, platform: &Platform) -> NormScales {
+        // Per-model best case over the platform's (kind, size) cores,
+        // folded once in slot order — the same minima the old per-task
+        // inner loop produced (min is order-insensitive for finite f64),
+        // in O(models × accels) instead of O(tasks × accels).
+        let mut best = [(f64::INFINITY, f64::INFINITY); 3]; // (energy, time)
+        for a in &platform.accels {
+            for m in crate::workload::ALL_MODELS {
+                let c = crate::accel::cost_sized(a.kind, m, a.size);
+                let b = &mut best[m.index()];
+                b.0 = b.0.min(c.energy_j);
+                b.1 = b.1.min(c.time_s);
+            }
+        }
         let mut e = 0.0;
         let mut t = 0.0;
         for task in &queue.tasks {
-            let mut best_e = f64::INFINITY;
-            let mut best_t = f64::INFINITY;
-            for a in &platform.accels {
-                let c = crate::accel::cost(a.kind, task.model);
-                best_e = best_e.min(c.energy_j);
-                best_t = best_t.min(c.time_s);
-            }
+            let (best_e, best_t) = best[task.model.index()];
             e += best_e;
             t += best_t;
         }

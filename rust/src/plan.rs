@@ -13,7 +13,7 @@
 //! never perturbs earlier queues.  Seed replicates beyond the base seed are
 //! also `Rng::fork`-derived (see [`ExperimentPlan::replicates`]).
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::env::route::{Route, RouteParams};
 use crate::env::scenario::{self, Archetype};
@@ -109,8 +109,8 @@ impl Trial {
 
     /// Resolve this trial's platform.
     pub fn platform(&self) -> Result<Platform> {
-        Platform::parse(&self.platform)
-            .with_context(|| format!("trial {}: unknown platform '{}'", self.id, self.platform))
+        Platform::try_parse(&self.platform)
+            .map_err(|e| anyhow::anyhow!("trial {}: bad platform: {e}", self.id))
     }
 
     /// Short human label (progress lines).
@@ -284,7 +284,7 @@ impl ExperimentPlan {
         anyhow::ensure!(!self.schedulers.is_empty(), "plan has no schedulers");
         anyhow::ensure!(!self.distances_m.is_empty(), "plan has no route distances");
         for p in &self.platforms {
-            Platform::parse(p).with_context(|| format!("plan: unknown platform '{p}'"))?;
+            Platform::try_parse(p).map_err(|e| anyhow::anyhow!("plan: bad platform: {e}"))?;
         }
         let archetypes: Vec<Archetype> =
             self.scenarios.iter().map(|n| scenario::find(n)).collect::<Result<_>>()?;

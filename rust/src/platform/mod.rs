@@ -1,16 +1,27 @@
 //! Hardware platforms: HMAI — the paper's (4 SconvOD, 4 SconvIC,
 //! 3 MconvMC) heterogeneous configuration (§8.2) — plus the homogeneous
-//! baselines (13 SO / 13 SI / 12 MM, §3.1) and arbitrary custom mixes.
+//! baselines (13 SO / 13 SI / 12 MM, §3.1) and arbitrary custom mixes of
+//! per-core *kind × size* ([`CoreSize`]): the two axes `hmai dse`
+//! explores.
+//!
+//! Spec grammar (`Platform::try_parse`):
+//!   * named: `hmai` | `13so` | `13si` | `12mm`
+//!   * legacy counts: `"4,4,3"` (SO,SI,MM — all standard-size cores)
+//!   * sized mix: `"so:4@2x,si:4,mm:3@0.5x"` — comma-separated
+//!     `kind:count[@size]` components, size ∈ `0.5x | 1x | 2x`
+//!     (default `1x`); repeated kinds append.
 
 pub mod alloc;
 
-use crate::accel::AccelKind;
+use crate::accel::{self, AccelKind, CoreSize, CostModel};
 
 /// One physical sub-accelerator instance.
 #[derive(Debug, Clone, Copy)]
 pub struct AccelInstance {
     pub id: usize,
     pub kind: AccelKind,
+    /// MAC provisioning of this core (Std = the paper's 8192 MACs).
+    pub size: CoreSize,
 }
 
 /// A multi-accelerator platform.
@@ -21,17 +32,25 @@ pub struct Platform {
 }
 
 impl Platform {
-    /// Build from per-kind counts (SO, SI, MM).
+    /// Build from per-kind counts (SO, SI, MM) of standard-size cores.
     pub fn from_counts(name: &str, so: usize, si: usize, mm: usize) -> Platform {
-        let mut accels = Vec::with_capacity(so + si + mm);
+        Platform::from_mix(
+            name,
+            &[
+                (AccelKind::SconvOD, CoreSize::Std, so),
+                (AccelKind::SconvIC, CoreSize::Std, si),
+                (AccelKind::MconvMC, CoreSize::Std, mm),
+            ],
+        )
+    }
+
+    /// Build from (kind, size, count) components, in order.
+    pub fn from_mix(name: &str, mix: &[(AccelKind, CoreSize, usize)]) -> Platform {
+        let mut accels = Vec::with_capacity(mix.iter().map(|(_, _, n)| n).sum());
         let mut id = 0;
-        for (kind, n) in [
-            (AccelKind::SconvOD, so),
-            (AccelKind::SconvIC, si),
-            (AccelKind::MconvMC, mm),
-        ] {
+        for &(kind, size, n) in mix {
             for _ in 0..n {
-                accels.push(AccelInstance { id, kind });
+                accels.push(AccelInstance { id, kind, size });
                 id += 1;
             }
         }
@@ -65,33 +84,124 @@ impl Platform {
         self.accels.iter().filter(|a| a.kind == kind).count()
     }
 
-    /// Peak compute of the whole platform, TOPS.
-    pub fn peak_tops(&self) -> f64 {
-        self.len() as f64 * crate::accel::peak_tops()
+    pub fn count_of_sized(&self, kind: AccelKind, size: CoreSize) -> usize {
+        self.accels.iter().filter(|a| a.kind == kind && a.size == size).count()
     }
 
-    /// Parse "4,4,3"-style counts or a named platform.
+    /// Peak compute of the whole platform, TOPS — summed per core, so
+    /// mixed-size platforms are accounted correctly (the pre-size
+    /// implementation multiplied the core count by the uniform Std peak,
+    /// which over/under-counted any non-Std core).
+    pub fn peak_tops(&self) -> f64 {
+        self.accels.iter().map(|a| accel::peak_tops_sized(a.size)).sum()
+    }
+
+    /// Die-area estimate in standard-core equivalents
+    /// ([`CoreSize::area_units`]) — the `hmai dse --budget` unit.
+    pub fn area_units(&self) -> f64 {
+        self.accels.iter().map(|a| a.size.area_units()).sum()
+    }
+
+    /// Peak sustained power estimate (W): each core at its most
+    /// power-hungry workload ([`accel::peak_power_w`]).
+    pub fn peak_power_w(&self) -> f64 {
+        self.accels.iter().map(|a| accel::peak_power_w(a.kind, a.size)).sum()
+    }
+
+    /// The instance-parameterized cost model of this platform (per-slot
+    /// (kind, size) rows) — what `ShadowState` consults per decision.
+    pub fn cost_model(&self) -> CostModel {
+        CostModel::new(self.accels.iter().map(|a| (a.kind, a.size)))
+    }
+
+    /// Parse a platform spec; `None` on any error (see [`Platform::try_parse`]
+    /// for the error-reporting form the CLI uses).
     pub fn parse(s: &str) -> Option<Platform> {
-        match s.to_ascii_lowercase().as_str() {
-            "hmai" => return Some(Platform::hmai()),
-            "13so" => return Some(Platform::homogeneous(AccelKind::SconvOD)),
-            "13si" => return Some(Platform::homogeneous(AccelKind::SconvIC)),
-            "12mm" => return Some(Platform::homogeneous(AccelKind::MconvMC)),
+        Platform::try_parse(s).ok()
+    }
+
+    /// Parse a platform spec with a descriptive error: a named platform,
+    /// legacy `"so,si,mm"` counts, or `kind:count[@size]` components (see
+    /// the module docs for the grammar).
+    pub fn try_parse(s: &str) -> Result<Platform, String> {
+        let lc = s.trim().to_ascii_lowercase();
+        match lc.as_str() {
+            "hmai" => return Ok(Platform::hmai()),
+            "13so" => return Ok(Platform::homogeneous(AccelKind::SconvOD)),
+            "13si" => return Ok(Platform::homogeneous(AccelKind::SconvIC)),
+            "12mm" => return Ok(Platform::homogeneous(AccelKind::MconvMC)),
+            "" => return Err("empty platform spec".to_string()),
             _ => {}
         }
-        let parts: Vec<usize> = s.split(',').filter_map(|p| p.trim().parse().ok()).collect();
-        // A platform needs at least one accelerator: "0,0,0" would make
-        // every scheduler's assignment unsatisfiable and panic the sim.
-        if parts.len() == 3 && parts.iter().sum::<usize>() > 0 {
-            Some(Platform::from_counts(
-                &format!("custom({},{},{})", parts[0], parts[1], parts[2]),
-                parts[0],
-                parts[1],
-                parts[2],
-            ))
-        } else {
-            None
+        let parts: Vec<&str> = lc.split(',').map(str::trim).collect();
+        if parts.iter().any(|p| p.contains(':')) {
+            return Self::parse_mix(&lc, &parts);
         }
+        // Legacy count-triple form "so,si,mm".
+        if parts.len() != 3 {
+            return Err(format!(
+                "'{s}': expected 3 comma-separated counts \"so,si,mm\" (got {}), \
+                 a named platform (hmai | 13so | 13si | 12mm), or \
+                 \"kind:count[@size]\" components like \"so:4@2x,si:4,mm:3\"",
+                parts.len()
+            ));
+        }
+        let mut counts = [0usize; 3];
+        for (i, p) in parts.iter().enumerate() {
+            counts[i] = p.parse().map_err(|_| {
+                format!(
+                    "'{s}' component {} ('{p}'): not a count — expected e.g. \
+                     \"4,4,3\" or \"so:4@2x,si:4,mm:3\"",
+                    i + 1
+                )
+            })?;
+        }
+        if counts.iter().sum::<usize>() == 0 {
+            // A platform needs at least one accelerator: "0,0,0" would make
+            // every scheduler's assignment unsatisfiable and panic the sim.
+            return Err(format!("'{s}': a platform needs at least one accelerator"));
+        }
+        Ok(Platform::from_counts(
+            &format!("custom({},{},{})", counts[0], counts[1], counts[2]),
+            counts[0],
+            counts[1],
+            counts[2],
+        ))
+    }
+
+    /// The `kind:count[@size]` component form.
+    fn parse_mix(lc: &str, parts: &[&str]) -> Result<Platform, String> {
+        let expected = "expected \"kind:count[@size]\" with kind so|si|mm and \
+                        size 0.5x|1x|2x — e.g. \"so:4@2x,si:4,mm:3\"";
+        let mut mix: Vec<(AccelKind, CoreSize, usize)> = Vec::with_capacity(parts.len());
+        for (i, comp) in parts.iter().enumerate() {
+            let err = |what: &str| {
+                format!("'{lc}' component {} ('{comp}'): {what} — {expected}", i + 1)
+            };
+            let (kind_s, rest) = comp.split_once(':').ok_or_else(|| err("missing ':'"))?;
+            let kind = AccelKind::parse(kind_s.trim())
+                .ok_or_else(|| err(&format!("unknown kind '{}'", kind_s.trim())))?;
+            let (count_s, size) = match rest.split_once('@') {
+                Some((c, sz)) => {
+                    let size = CoreSize::parse(sz.trim())
+                        .ok_or_else(|| err(&format!("unknown size '{}'", sz.trim())))?;
+                    (c.trim(), size)
+                }
+                None => (rest.trim(), CoreSize::Std),
+            };
+            let count: usize =
+                count_s.parse().map_err(|_| err(&format!("bad count '{count_s}'")))?;
+            mix.push((kind, size, count));
+        }
+        if mix.iter().map(|(_, _, n)| n).sum::<usize>() == 0 {
+            return Err(format!("'{lc}': a platform needs at least one accelerator"));
+        }
+        let canon: Vec<String> = mix
+            .iter()
+            .filter(|(_, _, n)| *n > 0)
+            .map(|(k, s, n)| format!("{}:{}{}", k.short().to_ascii_lowercase(), n, s.suffix()))
+            .collect();
+        Ok(Platform::from_mix(&format!("custom({})", canon.join(",")), &mix))
     }
 }
 
@@ -114,8 +224,10 @@ mod tests {
         assert_eq!(p.count_of(AccelKind::SconvOD), 4);
         assert_eq!(p.count_of(AccelKind::SconvIC), 4);
         assert_eq!(p.count_of(AccelKind::MconvMC), 3);
-        // Stable ids 0..11.
+        // Stable ids 0..11, all standard cores.
         assert!(p.accels.iter().enumerate().all(|(i, a)| a.id == i));
+        assert!(p.accels.iter().all(|a| a.size == CoreSize::Std));
+        assert!((p.area_units() - 11.0).abs() < 1e-12);
     }
 
     #[test]
@@ -148,5 +260,85 @@ mod tests {
         // Zero-accelerator platforms are rejected at the parse boundary
         // (schedulers additionally fall back gracefully when handed one).
         assert!(Platform::parse("0,0,0").is_none());
+    }
+
+    #[test]
+    fn parse_sized_mix_round_trips() {
+        let p = Platform::parse("so:4@2x,si:4,mm:3@0.5x").unwrap();
+        assert_eq!(p.len(), 11);
+        assert_eq!(p.count_of_sized(AccelKind::SconvOD, CoreSize::Double), 4);
+        assert_eq!(p.count_of_sized(AccelKind::SconvIC, CoreSize::Std), 4);
+        assert_eq!(p.count_of_sized(AccelKind::MconvMC, CoreSize::Half), 3);
+        assert_eq!(p.name, "custom(so:4@2x,si:4,mm:3@0.5x)");
+        // The canonical name parses back to the same composition.
+        let p2 = Platform::parse(&p.name["custom(".len()..p.name.len() - 1]).unwrap();
+        assert_eq!(p2.name, p.name);
+        // Slots are laid out component-major, like from_counts.
+        assert_eq!(p.accels[0].kind, AccelKind::SconvOD);
+        assert_eq!(p.accels[0].size, CoreSize::Double);
+        assert_eq!(p.accels[10].kind, AccelKind::MconvMC);
+        // Repeated kinds append.
+        let rep = Platform::parse("so:1,so:2@2x").unwrap();
+        assert_eq!(rep.len(), 3);
+        assert_eq!(rep.count_of_sized(AccelKind::SconvOD, CoreSize::Double), 2);
+    }
+
+    #[test]
+    fn mix_spec_equals_legacy_counts_platform() {
+        // "so:4,si:4,mm:3" is the same machine as "4,4,3" (name aside).
+        let a = Platform::parse("4,4,3").unwrap();
+        let b = Platform::parse("so:4,si:4,mm:3").unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.accels.iter().zip(&b.accels) {
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.size, y.size);
+        }
+        assert_eq!(a.peak_tops().to_bits(), b.peak_tops().to_bits());
+    }
+
+    #[test]
+    fn try_parse_errors_explain_themselves() {
+        // The PR-2-era parser silently collapsed "4,x,3" into a generic
+        // None; the CLI now surfaces what exactly was wrong.
+        let e = Platform::try_parse("4,x,3").unwrap_err();
+        assert!(e.contains("component 2") && e.contains("'x'"), "{e}");
+        let e = Platform::try_parse("4,4").unwrap_err();
+        assert!(e.contains("expected 3"), "{e}");
+        let e = Platform::try_parse("so:1@9x").unwrap_err();
+        assert!(e.contains("unknown size '9x'"), "{e}");
+        let e = Platform::try_parse("zz:1").unwrap_err();
+        assert!(e.contains("unknown kind 'zz'"), "{e}");
+        let e = Platform::try_parse("so:0,si:0").unwrap_err();
+        assert!(e.contains("at least one accelerator"), "{e}");
+        let e = Platform::try_parse("so:x").unwrap_err();
+        assert!(e.contains("bad count 'x'"), "{e}");
+        assert!(Platform::try_parse("").is_err());
+    }
+
+    #[test]
+    fn peak_tops_accounts_for_core_sizes() {
+        // The pre-size peak_tops() assumed uniform cores; a mixed platform
+        // must sum per-core peaks.
+        let p = Platform::parse("so:1@2x,si:1,mm:1@0.5x").unwrap();
+        let std1 = crate::accel::peak_tops();
+        assert!((p.peak_tops() - 3.5 * std1).abs() < 1e-9, "{}", p.peak_tops());
+        assert!((p.area_units() - (1.75 + 1.0 + 0.625)).abs() < 1e-12);
+        assert!(p.peak_power_w() > 0.0);
+        // Std-only platforms keep the old value (count × Std peak).
+        let h = Platform::hmai();
+        assert!((h.peak_tops() - 11.0 * std1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_model_rows_follow_slot_layout() {
+        let p = Platform::parse("so:1@0.5x,mm:2@2x").unwrap();
+        let cm = p.cost_model();
+        assert_eq!(cm.len(), 3);
+        let want0 =
+            crate::accel::cost_sized(AccelKind::SconvOD, ModelKind::Yolo, CoreSize::Half);
+        assert_eq!(cm.of(0, ModelKind::Yolo).time_s.to_bits(), want0.time_s.to_bits());
+        let want2 =
+            crate::accel::cost_sized(AccelKind::MconvMC, ModelKind::Goturn, CoreSize::Double);
+        assert_eq!(cm.of(2, ModelKind::Goturn).time_s.to_bits(), want2.time_s.to_bits());
     }
 }

@@ -43,6 +43,30 @@ pub fn sweep_table(s: &SweepSummary) -> Table {
     t
 }
 
+/// Render a DSE run (`hmai dse`) as a table: the Pareto frontier of
+/// (deadline-met %, energy, area) first (★), then every other evaluated
+/// mix in report order.
+pub fn dse_table(report: &crate::dse::DseReport) -> Table {
+    let mut t = Table::new([
+        "", "Mix", "Cores", "Area", "Peak W", "STMRate", "Energy M (J)", "Time M (s)",
+        "R_Balance",
+    ]);
+    for r in &report.rows {
+        t.row([
+            if r.on_frontier { "★".to_string() } else { String::new() },
+            r.spec.clone(),
+            r.cores.to_string(),
+            f2(r.area),
+            f1(r.peak_power_w),
+            pct(r.stm_rate),
+            f1(r.energy_j),
+            f2(r.time_s),
+            f2(r.r_balance),
+        ]);
+    }
+    t
+}
+
 /// Table 1: MACs, weights+neurons, layer counts of the three CNNs.
 pub fn table1() -> Table {
     let mut t = Table::new(["CNN", "#MACs (G)", "#weights+neurons (M)", "Layers"]);
@@ -332,6 +356,36 @@ mod tests {
         assert!(s.contains("STMRate"), "{s}");
         assert!(s.contains("Scenario"), "{s}");
         assert!(s.contains("night-rain"), "{s}");
+    }
+
+    #[test]
+    fn dse_table_marks_frontier_rows() {
+        use crate::dse::{DseReport, EvalRow, Mix};
+        let row = |spec: &str, frontier: bool| EvalRow {
+            mix: Mix::hmai_std(),
+            spec: spec.to_string(),
+            cores: 11,
+            area: 11.0,
+            peak_power_w: 150.0,
+            stm_rate: 0.95,
+            energy_j: 1234.5,
+            time_s: 10.0,
+            r_balance: 0.8,
+            on_frontier: frontier,
+        };
+        let report = DseReport {
+            rows: vec![row("so:4,si:4,mm:3", true), row("so:1@2x", false)],
+            frontier: 1,
+            evaluated: 2,
+            search: "greedy",
+            budget_area: 12.0,
+            power_cap_w: None,
+            truncated: 0,
+        };
+        let s = dse_table(&report).render();
+        assert!(s.contains("so:4,si:4,mm:3"), "{s}");
+        assert!(s.contains('★'), "{s}");
+        assert!(s.contains("95.0%"), "{s}");
     }
 
     #[test]

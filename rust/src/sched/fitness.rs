@@ -37,8 +37,10 @@ pub fn rollout_cost(tasks: &[Task], assignment: &[usize], state: &ShadowState) -
         let mut bt = f64::INFINITY;
         let mut be = f64::INFINITY;
         for i in 0..state.len() {
-            bt = bt.min(crate::accel::cost(state.kinds[i], task.model).time_s);
-            be = be.min(crate::accel::cost(state.kinds[i], task.model).energy_j);
+            // Per-slot cost rows: sized cores price their own best case.
+            let c = state.cost(i, task.model);
+            bt = bt.min(c.time_s);
+            be = be.min(c.energy_j);
         }
         best_t += bt;
         best_e += be;

@@ -5,12 +5,17 @@
 //!   [ task one-hot (3: YOLO | SSD | GOTURN),
 //!     amount_norm, layer_num_norm, safety_time_norm,            Task-Info
 //!     per-slot × N_SLOTS:                                        HW-Info
-//!       [ valid, kind_so, kind_si, kind_mm,
+//!       [ valid_capacity, kind_so, kind_si, kind_mm,
 //!         queue_time_norm, energy_share, rel_competitiveness, est_time_norm ] ]
 //!
-//! All features are bounded to [0, 1] so a policy trained on one route
-//! length transfers to another (raw E_i / queue times grow unboundedly
-//! along a route; ratios and shares do not).
+//! `valid_capacity` is 0 for an absent slot and the core's relative MAC
+//! scale otherwise (0.5 half / 1.0 std / 2.0 double) — the core-size
+//! feature.  Std platforms write exactly the 1.0 the pre-size `valid`
+//! flag wrote, so Std featurizations are bit-identical.
+//!
+//! All other features are bounded to [0, 1] so a policy trained on one
+//! route length transfers to another (raw E_i / queue times grow
+//! unboundedly along a route; ratios and shares do not).
 
 use crate::env::taskgen::Task;
 use crate::runtime::Meta;
@@ -51,7 +56,7 @@ pub fn featurize(task: &Task, state: &ShadowState, meta: &Meta, out: &mut [f32])
     for i in 0..n {
         let base = meta.task_feats + i * meta.slot_feats;
         let est = state.est_response(task, i);
-        out[base] = 1.0; // valid
+        out[base] = state.sizes[i].scale() as f32; // valid × capacity (1.0 = Std)
         out[base + 1 + state.kinds[i].index()] = 1.0; // kind one-hot
         // Queue backlog relative to this task's deadline budget.
         out[base + 4] =
@@ -145,6 +150,29 @@ mod tests {
         // Slot 1 untouched.
         let b1 = meta.task_feats + meta.slot_feats;
         assert_eq!(after[b1 + 4], before[b1 + 4]);
+    }
+
+    #[test]
+    fn capacity_feature_tracks_core_size_and_is_std_bit_compat() {
+        let meta = meta();
+        let q = crate::sched::tests::small_queue(2);
+        let task = q.tasks[0].clone();
+        // Std platform: the capacity feature is exactly the old 1.0 flag.
+        let std_state = ShadowState::new(&Platform::hmai(), NormScales::unit());
+        let mut out = vec![0.0f32; meta.in_dim];
+        featurize(&task, &std_state, &meta, &mut out);
+        for i in 0..11 {
+            assert_eq!(out[meta.task_feats + i * meta.slot_feats].to_bits(), 1.0f32.to_bits());
+        }
+        // Mixed sizes: the feature is the per-slot MAC scale.
+        let p = Platform::parse("so:1@0.5x,si:1,mm:1@2x").unwrap();
+        let state = ShadowState::new(&p, NormScales::unit());
+        let mut out = vec![0.0f32; meta.in_dim];
+        let n = featurize(&task, &state, &meta, &mut out);
+        assert_eq!(n, 3);
+        assert_eq!(out[meta.task_feats], 0.5);
+        assert_eq!(out[meta.task_feats + meta.slot_feats], 1.0);
+        assert_eq!(out[meta.task_feats + 2 * meta.slot_feats], 2.0);
     }
 
     #[test]

@@ -240,10 +240,15 @@ impl FlexAI {
             }
         }
         // The Q vector knows nothing about platform events, so the greedy
-        // argmax masks failed slots explicitly; only an all-down platform
-        // falls back to the unrestricted argmax.
-        let up = |i: usize| rolling.is_up(i);
-        if let Some(a) = argmax(&up) {
+        // argmax walks the up slots only (`up_iter`, no allocation); only
+        // an all-down platform falls back to the unrestricted argmax.
+        let mut best: Option<usize> = None;
+        for i in rolling.up_iter().take_while(|&i| i < n_valid) {
+            if best.map(|b| score(i) > score(b)).unwrap_or(true) {
+                best = Some(i);
+            }
+        }
+        if let Some(a) = best {
             return a;
         }
         argmax(&|_| true).expect("n_valid > 0")

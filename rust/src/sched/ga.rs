@@ -13,7 +13,7 @@ use crate::sim::ShadowState;
 use crate::util::rng::Rng;
 
 use super::fitness::rollout_cost;
-use super::{draw_up, Scheduler};
+use super::{Scheduler, UpSet};
 
 /// GA hyper-parameters.
 #[derive(Debug, Clone, Copy)]
@@ -76,15 +76,14 @@ impl Scheduler for Ga {
     }
 
     fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
-        let n = state.len();
-        let ups = state.up_accels();
+        let ups = UpSet::new(state);
         let p = self.params;
 
         // Random initial population (no greedy seeding — see module docs).
         let mut pop: Vec<(Vec<usize>, f64)> = (0..p.population)
             .map(|_| {
                 let genome: Vec<usize> =
-                    tasks.iter().map(|_| draw_up(&mut self.rng, n, &ups)).collect();
+                    tasks.iter().map(|_| ups.draw(&mut self.rng)).collect();
                 let cost = rollout_cost(tasks, &genome, state);
                 (genome, cost)
             })
@@ -108,7 +107,7 @@ impl Scheduler for Ga {
                 };
                 for g in child.iter_mut() {
                     if self.rng.chance(p.mutation_p) {
-                        *g = draw_up(&mut self.rng, n, &ups);
+                        *g = ups.draw(&mut self.rng);
                     }
                 }
                 let cost = rollout_cost(tasks, &child, state);

@@ -37,17 +37,52 @@ pub trait Scheduler {
     fn reset(&mut self) {}
 }
 
-/// Draw one accelerator index for the stochastic schedulers (GA genomes,
-/// SA neighbor moves).  On a healthy platform (`ups.len() == n`) this is
-/// the plain uniform draw — identical rng stream and results to the
-/// pre-platform-events code; when accelerators are down the draw covers
-/// the up set only, so no candidate ever maps a task to a dead slot.  An
-/// empty up set (every accelerator down) falls back to the full range.
-pub(crate) fn draw_up(rng: &mut Rng, n: usize, ups: &[usize]) -> usize {
-    if ups.len() == n || ups.is_empty() {
-        rng.below(n)
-    } else {
-        ups[rng.below(ups.len())]
+/// Zero-allocation view of a state's up set, computed once per burst (the
+/// up set cannot change while a scheduler holds `&ShadowState`).  This
+/// replaced the per-burst `up_accels()` `Vec` on the scheduling hot path:
+/// the healthy-platform fast path never touches the iterator at all.
+pub(crate) struct UpSet<'a> {
+    state: &'a ShadowState,
+    n: usize,
+    ups: usize,
+}
+
+impl<'a> UpSet<'a> {
+    pub fn new(state: &'a ShadowState) -> UpSet<'a> {
+        UpSet { state, n: state.len(), ups: state.up_count() }
+    }
+
+    /// Number of up accelerators.
+    pub fn count(&self) -> usize {
+        self.ups
+    }
+
+    pub fn all_up(&self) -> bool {
+        self.ups == self.n
+    }
+
+    pub fn none_up(&self) -> bool {
+        self.ups == 0
+    }
+
+    /// `k`-th up accelerator in ascending slot order (`k < count()`).
+    pub fn nth(&self, k: usize) -> usize {
+        self.state.up_iter().nth(k).expect("k < up count")
+    }
+
+    /// Draw one accelerator index for the stochastic schedulers (GA
+    /// genomes, SA neighbor moves).  On a healthy platform this is the
+    /// plain uniform draw — identical rng stream and results to the
+    /// pre-platform-events code; when accelerators are down the draw
+    /// covers the up set only, so no candidate ever maps a task to a dead
+    /// slot.  An empty up set (every accelerator down) falls back to the
+    /// full range.
+    pub fn draw(&self, rng: &mut Rng) -> usize {
+        if self.all_up() || self.none_up() {
+            rng.below(self.n)
+        } else {
+            self.nth(rng.below(self.ups))
+        }
     }
 }
 
@@ -103,6 +138,46 @@ mod tests {
             assert_eq!(a, s2.schedule_batch(&burst, &state), "{name} not deterministic");
         }
         assert!(reg.build_by_name("nope", 0).is_err());
+    }
+
+    #[test]
+    fn upset_draw_covers_the_up_set_only() {
+        let platform = Platform::hmai();
+        let mut state = ShadowState::new(&platform, NormScales::unit());
+        // Healthy platform: draws are the plain uniform stream.
+        let ups = UpSet::new(&state);
+        assert!(ups.all_up() && !ups.none_up());
+        let mut a = Rng::new(3);
+        let mut b = Rng::new(3);
+        for _ in 0..50 {
+            assert_eq!(ups.draw(&mut a), b.below(state.len()));
+        }
+        // Degraded platform: no draw lands on a dead slot, and nth walks
+        // ascending slot order exactly like the old Vec did.
+        state.set_speed(0, 0.0);
+        state.set_speed(6, 0.0);
+        let ups = UpSet::new(&state);
+        assert_eq!(ups.count(), state.len() - 2);
+        let old_vec = state.up_accels();
+        for k in 0..ups.count() {
+            assert_eq!(ups.nth(k), old_vec[k]);
+        }
+        let mut rng = Rng::new(9);
+        for _ in 0..100 {
+            let d = ups.draw(&mut rng);
+            assert!(d != 0 && d != 6 && d < state.len());
+        }
+        // All-down platform falls back to the full range.
+        for i in 0..state.len() {
+            state.set_speed(i, 0.0);
+        }
+        let ups = UpSet::new(&state);
+        assert!(ups.none_up());
+        let mut a = Rng::new(4);
+        let mut b = Rng::new(4);
+        for _ in 0..20 {
+            assert_eq!(ups.draw(&mut a), b.below(state.len()));
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@ use crate::env::taskgen::Task;
 use crate::sim::ShadowState;
 use crate::util::rng::Rng;
 
-use super::Scheduler;
+use super::{Scheduler, UpSet};
 
 #[derive(Debug)]
 pub struct RandomSched {
@@ -26,7 +26,7 @@ impl Scheduler for RandomSched {
 
     fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
         let n = state.len();
-        let ups = state.up_accels();
+        let ups = UpSet::new(state);
         tasks
             .iter()
             .map(|_| {
@@ -35,10 +35,10 @@ impl Scheduler for RandomSched {
                 // draws landing on a failed accelerator remap onto the up
                 // set deterministically.
                 let a = self.rng.below(n);
-                if ups.len() == n || ups.is_empty() || state.is_up(a) {
+                if ups.all_up() || ups.none_up() || state.is_up(a) {
                     a
                 } else {
-                    ups[a % ups.len()]
+                    ups.nth(a % ups.count())
                 }
             })
             .collect()

@@ -29,16 +29,16 @@ impl Scheduler for RoundRobin {
             .iter()
             .map(|_| {
                 // Rotate to the next *up* accelerator (platform events can
-                // fail one mid-route); with everything up this is the
-                // plain `next, next+1, ...` cycle, and with everything
-                // down the scan falls through to the original pick.
-                let mut a = self.next % n;
-                for _ in 0..n {
-                    if state.is_up(a) {
-                        break;
-                    }
-                    a = (a + 1) % n;
-                }
+                // fail one mid-route): the first up slot at or past the
+                // cursor, wrapping to the first up slot overall; with
+                // everything up this is the plain `next, next+1, ...`
+                // cycle, and with everything down the cursor itself.
+                let start = self.next % n;
+                let a = state
+                    .up_iter()
+                    .find(|&i| i >= start)
+                    .or_else(|| state.up_iter().next())
+                    .unwrap_or(start);
                 self.next = (a + 1) % n;
                 a
             })

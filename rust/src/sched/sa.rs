@@ -11,7 +11,7 @@ use crate::sim::ShadowState;
 use crate::util::rng::Rng;
 
 use super::fitness::rollout_cost;
-use super::{draw_up, sequential, Scheduler};
+use super::{sequential, Scheduler, UpSet};
 
 /// SA hyper-parameters.
 #[derive(Debug, Clone, Copy)]
@@ -60,7 +60,7 @@ impl Scheduler for Sa {
             // fall back to accel 0 for every task instead of panicking.
             return vec![0; tasks.len()];
         }
-        let ups = state.up_accels();
+        let ups = UpSet::new(state);
         // Greedy earliest-completion start (a failed accelerator predicts
         // an infinite completion time, so the greedy pick routes past it).
         let mut current = sequential(tasks, state, |task, s| {
@@ -88,7 +88,7 @@ impl Scheduler for Sa {
             // Neighbor: reassign one random task to a random up accelerator.
             let i = self.rng.below(tasks.len());
             let old = current[i];
-            let new = draw_up(&mut self.rng, n, &ups);
+            let new = ups.draw(&mut self.rng);
             if new == old {
                 temp *= self.params.cooling;
                 continue;

@@ -29,10 +29,7 @@ impl Scheduler for WorstCase {
             // a case the platform can execute); ties keep the lowest index,
             // and an all-down platform degenerates to accel 0 as before.
             let mut best: Option<usize> = None;
-            for i in 0..s.len() {
-                if !s.is_up(i) {
-                    continue;
-                }
+            for i in s.up_iter() {
                 if best.map(|b| s.queue_delay(i) > s.queue_delay(b)).unwrap_or(true) {
                     best = Some(i);
                 }

@@ -7,11 +7,14 @@
 //! `ShadowState::apply` the engine itself executes guarantees the
 //! prediction is exact, not an approximation.
 
-use crate::accel::{cost, AccelKind};
+use std::sync::Arc;
+
+use crate::accel::{AccelKind, CoreSize, CostModel, TaskCost};
 use crate::env::taskgen::Task;
 use crate::metrics::{AccelMetrics, NormScales, PlatformMetrics};
 use crate::platform::Platform;
 use crate::safety::ms::matching_score;
+use crate::workload::ModelKind;
 
 /// What happened when a task was applied to an accelerator.
 #[derive(Debug, Clone, Copy)]
@@ -46,6 +49,14 @@ pub struct Applied {
 #[derive(Debug, Clone)]
 pub struct ShadowState {
     pub kinds: Vec<AccelKind>,
+    /// Per-slot core size (drives the per-slot cost rows and the FlexAI
+    /// capacity feature).
+    pub sizes: Vec<CoreSize>,
+    /// Per-slot (model → cost) rows — the instance-parameterized cost
+    /// model that replaced the global Std-only `accel::cost` free function
+    /// on the hot paths.  Behind an `Arc` so rollout clones (GA/SA) stay
+    /// as cheap as before the parameterization.
+    costs: Arc<CostModel>,
     /// Simulation clock: release time of the task being scheduled.
     pub now: f64,
     /// Time at which each accelerator drains its queue.
@@ -58,9 +69,12 @@ pub struct ShadowState {
 impl ShadowState {
     pub fn new(platform: &Platform, scales: NormScales) -> ShadowState {
         let kinds: Vec<AccelKind> = platform.accels.iter().map(|a| a.kind).collect();
+        let sizes: Vec<CoreSize> = platform.accels.iter().map(|a| a.size).collect();
         let n = kinds.len();
         ShadowState {
             kinds,
+            sizes,
+            costs: Arc::new(platform.cost_model()),
             now: 0.0,
             busy_until: vec![0.0; n],
             speed: vec![1.0; n],
@@ -68,14 +82,35 @@ impl ShadowState {
         }
     }
 
+    /// Cost of `model` on slot `i` — one indexed load off this platform's
+    /// own (kind, size) rows.
+    #[inline]
+    pub fn cost(&self, i: usize, model: ModelKind) -> TaskCost {
+        self.costs.of(i, model)
+    }
+
     /// Is accelerator `i` accepting work (not failed)?
     pub fn is_up(&self, i: usize) -> bool {
         self.speed[i] > 0.0
     }
 
-    /// Indices of accelerators currently accepting work.
+    /// Indices of accelerators currently accepting work, without
+    /// allocating (ascending order).  Schedulers iterate this on the
+    /// per-burst path; [`ShadowState::up_accels`] is the allocating
+    /// convenience form.
+    pub fn up_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.speed.iter().enumerate().filter(|(_, &s)| s > 0.0).map(|(i, _)| i)
+    }
+
+    /// Number of accelerators currently accepting work.
+    pub fn up_count(&self) -> usize {
+        self.speed.iter().filter(|&&s| s > 0.0).count()
+    }
+
+    /// Indices of accelerators currently accepting work (allocates; see
+    /// [`ShadowState::up_iter`] for the hot-path form).
     pub fn up_accels(&self) -> Vec<usize> {
-        (0..self.speed.len()).filter(|&i| self.is_up(i)).collect()
+        self.up_iter().collect()
     }
 
     /// Set accelerator `i`'s speed factor (0.0 = failed, 1.0 = nominal).
@@ -106,7 +141,7 @@ impl ShadowState {
     /// schedulers away from it.  (Division by a speed of exactly 1.0 is
     /// bit-exact in IEEE 754, so the nominal path is unchanged.)
     pub fn est_response(&self, task: &Task, i: usize) -> f64 {
-        self.queue_delay(i) + cost(self.kinds[i], task.model).time_s / self.speed[i]
+        self.queue_delay(i) + self.costs.of(i, task.model).time_s / self.speed[i]
     }
 
     /// Predicted completion-time point on the route clock.
@@ -116,7 +151,7 @@ impl ShadowState {
 
     /// Energy `task` would consume on accelerator `i`.
     pub fn est_energy(&self, task: &Task, i: usize) -> f64 {
-        cost(self.kinds[i], task.model).energy_j
+        self.costs.of(i, task.model).energy_j
     }
 
     /// Fraction of accelerators still busy at `t`.
@@ -140,7 +175,7 @@ impl ShadowState {
     /// platform timing — the engine and all scheduler rollouts call it.
     pub fn apply(&mut self, task: &Task, accel: usize) -> Applied {
         debug_assert!(accel < self.kinds.len());
-        let c = cost(self.kinds[accel], task.model);
+        let c = self.costs.of(accel, task.model);
         let speed = self.speed[accel];
         if speed <= 0.0 {
             // A failed accelerator accepts no work: the task is *lost*
@@ -345,6 +380,38 @@ mod tests {
         // Out-of-range event indices are ignored.
         s.set_speed(999, 0.0);
         assert_eq!(s.up_accels().len(), s.len());
+    }
+
+    #[test]
+    fn per_slot_costs_follow_core_sizes() {
+        // A Double core must predict (and apply) exactly the sized cost;
+        // Std slots stay bit-identical to the global Std matrix.
+        use crate::accel::{cost_sized, CoreSize};
+        let p = Platform::parse("so:1@0.5x,si:1,mm:1@2x").unwrap();
+        let mut s = ShadowState::new(&p, NormScales::unit());
+        assert_eq!(s.sizes, vec![CoreSize::Half, CoreSize::Std, CoreSize::Double]);
+        let t = task(ModelKind::Yolo, 0.0, 10.0);
+        let std_cost = crate::accel::cost(AccelKind::SconvIC, ModelKind::Yolo);
+        assert_eq!(s.cost(1, ModelKind::Yolo).time_s.to_bits(), std_cost.time_s.to_bits());
+        assert_eq!(s.est_response(&t, 1).to_bits(), std_cost.time_s.to_bits());
+        let half = cost_sized(AccelKind::SconvOD, ModelKind::Yolo, CoreSize::Half);
+        let a = s.apply(&t, 0);
+        assert_eq!(a.compute_s.to_bits(), half.time_s.to_bits());
+        assert_eq!(a.energy_j.to_bits(), half.energy_j.to_bits());
+        // The half core is slower than its Std sibling would be.
+        assert!(half.time_s > crate::accel::cost(AccelKind::SconvOD, ModelKind::Yolo).time_s);
+    }
+
+    #[test]
+    fn up_iter_matches_up_accels() {
+        let mut s = shadow();
+        assert_eq!(s.up_iter().collect::<Vec<_>>(), s.up_accels());
+        assert_eq!(s.up_count(), s.len());
+        s.set_speed(2, 0.0);
+        s.set_speed(7, 0.0);
+        assert_eq!(s.up_iter().collect::<Vec<_>>(), s.up_accels());
+        assert_eq!(s.up_count(), s.len() - 2);
+        assert!(s.up_iter().all(|i| i != 2 && i != 7));
     }
 
     #[test]
