@@ -1,13 +1,18 @@
 //! Hot-path microbenchmarks (§Perf of EXPERIMENTS.md): the scheduler
 //! decision pipeline (featurize → PJRT Q-inference → pick), the DQN train
 //! step, the discrete-event engine, and the baseline schedulers'
-//! per-decision costs.
+//! per-decision costs — now with *before/after* sections that time the
+//! pre-overhaul reference algorithms (`sched::reference`) against the
+//! optimized hot paths in the same build, and report the speedups.
 //!
 //! The engine-primitive and baseline-scheduler sections run with or
 //! without the PJRT runtime; the compiled-executable sections join when
 //! the artifacts are available.  Results are also written to
 //! `BENCH_PERF.json` (via `util::json`) so CI can track a machine-readable
-//! perf trajectory.
+//! perf trajectory: `benches/compare_bench.py` diffs it against the
+//! committed `benches/perf_baseline.json` and warns (fail-soft) on >25%
+//! regressions.  Refresh the baseline by copying a CI `BENCH_PERF.json`
+//! artifact over `benches/perf_baseline.json`.
 
 #[path = "common.rs"]
 mod common;
@@ -19,7 +24,8 @@ use hmai::plan::queue_for;
 use hmai::platform::Platform;
 use hmai::runtime::TrainBatch;
 use hmai::sched::flexai::featurize::featurize;
-use hmai::sched::{Registry, Scheduler};
+use hmai::sched::reference::{self, reference_registry};
+use hmai::sched::{Registry, RolloutCtx, Scheduler};
 use hmai::sim::{simulate, ShadowState, SimOptions};
 use hmai::util::bench::{section, Bencher};
 use hmai::util::json::Json;
@@ -32,6 +38,9 @@ fn main() -> anyhow::Result<()> {
     let scales = NormScales::for_queue(&queue, &platform);
     let state = ShadowState::new(&platform, scales);
     let task = queue.tasks[0].clone();
+    // The 30-camera burst every scheduling section shares (§7: one frame
+    // from each of the 30 cameras per burst).
+    let burst: Vec<_> = queue.tasks.iter().take(30).cloned().collect();
     let mut b = Bencher::new();
 
     section("L3 engine primitives");
@@ -41,6 +50,25 @@ fn main() -> anyhow::Result<()> {
     b.bench("ShadowState::apply", || {
         let mut s = state.clone();
         std::hint::black_box(s.apply(&task, 3));
+    });
+    // The r_j micro-decision: O(N) scan vs the cached running count
+    // (`busy_count`).  These two rows are the number the cache is
+    // justified by — if they ever converge, drop the cache.
+    b.bench("busy_fraction_at (O(N) scan)", || {
+        std::hint::black_box(state.busy_fraction_at(0.0));
+    });
+    b.bench("busy count (cached)", || {
+        std::hint::black_box(state.busy_count());
+    });
+
+    section("rollout fitness (30-task genome), before/after");
+    let genome: Vec<usize> = (0..burst.len()).map(|i| i % platform.len()).collect();
+    b.bench("rollout_cost: full-clone reference", || {
+        std::hint::black_box(reference::ref_rollout_cost(&burst, &genome, &state));
+    });
+    let mut ctx = RolloutCtx::for_burst(&burst, &state);
+    b.bench("rollout_cost: RolloutCtx (reused)", || {
+        std::hint::black_box(ctx.rollout_cost(&burst, &genome));
     });
 
     // The compiled-executable sections need the PJRT runtime; without it
@@ -82,15 +110,40 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
-    section("end-to-end scheduling throughput (tasks/s)");
+    section("end-to-end scheduling throughput (tasks/s), before/after");
     let reg = Registry::new();
-    let burst: Vec<_> = queue.tasks.iter().take(30).cloned().collect();
-    for name in ["minmin", "ata", "edp", "sa", "ga", "rr"] {
+    let ref_reg = reference_registry();
+    // (canonical name, BENCH_PERF.json speedup key); rr has no reference
+    // twin (it was not part of the overhaul).
+    let speedup_keys = [
+        ("minmin", Some("minmin_burst")),
+        ("ata", Some("ata_burst")),
+        ("edp", Some("edp_burst")),
+        ("sa", Some("sa_anneal")),
+        ("ga", Some("ga_generation")),
+        ("rr", None),
+    ];
+    let mut speedups: Vec<(&str, f64)> = Vec::new();
+    for (name, key) in speedup_keys {
         let mut s = reg.build_by_name(name, 1).unwrap();
-        let r = b.bench(&format!("{name}: 30-task burst"), || {
-            std::hint::black_box(s.schedule_batch(&burst, &state));
-        });
-        println!("    -> {:.0} decisions/s", 30.0 / r.mean());
+        let after = {
+            let r = b.bench(&format!("{name}: 30-task burst"), || {
+                std::hint::black_box(s.schedule_batch(&burst, &state));
+            });
+            println!("    -> {:.0} decisions/s", 30.0 / r.mean());
+            r.mean()
+        };
+        let Some(key) = key else { continue };
+        let mut rs = ref_reg.build_by_name(name, 1).unwrap();
+        let before = {
+            let r = b.bench(&format!("{name}: 30-task burst (reference)"), || {
+                std::hint::black_box(rs.schedule_batch(&burst, &state));
+            });
+            r.mean()
+        };
+        let ratio = if after > 0.0 { before / after } else { 0.0 };
+        println!("    -> {ratio:.2}x vs reference");
+        speedups.push((key, ratio));
     }
     if let Some(rt) = &rt {
         let mut agent = hmai::sched::flexai::FlexAI::new(
@@ -130,7 +183,12 @@ fn main() -> anyhow::Result<()> {
     });
     println!("    -> frontier of {} non-dominated mixes", frontier_size.get());
 
-    // Machine-readable perf trajectory: one row per benchmark.
+    for (key, ratio) in &speedups {
+        println!("speedup {key}: {ratio:.2}x");
+    }
+
+    // Machine-readable perf trajectory: one row per benchmark, plus the
+    // before/after speedup ratios measured in this very run.
     let rows: Vec<Json> = b
         .results()
         .iter()
@@ -145,10 +203,13 @@ fn main() -> anyhow::Result<()> {
             ])
         })
         .collect();
+    let speedup_json =
+        Json::from_pairs(speedups.iter().map(|(k, v)| (*k, Json::Num(*v))).collect());
     let report = Json::from_pairs(vec![
         ("bench", Json::Str("bench_perf".to_string())),
         ("pjrt_runtime", Json::Bool(rt.is_some())),
         ("dse_frontier_size", Json::Num(frontier_size.get() as f64)),
+        ("speedup", speedup_json),
         ("results", Json::Arr(rows)),
     ]);
     report.write_to(std::path::Path::new(JSON_PATH))?;

@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Fail-soft perf-regression compare for BENCH_PERF.json trajectories.
+
+Usage:
+    python3 benches/compare_bench.py <baseline.json> <current.json> [--warn-pct 25]
+
+Matches benchmark rows by name and compares mean_s.  Rows slower than the
+baseline by more than --warn-pct emit a GitHub Actions `::warning::`
+annotation; everything else is informational.  The script NEVER fails the
+build (exit code is always 0): micro-benchmarks on shared CI runners are
+noisy, so regressions warn humans instead of blocking merges.
+
+The committed baseline lives at benches/perf_baseline.json.  A baseline
+with `"bootstrap": true` (or no rows) skips the comparison and prints
+refresh instructions — copy a CI BENCH_PERF.json artifact over it to arm
+the gate.
+"""
+
+import argparse
+import json
+import sys
+
+
+def annotate(line):
+    """GitHub workflow commands (::warning::/::notice::) go to stderr so the
+    runner still parses them but a `| tee -a $GITHUB_STEP_SUMMARY` on stdout
+    does not splice them into the markdown tables."""
+    print(line, file=sys.stderr)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        annotate(f"::notice::perf compare skipped: cannot read {path}: {e}")
+        return None
+
+
+def rows_by_name(doc):
+    out = {}
+    for row in doc.get("results", []):
+        name, mean = row.get("name"), row.get("mean_s")
+        if isinstance(name, str) and isinstance(mean, (int, float)) and mean > 0:
+            out[name] = float(mean)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--warn-pct", type=float, default=25.0)
+    args = ap.parse_args()
+
+    current = load(args.current)
+    if current is None:
+        return 0
+    speedup = current.get("speedup", {})
+    if speedup:
+        print("### Measured speedups (reference vs optimized, this run)")
+        for key, ratio in sorted(speedup.items()):
+            print(f"- `{key}`: **{ratio:.2f}x**")
+
+    baseline = load(args.baseline)
+    if baseline is None:
+        return 0
+    if baseline.get("bootstrap") or not baseline.get("results"):
+        annotate(
+            "::notice::perf baseline is a bootstrap placeholder (no committed "
+            "measurements). Refresh: download the BENCH_PERF.json artifact from "
+            "a CI run on this machine class and commit it as "
+            "benches/perf_baseline.json"
+        )
+        return 0
+
+    base, cur = rows_by_name(baseline), rows_by_name(current)
+    shared = [n for n in cur if n in base]
+    if not shared:
+        annotate("::notice::perf compare: no benchmark names shared with the baseline")
+        return 0
+
+    print(f"\n### Perf vs committed baseline (warn at >{args.warn_pct:.0f}% slower)")
+    print("| benchmark | baseline mean | current mean | delta |")
+    print("|---|---|---|---|")
+    regressions = 0
+    for name in shared:
+        pct = (cur[name] - base[name]) / base[name] * 100.0
+        flag = ""
+        if pct > args.warn_pct:
+            regressions += 1
+            flag = " ⚠️"
+            annotate(
+                f"::warning::perf regression: '{name}' is {pct:.0f}% slower "
+                f"than the committed baseline ({base[name]:.3e}s -> {cur[name]:.3e}s)"
+            )
+        print(f"| {name} | {base[name]:.3e} s | {cur[name]:.3e} s | {pct:+.1f}%{flag} |")
+    dropped = sorted(set(base) - set(cur))
+    if dropped:
+        print(f"\n(baseline rows with no current match: {', '.join(dropped)})")
+    print(
+        f"\n{regressions} regression(s) over threshold out of {len(shared)} "
+        "compared rows (fail-soft: warnings only)."
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

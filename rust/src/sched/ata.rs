@@ -8,11 +8,16 @@
 //! ATA is the only baseline optimized toward MS (Table 11 / §8.3: "ATA is
 //! optimized towards MS, the STMRate of each task queue is also very high
 //! under ATA") — but it ignores global balance, which costs it Fig. 12(a/b).
+//!
+//! Hot path: the per-task scan runs against a [`RolloutCtx`] (per-burst
+//! cached cost rows + rolling drain view) instead of a full `ShadowState`
+//! clone with per-task metrics updates — same picks, bit for bit
+//! ([`reference::RefAta`](super::reference::RefAta) keeps the old path).
 
 use crate::env::taskgen::Task;
 use crate::sim::ShadowState;
 
-use super::{sequential, Scheduler};
+use super::{RolloutCtx, Scheduler};
 
 #[derive(Debug, Default)]
 pub struct Ata;
@@ -29,12 +34,14 @@ impl Scheduler for Ata {
     }
 
     fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
-        sequential(tasks, state, |task, s| {
+        let mut ctx = RolloutCtx::new(state);
+        let mut out = Vec::with_capacity(tasks.len());
+        for task in tasks {
             let mut best_safe: Option<(usize, f64)> = None; // (accel, energy)
             let mut best_any: Option<(usize, f64)> = None; // (accel, response)
-            for a in 0..s.len() {
-                let resp = s.est_response(task, a);
-                let e = s.est_energy(task, a);
+            for a in 0..ctx.len() {
+                let resp = ctx.est_response(task, a);
+                let e = ctx.est_energy(task, a);
                 if resp <= task.safety_time_s
                     && best_safe.map(|(_, be)| e < be).unwrap_or(true)
                 {
@@ -44,8 +51,11 @@ impl Scheduler for Ata {
                     best_any = Some((a, resp));
                 }
             }
-            best_safe.or(best_any).expect("non-empty platform").0
-        })
+            let pick = best_safe.or(best_any).expect("non-empty platform").0;
+            ctx.push(task, pick);
+            out.push(pick);
+        }
+        out
     }
 }
 
@@ -100,5 +110,18 @@ mod tests {
         // Fallback is earliest completion.
         let other = 1 - a;
         assert!(state.est_response(&task, a) <= state.est_response(&task, other));
+    }
+
+    #[test]
+    fn matches_reference_scan_exactly() {
+        let q = crate::sched::tests::small_queue(5);
+        let platform = Platform::hmai();
+        let mut state = ShadowState::new(&platform, NormScales::unit());
+        state.set_speed(2, 0.0);
+        state.set_speed(6, 0.5);
+        let burst: Vec<_> = q.tasks.iter().take(40).cloned().collect();
+        let fast = Ata::new().schedule_batch(&burst, &state);
+        let slow = crate::sched::reference::RefAta::new().schedule_batch(&burst, &state);
+        assert_eq!(fast, slow);
     }
 }

@@ -2,11 +2,16 @@
 //! the accelerator minimizing the energy-delay product of the decision —
 //! `energy × predicted response time`.  Considers time and energy
 //! (Table 11) but neither balance nor MS.
+//!
+//! Hot path: the per-task scan runs against a [`RolloutCtx`] (per-burst
+//! cached cost rows + rolling drain view) instead of a full `ShadowState`
+//! clone with per-task metrics updates — same picks, bit for bit
+//! ([`reference::RefEdp`](super::reference::RefEdp) keeps the old path).
 
 use crate::env::taskgen::Task;
 use crate::sim::ShadowState;
 
-use super::{sequential, Scheduler};
+use super::{RolloutCtx, Scheduler};
 
 #[derive(Debug, Default)]
 pub struct Edp;
@@ -23,18 +28,22 @@ impl Scheduler for Edp {
     }
 
     fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
-        sequential(tasks, state, |task, s| {
+        let mut ctx = RolloutCtx::new(state);
+        let mut out = Vec::with_capacity(tasks.len());
+        for task in tasks {
             let mut best = 0;
             let mut best_edp = f64::INFINITY;
-            for a in 0..s.len() {
-                let edp = s.est_energy(task, a) * s.est_response(task, a);
+            for a in 0..ctx.len() {
+                let edp = ctx.est_energy(task, a) * ctx.est_response(task, a);
                 if edp < best_edp {
                     best_edp = edp;
                     best = a;
                 }
             }
-            best
-        })
+            ctx.push(task, best);
+            out.push(best);
+        }
+        out
     }
 }
 
@@ -71,5 +80,17 @@ mod tests {
             .filter(|m| m.num_tasks > 0)
             .count();
         assert!(used >= 4, "EDP used only {used} accels");
+    }
+
+    #[test]
+    fn matches_reference_scan_exactly() {
+        let q = crate::sched::tests::small_queue(7);
+        let platform = Platform::parse("so:2@2x,si:2,mm:2@0.5x").unwrap();
+        let mut state = ShadowState::new(&platform, NormScales::unit());
+        state.set_speed(1, 0.0);
+        let burst: Vec<_> = q.tasks.iter().take(40).cloned().collect();
+        let fast = Edp::new().schedule_batch(&burst, &state);
+        let slow = crate::sched::reference::RefEdp::new().schedule_batch(&burst, &state);
+        assert_eq!(fast, slow);
     }
 }

@@ -4,53 +4,31 @@
 //! resource utilization of HMAI can't be taken into account" — so this
 //! cost deliberately covers only *time and energy* (Table 11), never
 //! R_Balance or MS.
+//!
+//! This free function is the thin compatibility wrapper over
+//! [`RolloutCtx::rollout_cost`](super::RolloutCtx::rollout_cost): it
+//! builds a fresh per-burst context (cost rows + the genome-invariant
+//! best-case fold) and prices one assignment.  GA and SA construct the
+//! context once per burst instead, so population/neighbor loops pay
+//! neither the old full `ShadowState` clone nor the redundant O(B·N)
+//! best-case rescan per genome.  `reference::ref_rollout_cost` keeps the
+//! pre-overhaul implementation as the executable spec; bit-identity is
+//! pinned in the tests below and in `tests/perf_equiv.rs`.
 
 use crate::env::taskgen::Task;
 use crate::sim::ShadowState;
+
+use super::RolloutCtx;
 
 /// Cost of mapping the burst `tasks` with `assignment`: the burst-local
 /// makespan (when the last accelerator drains) plus normalized energy.
 /// Lower is better.
 /// Energy weight: joules are converted to "equivalent seconds" via the
 /// burst's own best-case time/energy ratio, then discounted so makespan
-/// dominates and energy breaks ties.
-const ENERGY_WEIGHT: f64 = 0.25;
-
+/// dominates and energy breaks ties (see
+/// [`rollout::ENERGY_WEIGHT`](super::rollout)).
 pub fn rollout_cost(tasks: &[Task], assignment: &[usize], state: &ShadowState) -> f64 {
-    debug_assert_eq!(tasks.len(), assignment.len());
-    let mut rolling = state.clone();
-    let mut energy = 0.0;
-    // Burst-intrinsic conversion: seconds per joule at the best-case
-    // operating point, so the two terms are commensurate regardless of
-    // burst composition.
-    let (mut best_t, mut best_e) = (0.0, 0.0);
-    for (task, &a) in tasks.iter().zip(assignment) {
-        let applied = rolling.apply(task, a);
-        if !applied.response_s.is_finite() {
-            // Mapping any task to a failed accelerator loses it: the
-            // candidate is unexecutable, so it prices at +inf (dead slots
-            // leave the rollout's drain untouched, so without this guard
-            // they would look *free*).
-            return f64::INFINITY;
-        }
-        energy += applied.energy_j;
-        let mut bt = f64::INFINITY;
-        let mut be = f64::INFINITY;
-        for i in 0..state.len() {
-            // Per-slot cost rows: sized cores price their own best case.
-            let c = state.cost(i, task.model);
-            bt = bt.min(c.time_s);
-            be = be.min(c.energy_j);
-        }
-        best_t += bt;
-        best_e += be;
-    }
-    let drain = rolling
-        .busy_until
-        .iter()
-        .fold(0.0_f64, |m, &b| m.max(b - state.now));
-    let sec_per_joule = if best_e > 0.0 { best_t / best_e } else { 0.0 };
-    drain + ENERGY_WEIGHT * energy * sec_per_joule
+    RolloutCtx::for_burst(tasks, state).rollout_cost(tasks, assignment)
 }
 
 #[cfg(test)]
@@ -58,7 +36,9 @@ mod tests {
     use super::*;
     use crate::metrics::NormScales;
     use crate::platform::Platform;
+    use crate::sched::reference::ref_rollout_cost;
     use crate::sched::tests::small_queue;
+    use crate::util::rng::Rng;
 
     #[test]
     fn balanced_assignment_costs_less_than_piled() {
@@ -81,5 +61,35 @@ mod tests {
         let burst: Vec<_> = q.tasks.iter().take(5).cloned().collect();
         let _ = rollout_cost(&burst, &[0, 1, 2, 3, 4], &state);
         assert!(state.busy_until.iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn matches_reference_bit_for_bit() {
+        // The slim-view fast path against the full clone-and-apply spec:
+        // random genomes on healthy, backlogged, derated and failed
+        // platforms, including dead-slot (+inf) genomes and mixed cores.
+        let q = small_queue(3);
+        let mut rng = Rng::new(17);
+        for spec in ["hmai", "so:2@2x,si:2,mm:2@0.5x"] {
+            let platform = Platform::parse(spec).unwrap();
+            let mut state = ShadowState::new(&platform, NormScales::unit());
+            for round in 0..4 {
+                let burst: Vec<_> = q.tasks.iter().take(20).cloned().collect();
+                for _ in 0..40 {
+                    let genome: Vec<usize> =
+                        burst.iter().map(|_| rng.below(state.len())).collect();
+                    let fast = rollout_cost(&burst, &genome, &state);
+                    let slow = ref_rollout_cost(&burst, &genome, &state);
+                    assert_eq!(fast.to_bits(), slow.to_bits(), "{spec} round {round}");
+                }
+                // Mutate the platform between rounds: backlog, derate, fail.
+                state.apply(&burst[0], round % state.len());
+                match round {
+                    1 => state.set_speed(1, 0.5),
+                    2 => state.set_speed(0, 0.0),
+                    _ => {}
+                }
+            }
+        }
     }
 }

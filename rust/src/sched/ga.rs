@@ -7,13 +7,19 @@
 //! scheduler must decide within a frame period, so GA cannot search long
 //! enough to recover from a bad draw.  This is what makes GA the weakest
 //! baseline in Fig. 12(a).
+//!
+//! Hot path: one [`RolloutCtx`] per burst prices every genome (no
+//! `ShadowState` clone, no per-genome best-case rescan), parents are
+//! borrowed from the population instead of cloned, and the two population
+//! buffers are swapped between generations — a generation allocates
+//! nothing beyond genome storage.  The rng stream and every result bit
+//! are identical to [`reference::RefGa`](super::reference::RefGa).
 
 use crate::env::taskgen::Task;
 use crate::sim::ShadowState;
 use crate::util::rng::Rng;
 
-use super::fitness::rollout_cost;
-use super::{Scheduler, UpSet};
+use super::{RolloutCtx, Scheduler, UpSet};
 
 /// GA hyper-parameters.
 #[derive(Debug, Clone, Copy)]
@@ -77,6 +83,7 @@ impl Scheduler for Ga {
 
     fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
         let ups = UpSet::new(state);
+        let mut ctx = RolloutCtx::for_burst(tasks, state);
         let p = self.params;
 
         // Random initial population (no greedy seeding — see module docs).
@@ -84,36 +91,41 @@ impl Scheduler for Ga {
             .map(|_| {
                 let genome: Vec<usize> =
                     tasks.iter().map(|_| ups.draw(&mut self.rng)).collect();
-                let cost = rollout_cost(tasks, &genome, state);
+                let cost = ctx.rollout_cost(tasks, &genome);
                 (genome, cost)
             })
             .collect();
+        // Double buffer: `next` and `pop` swap roles each generation, so
+        // steady state allocates only the offspring genomes themselves.
+        let mut next: Vec<(Vec<usize>, f64)> = Vec::with_capacity(p.population);
 
         for _gen in 0..p.generations {
             pop.sort_by(|a, b| a.1.total_cmp(&b.1));
-            let mut next: Vec<(Vec<usize>, f64)> =
-                pop.iter().take(p.elites).cloned().collect();
+            next.clear();
+            next.extend(pop.iter().take(p.elites).cloned());
             while next.len() < p.population {
-                let a = self.tournament_pick(&pop).0.clone();
-                let b = self.tournament_pick(&pop).0.clone();
-                let mut child = if self.rng.chance(p.crossover_p) {
+                // Parents stay borrowed from `pop` (the old path cloned
+                // both); only the offspring genome is materialized.
+                let pa = self.tournament_pick(&pop);
+                let pb = self.tournament_pick(&pop);
+                let mut child: Vec<usize> = if self.rng.chance(p.crossover_p) {
                     // Uniform crossover.
-                    a.iter()
-                        .zip(&b)
+                    pa.0.iter()
+                        .zip(&pb.0)
                         .map(|(&x, &y)| if self.rng.chance(0.5) { x } else { y })
                         .collect()
                 } else {
-                    a
+                    pa.0.clone()
                 };
                 for g in child.iter_mut() {
                     if self.rng.chance(p.mutation_p) {
                         *g = ups.draw(&mut self.rng);
                     }
                 }
-                let cost = rollout_cost(tasks, &child, state);
+                let cost = ctx.rollout_cost(tasks, &child);
                 next.push((child, cost));
             }
-            pop = next;
+            std::mem::swap(&mut pop, &mut next);
         }
         pop.sort_by(|a, b| a.1.total_cmp(&b.1));
         pop.swap_remove(0).0
@@ -129,6 +141,7 @@ mod tests {
     use super::*;
     use crate::metrics::NormScales;
     use crate::platform::Platform;
+    use crate::sched::fitness::rollout_cost;
     use crate::sched::tests::small_queue;
 
     #[test]
@@ -175,5 +188,28 @@ mod tests {
         a.reset();
         let sol2 = a.schedule_batch(&burst, &state);
         assert_eq!(sol1, sol2);
+    }
+
+    #[test]
+    fn matches_reference_ga_exactly() {
+        // Same seed, same burst → the RolloutCtx path must reproduce the
+        // full-clone reference bit-for-bit (identical rng stream, costs
+        // and therefore identical evolved assignments) — healthy and
+        // degraded platforms both.
+        let q = small_queue(6);
+        let platform = Platform::hmai();
+        let mut state = ShadowState::new(&platform, NormScales::unit());
+        let burst: Vec<_> = q.tasks.iter().take(30).cloned().collect();
+        for seed in [1u64, 9, 42] {
+            let fast = Ga::new(seed).schedule_batch(&burst, &state);
+            let slow = crate::sched::reference::RefGa::new(seed).schedule_batch(&burst, &state);
+            assert_eq!(fast, slow, "seed {seed}");
+        }
+        state.apply(&burst[0], 3);
+        state.set_speed(5, 0.0);
+        state.set_speed(8, 0.5);
+        let fast = Ga::new(7).schedule_batch(&burst, &state);
+        let slow = crate::sched::reference::RefGa::new(7).schedule_batch(&burst, &state);
+        assert_eq!(fast, slow, "degraded platform");
     }
 }

@@ -9,7 +9,9 @@ pub mod flexai;
 pub mod ga;
 pub mod minmin;
 pub mod random;
+pub mod reference;
 pub mod registry;
+pub mod rollout;
 pub mod roundrobin;
 pub mod sa;
 pub mod worst;
@@ -21,6 +23,7 @@ use crate::util::rng::Rng;
 pub use registry::{
     baseline_names, baseline_specs, BuildCtx, Registry, SchedulerInfo, SchedulerSpec, SCHEDULERS,
 };
+pub use rollout::RolloutCtx;
 
 /// A task-mapping policy.  The engine hands the scheduler one *burst* (all
 /// tasks released at the same instant — up to one frame from each of the 30
@@ -158,7 +161,7 @@ mod tests {
         state.set_speed(6, 0.0);
         let ups = UpSet::new(&state);
         assert_eq!(ups.count(), state.len() - 2);
-        let old_vec = state.up_accels();
+        let old_vec: Vec<usize> = state.up_iter().collect();
         for k in 0..ups.count() {
             assert_eq!(ups.nth(k), old_vec[k]);
         }

@@ -1,0 +1,395 @@
+//! Reference (pre-overhaul) burst schedulers — the executable spec of the
+//! hot-path overhaul.
+//!
+//! These are the exact algorithms Min-Min, ATA, EDP, GA and SA ran before
+//! the [`RolloutCtx`](super::RolloutCtx) / incremental-Min-Min rewrite:
+//! full `ShadowState` clones, global (task × accel) rescans per
+//! assignment, and a per-genome best-case fold.  They are deliberately
+//! unoptimized — do **not** "fix" their complexity; their whole job is to
+//! stay naive so that
+//!
+//! * `tests/perf_equiv.rs` can pin old-vs-new
+//!   `SweepSummary::fingerprint` equality for every registered scheduler
+//!   (the optimizations provably change no result bits), and
+//! * `benches/bench_perf.rs` can time the "before" side of its speedup
+//!   sections against the same build.
+//!
+//! Each reference scheduler reports the same display `name()` as its
+//! optimized twin, so sweep rows and fingerprints are directly comparable.
+
+use std::sync::Arc;
+
+use crate::env::taskgen::Task;
+use crate::sim::ShadowState;
+use crate::util::rng::Rng;
+
+use super::ga::GaParams;
+use super::rollout::ENERGY_WEIGHT;
+use super::sa::SaParams;
+use super::{sequential, Registry, Scheduler, UpSet};
+
+/// The pre-overhaul `fitness::rollout_cost`: clone the full state, `apply`
+/// every (task, accel) pair, and re-fold the burst's best-case time/energy
+/// inside the genome loop.  Kept bit-for-bit (the optimized path is tested
+/// against it in `sched::fitness` and `tests/perf_equiv.rs`).
+pub fn ref_rollout_cost(tasks: &[Task], assignment: &[usize], state: &ShadowState) -> f64 {
+    debug_assert_eq!(tasks.len(), assignment.len());
+    let mut rolling = state.clone();
+    let mut energy = 0.0;
+    let (mut best_t, mut best_e) = (0.0, 0.0);
+    for (task, &a) in tasks.iter().zip(assignment) {
+        let applied = rolling.apply(task, a);
+        if !applied.response_s.is_finite() {
+            return f64::INFINITY;
+        }
+        energy += applied.energy_j;
+        let mut bt = f64::INFINITY;
+        let mut be = f64::INFINITY;
+        for i in 0..state.len() {
+            let c = state.cost(i, task.model);
+            bt = bt.min(c.time_s);
+            be = be.min(c.energy_j);
+        }
+        best_t += bt;
+        best_e += be;
+    }
+    let drain = rolling
+        .busy_until
+        .iter()
+        .fold(0.0_f64, |m, &b| m.max(b - state.now));
+    let sec_per_joule = if best_e > 0.0 { best_t / best_e } else { 0.0 };
+    drain + ENERGY_WEIGHT * energy * sec_per_joule
+}
+
+/// Pre-overhaul Min-Min: O(B²·N) global (unassigned task × accel) rescan
+/// per assignment against a full rolling clone.
+#[derive(Debug, Default)]
+pub struct RefMinMin;
+
+impl RefMinMin {
+    pub fn new() -> RefMinMin {
+        RefMinMin
+    }
+}
+
+impl Scheduler for RefMinMin {
+    fn name(&self) -> String {
+        "Min-Min".into()
+    }
+
+    fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
+        if state.is_empty() {
+            return vec![0; tasks.len()];
+        }
+        let mut rolling = state.clone();
+        let mut out = vec![usize::MAX; tasks.len()];
+        let mut unassigned: Vec<usize> = (0..tasks.len()).collect();
+
+        while !unassigned.is_empty() {
+            // Global minimum completion time over (unassigned task, accel).
+            let mut best: Option<(usize, usize, f64)> = None; // (pos, accel, ct)
+            for (pos, &ti) in unassigned.iter().enumerate() {
+                for a in 0..rolling.len() {
+                    let ct = rolling.est_completion(&tasks[ti], a);
+                    if best.map(|(_, _, b)| ct < b).unwrap_or(true) {
+                        best = Some((pos, a, ct));
+                    }
+                }
+            }
+            let Some((pos, accel, _)) = best else {
+                break; // unreachable: platform non-empty is checked above
+            };
+            let ti = unassigned.swap_remove(pos);
+            rolling.apply(&tasks[ti], accel);
+            out[ti] = accel;
+        }
+        out
+    }
+}
+
+/// Pre-overhaul ATA: `sequential` over a full rolling clone, probing the
+/// state's estimators per (task, accel).
+#[derive(Debug, Default)]
+pub struct RefAta;
+
+impl RefAta {
+    pub fn new() -> RefAta {
+        RefAta
+    }
+}
+
+impl Scheduler for RefAta {
+    fn name(&self) -> String {
+        "ATA".into()
+    }
+
+    fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
+        sequential(tasks, state, |task, s| {
+            let mut best_safe: Option<(usize, f64)> = None; // (accel, energy)
+            let mut best_any: Option<(usize, f64)> = None; // (accel, response)
+            for a in 0..s.len() {
+                let resp = s.est_response(task, a);
+                let e = s.est_energy(task, a);
+                if resp <= task.safety_time_s
+                    && best_safe.map(|(_, be)| e < be).unwrap_or(true)
+                {
+                    best_safe = Some((a, e));
+                }
+                if best_any.map(|(_, br)| resp < br).unwrap_or(true) {
+                    best_any = Some((a, resp));
+                }
+            }
+            best_safe.or(best_any).expect("non-empty platform").0
+        })
+    }
+}
+
+/// Pre-overhaul EDP: `sequential` over a full rolling clone.
+#[derive(Debug, Default)]
+pub struct RefEdp;
+
+impl RefEdp {
+    pub fn new() -> RefEdp {
+        RefEdp
+    }
+}
+
+impl Scheduler for RefEdp {
+    fn name(&self) -> String {
+        "EDP".into()
+    }
+
+    fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
+        sequential(tasks, state, |task, s| {
+            let mut best = 0;
+            let mut best_edp = f64::INFINITY;
+            for a in 0..s.len() {
+                let edp = s.est_energy(task, a) * s.est_response(task, a);
+                if edp < best_edp {
+                    best_edp = edp;
+                    best = a;
+                }
+            }
+            best
+        })
+    }
+}
+
+fn tournament_pick<'a>(
+    rng: &mut Rng,
+    rounds: usize,
+    pop: &'a [(Vec<usize>, f64)],
+) -> &'a (Vec<usize>, f64) {
+    let mut best = &pop[rng.below(pop.len())];
+    for _ in 1..rounds {
+        let c = &pop[rng.below(pop.len())];
+        if c.1 < best.1 {
+            best = c;
+        }
+    }
+    best
+}
+
+/// Pre-overhaul GA: one `ref_rollout_cost` (full clone + best-case
+/// rescan) per genome, fresh population/offspring vectors per generation.
+/// The rng stream is identical to [`super::ga::Ga`]'s.
+#[derive(Debug)]
+pub struct RefGa {
+    pub params: GaParams,
+    seed: u64,
+    rng: Rng,
+}
+
+impl RefGa {
+    pub fn new(seed: u64) -> RefGa {
+        RefGa { params: GaParams::default(), seed, rng: Rng::new(seed) }
+    }
+}
+
+impl Scheduler for RefGa {
+    fn name(&self) -> String {
+        "GA".into()
+    }
+
+    fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
+        let ups = UpSet::new(state);
+        let p = self.params;
+
+        let mut pop: Vec<(Vec<usize>, f64)> = (0..p.population)
+            .map(|_| {
+                let genome: Vec<usize> =
+                    tasks.iter().map(|_| ups.draw(&mut self.rng)).collect();
+                let cost = ref_rollout_cost(tasks, &genome, state);
+                (genome, cost)
+            })
+            .collect();
+
+        for _gen in 0..p.generations {
+            pop.sort_by(|a, b| a.1.total_cmp(&b.1));
+            let mut next: Vec<(Vec<usize>, f64)> =
+                pop.iter().take(p.elites).cloned().collect();
+            while next.len() < p.population {
+                let a = tournament_pick(&mut self.rng, p.tournament, &pop).0.clone();
+                let b = tournament_pick(&mut self.rng, p.tournament, &pop).0.clone();
+                let mut child = if self.rng.chance(p.crossover_p) {
+                    a.iter()
+                        .zip(&b)
+                        .map(|(&x, &y)| if self.rng.chance(0.5) { x } else { y })
+                        .collect()
+                } else {
+                    a
+                };
+                for g in child.iter_mut() {
+                    if self.rng.chance(p.mutation_p) {
+                        *g = ups.draw(&mut self.rng);
+                    }
+                }
+                let cost = ref_rollout_cost(tasks, &child, state);
+                next.push((child, cost));
+            }
+            pop = next;
+        }
+        pop.sort_by(|a, b| a.1.total_cmp(&b.1));
+        pop.swap_remove(0).0
+    }
+
+    fn reset(&mut self) {
+        self.rng = Rng::new(self.seed);
+    }
+}
+
+/// Pre-overhaul SA: greedy start through `sequential` (full clone), one
+/// `ref_rollout_cost` per neighbor move.  The rng stream is identical to
+/// [`super::sa::Sa`]'s.
+#[derive(Debug)]
+pub struct RefSa {
+    pub params: SaParams,
+    seed: u64,
+    rng: Rng,
+}
+
+impl RefSa {
+    pub fn new(seed: u64) -> RefSa {
+        RefSa { params: SaParams::default(), seed, rng: Rng::new(seed) }
+    }
+}
+
+impl Scheduler for RefSa {
+    fn name(&self) -> String {
+        "SA".into()
+    }
+
+    fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
+        let n = state.len();
+        if n == 0 {
+            return vec![0; tasks.len()];
+        }
+        let ups = UpSet::new(state);
+        let mut current = sequential(tasks, state, |task, s| {
+            let mut best = 0;
+            let mut best_ct = f64::INFINITY;
+            for a in 0..s.len() {
+                let ct = s.est_completion(task, a);
+                if ct < best_ct {
+                    best_ct = ct;
+                    best = a;
+                }
+            }
+            best
+        });
+        if tasks.len() <= 1 {
+            return current;
+        }
+
+        let mut cur_cost = ref_rollout_cost(tasks, &current, state);
+        let mut best = current.clone();
+        let mut best_cost = cur_cost;
+        let mut temp = (cur_cost * self.params.t0_frac).max(1e-12);
+
+        for _ in 0..self.params.steps {
+            let i = self.rng.below(tasks.len());
+            let old = current[i];
+            let new = ups.draw(&mut self.rng);
+            if new == old {
+                temp *= self.params.cooling;
+                continue;
+            }
+            current[i] = new;
+            let cost = ref_rollout_cost(tasks, &current, state);
+            let accept = cost <= cur_cost
+                || self.rng.chance(((cur_cost - cost) / temp).exp().min(1.0));
+            if accept {
+                cur_cost = cost;
+                if cost < best_cost {
+                    best_cost = cost;
+                    best = current.clone();
+                }
+            } else {
+                current[i] = old;
+            }
+            temp *= self.params.cooling;
+        }
+        best
+    }
+
+    fn reset(&mut self) {
+        self.rng = Rng::new(self.seed);
+    }
+}
+
+/// Canonical names with a reference twin (the schedulers the overhaul
+/// rewired).
+pub const REFERENCE_NAMES: &[&str] = &["minmin", "ata", "edp", "ga", "sa"];
+
+/// A [`Registry`] whose Min-Min / ATA / EDP / GA / SA factories build the
+/// reference schedulers instead of the optimized ones (every other
+/// scheduler keeps its stock factory).  `tests/perf_equiv.rs` runs whole
+/// sweeps through this registry and demands fingerprint equality with the
+/// stock one.
+pub fn reference_registry() -> Registry {
+    fn boxed<S: Scheduler + 'static>(s: S) -> anyhow::Result<Box<dyn Scheduler>> {
+        Ok(Box::new(s))
+    }
+    let mut r = Registry::new();
+    r.register("minmin", Arc::new(|_, _| boxed(RefMinMin::new())));
+    r.register("ata", Arc::new(|_, _| boxed(RefAta::new())));
+    r.register("edp", Arc::new(|_, _| boxed(RefEdp::new())));
+    r.register("ga", Arc::new(|_, c| boxed(RefGa::new(c.seed))));
+    r.register("sa", Arc::new(|_, c| boxed(RefSa::new(c.seed))));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::NormScales;
+    use crate::platform::Platform;
+    use crate::sched::tests::small_queue;
+
+    #[test]
+    fn reference_registry_overrides_keep_display_names() {
+        let reg = reference_registry();
+        for name in REFERENCE_NAMES {
+            let s = reg.build_by_name(name, 3).unwrap();
+            let stock = Registry::new().build_by_name(name, 3).unwrap();
+            assert_eq!(s.name(), stock.name(), "{name}");
+        }
+        // Untouched factories still build.
+        assert!(reg.build_by_name("rr", 0).is_ok());
+    }
+
+    #[test]
+    fn reference_schedulers_assign_in_range() {
+        let reg = reference_registry();
+        let q = small_queue(1);
+        let platform = Platform::hmai();
+        let state = ShadowState::new(&platform, NormScales::unit());
+        let burst: Vec<_> = q.tasks.iter().take(30).cloned().collect();
+        for name in REFERENCE_NAMES {
+            let mut s = reg.build_by_name(name, 7).unwrap();
+            let a = s.schedule_batch(&burst, &state);
+            assert_eq!(a.len(), burst.len(), "{name}");
+            assert!(a.iter().all(|&i| i < platform.len()), "{name}");
+        }
+    }
+}

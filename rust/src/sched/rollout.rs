@@ -1,0 +1,320 @@
+//! `RolloutCtx` — the shared per-burst scheduling context behind the
+//! hot-path overhaul: per-burst cost-row caching plus a slim rollout view
+//! of the platform FIFO state.
+//!
+//! Every burst scheduler used to drive its inner loop through a full
+//! `ShadowState` clone (kinds + sizes + busy_until + speed + the whole
+//! `PlatformMetrics` vector) and re-divide `cost.time_s / speed` on every
+//! (task, accelerator) probe.  GA and SA paid that clone once *per genome*;
+//! Min-Min, ATA and EDP once per burst plus a metrics update per applied
+//! task.  None of that state is observable in the result: a scheduler only
+//! returns an assignment vector, and the engine re-applies it to the real
+//! state.
+//!
+//! `RolloutCtx` keeps exactly what the inner loops read:
+//!
+//! * `compute[i][m]` — speed-adjusted execution seconds of model `m` on
+//!   slot `i` (`cost.time_s / speed[i]`, `+inf` for a failed slot), cached
+//!   once per burst.  Speeds cannot change while a scheduler holds
+//!   `&ShadowState`, so the cache is exact — and division by a speed of
+//!   1.0 is bit-exact in IEEE 754, so caching the quotient changes no bits.
+//! * `energy[i][m]` — the speed-independent energy row.
+//! * `busy` — a scratch drain vector seeded from `state.busy_until`
+//!   (reset per rollout), the only mutable platform state a rollout needs.
+//! * the genome-invariant Σ per-task best-case (time, energy) fold of
+//!   [`rollout_cost`](crate::sched::fitness::rollout_cost), hoisted out of
+//!   the per-genome loop (it depends on the burst and the cost rows only).
+//!
+//! Bit-identity with the pre-overhaul paths is pinned by
+//! `tests/perf_equiv.rs` against the executable specs in
+//! [`reference`](crate::sched::reference).
+
+use crate::env::taskgen::Task;
+use crate::sim::ShadowState;
+use crate::workload::ALL_MODELS;
+
+/// Energy weight of the GA/SA rollout cost (see
+/// [`fitness`](crate::sched::fitness)): joules are converted to
+/// "equivalent seconds" via the burst's own best-case time/energy ratio,
+/// then discounted so makespan dominates and energy breaks ties.
+pub(crate) const ENERGY_WEIGHT: f64 = 0.25;
+
+/// Number of workload models (the width of a cost row).
+const M: usize = ALL_MODELS.len();
+
+/// Per-burst scheduling context: cached cost rows + a slim rollout view.
+///
+/// Construct once per `schedule_batch` call (the state cannot change while
+/// the scheduler borrows it); probe with [`RolloutCtx::est_response`] /
+/// [`RolloutCtx::est_completion`] / [`RolloutCtx::est_energy`], commit
+/// sequential picks with [`RolloutCtx::push`], and price whole assignment
+/// vectors with [`RolloutCtx::rollout_cost`] — all without cloning the
+/// `ShadowState` or touching its metrics.
+pub struct RolloutCtx<'a> {
+    state: &'a ShadowState,
+    n: usize,
+    now: f64,
+    /// `compute[i * M + m]`: speed-adjusted execution seconds of model `m`
+    /// on slot `i` (`+inf` on a failed slot).
+    compute: Vec<f64>,
+    /// `energy[i * M + m]`: energy of model `m` on slot `i` (speed- and
+    /// backlog-independent).
+    energy: Vec<f64>,
+    /// Rolling drain times, seeded from `state.busy_until`.
+    busy: Vec<f64>,
+    /// Genome-invariant Σ per-task best-case time (s) — only meaningful
+    /// when built with [`RolloutCtx::for_burst`].
+    best_t: f64,
+    /// Genome-invariant Σ per-task best-case energy (J).
+    best_e: f64,
+}
+
+impl<'a> RolloutCtx<'a> {
+    /// Context for sequential scans (Min-Min, ATA, EDP, SA's greedy
+    /// start): cost rows + rolling drain view, no best-case fold.
+    pub fn new(state: &'a ShadowState) -> RolloutCtx<'a> {
+        let n = state.len();
+        let mut compute = vec![0.0; n * M];
+        let mut energy = vec![0.0; n * M];
+        for i in 0..n {
+            for m in ALL_MODELS {
+                let c = state.cost(i, m);
+                compute[i * M + m.index()] = c.time_s / state.speed[i];
+                energy[i * M + m.index()] = c.energy_j;
+            }
+        }
+        RolloutCtx {
+            state,
+            n,
+            now: state.now,
+            compute,
+            energy,
+            busy: state.busy_until.clone(),
+            best_t: 0.0,
+            best_e: 0.0,
+        }
+    }
+
+    /// Context for GA/SA fitness rollouts over `tasks`: everything
+    /// [`RolloutCtx::new`] caches, plus the genome-invariant Σ per-task
+    /// best-case (time, energy) fold that prices energy in "equivalent
+    /// seconds".  The fold walks slots in ascending order per model — the
+    /// same minima, in the same order, the old per-genome inner loop
+    /// produced, so [`RolloutCtx::rollout_cost`] is bit-identical.
+    pub fn for_burst(tasks: &[Task], state: &'a ShadowState) -> RolloutCtx<'a> {
+        let mut ctx = RolloutCtx::new(state);
+        let mut best = [(f64::INFINITY, f64::INFINITY); M]; // (time, energy)
+        for i in 0..ctx.n {
+            for m in ALL_MODELS {
+                let c = state.cost(i, m);
+                let b = &mut best[m.index()];
+                b.0 = b.0.min(c.time_s);
+                b.1 = b.1.min(c.energy_j);
+            }
+        }
+        for task in tasks {
+            let (bt, be) = best[task.model.index()];
+            ctx.best_t += bt;
+            ctx.best_e += be;
+        }
+        ctx
+    }
+
+    /// Number of accelerator slots.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Predicted response time (wait + compute) of `task` on slot `i`
+    /// against the *rolling* drain view — bit-identical to
+    /// `ShadowState::est_response` on a clone that applied the same picks.
+    #[inline]
+    pub fn est_response(&self, task: &Task, i: usize) -> f64 {
+        (self.busy[i] - self.now).max(0.0) + self.compute[i * M + task.model.index()]
+    }
+
+    /// Predicted completion-time point on the route clock.
+    #[inline]
+    pub fn est_completion(&self, task: &Task, i: usize) -> f64 {
+        self.now + self.est_response(task, i)
+    }
+
+    /// Energy `task` would consume on slot `i`.
+    #[inline]
+    pub fn est_energy(&self, task: &Task, i: usize) -> f64 {
+        self.energy[i * M + task.model.index()]
+    }
+
+    /// First slot (ascending order) minimizing `task`'s completion time,
+    /// with that minimal completion time.  The strict `<` keeps the first
+    /// of equal minima — the exact tie-break of a `(task, accel)` scan in
+    /// ascending accel order.  Panics on an empty platform (callers guard).
+    pub fn best_completion(&self, task: &Task) -> (usize, f64) {
+        let mut best: Option<(usize, f64)> = None;
+        for a in 0..self.n {
+            let ct = self.est_completion(task, a);
+            if best.map(|(_, b)| ct < b).unwrap_or(true) {
+                best = Some((a, ct));
+            }
+        }
+        best.expect("non-empty platform")
+    }
+
+    /// Commit `task` to slot `i` in the rolling view: the FIFO update of
+    /// `ShadowState::apply`, minus the metrics.  A failed slot loses the
+    /// task and leaves its (dead) FIFO untouched, exactly like `apply`.
+    #[inline]
+    pub fn push(&mut self, task: &Task, i: usize) {
+        let compute = self.compute[i * M + task.model.index()];
+        if !compute.is_finite() {
+            return; // dead slot: the task is lost, the FIFO stays clean
+        }
+        let start = self.busy[i].max(self.now);
+        self.busy[i] = start + compute;
+    }
+
+    /// Cost of mapping `tasks` with `assignment`: burst-local makespan
+    /// (when the last accelerator drains) plus normalized energy — the
+    /// GA/SA fitness of
+    /// [`fitness::rollout_cost`](super::fitness::rollout_cost), evaluated
+    /// against the slim view.  Resets the rolling drain view first, so one context
+    /// prices any number of genomes.  Requires [`RolloutCtx::for_burst`]
+    /// construction (the best-case fold) over the same `tasks`.
+    pub fn rollout_cost(&mut self, tasks: &[Task], assignment: &[usize]) -> f64 {
+        debug_assert_eq!(tasks.len(), assignment.len());
+        self.busy.copy_from_slice(&self.state.busy_until);
+        let mut energy = 0.0;
+        for (task, &a) in tasks.iter().zip(assignment) {
+            let m = task.model.index();
+            let compute = self.compute[a * M + m];
+            if !compute.is_finite() {
+                // Mapping any task to a failed accelerator loses it: the
+                // candidate is unexecutable, so it prices at +inf (dead
+                // slots leave the drain untouched, so without this guard
+                // they would look *free*).
+                return f64::INFINITY;
+            }
+            let start = self.busy[a].max(self.now);
+            self.busy[a] = start + compute;
+            energy += self.energy[a * M + m];
+        }
+        let drain = self.busy.iter().fold(0.0_f64, |m, &b| m.max(b - self.now));
+        let sec_per_joule = if self.best_e > 0.0 { self.best_t / self.best_e } else { 0.0 };
+        drain + ENERGY_WEIGHT * energy * sec_per_joule
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::NormScales;
+    use crate::platform::Platform;
+    use crate::sched::tests::small_queue;
+
+    fn mixed_state() -> ShadowState {
+        let p = Platform::parse("so:2@2x,si:2,mm:2@0.5x").unwrap();
+        ShadowState::new(&p, NormScales::unit())
+    }
+
+    #[test]
+    fn cached_rows_match_state_estimates_bit_for_bit() {
+        let q = small_queue(1);
+        let mut state = mixed_state();
+        state.set_speed(1, 0.5); // derated
+        state.set_speed(4, 0.0); // failed
+        for t in q.tasks.iter().take(7) {
+            state.apply(t, 0); // backlog on slot 0
+        }
+        let ctx = RolloutCtx::new(&state);
+        for task in q.tasks.iter().take(20) {
+            for i in 0..state.len() {
+                assert_eq!(
+                    ctx.est_response(task, i).to_bits(),
+                    state.est_response(task, i).to_bits(),
+                    "slot {i}"
+                );
+                assert_eq!(
+                    ctx.est_completion(task, i).to_bits(),
+                    state.est_completion(task, i).to_bits()
+                );
+                assert_eq!(
+                    ctx.est_energy(task, i).to_bits(),
+                    state.est_energy(task, i).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn push_tracks_apply_fifo_updates() {
+        let q = small_queue(2);
+        let state = {
+            let mut s = mixed_state();
+            s.set_speed(3, 0.0);
+            s
+        };
+        let mut rolling = state.clone();
+        let mut ctx = RolloutCtx::new(&state);
+        for (k, task) in q.tasks.iter().take(24).enumerate() {
+            let a = k % state.len(); // hits the dead slot too
+            rolling.apply(task, a);
+            ctx.push(task, a);
+            for i in 0..state.len() {
+                assert_eq!(ctx.busy[i].to_bits(), rolling.busy_until[i].to_bits(), "slot {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn best_completion_matches_brute_force_first_min() {
+        let q = small_queue(3);
+        let mut state = mixed_state();
+        state.set_speed(2, 0.0);
+        let mut ctx = RolloutCtx::new(&state);
+        for task in q.tasks.iter().take(30) {
+            let (a, ct) = ctx.best_completion(task);
+            let mut want: Option<(usize, f64)> = None;
+            for i in 0..state.len() {
+                let c = ctx.est_completion(task, i);
+                if want.map(|(_, b)| c < b).unwrap_or(true) {
+                    want = Some((i, c));
+                }
+            }
+            let (wa, wct) = want.unwrap();
+            assert_eq!(a, wa);
+            assert_eq!(ct.to_bits(), wct.to_bits());
+            ctx.push(task, a);
+        }
+    }
+
+    #[test]
+    fn rollout_cost_resets_between_genomes() {
+        let q = small_queue(4);
+        let state = ShadowState::new(&Platform::hmai(), NormScales::unit());
+        let burst: Vec<_> = q.tasks.iter().take(12).cloned().collect();
+        let spread: Vec<usize> = (0..12).map(|i| i % 11).collect();
+        let piled = vec![0usize; 12];
+        let mut ctx = RolloutCtx::for_burst(&burst, &state);
+        let a1 = ctx.rollout_cost(&burst, &spread);
+        let _ = ctx.rollout_cost(&burst, &piled);
+        let a2 = ctx.rollout_cost(&burst, &spread);
+        assert_eq!(a1.to_bits(), a2.to_bits(), "stale drain state leaked");
+    }
+
+    #[test]
+    fn dead_slot_genomes_price_at_infinity() {
+        let q = small_queue(5);
+        let mut state = ShadowState::new(&Platform::hmai(), NormScales::unit());
+        state.set_speed(6, 0.0);
+        let burst: Vec<_> = q.tasks.iter().take(8).cloned().collect();
+        let mut ctx = RolloutCtx::for_burst(&burst, &state);
+        let mut genome: Vec<usize> = (0..8).collect();
+        assert!(ctx.rollout_cost(&burst, &genome).is_finite());
+        genome[3] = 6;
+        assert!(ctx.rollout_cost(&burst, &genome).is_infinite());
+    }
+}

@@ -5,13 +5,19 @@
 //! SA starts from a good greedy point (unlike GA's random population), so
 //! it lands close to Min-Min in Fig. 12(a) — but its cost function still
 //! covers only time and energy (Table 11), so balance and MS lag FlexAI.
+//!
+//! Hot path: one [`RolloutCtx`] per burst serves both the greedy start
+//! (rolling drain view, no `ShadowState` clone) and every neighbor-move
+//! cost (no clone, no per-genome best-case rescan); the accepted-best
+//! genome is kept via `clone_from` so the anneal loop allocates nothing.
+//! The rng stream and every result bit are identical to
+//! [`reference::RefSa`](super::reference::RefSa).
 
 use crate::env::taskgen::Task;
 use crate::sim::ShadowState;
 use crate::util::rng::Rng;
 
-use super::fitness::rollout_cost;
-use super::{sequential, Scheduler, UpSet};
+use super::{RolloutCtx, Scheduler, UpSet};
 
 /// SA hyper-parameters.
 #[derive(Debug, Clone, Copy)]
@@ -61,25 +67,29 @@ impl Scheduler for Sa {
             return vec![0; tasks.len()];
         }
         let ups = UpSet::new(state);
-        // Greedy earliest-completion start (a failed accelerator predicts
-        // an infinite completion time, so the greedy pick routes past it).
-        let mut current = sequential(tasks, state, |task, s| {
+        let mut ctx = RolloutCtx::for_burst(tasks, state);
+        // Greedy earliest-completion start against the rolling drain view
+        // (a failed accelerator predicts an infinite completion time, so
+        // the greedy pick routes past it).
+        let mut current = Vec::with_capacity(tasks.len());
+        for task in tasks {
             let mut best = 0;
             let mut best_ct = f64::INFINITY;
-            for a in 0..s.len() {
-                let ct = s.est_completion(task, a);
+            for a in 0..n {
+                let ct = ctx.est_completion(task, a);
                 if ct < best_ct {
                     best_ct = ct;
                     best = a;
                 }
             }
-            best
-        });
+            ctx.push(task, best);
+            current.push(best);
+        }
         if tasks.len() <= 1 {
             return current;
         }
 
-        let mut cur_cost = rollout_cost(tasks, &current, state);
+        let mut cur_cost = ctx.rollout_cost(tasks, &current);
         let mut best = current.clone();
         let mut best_cost = cur_cost;
         let mut temp = (cur_cost * self.params.t0_frac).max(1e-12);
@@ -94,14 +104,14 @@ impl Scheduler for Sa {
                 continue;
             }
             current[i] = new;
-            let cost = rollout_cost(tasks, &current, state);
+            let cost = ctx.rollout_cost(tasks, &current);
             let accept = cost <= cur_cost
                 || self.rng.chance(((cur_cost - cost) / temp).exp().min(1.0));
             if accept {
                 cur_cost = cost;
                 if cost < best_cost {
                     best_cost = cost;
-                    best = current.clone();
+                    best.clone_from(&current);
                 }
             } else {
                 current[i] = old;
@@ -121,6 +131,8 @@ mod tests {
     use super::*;
     use crate::metrics::NormScales;
     use crate::platform::Platform;
+    use crate::sched::fitness::rollout_cost;
+    use crate::sched::sequential;
     use crate::sched::tests::small_queue;
 
     #[test]
@@ -199,5 +211,26 @@ mod tests {
             .map(|i| state.est_completion(&task, i))
             .fold(f64::INFINITY, f64::min);
         assert!((state.est_completion(&task, a) - min_ct).abs() < 1e-15);
+    }
+
+    #[test]
+    fn matches_reference_sa_exactly() {
+        // Same seed, same burst → identical rng stream, costs and evolved
+        // assignment as the full-clone reference — healthy and degraded.
+        let q = small_queue(8);
+        let platform = Platform::hmai();
+        let mut state = ShadowState::new(&platform, NormScales::unit());
+        let burst: Vec<_> = q.tasks.iter().take(30).cloned().collect();
+        for seed in [2u64, 13, 42] {
+            let fast = Sa::new(seed).schedule_batch(&burst, &state);
+            let slow = crate::sched::reference::RefSa::new(seed).schedule_batch(&burst, &state);
+            assert_eq!(fast, slow, "seed {seed}");
+        }
+        state.apply(&burst[1], 2);
+        state.set_speed(4, 0.0);
+        state.set_speed(10, 0.5);
+        let fast = Sa::new(21).schedule_batch(&burst, &state);
+        let slow = crate::sched::reference::RefSa::new(21).schedule_batch(&burst, &state);
+        assert_eq!(fast, slow, "degraded platform");
     }
 }

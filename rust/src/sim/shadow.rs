@@ -45,7 +45,7 @@ pub struct Applied {
 /// is a frequency-derated accelerator (compute time divides by it), and
 /// 0.0 is a failed accelerator — `est_response`/`est_completion` go to
 /// `+inf` there, so state-aware schedulers route around it, and the
-/// state-blind baselines consult `is_up`/`up_accels` explicitly.
+/// state-blind baselines consult `is_up`/`up_iter` explicitly.
 #[derive(Debug, Clone)]
 pub struct ShadowState {
     pub kinds: Vec<AccelKind>,
@@ -59,11 +59,20 @@ pub struct ShadowState {
     costs: Arc<CostModel>,
     /// Simulation clock: release time of the task being scheduled.
     pub now: f64,
-    /// Time at which each accelerator drains its queue.
+    /// Time at which each accelerator drains its queue.  Read-only outside
+    /// this module: mutate only through [`ShadowState::apply`] /
+    /// [`ShadowState::advance`], which keep the cached `busy_now` count in
+    /// sync.
     pub busy_until: Vec<f64>,
     /// Per-accelerator speed factor: 1.0 nominal, (0, 1) derated, 0.0 down.
     pub speed: Vec<f64>,
     pub metrics: PlatformMetrics,
+    /// Cached `|{i : busy_until[i] > now}|` — the §7.2 `r_j` numerator.
+    /// Maintained incrementally (O(1) per `apply`, one O(N) recount per
+    /// clock `advance`) so the per-task dispatch path stops re-scanning
+    /// the whole platform; `BENCH_PERF.json` carries the scan-vs-cached
+    /// micro numbers that motivated it.
+    busy_now: usize,
 }
 
 impl ShadowState {
@@ -79,6 +88,7 @@ impl ShadowState {
             busy_until: vec![0.0; n],
             speed: vec![1.0; n],
             metrics: PlatformMetrics::new(n, scales),
+            busy_now: 0,
         }
     }
 
@@ -96,8 +106,7 @@ impl ShadowState {
 
     /// Indices of accelerators currently accepting work, without
     /// allocating (ascending order).  Schedulers iterate this on the
-    /// per-burst path; [`ShadowState::up_accels`] is the allocating
-    /// convenience form.
+    /// per-burst path; collect it when a materialized list is needed.
     pub fn up_iter(&self) -> impl Iterator<Item = usize> + '_ {
         self.speed.iter().enumerate().filter(|(_, &s)| s > 0.0).map(|(i, _)| i)
     }
@@ -105,12 +114,6 @@ impl ShadowState {
     /// Number of accelerators currently accepting work.
     pub fn up_count(&self) -> usize {
         self.speed.iter().filter(|&&s| s > 0.0).count()
-    }
-
-    /// Indices of accelerators currently accepting work (allocates; see
-    /// [`ShadowState::up_iter`] for the hot-path form).
-    pub fn up_accels(&self) -> Vec<usize> {
-        self.up_iter().collect()
     }
 
     /// Set accelerator `i`'s speed factor (0.0 = failed, 1.0 = nominal).
@@ -154,7 +157,10 @@ impl ShadowState {
         self.costs.of(i, task.model).energy_j
     }
 
-    /// Fraction of accelerators still busy at `t`.
+    /// Fraction of accelerators still busy at `t` — the O(N) scan form
+    /// for arbitrary probe times.  The dispatch hot path (`apply`'s `r_j`)
+    /// reads the incrementally maintained [`ShadowState::busy_count`]
+    /// instead.
     pub fn busy_fraction_at(&self, t: f64) -> f64 {
         if self.kinds.is_empty() {
             return 0.0;
@@ -163,10 +169,21 @@ impl ShadowState {
         busy as f64 / self.kinds.len() as f64
     }
 
-    /// Advance the clock to a task release time (never backwards).
+    /// Number of accelerators still busy at the current clock (cached;
+    /// equals `busy_until.iter().filter(|b| **b > now).count()` at all
+    /// times).
+    pub fn busy_count(&self) -> usize {
+        self.busy_now
+    }
+
+    /// Advance the clock to a task release time (never backwards).  This
+    /// is the once-per-burst point where the cached busy count is recounted
+    /// (queues drain as the clock moves); `apply` then maintains it in
+    /// O(1) per dispatched task.
     pub fn advance(&mut self, t: f64) {
         if t > self.now {
             self.now = t;
+            self.busy_now = self.busy_until.iter().filter(|&&b| b > t).count();
         }
     }
 
@@ -175,18 +192,28 @@ impl ShadowState {
     /// platform timing — the engine and all scheduler rollouts call it.
     pub fn apply(&mut self, task: &Task, accel: usize) -> Applied {
         debug_assert!(accel < self.kinds.len());
+        debug_assert_eq!(
+            self.busy_now,
+            self.busy_until.iter().filter(|&&b| b > self.now).count(),
+            "cached busy count out of sync"
+        );
         let c = self.costs.of(accel, task.model);
         let speed = self.speed[accel];
         if speed <= 0.0 {
             // A failed accelerator accepts no work: the task is *lost*
-            // (infinite response, missed deadline, MS = -1, no energy)
-            // but the dead slot's FIFO and response accumulators are not
+            // (infinite response, missed deadline, MS = -1) but the dead
+            // slot's FIFO and energy/busy/response accumulators are not
             // poisoned — service resumes cleanly when a Recover event
-            // fires.  Schedulers only reach this on an all-down platform
-            // (their fallback paths); rollouts probing a dead slot see
-            // the infinite response and price the genome accordingly.
+            // fires.  The loss still *counts*: `num_tasks` (the STMRate
+            // denominator) and `ms_sum` (-1) record the missed dispatch,
+            // while the zero energy/busy/response contributions keep the
+            // §7.2 sums describing executed work only — semantics pinned
+            // by `lost_task_accounting_is_pinned` below.  Schedulers only
+            // reach this on an all-down platform (their fallback paths);
+            // rollouts probing a dead slot see the infinite response and
+            // price the genome accordingly.
             let ms = matching_score(task.category, f64::INFINITY, task.safety_time_s);
-            let r_j = self.busy_fraction_at(self.now);
+            let r_j = self.busy_now as f64 / self.kinds.len() as f64;
             self.metrics.per_accel[accel].update(0.0, 0.0, 0.0, ms, r_j);
             return Applied {
                 accel,
@@ -204,16 +231,20 @@ impl ShadowState {
         // Speed-scaled execution: 1.0 nominal (bit-exact), (0,1) derated.
         // Energy is the task's work, not its duration, so it is not scaled.
         let compute = c.time_s / speed;
+        let was_busy = self.busy_until[accel] > self.now;
         let start = self.busy_until[accel].max(self.now);
         let finish = start + compute;
         self.busy_until[accel] = finish;
+        if !was_busy && finish > self.now {
+            self.busy_now += 1;
+        }
 
         let wait = start - self.now;
         let response = finish - self.now;
         let ms = matching_score(task.category, response, task.safety_time_s);
         // r_j: busy fraction right after dispatch — "the higher R_Balance,
         // the less idle accelerators in HMAI at every moment" (§6.2).
-        let r_j = self.busy_fraction_at(self.now);
+        let r_j = self.busy_now as f64 / self.kinds.len() as f64;
         self.metrics.per_accel[accel].update(c.energy_j, compute, response, ms, r_j);
 
         Applied {
@@ -357,7 +388,7 @@ mod tests {
         assert!(!s.is_up(3));
         assert!(s.est_response(&t, 3).is_infinite());
         assert!(s.est_completion(&t, 3).is_infinite());
-        let ups = s.up_accels();
+        let ups: Vec<usize> = s.up_iter().collect();
         assert_eq!(ups.len(), s.len() - 1);
         assert!(!ups.contains(&3));
         // Applying anyway (a fallback on an all-down platform, or a
@@ -379,7 +410,66 @@ mod tests {
         assert!(s.metrics.per_accel[3].busy_s.is_finite());
         // Out-of-range event indices are ignored.
         s.set_speed(999, 0.0);
-        assert_eq!(s.up_accels().len(), s.len());
+        assert_eq!(s.up_count(), s.len());
+    }
+
+    #[test]
+    fn lost_task_accounting_is_pinned() {
+        // A dispatch to a failed accelerator is a LOST task.  Intended
+        // per-accel semantics (verified, not skewed): it counts in
+        // `num_tasks` (the STMRate denominator) and `ms_sum` (-1), folds
+        // its dispatch-time r_j into the balance recurrence, and adds
+        // exactly zero to the energy/busy/response sums — so E_i, T_i and
+        // the busy-time makespan describe executed work only, and an
+        // outage can neither deflate nor inflate them.
+        let t = task(ModelKind::Yolo, 0.0, 1.0);
+        let mut s = shadow();
+        s.apply(&t, 1); // one live task elsewhere → busy fraction 1/11
+        s.set_speed(0, 0.0);
+        let before = s.metrics.per_accel[0];
+        let a = s.apply(&t, 0);
+        let m = s.metrics.per_accel[0];
+        assert_eq!(m.num_tasks, before.num_tasks + 1, "lost task must count");
+        assert_eq!(m.ms_sum, before.ms_sum - 1.0, "lost task scores MS = -1");
+        assert_eq!(m.energy_j.to_bits(), before.energy_j.to_bits());
+        assert_eq!(m.busy_s.to_bits(), before.busy_s.to_bits());
+        assert_eq!(m.resp_s.to_bits(), before.resp_s.to_bits());
+        assert!((a.r_j - 1.0 / 11.0).abs() < 1e-12, "r_j observed at dispatch");
+        assert!((m.r_balance - a.r_j).abs() < 1e-12, "first fold is r_j itself");
+        // The platform aggregates stay finite and executed-work-only.
+        assert!(s.metrics.energy_j().is_finite());
+        assert!(s.metrics.resp_makespan_s().is_finite());
+        assert_eq!(s.metrics.total_tasks(), 2, "lost task in the STM denominator");
+    }
+
+    #[test]
+    fn busy_count_cache_matches_scan() {
+        let q = {
+            let route = crate::env::route::Route::generate(
+                crate::env::route::RouteParams::for_area(crate::env::Area::Urban, 40.0),
+                &mut crate::util::rng::Rng::new(5),
+            );
+            crate::env::taskgen::generate(&route)
+        };
+        let mut s = shadow();
+        let scan = |s: &ShadowState| s.busy_until.iter().filter(|&&b| b > s.now).count();
+        assert_eq!(s.busy_count(), 0);
+        for (k, t) in q.tasks.iter().take(200).enumerate() {
+            s.advance(t.release_s);
+            assert_eq!(s.busy_count(), scan(&s), "after advance to {}", t.release_s);
+            if k % 17 == 0 {
+                s.set_speed(k % s.len(), if k % 34 == 0 { 0.0 } else { 1.0 });
+            }
+            let a = s.apply(t, k % s.len());
+            assert_eq!(s.busy_count(), scan(&s), "after apply #{k}");
+            if a.response_s.is_finite() {
+                // r_j is the post-dispatch busy fraction, from the cache.
+                assert_eq!(
+                    a.r_j.to_bits(),
+                    (scan(&s) as f64 / s.len() as f64).to_bits()
+                );
+            }
+        }
     }
 
     #[test]
@@ -403,15 +493,16 @@ mod tests {
     }
 
     #[test]
-    fn up_iter_matches_up_accels() {
+    fn up_iter_walks_up_slots_in_ascending_order() {
         let mut s = shadow();
-        assert_eq!(s.up_iter().collect::<Vec<_>>(), s.up_accels());
+        assert_eq!(s.up_iter().collect::<Vec<_>>(), (0..s.len()).collect::<Vec<_>>());
         assert_eq!(s.up_count(), s.len());
         s.set_speed(2, 0.0);
         s.set_speed(7, 0.0);
-        assert_eq!(s.up_iter().collect::<Vec<_>>(), s.up_accels());
+        let ups: Vec<usize> = s.up_iter().collect();
+        let want: Vec<usize> = (0..s.len()).filter(|&i| i != 2 && i != 7).collect();
+        assert_eq!(ups, want);
         assert_eq!(s.up_count(), s.len() - 2);
-        assert!(s.up_iter().all(|i| i != 2 && i != 7));
     }
 
     #[test]

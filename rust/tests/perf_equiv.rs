@@ -1,0 +1,120 @@
+//! Scheduler-equivalence suite for the burst-scheduling hot-path overhaul:
+//! whole sweeps run through the optimized registry and through
+//! `sched::reference` (the pre-overhaul algorithms: full `ShadowState`
+//! clones, global rescans, per-genome best-case folds) must produce equal
+//! `SweepSummary::fingerprint`s — the optimizations provably change no
+//! result bits.
+//!
+//! Coverage: every registered (non-FlexAI) scheduler, on a healthy
+//! scenario (`urban-rush`), a fault-event scenario (`accel-failure` with
+//! `--events` semantics), and a mixed-core-size platform
+//! (`so:4@2x,si:4,mm:3@0.5x`).
+
+use hmai::engine::Engine;
+use hmai::metrics::summary::SweepSummary;
+use hmai::plan::ExperimentPlan;
+use hmai::sched::reference::reference_registry;
+use hmai::sched::{Registry, SchedulerSpec};
+
+/// Every registered scheduler (FlexAI needs a PJRT runtime, so it is the
+/// one spec the base registry cannot build — both registries share that
+/// gap, and its decision path is untouched by this overhaul).
+fn all_specs() -> Vec<SchedulerSpec> {
+    [
+        SchedulerSpec::MinMin,
+        SchedulerSpec::Ata,
+        SchedulerSpec::Edp,
+        SchedulerSpec::Ga,
+        SchedulerSpec::Sa,
+        SchedulerSpec::Worst,
+        SchedulerSpec::RoundRobin,
+        SchedulerSpec::Random,
+    ]
+    .to_vec()
+}
+
+fn fingerprints(plan: &ExperimentPlan, events: bool) -> (u64, u64) {
+    let optimized = Registry::new();
+    let reference = reference_registry();
+    let run = |reg: &Registry| -> SweepSummary {
+        Engine::new(reg).jobs(2).events(events).sweep_streaming(plan).unwrap()
+    };
+    (run(&optimized).fingerprint(), run(&reference).fingerprint())
+}
+
+#[test]
+fn optimized_matches_reference_on_urban_rush() {
+    let plan = ExperimentPlan::new()
+        .scenarios(["urban-rush"])
+        .distances([40.0])
+        .schedulers(all_specs())
+        .seed(7);
+    let (fast, slow) = fingerprints(&plan, false);
+    assert_eq!(fast, slow, "healthy-platform sweep drifted");
+}
+
+#[test]
+fn optimized_matches_reference_under_platform_faults() {
+    // accel-failure declares a mid-route Fail/Recover window; with events
+    // on, schedulers route around the outage — the incremental Min-Min
+    // cache and the RolloutCtx dead-slot pricing must reproduce the
+    // reference decisions exactly through the failure and the recovery.
+    let plan = ExperimentPlan::new()
+        .scenarios(["accel-failure"])
+        .distances([60.0])
+        .schedulers(all_specs())
+        .seed(11);
+    let (fast, slow) = fingerprints(&plan, true);
+    assert_eq!(fast, slow, "fault-event sweep drifted");
+    // Sanity: the same plan without events differs (the outage is real).
+    let (no_events, _) = fingerprints(&plan, false);
+    assert_ne!(fast, no_events, "events must change the outcome");
+}
+
+#[test]
+fn optimized_matches_reference_on_mixed_core_platform() {
+    // Mixed core sizes give every slot distinct cost rows — the sharpest
+    // test of the per-burst cost-row caches (and of Half-core tie-breaks).
+    let plan = ExperimentPlan::new()
+        .platforms(["so:4@2x,si:4,mm:3@0.5x"])
+        .distances([40.0])
+        .schedulers(all_specs())
+        .seed(3);
+    let (fast, slow) = fingerprints(&plan, false);
+    assert_eq!(fast, slow, "mixed-core sweep drifted");
+}
+
+#[test]
+fn reference_sweep_rows_align_one_to_one() {
+    // Beyond the fingerprint: identical group keys and per-field bits on
+    // a small sweep, so a future drift points at the exact row.
+    let plan = ExperimentPlan::new()
+        .scenarios(["urban-rush"])
+        .distances([40.0])
+        .schedulers([SchedulerSpec::MinMin, SchedulerSpec::Ga, SchedulerSpec::Sa])
+        .seed(5);
+    let fast = Engine::new(&Registry::new()).sweep_streaming(&plan).unwrap();
+    let slow = Engine::new(&reference_registry()).sweep_streaming(&plan).unwrap();
+    assert_eq!(fast.groups.len(), slow.groups.len());
+    for (a, b) in fast.groups.iter().zip(&slow.groups) {
+        assert_eq!(a.key, b.key);
+        assert_eq!(a.runs.len(), b.runs.len());
+        for (x, y) in a.runs.iter().zip(&b.runs) {
+            assert_eq!(x.tasks, y.tasks, "{:?}", a.key);
+            assert_eq!(x.tasks_met, y.tasks_met, "{:?}", a.key);
+            for (fa, fb, field) in [
+                (x.energy_j, y.energy_j, "energy_j"),
+                (x.makespan_s, y.makespan_s, "makespan_s"),
+                (x.wait_s, y.wait_s, "wait_s"),
+                (x.compute_s, y.compute_s, "compute_s"),
+                (x.r_balance, y.r_balance, "r_balance"),
+                (x.ms_total, y.ms_total, "ms_total"),
+                (x.gvalue, y.gvalue, "gvalue"),
+                (x.mean_response_s, y.mean_response_s, "mean_response_s"),
+                (x.max_response_s, y.max_response_s, "max_response_s"),
+            ] {
+                assert_eq!(fa.to_bits(), fb.to_bits(), "{:?} field {field}", a.key);
+            }
+        }
+    }
+}
