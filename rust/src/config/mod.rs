@@ -80,6 +80,9 @@ pub struct ExperimentConfig {
     pub events: bool,
     /// Engine worker threads (0 = all cores, 1 = sequential).
     pub jobs: usize,
+    /// Seed replicates per sweep cell (1 = just the base seed; > 1 expands
+    /// the seed axis via `plan::replicate_seeds`).  CLI: `--replicates`.
+    pub replicates: usize,
     pub env: EnvConfig,
     pub train: TrainConfig,
     pub flexai: FlexAIConfig,
@@ -95,6 +98,7 @@ impl Default for ExperimentConfig {
             scenarios: Vec::new(),
             events: false,
             jobs: 1,
+            replicates: 1,
             env: EnvConfig::default(),
             train: TrainConfig::default(),
             flexai: FlexAIConfig::default(),
@@ -136,6 +140,9 @@ impl ExperimentConfig {
             .platform(self.platform.clone())
             .scheduler(self.scheduler_spec()?)
             .seed(self.env.seed);
+        if self.replicates > 1 {
+            plan = plan.replicates(self.env.seed, self.replicates);
+        }
         if !self.scenarios.is_empty() {
             plan = plan.scenarios(self.scenarios.iter().cloned());
         }
@@ -170,6 +177,7 @@ impl ExperimentConfig {
                         .context("deadline: expected rss|frame")?
                 }
                 "jobs" => self.jobs = v.as_usize().context("jobs")?,
+                "replicates" => self.replicates = v.as_usize().context("replicates")?,
                 "events" => self.events = v.as_bool().context("events")?,
                 "scenarios" => {
                     self.scenarios = v
@@ -259,6 +267,8 @@ impl ExperimentConfig {
             self.events = true;
         }
         self.jobs = args.get_usize("jobs", self.jobs)?;
+        self.replicates = args.get_usize("replicates", self.replicates)?;
+        anyhow::ensure!(self.replicates > 0, "--replicates must be >= 1");
         // `--distance` is an alias for `--dist`.
         if let Some(d) = args.get("dist").or_else(|| args.get("distance")) {
             self.env.distances_m = d
@@ -290,6 +300,7 @@ impl ExperimentConfig {
         o.insert("checkpoint", Json::Str(self.checkpoint.clone()));
         o.insert("deadline", Json::Str(self.deadline.name().to_string()));
         o.insert("jobs", Json::Num(self.jobs as f64));
+        o.insert("replicates", Json::Num(self.replicates as f64));
         o.insert("events", Json::Bool(self.events));
         o.insert(
             "scenarios",
@@ -445,6 +456,26 @@ mod tests {
         c.apply_args(&args).unwrap();
         assert!(c.events);
         assert_eq!(c.scenarios, vec!["accel-failure".to_string()]);
+    }
+
+    #[test]
+    fn replicates_expand_the_seed_axis() {
+        let mut c = ExperimentConfig::default();
+        c.scheduler = "minmin".into();
+        c.env.distances_m = vec![100.0];
+        c.apply_args(&Args::parse(["--replicates".to_string(), "3".to_string()])).unwrap();
+        assert_eq!(c.replicates, 3);
+        let trials = c.plan().unwrap().trials().unwrap();
+        assert_eq!(trials.len(), 3);
+        assert_eq!(trials[0].seed, c.env.seed, "replicate 0 is the base seed");
+        let seeds: std::collections::BTreeSet<u64> = trials.iter().map(|t| t.seed).collect();
+        assert_eq!(seeds.len(), 3);
+
+        let mut bad = ExperimentConfig::default();
+        let err = bad
+            .apply_args(&Args::parse(["--replicates".to_string(), "0".to_string()]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("replicates"), "{err:#}");
     }
 
     #[test]

@@ -30,7 +30,6 @@ use crate::plan::ExperimentPlan;
 use crate::platform::Platform;
 use crate::sched::{Registry, SchedulerSpec};
 use crate::util::json::Json;
-use crate::util::stats::geomean;
 use crate::workload::{ModelKind, ALL_MODELS};
 
 /// How `run` explores the mix space.
@@ -384,19 +383,19 @@ fn fold_rows(mix: &Mix, sweep: &SweepSummary) -> Result<EvalRow> {
     let name = mix.platform().name;
     let mut met = 0u64;
     let mut tasks = 0u64;
-    let mut energies = Vec::new();
-    let mut times = Vec::new();
-    let mut rb = Vec::new();
+    let mut n = 0u64;
+    let mut sum_ln_e = 0.0;
+    let mut sum_ln_t = 0.0;
+    let mut sum_rb = 0.0;
     for g in sweep.groups.iter().filter(|g| g.key.platform == name) {
-        for run in &g.runs {
-            met += run.tasks_met;
-            tasks += run.tasks;
-            energies.push(run.energy_j.max(1e-12));
-            times.push(run.work_time_s().max(1e-12));
-            rb.push(run.r_balance);
-        }
+        met += g.stats.sum_tasks_met;
+        tasks += g.stats.sum_tasks;
+        n += g.stats.trials;
+        sum_ln_e += g.stats.sum_ln_energy;
+        sum_ln_t += g.stats.sum_ln_time;
+        sum_rb += g.stats.sum_r_balance;
     }
-    anyhow::ensure!(!energies.is_empty(), "no sweep rows for candidate '{name}'");
+    anyhow::ensure!(n > 0, "no sweep rows for candidate '{name}'");
     Ok(EvalRow {
         mix: *mix,
         spec: mix.spec(),
@@ -404,9 +403,9 @@ fn fold_rows(mix: &Mix, sweep: &SweepSummary) -> Result<EvalRow> {
         area: mix.area_units(),
         peak_power_w: mix.peak_power_w(),
         stm_rate: if tasks == 0 { 1.0 } else { met as f64 / tasks as f64 },
-        energy_j: geomean(&energies),
-        time_s: geomean(&times),
-        r_balance: rb.iter().sum::<f64>() / rb.len() as f64,
+        energy_j: (sum_ln_e / n as f64).exp(),
+        time_s: (sum_ln_t / n as f64).exp(),
+        r_balance: sum_rb / n as f64,
         on_frontier: false,
     })
 }

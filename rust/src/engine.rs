@@ -23,13 +23,15 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::env::taskgen::{DeadlineMode, TaskQueue};
+use crate::env::taskgen::{DeadlineMode, Task, TaskQueue};
 use crate::env::Area;
+use crate::metrics::quantile::QuantileHistogram;
 use crate::metrics::summary::{RunSummary, SweepKey, SweepSummary};
 use crate::metrics::NormScales;
 use crate::plan::{ExperimentPlan, Trial};
+use crate::safety::braking::{braking_distance_m, BrakingBreakdown};
 use crate::sched::Registry;
-use crate::sim::{simulate_observed_with_scales, SimObserver, SimOptions, TaskRecord};
+use crate::sim::{simulate_observed_with_scales, Applied, SimObserver, SimOptions, TaskRecord};
 
 /// Cache key for generated task queues: everything queue generation
 /// depends on.  Trials differing only in scheduler/platform share the
@@ -81,6 +83,37 @@ impl QueueCache {
             .entry(key)
             .or_insert(q)
             .clone()
+    }
+}
+
+/// Engine-internal per-trial observer feeding the tail histograms of
+/// [`RunSummary`]: every applied task's response time, and the braking
+/// distance its *deterministic* latency components imply at the
+/// scenario's max velocity (scheduler wall clock contributes 0 so the
+/// histograms — and hence sweep fingerprints — stay `--jobs`-invariant).
+/// Lost tasks arrive with `response_s = +inf` and land in the nonfinite
+/// bucket, so tail quantiles degrade to `+inf` rather than hiding loss.
+struct TailsProbe {
+    v_ms: f64,
+    response: QuantileHistogram,
+    braking: QuantileHistogram,
+}
+
+impl TailsProbe {
+    fn new(v_ms: f64) -> TailsProbe {
+        TailsProbe {
+            v_ms,
+            response: QuantileHistogram::response(),
+            braking: QuantileHistogram::braking(),
+        }
+    }
+}
+
+impl SimObserver for TailsProbe {
+    fn on_task(&mut self, _task: &Task, a: &Applied) {
+        self.response.record(a.response_s);
+        let b = BrakingBreakdown::new(a.wait_s, 0.0, a.compute_s);
+        self.braking.record(braking_distance_m(self.v_ms, &b));
     }
 }
 
@@ -224,15 +257,25 @@ impl<'r> Engine<'r> {
             _ => Vec::new(),
         };
         let scales = NormScales::for_queue(queue, &platform);
-        let r = simulate_observed_with_scales(
-            queue,
-            &platform,
-            sched.as_mut(),
-            self.options,
-            scales,
-            events,
-            observers,
-        );
+        let mut tails = TailsProbe::new(trial.scenario.area.max_velocity_ms());
+        let mut r = {
+            let mut obs: Vec<&mut dyn SimObserver> = Vec::with_capacity(observers.len() + 1);
+            obs.push(&mut tails);
+            for o in observers.iter_mut() {
+                obs.push(&mut **o);
+            }
+            simulate_observed_with_scales(
+                queue,
+                &platform,
+                sched.as_mut(),
+                self.options,
+                scales,
+                events,
+                &mut obs,
+            )
+        };
+        r.summary.response_hist = tails.response;
+        r.summary.braking_hist = tails.braking;
         Ok(TrialResult {
             trial: trial.clone(),
             summary: r.summary,
@@ -349,15 +392,25 @@ impl<'r> Engine<'r> {
     /// later ones pile up behind it (the pool applies no backpressure).
     /// Even then this never retains *more* than [`Engine::run`], which
     /// always holds every result.
-    pub fn run_streamed<F>(&self, plan: &ExperimentPlan, mut sink: F) -> Result<usize>
+    pub fn run_streamed<F>(&self, plan: &ExperimentPlan, sink: F) -> Result<usize>
     where
         F: FnMut(TrialResult),
     {
-        let trials = plan.trials()?;
+        self.run_trials_streamed(&plan.trials()?, sink)
+    }
+
+    /// [`Engine::run_streamed`] over an already-expanded trial slice —
+    /// the fleet worker path, where a shard runs a sub-range of a plan's
+    /// trials.  Delivery order is slice order (= trial-id order when the
+    /// slice is a contiguous plan range).
+    pub fn run_trials_streamed<F>(&self, trials: &[Trial], mut sink: F) -> Result<usize>
+    where
+        F: FnMut(TrialResult),
+    {
         let n = trials.len();
         let mut pending: BTreeMap<usize, TrialResult> = BTreeMap::new();
         let mut next_emit = 0usize;
-        self.execute(&trials, |i, r| {
+        self.execute(trials, |i, r| {
             pending.insert(i, r);
             while let Some(r) = pending.remove(&next_emit) {
                 sink(r);

@@ -1,0 +1,614 @@
+//! Fleet sweep service: sharded, checkpoint-resumable sweeps whose merged
+//! report is fingerprint-identical to a single-process run.
+//!
+//! The pipeline is plan → work → merge (`hmai fleet plan|work|merge`):
+//!
+//! 1. **plan** captures every axis of the sweep in a plan file together
+//!    with a `plan_hash` — an FNV-1a digest of the *expanded* trial list
+//!    (every field of every [`Trial`] that influences results, in id
+//!    order).  Because `ExperimentPlan` expansion is deterministic, any
+//!    process loading the same plan file derives the same trials, the same
+//!    hash, and the same contiguous [`ShardSpec`] ranges.
+//! 2. **work** runs one shard's trial range, folding each result into a
+//!    partial [`SweepSummary`] and checkpointing it periodically with
+//!    atomic write-temp-then-rename ([`crate::util::json::write_atomic`]).
+//!    A killed worker restarts from its checkpoint: the load verifies the
+//!    plan hash and shard range, then skips the already-folded prefix —
+//!    the summary state round-trips bit-for-bit (f64 sums stored as bit
+//!    hex), so a kill/resume cycle is invisible in the final report.
+//! 3. **merge** folds complete shard checkpoints in trial-id order after
+//!    verifying they cover the plan exactly once.  The sweep fingerprint
+//!    is partition-invariant by construction (see
+//!    [`crate::metrics::summary`]), so the merged fingerprint equals the
+//!    monolithic `sweep_streaming` fingerprint for *any* shard count.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::engine::Engine;
+use crate::env::taskgen::DeadlineMode;
+use crate::env::Area;
+use crate::metrics::quantile::parse_bits_hex;
+use crate::metrics::summary::SweepSummary;
+use crate::plan::{replicate_seeds, ExperimentPlan, Trial};
+use crate::sched::{Registry, SchedulerSpec};
+use crate::util::json::Json;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+fn fnv_word(h: &mut u64, w: u64) {
+    *h ^= w;
+    *h = h.wrapping_mul(FNV_PRIME);
+}
+
+fn fnv_str(h: &mut u64, s: &str) {
+    for b in s.bytes() {
+        fnv_word(h, b as u64);
+    }
+    // Length-delimit so concatenated fields can't alias.
+    fnv_word(h, s.len() as u64);
+}
+
+/// Every axis of a fleet sweep, as captured in the plan file.  Scheduler
+/// and platform stay in their *spec string* form (what the user typed) so
+/// the file is self-describing; resolution re-validates on every load.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    pub scenarios: Vec<String>,
+    pub area: Area,
+    pub distances_m: Vec<f64>,
+    pub deadline: DeadlineMode,
+    pub platforms: Vec<String>,
+    /// Scheduler name tokens (`SchedulerSpec::parse` form).
+    pub schedulers: Vec<String>,
+    /// FlexAI checkpoint path attached to any `flexai` token (empty =
+    /// fresh init).
+    pub checkpoint: String,
+    pub seeds: Vec<u64>,
+    pub events: bool,
+    pub shards: usize,
+}
+
+impl FleetPlan {
+    /// Build from an experiment config; `--sched` accepts a comma list
+    /// here (a fleet sweep usually compares schedulers).
+    pub fn from_config(cfg: &ExperimentConfig, shards: usize) -> Result<FleetPlan> {
+        let schedulers: Vec<String> = cfg
+            .scheduler
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        anyhow::ensure!(!schedulers.is_empty(), "fleet plan: no schedulers");
+        for s in &schedulers {
+            SchedulerSpec::parse(s)?;
+        }
+        Ok(FleetPlan {
+            scenarios: cfg.scenarios.clone(),
+            area: cfg.env.area,
+            distances_m: cfg.env.distances_m.clone(),
+            deadline: cfg.deadline,
+            platforms: vec![cfg.platform.clone()],
+            schedulers,
+            checkpoint: cfg.checkpoint.clone(),
+            seeds: replicate_seeds(cfg.env.seed, cfg.replicates.max(1)),
+            events: cfg.events,
+            shards: shards.max(1),
+        })
+    }
+
+    fn scheduler_specs(&self) -> Result<Vec<SchedulerSpec>> {
+        self.schedulers
+            .iter()
+            .map(|s| {
+                Ok(match SchedulerSpec::parse(s)? {
+                    SchedulerSpec::FlexAI { .. } => SchedulerSpec::FlexAI {
+                        checkpoint: if self.checkpoint.is_empty() {
+                            None
+                        } else {
+                            Some(self.checkpoint.clone())
+                        },
+                    },
+                    other => other,
+                })
+            })
+            .collect()
+    }
+
+    /// The `ExperimentPlan` this fleet plan expands (scenarios override
+    /// the area axis, exactly like `ExperimentConfig::plan`).
+    pub fn experiment_plan(&self) -> Result<ExperimentPlan> {
+        let mut plan = ExperimentPlan::new()
+            .area(self.area)
+            .distances(self.distances_m.iter().copied())
+            .deadline(self.deadline)
+            .platforms(self.platforms.iter().cloned())
+            .schedulers(self.scheduler_specs()?)
+            .seeds(self.seeds.iter().copied());
+        if !self.scenarios.is_empty() {
+            plan = plan.scenarios(self.scenarios.iter().cloned());
+        }
+        Ok(plan)
+    }
+
+    /// Expand trials, hash them, and split into contiguous shard ranges.
+    pub fn resolve(&self) -> Result<ResolvedPlan> {
+        let trials = self.experiment_plan()?.trials()?;
+        anyhow::ensure!(!trials.is_empty(), "fleet plan expands to zero trials");
+        anyhow::ensure!(
+            self.shards <= trials.len(),
+            "fleet plan: {} shards for {} trials",
+            self.shards,
+            trials.len()
+        );
+        let plan_hash = plan_hash(self.events, &trials);
+        let shards = shard_ranges(trials.len(), self.shards)
+            .into_iter()
+            .enumerate()
+            .map(|(i, (lo, hi))| ShardSpec { shard: i, plan_hash, lo, hi })
+            .collect();
+        Ok(ResolvedPlan { trials, plan_hash, shards })
+    }
+
+    /// Plan-file form.  Seeds are hex strings (u64 doesn't survive f64
+    /// JSON numbers); distances are plain numbers (our writer emits the
+    /// shortest round-tripping form).
+    pub fn to_json(&self, resolved: &ResolvedPlan) -> Json {
+        Json::from_pairs(vec![
+            ("version", Json::Num(1.0)),
+            ("plan_hash", Json::Str(format!("{:016x}", resolved.plan_hash))),
+            ("trials", Json::Num(resolved.trials.len() as f64)),
+            ("shards", Json::Num(self.shards as f64)),
+            ("events", Json::Bool(self.events)),
+            ("area", Json::Str(self.area.name().to_lowercase())),
+            ("deadline", Json::Str(self.deadline.name().to_string())),
+            (
+                "scenarios",
+                Json::Arr(self.scenarios.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            ("distances_m", Json::array_f64(&self.distances_m)),
+            (
+                "platforms",
+                Json::Arr(self.platforms.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            (
+                "schedulers",
+                Json::Arr(self.schedulers.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            ("checkpoint", Json::Str(self.checkpoint.clone())),
+            (
+                "seeds",
+                Json::Arr(self.seeds.iter().map(|s| Json::Str(format!("{s:016x}"))).collect()),
+            ),
+        ])
+    }
+
+    /// Write the plan file (atomic, like every artifact).
+    pub fn save(&self, path: &Path, resolved: &ResolvedPlan) -> Result<()> {
+        self.to_json(resolved)
+            .write_to(path)
+            .with_context(|| format!("writing fleet plan {}", path.display()))
+    }
+
+    /// Load and re-resolve a plan file, verifying that this binary expands
+    /// it to the same trial list the planner hashed (a version skew or a
+    /// hand-edited file fails here, not at merge time).
+    pub fn load(path: &Path) -> Result<(FleetPlan, ResolvedPlan)> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fleet plan {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("fleet plan {}: {e}", path.display()))?;
+        let version = j.get_f64("version")? as u64;
+        anyhow::ensure!(version == 1, "fleet plan version {version} unsupported");
+        let strings = |key: &str| -> Result<Vec<String>> {
+            Ok(j.get_arr(key)?
+                .iter()
+                .filter_map(|x| x.as_str().map(str::to_string))
+                .collect())
+        };
+        let mut seeds = Vec::new();
+        for s in j.get_arr("seeds")? {
+            seeds.push(parse_bits_hex(s.as_str().context("fleet plan: seed not a string")?)?);
+        }
+        let plan = FleetPlan {
+            scenarios: strings("scenarios")?,
+            area: Area::parse(j.get_str("area")?)
+                .context("fleet plan: bad area")?,
+            distances_m: j
+                .get_arr("distances_m")?
+                .iter()
+                .filter_map(|x| x.as_f64())
+                .collect(),
+            deadline: DeadlineMode::parse(j.get_str("deadline")?)
+                .context("fleet plan: bad deadline")?,
+            platforms: strings("platforms")?,
+            schedulers: strings("schedulers")?,
+            checkpoint: j.get_str("checkpoint")?.to_string(),
+            seeds,
+            events: j.get("events")?.as_bool().context("fleet plan: events not a bool")?,
+            shards: j.get_usize("shards")?,
+        };
+        let resolved = plan.resolve()?;
+        let stored = parse_bits_hex(j.get_str("plan_hash")?)?;
+        anyhow::ensure!(
+            stored == resolved.plan_hash,
+            "fleet plan {}: stored plan_hash {:016x} != recomputed {:016x} \
+             (edited file or incompatible binary)",
+            path.display(),
+            stored,
+            resolved.plan_hash
+        );
+        anyhow::ensure!(
+            j.get_f64("trials")? as usize == resolved.trials.len(),
+            "fleet plan {}: trial count drifted",
+            path.display()
+        );
+        Ok((plan, resolved))
+    }
+}
+
+/// A fleet plan expanded into its trial list, hash and shard ranges.
+pub struct ResolvedPlan {
+    pub trials: Vec<Trial>,
+    pub plan_hash: u64,
+    pub shards: Vec<ShardSpec>,
+}
+
+/// One shard's slice of the plan: trials `lo..hi` (trial-id order).  The
+/// embedded `plan_hash` ties every checkpoint to the exact trial list it
+/// was computed over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub shard: usize,
+    pub plan_hash: u64,
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl ShardSpec {
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+}
+
+/// Contiguous near-equal split of `n` trials into `k` ranges (first
+/// `n % k` shards take one extra).
+fn shard_ranges(n: usize, k: usize) -> Vec<(usize, usize)> {
+    let k = k.max(1);
+    let (base, rem) = (n / k, n % k);
+    let mut out = Vec::with_capacity(k);
+    let mut lo = 0;
+    for i in 0..k {
+        let hi = lo + base + usize::from(i < rem);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Hash of the expanded trial list: every result-influencing field of
+/// every trial, in id order, plus the events flag.  Two binaries agreeing
+/// on this hash will run identical trial sets.
+fn plan_hash(events: bool, trials: &[Trial]) -> u64 {
+    let mut h = FNV_OFFSET;
+    fnv_word(&mut h, events as u64);
+    fnv_word(&mut h, trials.len() as u64);
+    for t in trials {
+        fnv_word(&mut h, t.id as u64);
+        fnv_str(&mut h, &t.scenario.scenario_name());
+        fnv_str(&mut h, t.scenario.area.name());
+        fnv_word(&mut h, t.scenario.distance_m.to_bits());
+        fnv_str(&mut h, t.scenario.deadline.name());
+        fnv_word(&mut h, t.queue_index as u64);
+        fnv_str(&mut h, &t.platform);
+        fnv_str(&mut h, t.scheduler.canonical());
+        fnv_word(&mut h, t.seed);
+        fnv_word(&mut h, t.sched_seed);
+    }
+    h
+}
+
+/// A shard worker's durable state: how far it has folded (`next_trial`)
+/// and the partial summary of `lo..next_trial`.  Saved atomically, so a
+/// kill leaves the previous consistent checkpoint.
+#[derive(Debug, Clone)]
+pub struct ShardCheckpoint {
+    pub spec: ShardSpec,
+    /// First trial id NOT yet folded into `summary`.
+    pub next_trial: usize,
+    pub summary: SweepSummary,
+}
+
+impl ShardCheckpoint {
+    fn fresh(spec: ShardSpec) -> ShardCheckpoint {
+        ShardCheckpoint { spec, next_trial: spec.lo, summary: SweepSummary::new() }
+    }
+
+    pub fn complete(&self) -> bool {
+        self.next_trial >= self.spec.hi
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("version", Json::Num(1.0)),
+            ("plan_hash", Json::Str(format!("{:016x}", self.spec.plan_hash))),
+            ("shard", Json::Num(self.spec.shard as f64)),
+            ("lo", Json::Num(self.spec.lo as f64)),
+            ("hi", Json::Num(self.spec.hi as f64)),
+            ("next_trial", Json::Num(self.next_trial as f64)),
+            ("fingerprint", Json::Str(format!("{:016x}", self.summary.fingerprint()))),
+            ("summary", self.summary.state_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardCheckpoint> {
+        let version = j.get_f64("version")? as u64;
+        anyhow::ensure!(version == 1, "shard checkpoint version {version} unsupported");
+        let spec = ShardSpec {
+            shard: j.get_usize("shard")?,
+            plan_hash: parse_bits_hex(j.get_str("plan_hash")?)?,
+            lo: j.get_usize("lo")?,
+            hi: j.get_usize("hi")?,
+        };
+        let ckpt = ShardCheckpoint {
+            spec,
+            next_trial: j.get_usize("next_trial")?,
+            summary: SweepSummary::from_state_json(j.get("summary")?)?,
+        };
+        anyhow::ensure!(
+            spec.lo <= ckpt.next_trial && ckpt.next_trial <= spec.hi,
+            "shard checkpoint: next_trial {} outside {}..{}",
+            ckpt.next_trial,
+            spec.lo,
+            spec.hi
+        );
+        let stored = parse_bits_hex(j.get_str("fingerprint")?)?;
+        anyhow::ensure!(
+            stored == ckpt.summary.fingerprint(),
+            "shard checkpoint: summary fingerprint mismatch (corrupt or hand-edited)"
+        );
+        Ok(ckpt)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_json()
+            .write_to(path)
+            .with_context(|| format!("writing shard checkpoint {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<ShardCheckpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading shard checkpoint {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("shard checkpoint {}: {e}", path.display()))?;
+        Self::from_json(&j).with_context(|| path.display().to_string())
+    }
+}
+
+/// Worker knobs for [`run_shard`].
+#[derive(Debug, Clone, Copy)]
+pub struct WorkOptions {
+    /// Engine worker threads (0 = all cores).
+    pub jobs: usize,
+    /// Checkpoint after this many folded trials.
+    pub checkpoint_every: usize,
+    /// Stop after folding this many trials this invocation (None = run the
+    /// shard to completion).  The test and CI "kill" knob: stopping early
+    /// leaves a valid mid-shard checkpoint to resume from.
+    pub max_trials: Option<usize>,
+}
+
+impl Default for WorkOptions {
+    fn default() -> Self {
+        WorkOptions { jobs: 1, checkpoint_every: 500, max_trials: None }
+    }
+}
+
+/// Run (or resume) one shard: fold trials `next_trial..hi` into the
+/// partial summary, checkpointing every `checkpoint_every` trials and at
+/// the end.  Returns the final checkpoint state (complete unless
+/// `max_trials` stopped it early).
+pub fn run_shard(
+    registry: &Registry,
+    plan: &FleetPlan,
+    resolved: &ResolvedPlan,
+    shard: usize,
+    checkpoint_path: &Path,
+    opts: WorkOptions,
+) -> Result<ShardCheckpoint> {
+    let spec = *resolved
+        .shards
+        .get(shard)
+        .with_context(|| format!("shard {shard} out of range ({} shards)", resolved.shards.len()))?;
+    let mut ckpt = if checkpoint_path.exists() {
+        let c = ShardCheckpoint::load(checkpoint_path)?;
+        anyhow::ensure!(
+            c.spec == spec,
+            "checkpoint {} is for shard {}/plan {:016x} range {}..{}, expected \
+             shard {}/plan {:016x} range {}..{}",
+            checkpoint_path.display(),
+            c.spec.shard,
+            c.spec.plan_hash,
+            c.spec.lo,
+            c.spec.hi,
+            spec.shard,
+            spec.plan_hash,
+            spec.lo,
+            spec.hi
+        );
+        c
+    } else {
+        ShardCheckpoint::fresh(spec)
+    };
+    if ckpt.complete() {
+        return Ok(ckpt);
+    }
+    let start = ckpt.next_trial;
+    let end = match opts.max_trials {
+        Some(m) => (start + m).min(spec.hi),
+        None => spec.hi,
+    };
+    let every = opts.checkpoint_every.max(1);
+    let mut summary = ckpt.summary;
+    let mut next = start;
+    let mut since = 0usize;
+    // The sink can't return an error, so a failed periodic save is
+    // deferred and surfaced after the run (the final save would fail the
+    // same way anyway).
+    let mut save_err: Option<anyhow::Error> = None;
+    let engine = Engine::new(registry).jobs(opts.jobs).events(plan.events);
+    engine.run_trials_streamed(&resolved.trials[start..end], |r| {
+        let key = r.sweep_key();
+        summary.push(key, r.summary);
+        next += 1;
+        since += 1;
+        if since >= every && next < end && save_err.is_none() {
+            since = 0;
+            let c = ShardCheckpoint { spec, next_trial: next, summary: summary.clone() };
+            if let Err(e) = c.save(checkpoint_path) {
+                save_err = Some(e);
+            }
+        }
+    })?;
+    if let Some(e) = save_err {
+        return Err(e);
+    }
+    ckpt = ShardCheckpoint { spec, next_trial: next, summary };
+    ckpt.save(checkpoint_path)?;
+    Ok(ckpt)
+}
+
+/// Fold complete shard checkpoints into the fleet summary, verifying they
+/// belong to `resolved` and tile its trial range exactly once.  Folding in
+/// trial-id order keeps merged f64 moments as close to the monolithic fold
+/// as shard boundaries allow; the fingerprint is exactly equal for any
+/// partition.
+pub fn merge_checkpoints(
+    resolved: &ResolvedPlan,
+    parts: &[ShardCheckpoint],
+) -> Result<SweepSummary> {
+    anyhow::ensure!(!parts.is_empty(), "fleet merge: no shard checkpoints");
+    let mut ordered: Vec<&ShardCheckpoint> = parts.iter().collect();
+    ordered.sort_by_key(|c| c.spec.lo);
+    let mut cursor = 0usize;
+    for c in &ordered {
+        anyhow::ensure!(
+            c.spec.plan_hash == resolved.plan_hash,
+            "fleet merge: shard {} belongs to plan {:016x}, not {:016x}",
+            c.spec.shard,
+            c.spec.plan_hash,
+            resolved.plan_hash
+        );
+        anyhow::ensure!(
+            c.complete(),
+            "fleet merge: shard {} incomplete ({} of {} trials folded) — resume it first",
+            c.spec.shard,
+            c.next_trial - c.spec.lo,
+            c.spec.len()
+        );
+        anyhow::ensure!(
+            c.spec.lo == cursor,
+            "fleet merge: trial coverage gap or overlap at {} (shard {} starts at {})",
+            cursor,
+            c.spec.shard,
+            c.spec.lo
+        );
+        cursor = c.spec.hi;
+    }
+    anyhow::ensure!(
+        cursor == resolved.trials.len(),
+        "fleet merge: shards cover {} of {} trials",
+        cursor,
+        resolved.trials.len()
+    );
+    let mut merged = SweepSummary::new();
+    for c in &ordered {
+        merged.merge(&c.summary);
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_tile_exactly() {
+        for (n, k) in [(10, 3), (7, 7), (5, 1), (100, 16), (3, 3)] {
+            let r = shard_ranges(n, k);
+            assert_eq!(r.len(), k);
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r[k - 1].1, n);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            let sizes: Vec<usize> = r.iter().map(|(lo, hi)| hi - lo).collect();
+            let (min, max) =
+                (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "near-equal split: {sizes:?}");
+        }
+    }
+
+    fn tiny_fleet() -> FleetPlan {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scheduler = "rr,minmin".into();
+        cfg.env.distances_m = vec![40.0, 60.0];
+        cfg.replicates = 2;
+        FleetPlan::from_config(&cfg, 3).unwrap()
+    }
+
+    #[test]
+    fn resolve_is_deterministic_and_sharded() {
+        let plan = tiny_fleet();
+        let a = plan.resolve().unwrap();
+        let b = plan.resolve().unwrap();
+        assert_eq!(a.plan_hash, b.plan_hash);
+        assert_eq!(a.trials.len(), 2 * 2 * 2); // seeds × schedulers × distances
+        assert_eq!(a.shards.len(), 3);
+        assert_eq!(a.shards[0].lo, 0);
+        assert_eq!(a.shards[2].hi, a.trials.len());
+        // Any axis change changes the hash.
+        let mut other = plan.clone();
+        other.events = true;
+        assert_ne!(other.resolve().unwrap().plan_hash, a.plan_hash);
+    }
+
+    #[test]
+    fn plan_file_roundtrip_and_tamper_rejection() {
+        let dir = std::env::temp_dir().join("hmai_fleet_plan_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        let plan = tiny_fleet();
+        let resolved = plan.resolve().unwrap();
+        plan.save(&path, &resolved).unwrap();
+        let (back, re) = FleetPlan::load(&path).unwrap();
+        assert_eq!(re.plan_hash, resolved.plan_hash);
+        assert_eq!(back.schedulers, plan.schedulers);
+        assert_eq!(back.seeds, plan.seeds);
+        // Tampering with an axis without fixing the hash is rejected.
+        let tampered = std::fs::read_to_string(&path).unwrap().replace("\"rr\"", "\"sa\"");
+        std::fs::write(&path, tampered).unwrap();
+        let err = FleetPlan::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("plan_hash"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fresh_checkpoint_and_range_validation() {
+        let plan = tiny_fleet();
+        let resolved = plan.resolve().unwrap();
+        let c = ShardCheckpoint::fresh(resolved.shards[1]);
+        assert!(!c.complete());
+        assert_eq!(c.next_trial, resolved.shards[1].lo);
+        // Merge refuses incomplete shards.
+        let err = merge_checkpoints(&resolved, &[c]).unwrap_err();
+        assert!(format!("{err:#}").contains("incomplete"), "{err:#}");
+    }
+}

@@ -26,6 +26,7 @@ pub mod runtime;
 pub mod config;
 pub mod plan;
 pub mod engine;
+pub mod fleet;
 pub mod dse;
 pub mod harness;
 pub mod reports;

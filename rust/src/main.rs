@@ -19,6 +19,7 @@ use hmai::config::ExperimentConfig;
 use hmai::engine::Engine;
 use hmai::env::route::{Route, RouteParams};
 use hmai::env::{scenario, taskgen, ALL_SCENARIOS};
+use hmai::fleet::{self, FleetPlan, ShardCheckpoint, WorkOptions};
 use hmai::harness;
 use hmai::metrics::summary::SweepSummary;
 use hmai::platform::alloc;
@@ -54,6 +55,7 @@ fn run(args: &Args) -> Result<()> {
         Some("train") => cmd_train(args),
         Some("braking") => cmd_braking(args),
         Some("dse") => cmd_dse(args),
+        Some("fleet") => cmd_fleet(args),
         Some("help") | None => {
             print!("{}", usage());
             Ok(())
@@ -72,7 +74,8 @@ fn usage() -> String {
          \x20   schedule            sweep a scheduler over task queues\n\
          \x20   train               train FlexAI, save a checkpoint\n\
          \x20   braking             Fig. 14 braking-distance probe\n\
-         \x20   dse                 design-space exploration over core mixes (Pareto frontier)\n\nOPTIONS:\n",
+         \x20   dse                 design-space exploration over core mixes (Pareto frontier)\n\
+         \x20   fleet plan|work|merge  sharded, checkpoint-resumable fleet sweeps\n\nOPTIONS:\n",
     );
     // The scheduler list comes from the one canonical table, so the usage
     // string can never drift from what the registry accepts.
@@ -107,6 +110,18 @@ fn usage() -> String {
         ("--beam <n>", "dse: greedy beam width".to_string()),
         ("--max-evals <n>", "dse: cap on simulated candidate mixes".to_string()),
         ("--jobs <n>", "engine worker threads (0 = all cores)".to_string()),
+        ("--replicates <n>", "seed replicates per sweep cell (expands the seed axis)".to_string()),
+        ("--shards <n>", "fleet plan: number of worker shards".to_string()),
+        ("--plan <file>", "fleet work/merge: plan file (default fleet_plan.json)".to_string()),
+        ("--shard <k>", "fleet work: shard index to run/resume".to_string()),
+        (
+            "--checkpoint-every <n>",
+            "fleet work: trials between checkpoint saves (default 500)".to_string(),
+        ),
+        (
+            "--max-trials <n>",
+            "fleet work: stop after n trials this invocation (kill/resume drills)".to_string(),
+        ),
         ("--seed <u64>", "top-level seed".to_string()),
         ("--episodes <n>", "training episodes".to_string()),
         ("--episode-dist <m>", "training route length".to_string()),
@@ -649,6 +664,127 @@ fn cmd_dse(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `hmai fleet <plan|work|merge>`: sharded, checkpoint-resumable sweeps.
+///
+///     hmai fleet plan --sched rr,minmin --replicates 100 --shards 3 --out plan.json
+///     hmai fleet work --plan plan.json --shard 0        # once per shard, resumable
+///     hmai fleet merge --plan plan.json --json merged.json
+///
+/// The merged report is fingerprint-identical to a single-process
+/// `sweep_streaming` over the same plan — for any shard count, including
+/// after killing and resuming workers (see DESIGN.md "Fleet sweeps").
+fn cmd_fleet(args: &Args) -> Result<()> {
+    match args.rest().first().map(String::as_str) {
+        Some("plan") => cmd_fleet_plan(args),
+        Some("work") => cmd_fleet_work(args),
+        Some("merge") => cmd_fleet_merge(args),
+        _ => anyhow::bail!("usage: hmai fleet <plan|work|merge> (see `hmai help`)"),
+    }
+}
+
+/// Default shard-checkpoint path: a sibling of the plan file.
+fn shard_path(plan_path: &std::path::Path, shard: usize) -> std::path::PathBuf {
+    let name = format!("fleet_shard_{shard}.json");
+    match plan_path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        Some(d) => d.join(name),
+        None => std::path::PathBuf::from(name),
+    }
+}
+
+fn cmd_fleet_plan(args: &Args) -> Result<()> {
+    let mut cfg = config(args)?;
+    default_sched_fallback(&mut cfg, args);
+    let shards = args.get_usize("shards", 1)?;
+    let plan = FleetPlan::from_config(&cfg, shards)?;
+    let resolved = plan.resolve()?;
+    let out = std::path::PathBuf::from(args.get_or("out", "fleet_plan.json"));
+    plan.save(&out, &resolved)?;
+    println!(
+        "fleet plan: {} trials, plan_hash {:016x}, {} shard(s) -> {}",
+        resolved.trials.len(),
+        resolved.plan_hash,
+        resolved.shards.len(),
+        out.display()
+    );
+    let mut t = Table::new(["Shard", "Trials", "Range", "Checkpoint"]);
+    for s in &resolved.shards {
+        t.row([
+            s.shard.to_string(),
+            s.len().to_string(),
+            format!("{}..{}", s.lo, s.hi),
+            shard_path(&out, s.shard).display().to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nnext: `hmai fleet work --plan {} --shard <k>` for each shard", out.display());
+    Ok(())
+}
+
+fn cmd_fleet_work(args: &Args) -> Result<()> {
+    let cfg = config(args)?;
+    let plan_path = std::path::PathBuf::from(args.get_or("plan", "fleet_plan.json"));
+    let (plan, resolved) = FleetPlan::load(&plan_path)?;
+    let shard = args.get_usize("shard", 0)?;
+    let out = args
+        .get("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| shard_path(&plan_path, shard));
+    let opts = WorkOptions {
+        jobs: cfg.jobs,
+        checkpoint_every: args.get_usize("checkpoint-every", 500)?,
+        max_trials: match args.get("max-trials") {
+            Some(_) => Some(args.get_usize("max-trials", 0)?),
+            None => None,
+        },
+    };
+    let reg = harness::registry(&cfg);
+    let ckpt = fleet::run_shard(&reg, &plan, &resolved, shard, &out, opts)?;
+    println!(
+        "fleet work: shard {} folded {}/{} trials ({}), fingerprint {:016x} -> {}",
+        shard,
+        ckpt.next_trial - ckpt.spec.lo,
+        ckpt.spec.len(),
+        if ckpt.complete() { "complete" } else { "paused — rerun to resume" },
+        ckpt.summary.fingerprint(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_fleet_merge(args: &Args) -> Result<()> {
+    let plan_path = std::path::PathBuf::from(args.get_or("plan", "fleet_plan.json"));
+    let (plan, resolved) = FleetPlan::load(&plan_path)?;
+    // Shard files: positionals after `merge`, or the default sibling paths.
+    let files: Vec<std::path::PathBuf> = if args.rest().len() > 1 {
+        args.rest()[1..].iter().map(std::path::PathBuf::from).collect()
+    } else {
+        (0..plan.shards).map(|k| shard_path(&plan_path, k)).collect()
+    };
+    let parts = files
+        .iter()
+        .map(|p| ShardCheckpoint::load(p))
+        .collect::<Result<Vec<_>>>()?;
+    let merged = fleet::merge_checkpoints(&resolved, &parts)?;
+    println!(
+        "fleet merge: {} shard(s), {} trials, fingerprint {:016x}",
+        parts.len(),
+        merged.total_runs(),
+        merged.fingerprint()
+    );
+    hmai::reports::sweep_table(&merged).print();
+    write_json_report(
+        args,
+        Json::from_pairs(vec![
+            ("command", Json::Str("fleet merge".to_string())),
+            ("fingerprint", Json::Str(format!("{:016x}", merged.fingerprint()))),
+            ("plan_hash", Json::Str(format!("{:016x}", resolved.plan_hash))),
+            ("trials", Json::Num(merged.total_runs() as f64)),
+            ("sweep", merged.to_json()),
+        ]),
+    )?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -658,10 +794,15 @@ mod tests {
     #[test]
     fn usage_mentions_every_subcommand() {
         let u = usage();
-        for cmd in ["report", "env", "platform", "schedule", "train", "braking", "dse"] {
+        for cmd in ["report", "env", "platform", "schedule", "train", "braking", "dse", "fleet"] {
             assert!(u.contains(cmd), "{cmd} missing from usage");
         }
+        assert!(u.contains("fleet plan|work|merge"), "fleet actions missing from usage");
         for opt in ["--budget", "--power-cap", "--search", "--beam", "--max-evals"] {
+            assert!(u.contains(opt), "{opt} missing from usage");
+        }
+        for opt in ["--replicates", "--shards", "--plan", "--shard", "--checkpoint-every", "--max-trials"]
+        {
             assert!(u.contains(opt), "{opt} missing from usage");
         }
     }
@@ -825,6 +966,49 @@ mod tests {
         let err = cfg.platform().unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("component 2"), "{msg}");
+    }
+
+    #[test]
+    fn fleet_cli_plan_work_merge_roundtrip() {
+        // A miniature `hmai fleet plan` → `work` ×2 → `merge`, verifying
+        // the merged fingerprint equals a monolithic sweep_streaming run.
+        let dir = std::env::temp_dir().join(format!("hmai_fleet_cli_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let plan_file = dir.join("plan.json");
+        let argv = |toks: &[&str]| Args::parse(toks.iter().map(|s| s.to_string()));
+        cmd_fleet(&argv(&[
+            "fleet", "plan", "--sched", "rr,minmin", "--dist", "40,60", "--replicates", "2",
+            "--shards", "2", "--seed", "5", "--out", plan_file.to_str().unwrap(),
+        ]))
+        .unwrap();
+        for k in ["0", "1"] {
+            cmd_fleet(&argv(&[
+                "fleet", "work", "--plan", plan_file.to_str().unwrap(), "--shard", k,
+                "--checkpoint-every", "2",
+            ]))
+            .unwrap();
+        }
+        let merged_file = dir.join("merged.json");
+        cmd_fleet(&argv(&[
+            "fleet", "merge", "--plan", plan_file.to_str().unwrap(), "--json",
+            merged_file.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let merged = Json::parse(&std::fs::read_to_string(&merged_file).unwrap()).unwrap();
+        // Monolithic reference over the same plan.
+        let (plan, _) = FleetPlan::load(&plan_file).unwrap();
+        let reg = harness::registry(&ExperimentConfig::default());
+        let mono = Engine::new(&reg)
+            .events(plan.events)
+            .sweep_streaming(&plan.experiment_plan().unwrap())
+            .unwrap();
+        assert_eq!(
+            merged.get_str("fingerprint").unwrap(),
+            format!("{:016x}", mono.fingerprint()),
+            "fleet merge drifted from the monolithic sweep"
+        );
+        assert_eq!(merged.get_f64("trials").unwrap() as usize, mono.total_runs());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

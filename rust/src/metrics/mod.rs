@@ -4,6 +4,7 @@
 //! `Gvalue = (-E - T + R_Balance)/3` (after normalization), and the
 //! Safety-Time-Meet-Rate (STMRate, §8.4).
 
+pub mod quantile;
 pub mod summary;
 
 use crate::env::taskgen::TaskQueue;

@@ -1,0 +1,368 @@
+//! Bounded-memory streaming quantiles for fleet-scale sweeps.
+//!
+//! [`QuantileHistogram`] is a fixed-bucket log-spaced histogram: recording
+//! is O(1), memory is a few hundred `u64` counters regardless of sample
+//! count, and two histograms over disjoint sample sets merge by elementwise
+//! addition — the exact property `fleet merge` needs to reassemble shard
+//! summaries into the single-process result.
+//!
+//! Bucketing is pure bit manipulation on the IEEE-754 representation (no
+//! `ln`/`log10`, whose last-bit behavior libm does not specify), so the
+//! bucket index of a value is identical on every platform: the unbiased
+//! exponent selects an octave and the top three mantissa bits split each
+//! octave into [`PER_OCTAVE`] mantissa-linear sub-buckets.  The widest
+//! bucket spans a ratio of 9/8, so a reported quantile (bucket midpoint,
+//! clamped to the observed min/max) is within ~6.25% relative error of the
+//! exact sort-based quantile — pinned by tests here and in
+//! `tests/fleet.rs`.
+//!
+//! Non-finite samples (a lost task's `response_s` is `+inf`) land in a
+//! dedicated top bucket, so "P99.9 is infinite" is representable — the
+//! tail-latency safety claim (§8.4) fails loudly instead of averaging away.
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Sub-buckets per octave (top 3 mantissa bits → 8 mantissa-linear cells).
+pub const PER_OCTAVE: usize = 8;
+
+/// A mergeable fixed-bucket histogram over positive f64 samples.
+///
+/// Tracks `[2^lo_exp, 2^(lo_exp+octaves))` in log-spaced buckets, with
+/// dedicated counters for underflow (including zero and negatives),
+/// finite overflow, and non-finite samples, plus the exact finite min/max.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantileHistogram {
+    lo_exp: i32,
+    octaves: usize,
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    nonfinite: u64,
+    total: u64,
+    min: f64,
+    max: f64,
+}
+
+impl QuantileHistogram {
+    /// Histogram over `[2^lo_exp, 2^(lo_exp+octaves))`.
+    pub fn new(lo_exp: i32, octaves: usize) -> QuantileHistogram {
+        QuantileHistogram {
+            lo_exp,
+            octaves,
+            counts: vec![0; octaves * PER_OCTAVE],
+            underflow: 0,
+            overflow: 0,
+            nonfinite: 0,
+            total: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Task response times: ~6e-8 s .. ~1.7e3 s (2^-24 .. 2^10).
+    pub fn response() -> QuantileHistogram {
+        QuantileHistogram::new(-24, 34)
+    }
+
+    /// Braking distances: ~1e-3 m .. ~1.3e5 m (2^-10 .. 2^17).
+    pub fn braking() -> QuantileHistogram {
+        QuantileHistogram::new(-10, 27)
+    }
+
+    /// Total recorded samples (including underflow/overflow/non-finite).
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Samples that were not finite (lost tasks: `response_s = +inf`).
+    pub fn nonfinite_count(&self) -> u64 {
+        self.nonfinite
+    }
+
+    /// Exact minimum over finite samples (`+inf` when none).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Exact maximum over finite samples (`-inf` when none).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Record one sample.  O(1), no allocation.
+    pub fn record(&mut self, v: f64) {
+        self.total += 1;
+        if !v.is_finite() {
+            self.nonfinite += 1;
+            return;
+        }
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+        // Zero, negatives and subnormals below the range: underflow.
+        if v <= 0.0 {
+            self.underflow += 1;
+            return;
+        }
+        let bits = v.to_bits();
+        let e = ((bits >> 52) & 0x7ff) as i32 - 1023;
+        if e < self.lo_exp {
+            self.underflow += 1;
+        } else if e >= self.lo_exp + self.octaves as i32 {
+            self.overflow += 1;
+        } else {
+            let j = ((bits >> 49) & 0x7) as usize;
+            self.counts[(e - self.lo_exp) as usize * PER_OCTAVE + j] += 1;
+        }
+    }
+
+    /// Fold another histogram in: elementwise `u64` addition plus exact
+    /// min/max — commutative and associative, so any shard partition
+    /// merges to the identical histogram.  Panics on a bucket-layout
+    /// mismatch (a programming error: layouts are compile-time choices).
+    pub fn merge(&mut self, other: &QuantileHistogram) {
+        assert_eq!(
+            (self.lo_exp, self.octaves),
+            (other.lo_exp, other.octaves),
+            "merging histograms with different bucket layouts"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.nonfinite += other.nonfinite;
+        self.total += other.total;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// The q-quantile (q in [0,1]) as a bucket midpoint clamped to the
+    /// observed finite range; `+inf` when the rank falls among non-finite
+    /// samples, 0.0 when empty.  Matches the exact sort-based definition
+    /// `sorted[ceil(q*n)-1]` to within one bucket width (≤ ~6.25%
+    /// relative).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = self.underflow;
+        if rank <= cum {
+            // Underflow samples include the global minimum.
+            return if self.min.is_finite() { self.min } else { 0.0 };
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if rank <= cum {
+                let e = self.lo_exp + (i / PER_OCTAVE) as i32;
+                let j = (i % PER_OCTAVE) as f64;
+                let scale = f64::from_bits(((e + 1023) as u64) << 52); // 2^e
+                let mid = scale * (1.0 + (j + 0.5) / PER_OCTAVE as f64);
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        cum += self.overflow;
+        if rank <= cum {
+            return self.max; // finite overflow: the exact max bounds it
+        }
+        f64::INFINITY
+    }
+
+    /// Fold every counter and the min/max bits into an FNV-1a style hash —
+    /// the histogram's contribution to a run's content hash.
+    pub fn fold_hash(&self, mut h: u64) -> u64 {
+        let mut word = |w: u64| {
+            h ^= w;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        };
+        word(self.lo_exp as u64);
+        word(self.octaves as u64);
+        word(self.underflow);
+        word(self.overflow);
+        word(self.nonfinite);
+        word(self.total);
+        word(self.min.to_bits());
+        word(self.max.to_bits());
+        for &c in &self.counts {
+            word(c);
+        }
+        h
+    }
+
+    /// Exact serialized state (checkpoint form): counters as JSON numbers
+    /// (exact below 2^53), min/max as bit-level hex so `+inf`/`-inf`
+    /// sentinels survive the round trip.
+    pub fn state_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("lo_exp", Json::Num(self.lo_exp as f64)),
+            ("octaves", Json::Num(self.octaves as f64)),
+            ("underflow", Json::Num(self.underflow as f64)),
+            ("overflow", Json::Num(self.overflow as f64)),
+            ("nonfinite", Json::Num(self.nonfinite as f64)),
+            ("total", Json::Num(self.total as f64)),
+            ("min_bits", Json::Str(format!("{:016x}", self.min.to_bits()))),
+            ("max_bits", Json::Str(format!("{:016x}", self.max.to_bits()))),
+            ("counts", Json::Arr(self.counts.iter().map(|&c| Json::Num(c as f64)).collect())),
+        ])
+    }
+
+    /// Parse the checkpoint form back (exact inverse of
+    /// [`QuantileHistogram::state_json`]).
+    pub fn from_state_json(j: &Json) -> Result<QuantileHistogram> {
+        let lo_exp = j.get_f64("lo_exp").context("histogram lo_exp")? as i32;
+        let octaves = j.get_usize("octaves").context("histogram octaves")?;
+        let counts_j = j.get_arr("counts").context("histogram counts")?;
+        anyhow::ensure!(
+            counts_j.len() == octaves * PER_OCTAVE,
+            "histogram counts: expected {} buckets, got {}",
+            octaves * PER_OCTAVE,
+            counts_j.len()
+        );
+        let counts: Vec<u64> = counts_j
+            .iter()
+            .map(|c| c.as_f64().map(|x| x as u64).context("histogram count: not a number"))
+            .collect::<Result<_>>()?;
+        Ok(QuantileHistogram {
+            lo_exp,
+            octaves,
+            counts,
+            underflow: j.get_f64("underflow")? as u64,
+            overflow: j.get_f64("overflow")? as u64,
+            nonfinite: j.get_f64("nonfinite")? as u64,
+            total: j.get_f64("total")? as u64,
+            min: f64::from_bits(parse_bits_hex(j.get_str("min_bits")?)?),
+            max: f64::from_bits(parse_bits_hex(j.get_str("max_bits")?)?),
+        })
+    }
+}
+
+/// Parse a 64-bit hex string written by `format!("{:016x}", v)`.
+pub fn parse_bits_hex(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex u64 '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The exact quantile definition the histogram approximates.
+    fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+        let n = sorted.len();
+        let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+        sorted[rank - 1]
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = QuantileHistogram::response();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn quantiles_pin_against_exact_sort() {
+        let mut h = QuantileHistogram::response();
+        let mut rng = Rng::new(77);
+        let mut xs: Vec<f64> = (0..5000)
+            .map(|_| {
+                // Log-uniform over ~1e-4 .. ~10 s (response-time territory).
+                let u = rng.next_u64() as f64 / u64::MAX as f64;
+                1e-4 * (10.0f64 / 1e-4).powf(u)
+            })
+            .collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let got = h.quantile(q);
+            let want = exact_quantile(&xs, q);
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.07, "q={q}: got {got}, want {want} (rel {rel})");
+        }
+        assert_eq!(h.count(), 5000);
+        assert_eq!(h.min(), xs[0]);
+        assert_eq!(h.max(), xs[xs.len() - 1]);
+    }
+
+    #[test]
+    fn merge_equals_single_feed() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f64> =
+            (0..800).map(|_| (rng.next_u64() % 100_000) as f64 * 1e-5 + 1e-6).collect();
+        let mut whole = QuantileHistogram::braking();
+        for &x in &xs {
+            whole.record(x);
+        }
+        // Any partition, merged in any order, is the identical histogram.
+        let mut a = QuantileHistogram::braking();
+        let mut b = QuantileHistogram::braking();
+        let mut c = QuantileHistogram::braking();
+        for (i, &x) in xs.iter().enumerate() {
+            [&mut a, &mut b, &mut c][i % 3].record(x);
+        }
+        let mut merged = QuantileHistogram::braking();
+        merged.merge(&c);
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged, whole);
+        assert_eq!(merged.fold_hash(0xcbf2_9ce4_8422_2325), whole.fold_hash(0xcbf2_9ce4_8422_2325));
+    }
+
+    #[test]
+    fn nonfinite_samples_surface_in_the_tail() {
+        let mut h = QuantileHistogram::response();
+        for _ in 0..99 {
+            h.record(0.01);
+        }
+        h.record(f64::INFINITY); // one lost task
+        assert_eq!(h.nonfinite_count(), 1);
+        assert!((h.quantile(0.5) - 0.01).abs() / 0.01 < 0.07);
+        assert_eq!(h.quantile(1.0), f64::INFINITY, "P100 sees the lost task");
+    }
+
+    #[test]
+    fn underflow_and_overflow_are_bounded_by_min_max() {
+        let mut h = QuantileHistogram::new(-4, 8); // [2^-4, 2^4)
+        h.record(0.0);
+        h.record(1e-6); // underflow
+        h.record(1.0);
+        h.record(1e9); // finite overflow
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.quantile(0.25), 0.0, "rank 1 is the exact min");
+        assert_eq!(h.quantile(1.0), 1e9, "overflow rank returns the exact max");
+    }
+
+    #[test]
+    fn state_json_roundtrip_is_exact() {
+        let mut h = QuantileHistogram::response();
+        let mut rng = Rng::new(11);
+        for _ in 0..300 {
+            h.record((rng.next_u64() % 1000) as f64 * 1e-4);
+        }
+        h.record(f64::INFINITY);
+        let j = h.state_json();
+        let text = j.to_pretty();
+        let back =
+            QuantileHistogram::from_state_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(back.fold_hash(1), h.fold_hash(1));
+    }
+
+    #[test]
+    fn bucket_layout_mismatch_is_rejected() {
+        let j = QuantileHistogram::response().state_json();
+        // Corrupt the bucket count.
+        let mut o = j.as_obj().unwrap().clone();
+        o.insert("octaves", Json::Num(2.0));
+        assert!(QuantileHistogram::from_state_json(&Json::Obj(o)).is_err());
+    }
+}

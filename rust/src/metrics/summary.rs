@@ -1,11 +1,44 @@
 //! Per-run summary: the quantities Figures 12-14 report, aggregated from a
 //! simulation's task records — plus the sweep-level aggregator
 //! (`SweepSummary`) the experiment engine streams trial results into.
+//!
+//! `SweepSummary` is a commutative merge monoid: each group row holds
+//! mergeable moments ([`GroupStats`] — counts, log-sums for geomeans,
+//! plain sums for means, tail histograms) instead of retained runs, so
+//! partial summaries built over disjoint trial ranges recombine with
+//! [`SweepSummary::merge`].  The fleet service (`fleet` module) leans on
+//! two precise guarantees:
+//!
+//! * **Fingerprint partition-invariance.**  [`SweepSummary::fingerprint`]
+//!   folds, per group, the key bytes, the integer counts and a
+//!   commutative content hash (a wrapping sum of mixed per-run hashes),
+//!   combining groups commutatively too.  Every folded quantity is
+//!   integer-exact under any partition and merge order, so a merged fleet
+//!   sweep fingerprints identically to the single-process sweep.
+//! * **Monolithic bit-identity.**  The f64 moment sums accumulate in push
+//!   (trial-id) order, in exactly the evaluation order the old
+//!   retained-runs aggregation used, so single-process reports reproduce
+//!   pre-refactor values bit-for-bit.  Across a shard *merge* the moment
+//!   sums may differ in final ulps (f64 addition is not associative) —
+//!   which is why they inform reports but never the fingerprint.
 
 use crate::util::json::Json;
-use crate::util::stats::geomean;
 
+use super::quantile::{parse_bits_hex, QuantileHistogram};
 use super::{stm_rate, PlatformMetrics};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+/// SplitMix64 finalizer: avalanches a word so wrapping-sum combination of
+/// per-run/per-group hashes doesn't cancel structure.
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
 
 /// Aggregate results of scheduling one task queue on one platform with one
 /// scheduler — the row unit of Figures 12 and 13.
@@ -36,9 +69,16 @@ pub struct RunSummary {
     pub mean_response_s: f64,
     /// Max response time (s).
     pub max_response_s: f64,
+    /// Per-task response-time histogram (deterministic; filled by the
+    /// engine's tails probe — empty when built outside the engine).
+    pub response_hist: QuantileHistogram,
+    /// Per-task braking-distance histogram (deterministic components
+    /// only; see `engine::TailsProbe`).
+    pub braking_hist: QuantileHistogram,
 }
 
 impl RunSummary {
+    #[allow(clippy::too_many_arguments)]
     pub fn from_metrics(
         scheduler: &str,
         platform: &str,
@@ -66,6 +106,8 @@ impl RunSummary {
             gvalue: m.gvalue(),
             mean_response_s,
             max_response_s,
+            response_hist: QuantileHistogram::response(),
+            braking_hist: QuantileHistogram::braking(),
         }
     }
 
@@ -104,13 +146,13 @@ impl RunSummary {
         ])
     }
 
-    /// Fold this run's *deterministic* fields into an FNV-1a hash.
+    /// Fold this run's *deterministic* scalar fields into an FNV-1a hash.
     /// Wall-clock fields (`sched_s`, and `total_time_s` which includes it)
     /// are excluded, so the fingerprint is invariant under `--jobs`.
     pub fn fold_fingerprint(&self, mut h: u64) -> u64 {
         let mut word = |w: u64| {
             h ^= w;
-            h = h.wrapping_mul(0x100_0000_01b3);
+            h = h.wrapping_mul(FNV_PRIME);
         };
         for b in self.scheduler.bytes().chain(self.platform.bytes()) {
             word(b as u64);
@@ -130,6 +172,17 @@ impl RunSummary {
         ] {
             word(f.to_bits());
         }
+        h
+    }
+
+    /// Complete deterministic content hash of this run: the scalar fields
+    /// plus both tail histograms.  Per-run content hashes combine
+    /// *commutatively* into [`GroupStats::content_hash`], which is what
+    /// makes the sweep fingerprint partition-invariant.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = self.fold_fingerprint(FNV_OFFSET);
+        h = self.response_hist.fold_hash(h);
+        h = self.braking_hist.fold_hash(h);
         h
     }
 
@@ -153,51 +206,223 @@ pub struct SweepKey {
     pub deadline: String,
 }
 
-/// One row of a sweep: all run summaries sharing a `SweepKey`, in trial-id
-/// order, plus the aggregate statistics the figures report.
+impl SweepKey {
+    fn state_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("platform", Json::Str(self.platform.clone())),
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("area", Json::Str(self.area.clone())),
+            ("deadline", Json::Str(self.deadline.clone())),
+        ])
+    }
+
+    fn from_state_json(j: &Json) -> anyhow::Result<SweepKey> {
+        Ok(SweepKey {
+            scheduler: j.get_str("scheduler")?.to_string(),
+            platform: j.get_str("platform")?.to_string(),
+            scenario: j.get_str("scenario")?.to_string(),
+            area: j.get_str("area")?.to_string(),
+            deadline: j.get_str("deadline")?.to_string(),
+        })
+    }
+}
+
+/// Mergeable moments of one sweep row.  Counts, the commutative content
+/// hash and the histograms are integer-exact under any merge partition;
+/// the f64 sums accumulate in push order (bit-identical monolithically,
+/// ulp-level drift across shard merges — excluded from fingerprints).
+#[derive(Debug, Clone)]
+pub struct GroupStats {
+    pub trials: u64,
+    pub sum_tasks: u64,
+    pub sum_tasks_met: u64,
+    /// Σ ln(max(wait+compute, 1e-12)) — geomean numerator.
+    pub sum_ln_time: f64,
+    /// Σ ln(max(energy, 1e-12)).
+    pub sum_ln_energy: f64,
+    pub sum_stm_rate: f64,
+    pub sum_r_balance: f64,
+    pub sum_ms_per_task: f64,
+    pub sum_gvalue: f64,
+    /// Wrapping sum of `mix(run.content_hash())` over member runs — a
+    /// commutative, associative digest of the row's exact contents.
+    pub content_hash: u64,
+    /// Merged per-task response-time histogram.
+    pub response: QuantileHistogram,
+    /// Merged per-task braking-distance histogram.
+    pub braking: QuantileHistogram,
+}
+
+impl GroupStats {
+    pub fn new() -> GroupStats {
+        GroupStats {
+            trials: 0,
+            sum_tasks: 0,
+            sum_tasks_met: 0,
+            sum_ln_time: 0.0,
+            sum_ln_energy: 0.0,
+            sum_stm_rate: 0.0,
+            sum_r_balance: 0.0,
+            sum_ms_per_task: 0.0,
+            sum_gvalue: 0.0,
+            content_hash: 0,
+            response: QuantileHistogram::response(),
+            braking: QuantileHistogram::braking(),
+        }
+    }
+
+    /// Fold one run in (push order = trial-id order when fed by the
+    /// engine).  The clamp-then-`ln` per element matches
+    /// `util::stats::geomean` exactly, so monolithic aggregates keep their
+    /// pre-refactor bits.
+    pub fn push(&mut self, run: &RunSummary) {
+        self.trials += 1;
+        self.sum_tasks += run.tasks;
+        self.sum_tasks_met += run.tasks_met;
+        self.sum_ln_time += run.work_time_s().max(1e-12).ln();
+        self.sum_ln_energy += run.energy_j.max(1e-12).ln();
+        self.sum_stm_rate += run.stm_rate();
+        self.sum_r_balance += run.r_balance;
+        self.sum_ms_per_task += run.ms_per_task();
+        self.sum_gvalue += run.gvalue;
+        self.content_hash = self.content_hash.wrapping_add(mix(run.content_hash()));
+        self.response.merge(&run.response_hist);
+        self.braking.merge(&run.braking_hist);
+    }
+
+    /// Fold another partial aggregate in (commutative and associative on
+    /// every integer field; f64 sums may differ in ulps across orders).
+    pub fn merge(&mut self, other: &GroupStats) {
+        self.trials += other.trials;
+        self.sum_tasks += other.sum_tasks;
+        self.sum_tasks_met += other.sum_tasks_met;
+        self.sum_ln_time += other.sum_ln_time;
+        self.sum_ln_energy += other.sum_ln_energy;
+        self.sum_stm_rate += other.sum_stm_rate;
+        self.sum_r_balance += other.sum_r_balance;
+        self.sum_ms_per_task += other.sum_ms_per_task;
+        self.sum_gvalue += other.sum_gvalue;
+        self.content_hash = self.content_hash.wrapping_add(other.content_hash);
+        self.response.merge(&other.response);
+        self.braking.merge(&other.braking);
+    }
+
+    fn mean_of(&self, sum: f64) -> f64 {
+        if self.trials == 0 {
+            0.0
+        } else {
+            sum / self.trials as f64
+        }
+    }
+
+    fn geomean_of(&self, sum_ln: f64) -> f64 {
+        if self.trials == 0 {
+            0.0
+        } else {
+            (sum_ln / self.trials as f64).exp()
+        }
+    }
+
+    /// Exact checkpoint form: integer counters as JSON numbers (exact
+    /// below 2^53), f64 sums and the content hash as bit-level hex so
+    /// resume reproduces the in-memory state bit-for-bit.
+    pub fn state_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("trials", Json::Num(self.trials as f64)),
+            ("sum_tasks", Json::Num(self.sum_tasks as f64)),
+            ("sum_tasks_met", Json::Num(self.sum_tasks_met as f64)),
+            ("sum_ln_time_bits", Json::Str(format!("{:016x}", self.sum_ln_time.to_bits()))),
+            ("sum_ln_energy_bits", Json::Str(format!("{:016x}", self.sum_ln_energy.to_bits()))),
+            ("sum_stm_rate_bits", Json::Str(format!("{:016x}", self.sum_stm_rate.to_bits()))),
+            ("sum_r_balance_bits", Json::Str(format!("{:016x}", self.sum_r_balance.to_bits()))),
+            (
+                "sum_ms_per_task_bits",
+                Json::Str(format!("{:016x}", self.sum_ms_per_task.to_bits())),
+            ),
+            ("sum_gvalue_bits", Json::Str(format!("{:016x}", self.sum_gvalue.to_bits()))),
+            ("content_hash", Json::Str(format!("{:016x}", self.content_hash))),
+            ("response", self.response.state_json()),
+            ("braking", self.braking.state_json()),
+        ])
+    }
+
+    pub fn from_state_json(j: &Json) -> anyhow::Result<GroupStats> {
+        let f = |key: &str| -> anyhow::Result<f64> {
+            Ok(f64::from_bits(parse_bits_hex(j.get_str(key)?)?))
+        };
+        Ok(GroupStats {
+            trials: j.get_f64("trials")? as u64,
+            sum_tasks: j.get_f64("sum_tasks")? as u64,
+            sum_tasks_met: j.get_f64("sum_tasks_met")? as u64,
+            sum_ln_time: f("sum_ln_time_bits")?,
+            sum_ln_energy: f("sum_ln_energy_bits")?,
+            sum_stm_rate: f("sum_stm_rate_bits")?,
+            sum_r_balance: f("sum_r_balance_bits")?,
+            sum_ms_per_task: f("sum_ms_per_task_bits")?,
+            sum_gvalue: f("sum_gvalue_bits")?,
+            content_hash: parse_bits_hex(j.get_str("content_hash")?)?,
+            response: QuantileHistogram::from_state_json(j.get("response")?)?,
+            braking: QuantileHistogram::from_state_json(j.get("braking")?)?,
+        })
+    }
+}
+
+impl Default for GroupStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One row of a sweep: the mergeable aggregate of every run sharing a
+/// `SweepKey`.
 #[derive(Debug, Clone)]
 pub struct SweepGroup {
     pub key: SweepKey,
-    pub runs: Vec<RunSummary>,
+    pub stats: GroupStats,
 }
 
 impl SweepGroup {
     pub fn trials(&self) -> usize {
-        self.runs.len()
+        self.stats.trials as usize
     }
 
     /// Geometric mean of wait+compute time (Fig. 12(a)'s M column, minus
     /// the nondeterministic scheduler wall clock).
     pub fn geomean_time_s(&self) -> f64 {
-        geomean(&self.runs.iter().map(|s| s.work_time_s().max(1e-12)).collect::<Vec<_>>())
+        self.stats.geomean_of(self.stats.sum_ln_time)
     }
 
     /// Geometric mean energy (Fig. 12(d)).
     pub fn geomean_energy_j(&self) -> f64 {
-        geomean(&self.runs.iter().map(|s| s.energy_j.max(1e-12)).collect::<Vec<_>>())
+        self.stats.geomean_of(self.stats.sum_ln_energy)
     }
 
     pub fn mean_stm_rate(&self) -> f64 {
-        self.mean(|s| s.stm_rate())
+        self.stats.mean_of(self.stats.sum_stm_rate)
     }
 
     pub fn mean_r_balance(&self) -> f64 {
-        self.mean(|s| s.r_balance)
+        self.stats.mean_of(self.stats.sum_r_balance)
     }
 
     pub fn mean_ms_per_task(&self) -> f64 {
-        self.mean(|s| s.ms_per_task())
+        self.stats.mean_of(self.stats.sum_ms_per_task)
     }
 
     pub fn mean_gvalue(&self) -> f64 {
-        self.mean(|s| s.gvalue)
+        self.stats.mean_of(self.stats.sum_gvalue)
     }
 
-    fn mean<F: Fn(&RunSummary) -> f64>(&self, f: F) -> f64 {
-        if self.runs.is_empty() {
-            return 0.0;
-        }
-        self.runs.iter().map(f).sum::<f64>() / self.runs.len() as f64
+    /// Streaming response-time quantile (q in [0,1]); `+inf` when the
+    /// rank falls among lost tasks.
+    pub fn response_quantile_s(&self, q: f64) -> f64 {
+        self.stats.response.quantile(q)
+    }
+
+    /// Streaming braking-distance quantile (q in [0,1]).
+    pub fn braking_quantile_m(&self, q: f64) -> f64 {
+        self.stats.braking.quantile(q)
     }
 }
 
@@ -216,8 +441,24 @@ impl SweepSummary {
     /// insertion order is trial-id order when fed sequentially).
     pub fn push(&mut self, key: SweepKey, run: RunSummary) {
         match self.groups.iter_mut().find(|g| g.key == key) {
-            Some(g) => g.runs.push(run),
-            None => self.groups.push(SweepGroup { key, runs: vec![run] }),
+            Some(g) => g.stats.push(&run),
+            None => {
+                let mut stats = GroupStats::new();
+                stats.push(&run);
+                self.groups.push(SweepGroup { key, stats });
+            }
+        }
+    }
+
+    /// Fold another summary in, group by group.  Commutative and
+    /// associative on every fingerprint-relevant field (see the module
+    /// docs for the f64-moment caveat) — the `fleet merge` primitive.
+    pub fn merge(&mut self, other: &SweepSummary) {
+        for g in &other.groups {
+            match self.groups.iter_mut().find(|m| m.key == g.key) {
+                Some(m) => m.stats.merge(&g.stats),
+                None => self.groups.push(g.clone()),
+            }
         }
     }
 
@@ -227,7 +468,7 @@ impl SweepSummary {
 
     /// Total runs across all groups.
     pub fn total_runs(&self) -> usize {
-        self.groups.iter().map(|g| g.runs.len()).sum()
+        self.groups.iter().map(|g| g.trials()).sum()
     }
 
     /// Find a group by scheduler display name (first match).
@@ -235,11 +476,15 @@ impl SweepSummary {
         self.groups.iter().find(|g| g.key.scheduler == scheduler)
     }
 
-    /// Order-and-bit-exact fingerprint over every deterministic field of
-    /// every run.  `Engine` guarantees this is identical for any `--jobs`.
+    /// Bit-exact fingerprint over every deterministic field of every run,
+    /// invariant under `--jobs`, shard partition and merge order: each
+    /// group contributes `mix(fnv(key) · counts · content_hash)` to a
+    /// wrapping sum, and each run's contribution to `content_hash` is
+    /// itself a commutative wrapping sum.
     pub fn fingerprint(&self) -> u64 {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV offset basis
+        let mut acc: u64 = 0;
         for g in &self.groups {
+            let mut h: u64 = FNV_OFFSET;
             for b in g
                 .key
                 .scheduler
@@ -250,15 +495,20 @@ impl SweepSummary {
                 .chain(g.key.deadline.bytes())
             {
                 h ^= b as u64;
-                h = h.wrapping_mul(0x100_0000_01b3);
+                h = h.wrapping_mul(FNV_PRIME);
             }
-            for run in &g.runs {
-                h = run.fold_fingerprint(h);
+            for w in [g.stats.trials, g.stats.sum_tasks, g.stats.sum_tasks_met, g.stats.content_hash]
+            {
+                h ^= w;
+                h = h.wrapping_mul(FNV_PRIME);
             }
+            acc = acc.wrapping_add(mix(h));
         }
-        h
+        mix(acc ^ FNV_OFFSET)
     }
 
+    /// Report form: one object per row with the derived aggregates and
+    /// the streaming tail percentiles.
     pub fn to_json(&self) -> Json {
         Json::Arr(
             self.groups
@@ -271,17 +521,61 @@ impl SweepSummary {
                         ("area", Json::Str(g.key.area.clone())),
                         ("deadline", Json::Str(g.key.deadline.clone())),
                         ("trials", Json::Num(g.trials() as f64)),
+                        ("tasks", Json::Num(g.stats.sum_tasks as f64)),
+                        ("tasks_met", Json::Num(g.stats.sum_tasks_met as f64)),
                         ("geomean_time_s", Json::Num(g.geomean_time_s())),
                         ("geomean_energy_j", Json::Num(g.geomean_energy_j())),
                         ("mean_stm_rate", Json::Num(g.mean_stm_rate())),
                         ("mean_r_balance", Json::Num(g.mean_r_balance())),
                         ("mean_ms_per_task", Json::Num(g.mean_ms_per_task())),
                         ("mean_gvalue", Json::Num(g.mean_gvalue())),
-                        ("runs", Json::Arr(g.runs.iter().map(|r| r.to_json()).collect())),
+                        ("p50_response_s", Json::Num(g.response_quantile_s(0.50))),
+                        ("p99_response_s", Json::Num(g.response_quantile_s(0.99))),
+                        ("p999_response_s", Json::Num(g.response_quantile_s(0.999))),
+                        ("p50_braking_m", Json::Num(g.braking_quantile_m(0.50))),
+                        ("p99_braking_m", Json::Num(g.braking_quantile_m(0.99))),
+                        ("p999_braking_m", Json::Num(g.braking_quantile_m(0.999))),
+                        ("content_hash", Json::Str(format!("{:016x}", g.stats.content_hash))),
                     ])
                 })
                 .collect(),
         )
+    }
+
+    /// Exact checkpoint form (see [`GroupStats::state_json`]); the inverse
+    /// [`SweepSummary::from_state_json`] reproduces the in-memory summary
+    /// bit-for-bit, fingerprint included.
+    pub fn state_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("version", Json::Num(1.0)),
+            (
+                "groups",
+                Json::Arr(
+                    self.groups
+                        .iter()
+                        .map(|g| {
+                            Json::from_pairs(vec![
+                                ("key", g.key.state_json()),
+                                ("stats", g.stats.state_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_state_json(j: &Json) -> anyhow::Result<SweepSummary> {
+        let version = j.get_f64("version").map_err(anyhow::Error::from)? as u64;
+        anyhow::ensure!(version == 1, "unsupported summary state version {version}");
+        let mut groups = Vec::new();
+        for g in j.get_arr("groups")? {
+            groups.push(SweepGroup {
+                key: SweepKey::from_state_json(g.get("key")?)?,
+                stats: GroupStats::from_state_json(g.get("stats")?)?,
+            });
+        }
+        Ok(SweepSummary { groups })
     }
 }
 
@@ -295,6 +589,15 @@ mod tests {
         m.per_accel[0].update(1.0, 2.0, 2.0, 1.0, 0.9);
         m.per_accel[1].update(1.0, 1.0, 1.0, -1.0, 0.6);
         RunSummary::from_metrics("test", "p", &m, 1, 0.5, 0.1, 1.5, 2.0)
+    }
+
+    /// A run with distinct content (energy bump + a few histogram samples).
+    fn varied(bump: f64) -> RunSummary {
+        let mut s = summary();
+        s.energy_j += bump;
+        s.response_hist.record(0.01 + bump * 1e-3);
+        s.braking_hist.record(5.0 + bump);
+        s
     }
 
     #[test]
@@ -360,6 +663,18 @@ mod tests {
     }
 
     #[test]
+    fn fingerprint_sees_histogram_content() {
+        let mk = |sample: f64| {
+            let mut s = summary();
+            s.response_hist.record(sample);
+            let mut sw = SweepSummary::new();
+            sw.push(key("a"), s);
+            sw
+        };
+        assert_ne!(mk(0.01).fingerprint(), mk(10.0).fingerprint());
+    }
+
+    #[test]
     fn sweep_aggregates_match_hand_math() {
         let mut sw = SweepSummary::new();
         sw.push(key("a"), summary());
@@ -369,9 +684,10 @@ mod tests {
         assert!((g.geomean_time_s() - s.work_time_s()).abs() < 1e-9);
         assert!((g.mean_stm_rate() - s.stm_rate()).abs() < 1e-12);
         assert!((g.geomean_energy_j() - s.energy_j).abs() < 1e-9);
-        // JSON renders one row with both runs.
+        // JSON renders one row with the aggregates and percentiles.
         let j = sw.to_json().to_string();
         assert!(j.contains("geomean_time_s"));
+        assert!(j.contains("p99_response_s"));
     }
 
     #[test]
@@ -384,5 +700,89 @@ mod tests {
         // Render + parse back.
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert!((parsed.as_obj().unwrap().get("energy_j").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_is_commutative_and_associative() {
+        // Three partial summaries over disjoint "trial" sets, with two
+        // groups interleaved differently in each part.
+        let part = |bumps: &[(f64, &str)]| {
+            let mut sw = SweepSummary::new();
+            for &(b, k) in bumps {
+                sw.push(key(k), varied(b));
+            }
+            sw
+        };
+        let a = part(&[(1.0, "x"), (2.0, "y")]);
+        let b = part(&[(3.0, "y"), (4.0, "x"), (5.0, "x")]);
+        let c = part(&[(6.0, "y")]);
+
+        let fold = |parts: &[&SweepSummary]| {
+            let mut m = SweepSummary::new();
+            for p in parts {
+                m.merge(p);
+            }
+            m
+        };
+        let abc = fold(&[&a, &b, &c]);
+        let cba = fold(&[&c, &b, &a]);
+        let bac = fold(&[&b, &a, &c]);
+        // (a·b)·c == a·(b·c)
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+
+        let f = abc.fingerprint();
+        for (name, m) in [("cba", &cba), ("bac", &bac), ("(ab)c", &ab_c), ("a(bc)", &a_bc)] {
+            assert_eq!(m.fingerprint(), f, "merge order {name} drifted");
+            assert_eq!(m.total_runs(), 6, "{name}");
+        }
+        // And the monolithic push order agrees.
+        let mono = part(&[(1.0, "x"), (2.0, "y"), (3.0, "y"), (4.0, "x"), (5.0, "x"), (6.0, "y")]);
+        assert_eq!(mono.fingerprint(), f, "merged != monolithic");
+        // Integer moments agree exactly with the monolithic fold.
+        for (gm, gg) in mono.groups.iter().zip(&abc.groups) {
+            assert_eq!(gm.key, gg.key);
+            assert_eq!(gm.stats.trials, gg.stats.trials);
+            assert_eq!(gm.stats.sum_tasks, gg.stats.sum_tasks);
+            assert_eq!(gm.stats.content_hash, gg.stats.content_hash);
+            assert_eq!(gm.stats.response, gg.stats.response);
+            assert_eq!(gm.stats.braking, gg.stats.braking);
+        }
+    }
+
+    #[test]
+    fn state_json_roundtrip_preserves_fingerprint() {
+        let mut sw = SweepSummary::new();
+        sw.push(key("a"), varied(0.25));
+        sw.push(key("b"), varied(1.75));
+        sw.push(key("a"), varied(3.5));
+        let text = sw.state_json().to_pretty();
+        let back = SweepSummary::from_state_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.fingerprint(), sw.fingerprint());
+        assert_eq!(back.total_runs(), sw.total_runs());
+        for (x, y) in sw.groups.iter().zip(&back.groups) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.stats.sum_ln_time.to_bits(), y.stats.sum_ln_time.to_bits());
+            assert_eq!(x.stats.sum_gvalue.to_bits(), y.stats.sum_gvalue.to_bits());
+            assert_eq!(x.stats.response, y.stats.response);
+        }
+    }
+
+    #[test]
+    fn empty_merge_is_identity() {
+        let mut sw = SweepSummary::new();
+        sw.push(key("a"), varied(1.0));
+        let f = sw.fingerprint();
+        sw.merge(&SweepSummary::new());
+        assert_eq!(sw.fingerprint(), f);
+        let mut e = SweepSummary::new();
+        e.merge(&sw);
+        assert_eq!(e.fingerprint(), f);
     }
 }

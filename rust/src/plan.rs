@@ -45,6 +45,15 @@ impl Scenario {
     }
 }
 
+/// The seed list [`ExperimentPlan::replicates`] expands to: replicate 0 is
+/// `base` itself, replicate k > 0 the k-th `Rng::fork` stream.  Shared
+/// with `config` and the fleet planner so every caller derives the same
+/// seeds for the same `(base, n)`.
+pub fn replicate_seeds(base: u64, n: usize) -> Vec<u64> {
+    let mut parent = Rng::new(base);
+    (0..n).map(|k| if k == 0 { base } else { parent.fork(k as u64).next_u64() }).collect()
+}
+
 /// Build the task queue for queue-index `index` of a distance list, using
 /// the same seed derivation as the legacy `harness::make_queues`: skip the
 /// first `index` parent draws, then fork stream `index`.
@@ -251,10 +260,7 @@ impl ExperimentPlan {
     /// is `base` itself (legacy-compatible), replicate k > 0 is the k-th
     /// forked stream.
     pub fn replicates(mut self, base: u64, n: usize) -> Self {
-        let mut parent = Rng::new(base);
-        self.seeds = (0..n)
-            .map(|k| if k == 0 { base } else { parent.fork(k as u64).next_u64() })
-            .collect();
+        self.seeds = replicate_seeds(base, n);
         self
     }
 

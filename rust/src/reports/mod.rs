@@ -23,7 +23,8 @@ use crate::workload::{model, ALL_MODELS};
 pub fn sweep_table(s: &SweepSummary) -> Table {
     let mut t = Table::new([
         "Scheduler", "Platform", "Scenario", "Area", "DL", "Queues", "Time M (s)",
-        "Energy M (J)", "R_Balance", "MS/task", "STMRate",
+        "Energy M (J)", "R_Balance", "MS/task", "STMRate", "Rsp P50 (ms)", "Rsp P99 (ms)",
+        "Rsp P99.9 (ms)", "Brk P50 (m)", "Brk P99 (m)", "Brk P99.9 (m)",
     ]);
     for g in &s.groups {
         t.row([
@@ -38,6 +39,12 @@ pub fn sweep_table(s: &SweepSummary) -> Table {
             f2(g.mean_r_balance()),
             f2(g.mean_ms_per_task()),
             pct(g.mean_stm_rate()),
+            f2(g.response_quantile_s(0.50) * 1e3),
+            f2(g.response_quantile_s(0.99) * 1e3),
+            f2(g.response_quantile_s(0.999) * 1e3),
+            f2(g.braking_quantile_m(0.50)),
+            f2(g.braking_quantile_m(0.99)),
+            f2(g.braking_quantile_m(0.999)),
         ]);
     }
     t
@@ -356,6 +363,8 @@ mod tests {
         assert!(s.contains("STMRate"), "{s}");
         assert!(s.contains("Scenario"), "{s}");
         assert!(s.contains("night-rain"), "{s}");
+        assert!(s.contains("Rsp P99 (ms)"), "{s}");
+        assert!(s.contains("Brk P99.9 (m)"), "{s}");
     }
 
     #[test]

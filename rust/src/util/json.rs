@@ -229,10 +229,12 @@ impl Json {
     }
 
     /// Write the pretty rendering to a file — the one JSON writer behind
-    /// the CLI's `--json <path>` reports and the `BENCH_*.json` artifacts,
-    /// so every machine-readable output shares one format.
+    /// the CLI's `--json <path>` reports, the `BENCH_*.json` artifacts and
+    /// the fleet checkpoints, so every machine-readable output shares one
+    /// format.  Atomic: a reader (or a kill) never observes a truncated
+    /// file.
     pub fn write_to(&self, path: &std::path::Path) -> std::io::Result<()> {
-        std::fs::write(path, self.to_pretty())
+        write_atomic(path, &self.to_pretty())
     }
 
     fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
@@ -308,6 +310,31 @@ fn write_num(out: &mut String, x: f64) {
         // JSON has no NaN/Inf; emit null like most writers.
         out.push_str("null");
     }
+}
+
+/// Atomically replace `path` with `text`: write a hidden temp file in the
+/// same directory (same filesystem, so the rename is atomic) and rename it
+/// over the target.  A process killed mid-write leaves either the old
+/// file or the new one — never a truncated mix — which is what makes
+/// fleet checkpoints safe to resume from after a kill.
+pub fn write_atomic(path: &std::path::Path, text: &str) -> std::io::Result<()> {
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    let name = path
+        .file_name()
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidInput, "path has no file name"))?
+        .to_string_lossy()
+        .into_owned();
+    let tmp_name = format!(".{name}.tmp.{}", std::process::id());
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    std::fs::write(&tmp, text)?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
+    Ok(())
 }
 
 fn write_str(out: &mut String, s: &str) {
@@ -624,6 +651,25 @@ mod tests {
         v.write_to(&path).unwrap();
         let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(v, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join("hmai_json_atomic_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.json");
+        super::write_atomic(&path, "{\"v\": 1}\n").unwrap();
+        super::write_atomic(&path, "{\"v\": 2}\n").unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get_f64("v").unwrap(), 2.0);
+        // No temp droppings survive a successful replace.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
         std::fs::remove_file(&path).ok();
     }
 

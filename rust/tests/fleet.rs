@@ -1,0 +1,183 @@
+//! Fleet sweep service integration suite: the merged report of a sharded,
+//! checkpoint-resumable sweep must be fingerprint-identical to the
+//! monolithic `sweep_streaming` run — for any shard count, and across a
+//! kill/resume cycle — and the streaming tail percentiles must pin
+//! against exact sort-based quantiles of the per-task records.
+
+use std::path::{Path, PathBuf};
+
+use hmai::config::ExperimentConfig;
+use hmai::engine::Engine;
+use hmai::fleet::{merge_checkpoints, run_shard, FleetPlan, ShardCheckpoint, WorkOptions};
+use hmai::metrics::summary::SweepSummary;
+use hmai::safety::braking::{braking_distance_m, BrakingBreakdown};
+use hmai::sched::Registry;
+use hmai::sim::SimOptions;
+
+/// 2 schedulers × 2 distances × 2 replicate seeds = 8 trials.
+fn fleet_plan() -> FleetPlan {
+    let mut cfg = ExperimentConfig::default();
+    cfg.scheduler = "rr,minmin".into();
+    cfg.env.distances_m = vec![40.0, 60.0];
+    cfg.env.seed = 9;
+    cfg.replicates = 2;
+    FleetPlan::from_config(&cfg, 1).unwrap()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hmai_fleet_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn monolithic(plan: &FleetPlan, reg: &Registry) -> SweepSummary {
+    let ep = plan.experiment_plan().unwrap();
+    Engine::new(reg).events(plan.events).sweep_streaming(&ep).unwrap()
+}
+
+fn run_all_shards(
+    plan: &FleetPlan,
+    reg: &Registry,
+    dir: &Path,
+    opts: WorkOptions,
+) -> Vec<ShardCheckpoint> {
+    let resolved = plan.resolve().unwrap();
+    (0..resolved.shards.len())
+        .map(|s| {
+            let path = dir.join(format!("shard_{s}.json"));
+            run_shard(reg, plan, &resolved, s, &path, opts).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn any_partition_matches_monolithic_fingerprint() {
+    let reg = Registry::new();
+    let mut plan = fleet_plan();
+    let whole = monolithic(&plan, &reg);
+    for shards in [1usize, 2, 4] {
+        plan.shards = shards;
+        let resolved = plan.resolve().unwrap();
+        let sub = temp_dir(&format!("partition_{shards}"));
+        let parts = run_all_shards(
+            &plan,
+            &reg,
+            &sub,
+            WorkOptions { jobs: 1, checkpoint_every: 3, max_trials: None },
+        );
+        let merged = merge_checkpoints(&resolved, &parts).unwrap();
+        assert_eq!(
+            merged.fingerprint(),
+            whole.fingerprint(),
+            "{shards}-shard merge drifted from the monolithic sweep"
+        );
+        assert_eq!(merged.total_runs(), whole.total_runs());
+        std::fs::remove_dir_all(&sub).ok();
+    }
+}
+
+#[test]
+fn kill_mid_shard_then_resume_is_invisible() {
+    let reg = Registry::new();
+    let mut plan = fleet_plan();
+    plan.shards = 2;
+    let resolved = plan.resolve().unwrap();
+    let whole = monolithic(&plan, &reg);
+    let dir = temp_dir("resume");
+    let p0 = dir.join("shard_0.json");
+    let p1 = dir.join("shard_1.json");
+
+    // "Kill" shard 0 after two trials: a valid mid-shard checkpoint.
+    let stop = WorkOptions { jobs: 1, checkpoint_every: 1, max_trials: Some(2) };
+    let partial = run_shard(&reg, &plan, &resolved, 0, &p0, stop).unwrap();
+    assert!(!partial.complete(), "max_trials must stop mid-shard");
+    assert_eq!(partial.next_trial, resolved.shards[0].lo + 2);
+
+    // Resume from the on-disk checkpoint and finish both shards.
+    let go = WorkOptions { jobs: 1, checkpoint_every: 3, max_trials: None };
+    let s0 = run_shard(&reg, &plan, &resolved, 0, &p0, go).unwrap();
+    let s1 = run_shard(&reg, &plan, &resolved, 1, &p1, go).unwrap();
+    assert!(s0.complete() && s1.complete());
+
+    let merged = merge_checkpoints(&resolved, &[s0, s1]).unwrap();
+    assert_eq!(
+        merged.fingerprint(),
+        whole.fingerprint(),
+        "kill/resume cycle changed the merged result"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_file_roundtrip_is_byte_exact() {
+    let reg = Registry::new();
+    let mut plan = fleet_plan();
+    plan.shards = 2;
+    let resolved = plan.resolve().unwrap();
+    let dir = temp_dir("roundtrip");
+    let path = dir.join("shard_0.json");
+    let opts = WorkOptions { jobs: 1, checkpoint_every: 2, max_trials: None };
+    let live = run_shard(&reg, &plan, &resolved, 0, &path, opts).unwrap();
+
+    // The on-disk state reloads to the same fingerprint, and re-serializing
+    // the loaded state reproduces the file byte-for-byte (f64 sums travel
+    // as bit hex, so nothing is lost to decimal formatting).
+    let back = ShardCheckpoint::load(&path).unwrap();
+    assert_eq!(back.spec, live.spec);
+    assert_eq!(back.next_trial, live.next_trial);
+    assert_eq!(back.summary.fingerprint(), live.summary.fingerprint());
+    assert_eq!(back.to_json().to_pretty(), live.to_json().to_pretty());
+
+    // A second load of a re-save is equally stable.
+    let resaved = dir.join("resaved.json");
+    back.save(&resaved).unwrap();
+    assert_eq!(
+        std::fs::read_to_string(&path).unwrap(),
+        std::fs::read_to_string(&resaved).unwrap()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn streaming_tails_pin_against_exact_quantiles() {
+    let reg = Registry::new();
+    let plan = fleet_plan();
+    let trials = plan.experiment_plan().unwrap().trials().unwrap();
+    let engine = Engine::new(&reg).sim_options(SimOptions { record_tasks: true });
+    for trial in trials.iter().take(4) {
+        let r = engine.run_trial(trial).unwrap();
+        assert!(!r.records.is_empty());
+        let v = trial.scenario.area.max_velocity_ms();
+        let resp: Vec<f64> = r.records.iter().map(|t| t.response_s).collect();
+        let brk: Vec<f64> = r
+            .records
+            .iter()
+            .map(|t| braking_distance_m(v, &BrakingBreakdown::new(t.wait_s, 0.0, t.compute_s)))
+            .collect();
+        assert_eq!(r.summary.response_hist.count(), resp.len() as u64);
+        assert_eq!(r.summary.braking_hist.count(), brk.len() as u64);
+        for (vals, hist, what) in [
+            (&resp, &r.summary.response_hist, "response"),
+            (&brk, &r.summary.braking_hist, "braking"),
+        ] {
+            let mut sorted = vals.to_vec();
+            sorted.sort_by(f64::total_cmp);
+            let n = sorted.len();
+            for q in [0.50, 0.90, 0.99, 0.999] {
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let exact = sorted[rank - 1];
+                let got = hist.quantile(q);
+                if !exact.is_finite() {
+                    assert!(!got.is_finite(), "trial {} {what} q{q}", trial.id);
+                    continue;
+                }
+                let rel = (got - exact).abs() / exact.abs().max(1e-12);
+                assert!(
+                    rel <= 0.07,
+                    "trial {} {what} q{q}: hist {got} vs exact {exact} (rel {rel:.4})",
+                    trial.id
+                );
+            }
+        }
+    }
+}

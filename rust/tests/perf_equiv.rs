@@ -86,35 +86,40 @@ fn optimized_matches_reference_on_mixed_core_platform() {
 
 #[test]
 fn reference_sweep_rows_align_one_to_one() {
-    // Beyond the fingerprint: identical group keys and per-field bits on
-    // a small sweep, so a future drift points at the exact row.
+    // Beyond the fingerprint: identical trial order and per-field bits on
+    // a small sweep, so a future drift points at the exact run.
     let plan = ExperimentPlan::new()
         .scenarios(["urban-rush"])
         .distances([40.0])
         .schedulers([SchedulerSpec::MinMin, SchedulerSpec::Ga, SchedulerSpec::Sa])
         .seed(5);
-    let fast = Engine::new(&Registry::new()).sweep_streaming(&plan).unwrap();
-    let slow = Engine::new(&reference_registry()).sweep_streaming(&plan).unwrap();
-    assert_eq!(fast.groups.len(), slow.groups.len());
-    for (a, b) in fast.groups.iter().zip(&slow.groups) {
-        assert_eq!(a.key, b.key);
-        assert_eq!(a.runs.len(), b.runs.len());
-        for (x, y) in a.runs.iter().zip(&b.runs) {
-            assert_eq!(x.tasks, y.tasks, "{:?}", a.key);
-            assert_eq!(x.tasks_met, y.tasks_met, "{:?}", a.key);
-            for (fa, fb, field) in [
-                (x.energy_j, y.energy_j, "energy_j"),
-                (x.makespan_s, y.makespan_s, "makespan_s"),
-                (x.wait_s, y.wait_s, "wait_s"),
-                (x.compute_s, y.compute_s, "compute_s"),
-                (x.r_balance, y.r_balance, "r_balance"),
-                (x.ms_total, y.ms_total, "ms_total"),
-                (x.gvalue, y.gvalue, "gvalue"),
-                (x.mean_response_s, y.mean_response_s, "mean_response_s"),
-                (x.max_response_s, y.max_response_s, "max_response_s"),
-            ] {
-                assert_eq!(fa.to_bits(), fb.to_bits(), "{:?} field {field}", a.key);
-            }
+    let fast = Engine::new(&Registry::new()).run(&plan).unwrap();
+    let slow = Engine::new(&reference_registry()).run(&plan).unwrap();
+    assert_eq!(fast.len(), slow.len());
+    for (a, b) in fast.iter().zip(&slow) {
+        assert_eq!(a.trial.id, b.trial.id);
+        let (x, y) = (&a.summary, &b.summary);
+        assert_eq!(x.tasks, y.tasks, "trial {}", a.trial.id);
+        assert_eq!(x.tasks_met, y.tasks_met, "trial {}", a.trial.id);
+        for (fa, fb, field) in [
+            (x.energy_j, y.energy_j, "energy_j"),
+            (x.makespan_s, y.makespan_s, "makespan_s"),
+            (x.wait_s, y.wait_s, "wait_s"),
+            (x.compute_s, y.compute_s, "compute_s"),
+            (x.r_balance, y.r_balance, "r_balance"),
+            (x.ms_total, y.ms_total, "ms_total"),
+            (x.gvalue, y.gvalue, "gvalue"),
+            (x.mean_response_s, y.mean_response_s, "mean_response_s"),
+            (x.max_response_s, y.max_response_s, "max_response_s"),
+        ] {
+            assert_eq!(fa.to_bits(), fb.to_bits(), "trial {} field {field}", a.trial.id);
         }
+        // The streaming tail histograms are part of the result too.
+        assert_eq!(
+            x.content_hash(),
+            y.content_hash(),
+            "trial {} content hash (histograms?)",
+            a.trial.id
+        );
     }
 }
