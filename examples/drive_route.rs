@@ -18,6 +18,9 @@
 //!         [--ckpt checkpoints/flexai_ub.json] [--area ub | --scenario night-rain] \
 //!         [--events] [--seed 42] [--jobs 4]
 
+// Examples narrate on stderr when artifacts are missing (deny carve-out).
+#![allow(clippy::print_stderr)]
+
 use hmai::config::ExperimentConfig;
 use hmai::engine::{Engine, TrialResult};
 use hmai::harness;

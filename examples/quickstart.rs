@@ -12,6 +12,9 @@
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
+// Examples narrate on stderr when artifacts are missing (deny carve-out).
+#![allow(clippy::print_stderr)]
+
 use hmai::config::ExperimentConfig;
 use hmai::engine::Engine;
 use hmai::env::Area;

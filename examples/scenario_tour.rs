@@ -15,6 +15,9 @@
 //! Without `make artifacts`, FlexAI is skipped and the tour covers the
 //! remaining registered schedulers.
 
+// Examples narrate on stderr when artifacts are missing (deny carve-out).
+#![allow(clippy::print_stderr)]
+
 use hmai::config::ExperimentConfig;
 use hmai::engine::Engine;
 use hmai::env::scenario;

@@ -9,6 +9,9 @@
 //! the shield mainly protects the *undertrained* agent — a converged
 //! policy rarely needs the fallback.
 
+// Bench drivers report progress on stderr (package-wide deny carve-out).
+#![allow(clippy::print_stderr)]
+
 #[path = "common.rs"]
 mod common;
 

@@ -5,6 +5,9 @@
 //! Full-scale training lives in `examples/train_flexai.rs`; this bench
 //! runs a short in-process training and checks the convergence shape.
 
+// Bench drivers report progress on stderr (package-wide deny carve-out).
+#![allow(clippy::print_stderr)]
+
 #[path = "common.rs"]
 mod common;
 

@@ -11,6 +11,9 @@
 //! Set HMAI_BENCH_AREAS to restrict areas, HMAI_BENCH_SCALE to resize,
 //! HMAI_BENCH_JOBS to pin the worker count.
 
+// Bench drivers report progress on stderr (package-wide deny carve-out).
+#![allow(clippy::print_stderr)]
+
 #[path = "common.rs"]
 mod common;
 

@@ -6,6 +6,9 @@
 //! Both deadline regimes run as one `ExperimentPlan` deadline sweep
 //! through the `Engine` worker pool.
 
+// Bench drivers report progress on stderr (package-wide deny carve-out).
+#![allow(clippy::print_stderr)]
+
 #[path = "common.rs"]
 mod common;
 

@@ -11,6 +11,9 @@
 //! Every scheduler's probe run executes as one `Engine` trial (with task
 //! records on), so the whole figure is a single parallel sweep.
 
+// Bench drivers report progress on stderr (package-wide deny carve-out).
+#![allow(clippy::print_stderr)]
+
 #[path = "common.rs"]
 mod common;
 

@@ -14,6 +14,9 @@
 //! regressions.  Refresh the baseline by copying a CI `BENCH_PERF.json`
 //! artifact over `benches/perf_baseline.json`.
 
+// Bench drivers report progress on stderr (package-wide deny carve-out).
+#![allow(clippy::print_stderr)]
+
 #[path = "common.rs"]
 mod common;
 

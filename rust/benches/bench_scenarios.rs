@@ -6,6 +6,9 @@
 //!
 //! Set HMAI_BENCH_SCALE to resize routes, HMAI_BENCH_JOBS to pin workers.
 
+// Bench drivers report progress on stderr (package-wide deny carve-out).
+#![allow(clippy::print_stderr)]
+
 #[path = "common.rs"]
 mod common;
 

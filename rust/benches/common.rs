@@ -6,6 +6,9 @@
 //! regenerate the figures at full paper scale.  `HMAI_BENCH_JOBS` sets the
 //! engine worker count (default: all cores).
 
+// Bench drivers report progress on stderr (package-wide deny carve-out).
+#![allow(clippy::print_stderr)]
+
 #![allow(dead_code)] // each bench uses a subset of these helpers
 
 use std::sync::Arc;

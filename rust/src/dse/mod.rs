@@ -18,7 +18,7 @@
 //! `--jobs`, queues are shared through the engine's queue cache, and
 //! memory stays flat no matter how many mixes are in flight.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
@@ -103,7 +103,7 @@ impl Default for DseConfig {
 }
 
 /// One candidate platform mix: core count per (kind, size) cell.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub struct Mix {
     /// `counts[kind.index()][size.index()]`.
     pub counts: [[usize; 3]; 3],
@@ -259,7 +259,7 @@ impl DseReport {
 /// Returns `(mixes, hit_limit)`.
 pub fn enumerate(budget_area: f64, power_cap_w: Option<f64>, limit: usize) -> (Vec<Mix>, bool) {
     let mut out = Vec::new();
-    let mut seen = std::collections::HashSet::new();
+    let mut seen = std::collections::BTreeSet::new();
     for so_size in ALL_SIZES {
         for si_size in ALL_SIZES {
             for mm_size in ALL_SIZES {
@@ -330,12 +330,12 @@ struct Evaluator<'a> {
     registry: &'a Registry,
     /// Evaluated rows, in first-evaluation order (deterministic).
     rows: Vec<EvalRow>,
-    index: HashMap<Mix, usize>,
+    index: BTreeMap<Mix, usize>,
 }
 
 impl<'a> Evaluator<'a> {
     fn new(cfg: &'a DseConfig, registry: &'a Registry) -> Evaluator<'a> {
-        Evaluator { cfg, registry, rows: Vec::new(), index: HashMap::new() }
+        Evaluator { cfg, registry, rows: Vec::new(), index: BTreeMap::new() }
     }
 
     fn evaluated(&self) -> usize {

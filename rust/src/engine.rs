@@ -17,7 +17,7 @@
 //! [`PlatformEvent`](crate::sim::events::PlatformEvent)s run them against
 //! the simulation (accelerator failure / recovery / derating mid-route).
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
@@ -37,7 +37,7 @@ use crate::sim::{simulate_observed_with_scales, Applied, SimObserver, SimOptions
 /// depends on.  Trials differing only in scheduler/platform share the
 /// queue instead of regenerating it (route synthesis at full paper scale
 /// is ~200k tasks per queue).
-#[derive(PartialEq, Eq, Hash, Clone)]
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord)]
 struct QueueKey {
     /// Library archetype name, when the trial is a scenario-library cell.
     scenario: Option<String>,
@@ -64,7 +64,7 @@ impl QueueKey {
 /// Thread-safe memo of generated queues, shared across engine workers.
 #[derive(Default)]
 struct QueueCache {
-    queues: Mutex<HashMap<QueueKey, Arc<TaskQueue>>>,
+    queues: Mutex<BTreeMap<QueueKey, Arc<TaskQueue>>>,
 }
 
 impl QueueCache {

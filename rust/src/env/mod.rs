@@ -9,7 +9,7 @@ pub mod scenario;
 pub mod taskgen;
 
 /// Driving area (§2.2): urban, undivided-highway, highway.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Area {
     Urban,
     UndividedHighway,

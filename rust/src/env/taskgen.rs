@@ -64,7 +64,7 @@ impl TaskQueue {
 }
 
 /// Deadline regime for task safety times.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum DeadlineMode {
     /// RSS-derived safety time (§6.1) — the paper's stated model.
     Rss,

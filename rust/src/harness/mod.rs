@@ -133,6 +133,7 @@ pub fn train_flexai(cfg: &ExperimentConfig) -> Result<TrainOutcome> {
 }
 
 #[cfg(test)]
+#[allow(clippy::print_stderr)] // self-skipping tests explain themselves
 mod tests {
     use super::*;
     use crate::env::Area;

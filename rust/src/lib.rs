@@ -13,6 +13,8 @@
 //! for the full architecture, the experiment index and the migration table
 //! from the old `harness` helpers.
 
+#![forbid(unsafe_code)]
+
 pub mod util;
 pub mod accel;
 pub mod env;
@@ -29,4 +31,5 @@ pub mod engine;
 pub mod fleet;
 pub mod dse;
 pub mod harness;
+pub mod lint;
 pub mod reports;

@@ -1,0 +1,389 @@
+//! `hmai lint` — dependency-free determinism & panic-safety static
+//! analysis over the crate's own source.
+//!
+//! Every result this reproduction ships rests on determinism invariants
+//! (jobs-invariant fingerprints, shard-merge equality, kill/resume
+//! exactness) that runtime tests can only spot-check on the inputs they
+//! happen to run.  The linter checks them at the source level, on every
+//! line, three ways: the `hmai lint` CLI subcommand, the `tests/lint.rs`
+//! meta-test (so `cargo test` is the gate), and a CI step emitting a JSON
+//! report.
+//!
+//! Pipeline: [`scan`] sanitizes source (comments out, literal contents
+//! blanked, test regions marked) → [`rules`] match tokens per line or per
+//! statement → [`pragma`]s suppress individual findings, but only with a
+//! justification.  Suppressions are counted in the report, never silent;
+//! a malformed, reasonless or unknown-rule pragma is itself a violation
+//! (pseudo-rules `pragma-malformed`, `pragma-missing-reason`,
+//! `pragma-unknown-rule`), and those can never be suppressed.
+
+pub mod pragma;
+pub mod rules;
+pub mod scan;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// One finding.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// `/`-separated path relative to the scanned root.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule name (or a `pragma-*` pseudo-rule).
+    pub rule: String,
+    /// The offending original source line, trimmed.
+    pub snippet: String,
+    /// What matched, or what is wrong with the pragma.
+    pub note: String,
+}
+
+/// Aggregate result of linting a tree.
+#[derive(Debug)]
+pub struct LintReport {
+    pub root: String,
+    pub files: usize,
+    pub lines: usize,
+    /// Findings suppressed by justified pragmas (counted, not silent).
+    pub suppressed: usize,
+    pub violations: Vec<Violation>,
+}
+
+impl LintReport {
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "lint: {} files, {} lines scanned under {} — {} violation(s), {} suppressed by pragma\n",
+            self.files,
+            self.lines,
+            self.root,
+            self.violations.len(),
+            self.suppressed
+        );
+        if !self.violations.is_empty() {
+            let mut t = Table::new(["file", "line", "rule", "note", "snippet"]);
+            for v in &self.violations {
+                t.row([
+                    v.file.clone(),
+                    v.line.to_string(),
+                    v.rule.clone(),
+                    v.note.clone(),
+                    v.snippet.clone(),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("root", Json::Str(self.root.clone())),
+            ("files", Json::Num(self.files as f64)),
+            ("lines", Json::Num(self.lines as f64)),
+            ("suppressed", Json::Num(self.suppressed as f64)),
+            (
+                "violations",
+                Json::Arr(
+                    self.violations
+                        .iter()
+                        .map(|v| {
+                            Json::from_pairs(vec![
+                                ("file", Json::Str(v.file.clone())),
+                                ("line", Json::Num(v.line as f64)),
+                                ("rule", Json::Str(v.rule.clone())),
+                                ("note", Json::Str(v.note.clone())),
+                                ("snippet", Json::Str(v.snippet.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Longest statement (in sanitized lines) the co-occurrence matcher will
+/// group; a backstop against pathological unterminated runs.
+const MAX_STMT_LINES: usize = 16;
+
+/// Lint one file's source.  `rel` is the `/`-separated path relative to
+/// the scanned root (used for rule scoping).  Returns the findings plus
+/// the number of findings suppressed by justified pragmas.
+pub fn lint_source(rel: &str, text: &str) -> (Vec<Violation>, usize) {
+    let scanned = scan::scan(text);
+    let orig: Vec<&str> = text.lines().collect();
+    let snippet_of = |line: usize| -> String {
+        orig.get(line.saturating_sub(1)).map_or(String::new(), |s| {
+            s.trim().chars().take(96).collect()
+        })
+    };
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut push = |line: usize, rule: &str, note: String, snippet: String| {
+        violations.push(Violation { file: rel.to_string(), line, rule: rule.to_string(), snippet, note });
+    };
+
+    // Parse pragmas out of the comment stream.  A pragma covers its own
+    // line when that line carries code (trailing comment), otherwise the
+    // next non-blank code line.
+    let mut cover: BTreeMap<usize, Vec<pragma::Pragma>> = BTreeMap::new();
+    for c in &scanned.comments {
+        match pragma::parse(c.line, &c.text) {
+            None => {}
+            Some(Err(pragma::PragmaError::Malformed { line, detail })) => {
+                push(line, "pragma-malformed", detail.to_string(), snippet_of(line));
+            }
+            Some(Err(pragma::PragmaError::MissingReason { line })) => {
+                push(
+                    line,
+                    "pragma-missing-reason",
+                    "a lint:allow pragma must justify the exception".to_string(),
+                    snippet_of(line),
+                );
+            }
+            Some(Ok(p)) => {
+                for r in &p.rules {
+                    if rules::by_name(r).is_none() {
+                        push(
+                            p.line,
+                            "pragma-unknown-rule",
+                            format!("no rule named '{r}'"),
+                            snippet_of(p.line),
+                        );
+                    }
+                }
+                let target = match scanned.line(p.line) {
+                    Some(l) if !l.code.trim().is_empty() => p.line,
+                    _ => scanned.next_code_line(p.line + 1).unwrap_or(p.line),
+                };
+                cover.entry(target).or_default().push(p);
+            }
+        }
+    }
+
+    // Candidate findings: (line, rule name, note).
+    let mut candidates: Vec<(usize, &'static str, String)> = Vec::new();
+    for rule in rules::RULES {
+        if !rule.scope.applies(rel) {
+            continue;
+        }
+        match rule.matcher {
+            rules::Matcher::Tokens(needles) => {
+                for l in &scanned.lines {
+                    if l.in_test {
+                        continue;
+                    }
+                    if let Some(n) = needles.iter().find(|n| rules::find_token(&l.code, n)) {
+                        candidates.push((l.num, rule.name, format!("token `{n}`")));
+                    }
+                }
+            }
+            rules::Matcher::Reduction { reduce, source } => {
+                // Group sanitized lines into statements (terminated by
+                // `;` or `}`); a reduce token fires when a source token
+                // shares its statement.
+                let mut stmt: Vec<(usize, &str)> = Vec::new();
+                let mut close = |stmt: &mut Vec<(usize, &str)>| {
+                    let has_source = stmt
+                        .iter()
+                        .any(|(_, c)| source.iter().any(|s| rules::find_token(c, s)));
+                    if has_source {
+                        let hit = stmt.iter().find_map(|(num, c)| {
+                            reduce.iter().find(|r| rules::find_token(c, r)).map(|r| (*num, *r))
+                        });
+                        if let Some((num, r)) = hit {
+                            candidates.push((num, rule.name, format!("token `{r}` over an unordered source")));
+                        }
+                    }
+                    stmt.clear();
+                };
+                for l in &scanned.lines {
+                    if l.in_test {
+                        close(&mut stmt);
+                        continue;
+                    }
+                    stmt.push((l.num, &l.code));
+                    if l.code.contains(';') || l.code.contains('}') || stmt.len() >= MAX_STMT_LINES
+                    {
+                        close(&mut stmt);
+                    }
+                }
+                close(&mut stmt);
+            }
+        }
+    }
+
+    // Apply suppression, then order findings for stable reports.
+    let mut suppressed = 0usize;
+    for (line, rule, note) in candidates {
+        let covered = cover
+            .get(&line)
+            .is_some_and(|ps| ps.iter().any(|p| p.rules.iter().any(|r| r == rule)));
+        if covered {
+            suppressed += 1;
+        } else {
+            push(line, rule, note, snippet_of(line));
+        }
+    }
+    violations.sort_by(|a, b| a.line.cmp(&b.line).then_with(|| a.rule.cmp(&b.rule)));
+    (violations, suppressed)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading directory {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()
+        .with_context(|| format!("listing {}", dir.display()))?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().and_then(|s| s.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (recursively, in sorted order, so
+/// the report itself is deterministic).
+pub fn lint_dir(root: &Path) -> Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut report = LintReport {
+        root: root.display().to_string(),
+        files: files.len(),
+        lines: 0,
+        suppressed: 0,
+        violations: Vec::new(),
+    };
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        report.lines += text.lines().count();
+        let (mut v, sup) = lint_source(&rel, &text);
+        report.suppressed += sup;
+        report.violations.append(&mut v);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trailing_pragma_covers_its_own_line() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() } // lint:allow(panic-in-hot-path): invariant documented\n";
+        let (v, sup) = lint_source("sched/core.rs", src);
+        assert!(v.is_empty(), "{v:?}");
+        assert_eq!(sup, 1);
+    }
+
+    #[test]
+    fn standalone_pragma_covers_next_code_line_across_blanks() {
+        let src = "// lint:allow(panic-in-hot-path): invariant documented\n\nfn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let (v, sup) = lint_source("sched/core.rs", src);
+        assert!(v.is_empty(), "{v:?}");
+        assert_eq!(sup, 1);
+    }
+
+    #[test]
+    fn pragma_does_not_leak_past_its_target_line() {
+        let src = "// lint:allow(panic-in-hot-path): only the first\nfn a(x: Option<u32>) -> u32 { x.unwrap() }\nfn b(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let (v, sup) = lint_source("sched/core.rs", src);
+        assert_eq!(sup, 1);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn unknown_rule_pragma_is_a_violation_and_suppresses_nothing_it_names() {
+        let src = "// lint:allow(no-such-rule): misguided\nfn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let (v, sup) = lint_source("sched/core.rs", src);
+        assert!(v.iter().any(|x| x.rule == "pragma-unknown-rule"), "{v:?}");
+        assert!(v.iter().any(|x| x.rule == "panic-in-hot-path"), "{v:?}");
+        assert_eq!(sup, 0);
+    }
+
+    #[test]
+    fn multi_rule_pragma_suppresses_each_named_rule() {
+        let src = "// lint:allow(unordered-iteration, float-fold-order): audited ordering\nfn t(m: &HashMap<u32, f64>) -> f64 { m.values().sum::<f64>() }\n";
+        let (v, sup) = lint_source("metrics/agg.rs", src);
+        assert!(v.is_empty(), "{v:?}");
+        assert_eq!(sup, 2);
+    }
+
+    #[test]
+    fn pseudo_rules_cannot_be_suppressed() {
+        // A reasonless pragma next to a pragma that tries to allow the
+        // pseudo-rule: the pseudo-violation must survive.
+        let src = "// lint:allow(pragma-missing-reason): nice try\n// lint:allow(panic-in-hot-path)\nfn f() {}\n";
+        let (v, _) = lint_source("sched/core.rs", src);
+        assert!(v.iter().any(|x| x.rule == "pragma-missing-reason"), "{v:?}");
+        // And allowing a pseudo-rule by name is itself unknown-rule noise.
+        assert!(v.iter().any(|x| x.rule == "pragma-unknown-rule"), "{v:?}");
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let (v, _) = lint_source("sim/hot.rs", "fn f() -> Instant { Instant::now() }\n");
+        let report = LintReport {
+            root: "src".to_string(),
+            files: 1,
+            lines: 1,
+            suppressed: 0,
+            violations: v,
+        };
+        let text = report.render();
+        assert!(text.contains("wallclock-in-results"), "{text}");
+        assert!(text.contains("sim/hot.rs"), "{text}");
+        let j = report.to_json();
+        assert_eq!(j.get_usize("files").unwrap(), 1);
+        let vs = j.get_arr("violations").unwrap();
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].get_str("rule").unwrap(), "wallclock-in-results");
+        // Round-trips through the writer.
+        let back = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(back.get_usize("files").unwrap(), 1);
+    }
+
+    #[test]
+    fn lint_dir_walks_recursively_with_relative_paths() {
+        let dir = std::env::temp_dir().join(format!("hmai_lint_dir_test_{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("sched")).unwrap();
+        std::fs::write(
+            dir.join("sched/core.rs"),
+            "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("clean.rs"), "fn ok() {}\n").unwrap();
+        let report = lint_dir(&dir).unwrap();
+        assert_eq!(report.files, 2);
+        assert_eq!(report.violations.len(), 1, "{:?}", report.violations);
+        assert_eq!(report.violations[0].file, "sched/core.rs");
+        assert_eq!(report.violations[0].rule, "panic-in-hot-path");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn violations_are_sorted_by_line_then_rule() {
+        let src = "fn b(x: Option<u32>) -> u32 { x.unwrap() }\nfn a() -> Instant { Instant::now() }\n";
+        let (v, _) = lint_source("sim/hot.rs", src);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert_eq!(v[0].line, 1);
+        assert_eq!(v[1].line, 2);
+    }
+}

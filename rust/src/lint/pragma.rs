@@ -1,0 +1,117 @@
+//! Allow-pragma parsing.
+//!
+//! A violation is suppressed — never silenced — by an inline pragma that
+//! names the rule *and* justifies the exception:
+//!
+//! ```text
+//! // lint:allow(wallclock-in-results): diagnostic column only, never
+//! // feeds a fingerprint.
+//! let clk = Instant::now();
+//! ```
+//!
+//! The pragma covers the rest of its own line (trailing comment) or, when
+//! it stands alone, the next non-blank code line.  Multiple rules may be
+//! listed: `lint:allow(unordered-iteration, float-fold-order): shared
+//! justification`.  A pragma without a
+//! justification — or one naming an unknown rule — is itself a violation,
+//! so allowances can never rot into unexplained noise.
+
+/// A parsed, well-formed pragma.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pragma {
+    /// Line of the comment carrying the pragma.
+    pub line: usize,
+    /// Rule names this pragma suppresses.
+    pub rules: Vec<String>,
+    /// The mandatory justification.
+    pub reason: String,
+}
+
+/// Why a pragma failed to parse (each is reported as a violation).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PragmaError {
+    /// No `(rules)` list, or an empty one.
+    Malformed { line: usize, detail: &'static str },
+    /// No `: reason` after the rule list, or an empty reason.
+    MissingReason { line: usize },
+}
+
+/// Parse a comment's text.  `None` when the comment is not a pragma at all.
+pub fn parse(line: usize, comment: &str) -> Option<Result<Pragma, PragmaError>> {
+    let idx = comment.find("lint:allow")?;
+    let rest = comment[idx + "lint:allow".len()..].trim_start();
+    let Some(body) = rest.strip_prefix('(') else {
+        return Some(Err(PragmaError::Malformed { line, detail: "expected '(' after lint:allow" }));
+    };
+    let Some(close) = body.find(')') else {
+        return Some(Err(PragmaError::Malformed { line, detail: "unclosed rule list" }));
+    };
+    let rules: Vec<String> = body[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return Some(Err(PragmaError::Malformed { line, detail: "empty rule list" }));
+    }
+    let after = body[close + 1..].trim_start();
+    let Some(reason) = after.strip_prefix(':') else {
+        return Some(Err(PragmaError::MissingReason { line }));
+    };
+    if reason.trim().is_empty() {
+        return Some(Err(PragmaError::MissingReason { line }));
+    }
+    Some(Ok(Pragma { line, rules, reason: reason.trim().to_string() }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_comment_is_not_a_pragma() {
+        assert!(parse(1, " just words about lint policies").is_none());
+    }
+
+    #[test]
+    fn well_formed_pragma_parses() {
+        let p = parse(7, " lint:allow(wallclock-in-results): diagnostic only")
+            .unwrap()
+            .unwrap();
+        assert_eq!(p.line, 7);
+        assert_eq!(p.rules, vec!["wallclock-in-results".to_string()]);
+        assert_eq!(p.reason, "diagnostic only");
+    }
+
+    #[test]
+    fn multi_rule_pragma_parses() {
+        let p = parse(3, " lint:allow(rule-a, rule-b): shared justification")
+            .unwrap()
+            .unwrap();
+        assert_eq!(p.rules, vec!["rule-a".to_string(), "rule-b".to_string()]);
+    }
+
+    #[test]
+    fn missing_reason_is_an_error() {
+        let e = parse(2, " lint:allow(panic-in-hot-path)").unwrap().unwrap_err();
+        assert_eq!(e, PragmaError::MissingReason { line: 2 });
+        let e = parse(2, " lint:allow(panic-in-hot-path):   ").unwrap().unwrap_err();
+        assert_eq!(e, PragmaError::MissingReason { line: 2 });
+    }
+
+    #[test]
+    fn malformed_pragmas_are_errors() {
+        assert!(matches!(
+            parse(4, " lint:allow panic").unwrap().unwrap_err(),
+            PragmaError::Malformed { .. }
+        ));
+        assert!(matches!(
+            parse(4, " lint:allow(): because").unwrap().unwrap_err(),
+            PragmaError::Malformed { .. }
+        ));
+        assert!(matches!(
+            parse(4, " lint:allow(rule-a").unwrap().unwrap_err(),
+            PragmaError::Malformed { .. }
+        ));
+    }
+}

@@ -1,0 +1,332 @@
+//! The rule table: each determinism / panic-safety hazard this tree has
+//! actually hit, expressed as a scoped token (or co-occurrence) matcher.
+//!
+//! Rules match against *sanitized* lines from [`super::scan`] — comments
+//! stripped, literal contents blanked — so a hazard name in a string or a
+//! doc comment never fires.  Lines inside `#[cfg(test)]` / `#[test]`
+//! regions are exempt: the invariants protect shipped results, not test
+//! scaffolding.  Scoping is by path prefix on the `/`-separated path
+//! relative to `src/`, so a rule can target the result-producing modules
+//! and leave `util/` alone (or vice versa).
+
+/// Path scope for a rule.
+#[derive(Debug, Clone, Copy)]
+pub enum Scope {
+    /// Applies everywhere except under these path prefixes.
+    AllExcept(&'static [&'static str]),
+    /// Applies only under these path prefixes.
+    Only(&'static [&'static str]),
+}
+
+impl Scope {
+    /// Does the rule apply to this `/`-separated relative path?
+    pub fn applies(&self, rel: &str) -> bool {
+        match self {
+            Scope::AllExcept(list) => !list.iter().any(|p| rel.starts_with(p)),
+            Scope::Only(list) => list.iter().any(|p| rel.starts_with(p)),
+        }
+    }
+
+    /// Human-readable scope for `hmai lint --rules`.
+    pub fn describe(&self) -> String {
+        match self {
+            Scope::AllExcept(list) => format!("all except {}", list.join(", ")),
+            Scope::Only(list) => format!("only {}", list.join(", ")),
+        }
+    }
+}
+
+/// How a rule matches a sanitized line.
+#[derive(Debug, Clone, Copy)]
+pub enum Matcher {
+    /// Any of these tokens on a line fires (at most once per line).
+    Tokens(&'static [&'static str]),
+    /// A `reduce` token fires only when a `source` token appears in the
+    /// same statement — catches order-sensitive folds over unordered
+    /// collections without banning reductions outright.
+    Reduction { reduce: &'static [&'static str], source: &'static [&'static str] },
+}
+
+/// One lint rule.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleDef {
+    pub name: &'static str,
+    /// Why the pattern is hazardous in this codebase (shown in `--rules`).
+    pub hazard: &'static str,
+    pub scope: Scope,
+    pub matcher: Matcher,
+}
+
+/// Modules whose output feeds fingerprints, reports or checkpoints — the
+/// determinism contract (jobs-invariance, shard-merge equality, resume
+/// exactness) lives or dies here.
+pub const RESULT_MODULES: &[&str] =
+    &["metrics/", "sched/", "sim/", "dse/", "fleet/", "reports/", "engine.rs"];
+
+/// The shipped rule set.
+pub const RULES: &[RuleDef] = &[
+    RuleDef {
+        name: "wallclock-in-results",
+        hazard: "wall time read outside bench/logging can leak into a \
+                 fingerprint, breaking run-to-run bit-identity",
+        scope: Scope::AllExcept(&["util/bench.rs", "util/logging.rs"]),
+        matcher: Matcher::Tokens(&["Instant::now", "SystemTime"]),
+    },
+    RuleDef {
+        name: "unordered-iteration",
+        hazard: "HashMap/HashSet iteration order is randomized per process; \
+                 in result-producing modules it leaks into output ordering",
+        scope: Scope::Only(RESULT_MODULES),
+        matcher: Matcher::Tokens(&["HashMap", "HashSet"]),
+    },
+    RuleDef {
+        name: "unseeded-rng",
+        hazard: "entropy-seeded randomness breaks replay; all randomness \
+                 must flow through the seeded util::rng generators",
+        scope: Scope::AllExcept(&["util/rng.rs"]),
+        matcher: Matcher::Tokens(&[
+            "thread_rng",
+            "rand::",
+            "from_entropy",
+            "StdRng",
+            "SmallRng",
+            "OsRng",
+        ]),
+    },
+    RuleDef {
+        name: "panic-in-hot-path",
+        hazard: "a panic in the scheduling/simulation hot path kills a \
+                 worker mid-sweep and poisons shared queues; hot-path code \
+                 returns errors or justifies its invariant",
+        scope: Scope::Only(&["sched/", "sim/", "metrics/", "fleet/"]),
+        matcher: Matcher::Tokens(&[
+            ".unwrap()",
+            ".expect(",
+            "panic!",
+            "unreachable!",
+            "unimplemented!",
+            "todo!",
+        ]),
+    },
+    RuleDef {
+        name: "float-fold-order",
+        hazard: "float addition is not associative; folding over an \
+                 unordered collection makes the sum depend on iteration \
+                 order",
+        scope: Scope::Only(RESULT_MODULES),
+        matcher: Matcher::Reduction {
+            reduce: &[".sum::<f64>", ".sum::<f32>", ".product::<f64>", ".product::<f32>", ".fold("],
+            source: &["HashMap", "HashSet", "par_iter"],
+        },
+    },
+    RuleDef {
+        name: "env-read-in-sim",
+        hazard: "environment reads in simulation/runtime code make results \
+                 depend on ambient machine state; config flows through \
+                 config/ and the CLI",
+        scope: Scope::AllExcept(&["config/", "main.rs", "util/"]),
+        matcher: Matcher::Tokens(&["std::env"]),
+    },
+];
+
+/// Look up a rule by name (used to validate pragma rule lists).
+pub fn by_name(name: &str) -> Option<&'static RuleDef> {
+    RULES.iter().find(|r| r.name == name)
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Token search with identifier-boundary checks: when the needle starts
+/// (ends) with an identifier character, the preceding (following) source
+/// byte must not be one.  Keeps `.unwrap()` from matching inside
+/// `unwrap_or`-like names and `rand::` from matching `operand::`.
+pub fn find_token(code: &str, needle: &str) -> bool {
+    let cb = code.as_bytes();
+    let nb = needle.as_bytes();
+    if nb.is_empty() || cb.len() < nb.len() {
+        return false;
+    }
+    let bound_left = is_ident_byte(nb[0]);
+    let bound_right = is_ident_byte(nb[nb.len() - 1]);
+    for i in 0..=cb.len() - nb.len() {
+        if &cb[i..i + nb.len()] != nb {
+            continue;
+        }
+        let left_ok = !bound_left || i == 0 || !is_ident_byte(cb[i - 1]);
+        let right_ok =
+            !bound_right || i + nb.len() == cb.len() || !is_ident_byte(cb[i + nb.len()]);
+        if left_ok && right_ok {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lint_source;
+
+    #[test]
+    fn token_boundaries() {
+        assert!(find_token("let x = y.unwrap();", ".unwrap()"));
+        assert!(!find_token("let x = y.unwrap_or(0);", ".unwrap()"));
+        assert!(find_token("let mut r = rand::thread_rng();", "rand::"));
+        assert!(!find_token("let w = operand::width();", "rand::"));
+        assert!(find_token("let m = HashMap::new();", "HashMap"));
+        assert!(!find_token("let m = MyHashMapLike::new();", "HashMap"));
+        assert!(!find_token("let m = HashMapper::new();", "HashMap"));
+        assert!(find_token("t.expect(\"\")", ".expect("));
+        assert!(!find_token("", ".unwrap()"));
+    }
+
+    #[test]
+    fn scope_prefix_matching() {
+        let s = Scope::Only(RESULT_MODULES);
+        assert!(s.applies("sched/minmin.rs"));
+        assert!(s.applies("engine.rs"));
+        assert!(!s.applies("util/json.rs"));
+        assert!(!s.applies("lint/rules.rs"));
+        let s = Scope::AllExcept(&["util/", "main.rs"]);
+        assert!(!s.applies("util/bench.rs"));
+        assert!(!s.applies("main.rs"));
+        assert!(s.applies("sim/mod.rs"));
+    }
+
+    #[test]
+    fn every_rule_name_resolves() {
+        for r in RULES {
+            assert!(by_name(r.name).is_some());
+        }
+        assert!(by_name("no-such-rule").is_none());
+    }
+
+    /// (rule, path-in-scope, firing snippet, clean snippet).
+    const FIXTURES: &[(&str, &str, &str, &str)] = &[
+        (
+            "wallclock-in-results",
+            "sim/hot.rs",
+            "fn stamp() -> u128 { let t = Instant::now(); t.elapsed().as_nanos() }",
+            "fn stamp(clock: &SimClock) -> u64 { clock.now_ns() }",
+        ),
+        (
+            "unordered-iteration",
+            "metrics/agg.rs",
+            "fn count() -> usize { let m = std::collections::HashMap::<u32, f64>::new(); m.len() }",
+            "fn count() -> usize { let m = std::collections::BTreeMap::<u32, f64>::new(); m.len() }",
+        ),
+        (
+            "unseeded-rng",
+            "sched/pick.rs",
+            "fn draw() -> u64 { let mut r = rand::thread_rng(); r.next_raw() }",
+            "fn draw() -> u64 { let mut r = crate::util::rng::Rng::seeded(7); r.next_raw() }",
+        ),
+        (
+            "panic-in-hot-path",
+            "sched/core.rs",
+            "fn pick(x: Option<u32>) -> u32 { x.unwrap() }",
+            "fn pick(x: Option<u32>) -> u32 { x.unwrap_or(0) }",
+        ),
+        (
+            "float-fold-order",
+            "metrics/sumup.rs",
+            "fn total(v: &V) -> f64 { v.par_iter().map(score).sum::<f64>() }",
+            "fn total(v: &[f64]) -> f64 { v.iter().copied().sum::<f64>() }",
+        ),
+        (
+            "env-read-in-sim",
+            "sim/cfg.rs",
+            "fn trace() -> bool { std::env::var_os(\"HMAI_TRACE\").is_some() }",
+            "fn trace(cfg: &Config) -> bool { cfg.trace }",
+        ),
+    ];
+
+    #[test]
+    fn fixtures_fire_pass_suppress_and_require_reasons() {
+        for (rule, path, firing, clean) in FIXTURES {
+            // Positive snippet fires.
+            let (v, _) = lint_source(path, &format!("{firing}\n"));
+            assert!(
+                v.iter().any(|x| x.rule == *rule),
+                "{rule} should fire on {path}: {v:?}"
+            );
+            // Negative snippet passes.
+            let (v, _) = lint_source(path, &format!("{clean}\n"));
+            assert!(
+                !v.iter().any(|x| x.rule == *rule),
+                "{rule} should not fire on clean snippet: {v:?}"
+            );
+            // A justified pragma suppresses (counted, not silenced).
+            let src = format!("// lint:allow({rule}): fixture-justified exception\n{firing}\n");
+            let (v, sup) = lint_source(path, &src);
+            assert!(
+                !v.iter().any(|x| x.rule == *rule),
+                "{rule} should be suppressed by a justified pragma: {v:?}"
+            );
+            assert!(sup >= 1, "{rule}: suppression must be counted");
+            // A pragma without a reason suppresses nothing and is itself
+            // a violation.
+            let src = format!("// lint:allow({rule})\n{firing}\n");
+            let (v, sup) = lint_source(path, &src);
+            assert!(
+                v.iter().any(|x| x.rule == *rule),
+                "{rule}: reasonless pragma must not suppress: {v:?}"
+            );
+            assert!(v.iter().any(|x| x.rule == "pragma-missing-reason"), "{v:?}");
+            assert_eq!(sup, 0);
+        }
+    }
+
+    #[test]
+    fn out_of_scope_paths_pass() {
+        // Wall clock is legitimate in bench/logging code.
+        let wall = "fn now() -> Instant { Instant::now() }\n";
+        let (v, _) = lint_source("util/bench.rs", wall);
+        assert!(v.is_empty(), "{v:?}");
+        // Panics are fine outside the hot modules.
+        let p = "fn must(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let (v, _) = lint_source("util/json.rs", p);
+        assert!(v.is_empty(), "{v:?}");
+        // Env reads are the CLI/config layer's job.
+        let e = "fn home() -> Option<std::ffi::OsString> { std::env::var_os(\"HOME\") }\n";
+        let (v, _) = lint_source("config/mod.rs", e);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u32>) -> u32 { x.unwrap() }\n}\n";
+        let (v, _) = lint_source("sched/core.rs", src);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn tokens_in_strings_and_comments_do_not_fire() {
+        let src = "fn msg() -> &'static str { \"call Instant::now here\" } // Instant::now\n";
+        let (v, _) = lint_source("sim/hot.rs", src);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn reduction_matches_across_statement_lines() {
+        let src = "fn total(m: &M) -> f64 {\n    m.par_iter()\n        .map(score)\n        .sum::<f64>()\n}\n";
+        let (v, _) = lint_source("metrics/x.rs", src);
+        assert!(v.iter().any(|x| x.rule == "float-fold-order"), "{v:?}");
+    }
+
+    #[test]
+    fn reduction_needs_both_halves() {
+        // A fold over an ordered source is fine...
+        let src = "fn total(v: &[f64]) -> f64 { v.iter().fold(0.0, |a, b| a + b) }\n";
+        let (v, _) = lint_source("metrics/x.rs", src);
+        assert!(!v.iter().any(|x| x.rule == "float-fold-order"), "{v:?}");
+        // ...and an unordered collection without a fold is the other
+        // rule's business, not this one's.
+        let src = "fn peek(m: &std::collections::HashMap<u32, f64>) -> usize { m.len() }\n";
+        let (v, _) = lint_source("metrics/x.rs", src);
+        assert!(!v.iter().any(|x| x.rule == "float-fold-order"), "{v:?}");
+        assert!(v.iter().any(|x| x.rule == "unordered-iteration"), "{v:?}");
+    }
+}

@@ -1,0 +1,378 @@
+//! Comment/string-aware source scanner for the determinism linter.
+//!
+//! `scan` turns Rust source text into *sanitized* lines: comments are
+//! stripped (and collected separately, so allow-pragmas survive),
+//! string/char-literal contents are blanked, and every line is flagged as
+//! test or non-test code.  Rules then match tokens against the sanitized
+//! text, so a hazard name inside a string literal, a doc comment or a
+//! `#[cfg(test)]` module can never produce a false positive.
+//!
+//! The scanner is deliberately token-level, not a parser: the crate's
+//! dependency budget is `anyhow`-only (no `syn`), and the rules it feeds
+//! need token presence plus brace-depth structure, nothing more.  Handled
+//! precisely: line comments, nested block comments, string escapes,
+//! multi-line strings, raw strings (`r"…"`, `r#"…"#`, any hash depth),
+//! byte strings, char literals vs. lifetimes, and `#[cfg(test)]` /
+//! `#[test]` region tracking via brace depth.
+
+/// One scanned source line.
+#[derive(Debug)]
+pub struct ScanLine {
+    /// 1-based line number in the original file.
+    pub num: usize,
+    /// Sanitized code: comments removed, literal contents blanked.
+    pub code: String,
+    /// Inside a `#[cfg(test)]` module or `#[test]` function.
+    pub in_test: bool,
+}
+
+/// One comment (line or block), attributed to its starting line.
+#[derive(Debug)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// Scan result: sanitized lines plus every comment.
+#[derive(Debug, Default)]
+pub struct Scanned {
+    pub lines: Vec<ScanLine>,
+    pub comments: Vec<Comment>,
+}
+
+impl Scanned {
+    /// The sanitized line with number `num`, if any.
+    pub fn line(&self, num: usize) -> Option<&ScanLine> {
+        self.lines.iter().find(|l| l.num == num)
+    }
+
+    /// First line at or after `num` whose sanitized code is non-blank.
+    /// Used to attach a standalone pragma comment to the statement below it.
+    pub fn next_code_line(&self, num: usize) -> Option<usize> {
+        self.lines
+            .iter()
+            .find(|l| l.num >= num && !l.code.trim().is_empty())
+            .map(|l| l.num)
+    }
+}
+
+fn flush(lines: &mut Vec<ScanLine>, code: &mut String, num: usize) {
+    lines.push(ScanLine { num, code: std::mem::take(code), in_test: false });
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Scan `text` into sanitized lines and comments.
+pub fn scan(text: &str) -> Scanned {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut out = Scanned::default();
+    let mut code = String::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    while i < n {
+        let c = chars[i];
+        // Line comment: collect to end of line ('\n' handled next round).
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i + 2;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            out.comments.push(Comment { line, text: chars[start.min(i)..i].iter().collect() });
+            continue;
+        }
+        // Block comment, possibly nested, possibly multi-line.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let first = line;
+            let mut text = String::new();
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        flush(&mut out.lines, &mut code, line);
+                        line += 1;
+                        text.push('\n');
+                    } else {
+                        text.push(chars[i]);
+                    }
+                    i += 1;
+                }
+            }
+            out.comments.push(Comment { line: first, text });
+            continue;
+        }
+        // Raw / byte strings: r"…", r#"…"#, br"…", b"…".  Only when the
+        // leading r/b is not the tail of an identifier (e.g. `for`, `rbr`).
+        if (c == 'r' || c == 'b') && (i == 0 || !is_ident_char(chars[i - 1])) {
+            let mut j = i;
+            if chars[j] == 'b' {
+                j += 1;
+            }
+            let is_raw = j < n && chars[j] == 'r';
+            if is_raw {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            if is_raw {
+                while j < n && chars[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+            }
+            if j < n && chars[j] == '"' && (is_raw || c == 'b') {
+                code.push_str("\"\"");
+                i = j + 1;
+                if is_raw {
+                    // No escapes in raw strings: scan for `"` + `hashes` #s.
+                    while i < n {
+                        if chars[i] == '"'
+                            && (i + 1..=i + hashes).all(|k| k < n && chars[k] == '#')
+                        {
+                            i += 1 + hashes;
+                            break;
+                        }
+                        if chars[i] == '\n' {
+                            flush(&mut out.lines, &mut code, line);
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                } else {
+                    // Byte string: normal escape handling.
+                    while i < n {
+                        match chars[i] {
+                            '\\' => i += 2,
+                            '"' => {
+                                i += 1;
+                                break;
+                            }
+                            '\n' => {
+                                flush(&mut out.lines, &mut code, line);
+                                line += 1;
+                                i += 1;
+                            }
+                            _ => i += 1,
+                        }
+                    }
+                }
+                continue;
+            }
+            // Not a string prefix — plain identifier character.
+            code.push(c);
+            i += 1;
+            continue;
+        }
+        match c {
+            '\n' => {
+                flush(&mut out.lines, &mut code, line);
+                line += 1;
+                i += 1;
+            }
+            '"' => {
+                code.push_str("\"\"");
+                i += 1;
+                while i < n {
+                    match chars[i] {
+                        '\\' => i += 2,
+                        '"' => {
+                            i += 1;
+                            break;
+                        }
+                        '\n' => {
+                            flush(&mut out.lines, &mut code, line);
+                            line += 1;
+                            i += 1;
+                        }
+                        _ => i += 1,
+                    }
+                }
+            }
+            '\'' => {
+                if i + 1 < n && chars[i + 1] == '\\' {
+                    // Escaped char literal: skip to the closing quote.
+                    i += 2;
+                    while i < n && chars[i] != '\'' {
+                        i += 1;
+                    }
+                    i += 1;
+                    code.push_str("' '");
+                } else if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                    // Plain char literal 'x'.
+                    code.push_str("' '");
+                    i += 3;
+                } else {
+                    // Lifetime ('a, 'static): keep the tick, scan on.
+                    code.push('\'');
+                    i += 1;
+                }
+            }
+            _ => {
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    if !code.is_empty() {
+        flush(&mut out.lines, &mut code, line);
+    }
+    mark_tests(&mut out.lines);
+    out
+}
+
+/// Mark lines inside `#[cfg(test)]` / `#[test]` items via brace depth on the
+/// sanitized text (string-literal braces are already blanked, so depth is
+/// reliable).  An attribute arms `pending`; the next `{` opens a test region
+/// that closes when depth returns; a `;` before any `{` disarms (covers
+/// `#[cfg(test)] use …;`).
+fn mark_tests(lines: &mut [ScanLine]) {
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut test_depth: Option<i64> = None;
+    for l in lines.iter_mut() {
+        let compact: String = l.code.chars().filter(|c| !c.is_whitespace()).collect();
+        if test_depth.is_none()
+            && (compact.contains("#[cfg(test)]")
+                || compact.contains("#[test]")
+                || compact.contains("#[cfg(all(test"))
+        {
+            pending = true;
+        }
+        l.in_test = test_depth.is_some() || pending;
+        for c in l.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        test_depth = Some(depth);
+                        pending = false;
+                    }
+                }
+                '}' => {
+                    if test_depth == Some(depth) {
+                        test_depth = None;
+                    }
+                    depth -= 1;
+                }
+                ';' => pending = false,
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(s: &Scanned, num: usize) -> &str {
+        &s.line(num).unwrap().code
+    }
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let s = scan("let a = \"Instant::now()\"; // Instant::now\nlet b = 2;\n");
+        assert_eq!(code_of(&s, 1), "let a = \"\"; ");
+        assert_eq!(code_of(&s, 2), "let b = 2;");
+        assert_eq!(s.comments.len(), 1);
+        assert!(s.comments[0].text.contains("Instant::now"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let s = scan("let a = r#\"panic! \"quoted\" HashMap\"#;\nlet b = r\"SystemTime\";\n");
+        assert_eq!(code_of(&s, 1), "let a = \"\";");
+        assert_eq!(code_of(&s, 2), "let b = \"\";");
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let s = scan("let a = b\"panic!\"; let c = b'{'; let d = br\"todo!\";\n");
+        let code = code_of(&s, 1);
+        assert!(!code.contains("panic"), "{code}");
+        assert!(!code.contains("todo"), "{code}");
+        assert!(!code.contains('{'), "byte-char brace must be blanked: {code}");
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let s = scan("fn f<'a>(x: &'a str) -> char { let c = '{'; let e = '\\n'; c }\n");
+        let code = code_of(&s, 1);
+        assert!(code.contains("<'a>"), "{code}");
+        assert!(code.contains("&'a str"), "{code}");
+        // The literal '{' must not unbalance brace depth: exactly one
+        // unmatched-free pair from the fn body.
+        let opens = code.matches('{').count();
+        let closes = code.matches('}').count();
+        assert_eq!(opens, 1, "{code}");
+        assert_eq!(closes, 1, "{code}");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = scan("let a = 1; /* outer /* inner panic! */ still out */ let b = 2;\n");
+        let code = code_of(&s, 1);
+        assert!(!code.contains("panic"), "{code}");
+        assert!(code.contains("let b = 2;"), "{code}");
+        assert!(s.comments[0].text.contains("inner panic!"));
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_numbers() {
+        let s = scan("let a = \"first\nsecond\nthird\";\nlet b = 1;\n");
+        assert_eq!(code_of(&s, 4), "let b = 1;");
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let src = "\
+fn live() { x.unwrap(); }
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { y.unwrap(); }
+}
+
+fn live2() {}
+";
+        let s = scan(src);
+        assert!(!s.line(1).unwrap().in_test);
+        assert!(s.line(3).unwrap().in_test, "attribute line");
+        assert!(s.line(4).unwrap().in_test, "mod header");
+        assert!(s.line(6).unwrap().in_test, "test body");
+        assert!(s.line(7).unwrap().in_test, "closing brace");
+        assert!(!s.line(9).unwrap().in_test, "code after the test mod");
+    }
+
+    #[test]
+    fn cfg_test_on_a_use_does_not_poison_the_rest() {
+        let src = "#[cfg(test)]\nuse std::fmt;\nfn live() { x.unwrap(); }\n";
+        let s = scan(src);
+        assert!(s.line(2).unwrap().in_test);
+        assert!(!s.line(3).unwrap().in_test);
+    }
+
+    #[test]
+    fn test_fn_without_mod_is_marked() {
+        let src = "#[test]\nfn t() {\n    a.unwrap();\n}\nfn live() {}\n";
+        let s = scan(src);
+        assert!(s.line(3).unwrap().in_test);
+        assert!(!s.line(5).unwrap().in_test);
+    }
+
+    #[test]
+    fn next_code_line_skips_blanks_and_comment_only_lines() {
+        let s = scan("// pragma here\n\nlet a = 1;\n");
+        assert_eq!(s.next_code_line(1), Some(3));
+    }
+}

@@ -13,6 +13,11 @@
 //! `ExperimentPlan`/`Engine` API; `--jobs N` executes trials on N worker
 //! threads with bit-identical summaries to `--jobs 1`.
 
+// The CLI's error/notice channel is stderr by design; the package-wide
+// `clippy::print_stderr` deny (Cargo.toml `[lints]`) carves out this one
+// binary root plus reports/ and util/logging.
+#![allow(clippy::print_stderr)]
+
 use anyhow::{Context, Result};
 
 use hmai::config::ExperimentConfig;
@@ -56,6 +61,7 @@ fn run(args: &Args) -> Result<()> {
         Some("braking") => cmd_braking(args),
         Some("dse") => cmd_dse(args),
         Some("fleet") => cmd_fleet(args),
+        Some("lint") => cmd_lint(args),
         Some("help") | None => {
             print!("{}", usage());
             Ok(())
@@ -75,7 +81,8 @@ fn usage() -> String {
          \x20   train               train FlexAI, save a checkpoint\n\
          \x20   braking             Fig. 14 braking-distance probe\n\
          \x20   dse                 design-space exploration over core mixes (Pareto frontier)\n\
-         \x20   fleet plan|work|merge  sharded, checkpoint-resumable fleet sweeps\n\nOPTIONS:\n",
+         \x20   fleet plan|work|merge  sharded, checkpoint-resumable fleet sweeps\n\
+         \x20   lint                determinism & panic-safety lint over the crate source\n\nOPTIONS:\n",
     );
     // The scheduler list comes from the one canonical table, so the usage
     // string can never drift from what the registry accepts.
@@ -122,6 +129,8 @@ fn usage() -> String {
             "--max-trials <n>",
             "fleet work: stop after n trials this invocation (kill/resume drills)".to_string(),
         ),
+        ("--root <dir>", "lint: source root to scan (default src/ or rust/src/)".to_string()),
+        ("--rules", "lint: print the rule table and exit".to_string()),
         ("--seed <u64>", "top-level seed".to_string()),
         ("--episodes <n>", "training episodes".to_string()),
         ("--episode-dist <m>", "training route length".to_string()),
@@ -785,6 +794,48 @@ fn cmd_fleet_merge(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `hmai lint [--json <path>] [--root <dir>] [--rules]`: determinism &
+/// panic-safety static analysis over the crate's own source (see
+/// DESIGN.md "Determinism invariants & static analysis").  Exits
+/// non-zero on any violation; `--json` writes the full report first, so
+/// CI always gets the artifact even on a failing run.
+fn cmd_lint(args: &Args) -> Result<()> {
+    if args.flag("rules") {
+        let mut t = Table::new(["Rule", "Scope", "Hazard"]);
+        for r in hmai::lint::rules::RULES {
+            t.row([r.name.to_string(), r.scope.describe(), r.hazard.to_string()]);
+        }
+        t.print();
+        return Ok(());
+    }
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => ["src", "rust/src"]
+            .iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.is_dir())
+            .ok_or_else(|| {
+                anyhow::anyhow!("no src/ or rust/src/ under the current directory — pass --root <dir>")
+            })?,
+    };
+    let report = hmai::lint::lint_dir(&root)?;
+    print!("{}", report.render());
+    if let Some(path) = args.get("json") {
+        report
+            .to_json()
+            .write_to(std::path::Path::new(path))
+            .with_context(|| format!("writing --json {path}"))?;
+        println!("json -> {path}");
+    }
+    if !report.violations.is_empty() {
+        anyhow::bail!(
+            "{} lint violation(s) — fix, or justify with `// lint:allow(<rule>): <reason>`",
+            report.violations.len()
+        );
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -794,7 +845,9 @@ mod tests {
     #[test]
     fn usage_mentions_every_subcommand() {
         let u = usage();
-        for cmd in ["report", "env", "platform", "schedule", "train", "braking", "dse", "fleet"] {
+        for cmd in
+            ["report", "env", "platform", "schedule", "train", "braking", "dse", "fleet", "lint"]
+        {
             assert!(u.contains(cmd), "{cmd} missing from usage");
         }
         assert!(u.contains("fleet plan|work|merge"), "fleet actions missing from usage");
@@ -804,6 +857,19 @@ mod tests {
         for opt in ["--replicates", "--shards", "--plan", "--shard", "--checkpoint-every", "--max-trials"]
         {
             assert!(u.contains(opt), "{opt} missing from usage");
+        }
+        for opt in ["--root", "--rules"] {
+            assert!(u.contains(opt), "{opt} missing from usage");
+        }
+    }
+
+    #[test]
+    fn lint_rules_table_prints_every_rule() {
+        // `hmai lint --rules` is the discoverability contract for the
+        // rule set (the scan itself is exercised by tests/lint.rs).
+        cmd_lint(&Args::parse(["lint", "--rules"].iter().map(|s| s.to_string()))).unwrap();
+        for r in hmai::lint::rules::RULES {
+            assert!(hmai::lint::rules::by_name(r.name).is_some());
         }
     }
 

@@ -35,6 +35,8 @@ pub use params::Params;
 /// Default artifact location relative to the repo root.  Honours
 /// `HMAI_ARTIFACTS` for tests/benches run from other cwds.
 pub fn default_artifact_dir() -> PathBuf {
+    // lint:allow(env-read-in-sim): artifact-dir discovery at load time, once,
+    // before any trial runs — results never depend on it mid-simulation.
     if let Ok(d) = std::env::var("HMAI_ARTIFACTS") {
         return PathBuf::from(d);
     }

@@ -185,6 +185,7 @@ impl Runtime {
 }
 
 #[cfg(test)]
+#[allow(clippy::print_stderr)] // self-skipping tests explain themselves
 mod tests {
     use super::*;
 

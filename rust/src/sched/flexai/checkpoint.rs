@@ -61,6 +61,7 @@ pub fn load(rt: Arc<Runtime>, path: &Path, cfg: FlexAIConfig) -> Result<FlexAI> 
 }
 
 #[cfg(test)]
+#[allow(clippy::print_stderr)] // self-skipping tests explain themselves
 mod tests {
     use super::*;
 

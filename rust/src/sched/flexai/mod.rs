@@ -251,6 +251,8 @@ impl FlexAI {
         if let Some(a) = best {
             return a;
         }
+        // lint:allow(panic-in-hot-path): n_valid > 0 is established above —
+        // an empty platform cannot reach action selection.
         argmax(&|_| true).expect("n_valid > 0")
     }
 
@@ -390,6 +392,8 @@ impl Scheduler for FlexAI {
         let chunk_size = self.rt.meta.infer_batch;
         for chunk in tasks.chunks(chunk_size) {
             self.schedule_chunk(chunk, &mut rolling, &mut out)
+                // lint:allow(panic-in-hot-path): schedule_batch is infallible
+                // by trait contract; a PJRT failure here is unrecoverable.
                 .expect("PJRT inference failed on the scheduling hot path");
         }
         out
@@ -401,6 +405,7 @@ impl Scheduler for FlexAI {
 }
 
 #[cfg(test)]
+#[allow(clippy::print_stderr)] // self-skipping tests explain themselves
 mod tests {
     use super::*;
     use crate::metrics::NormScales;

@@ -76,6 +76,8 @@ impl Scheduler for MinMin {
                     best = Some((pos, ct));
                 }
             }
+            // lint:allow(panic-in-hot-path): the loop runs while unassigned
+            // is non-empty, so a best candidate always exists.
             let (pos, _) = best.expect("unassigned is non-empty");
             let ti = unassigned.swap_remove(pos);
             let accel = cached[ti].0;

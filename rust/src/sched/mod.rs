@@ -70,6 +70,8 @@ impl<'a> UpSet<'a> {
 
     /// `k`-th up accelerator in ascending slot order (`k < count()`).
     pub fn nth(&self, k: usize) -> usize {
+        // lint:allow(panic-in-hot-path): documented precondition k < count();
+        // callers draw k from count() directly.
         self.state.up_iter().nth(k).expect("k < up count")
     }
 

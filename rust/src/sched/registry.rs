@@ -113,6 +113,8 @@ pub fn baseline_names() -> Vec<&'static str> {
 pub fn baseline_specs() -> Vec<SchedulerSpec> {
     baseline_names()
         .into_iter()
+        // lint:allow(panic-in-hot-path): parses the crate's own static name
+        // table; a failure is a table bug, caught by the registry tests.
         .map(|n| SchedulerSpec::parse(n).expect("table names parse"))
         .collect()
 }
@@ -154,6 +156,8 @@ impl SchedulerSpec {
             "worst" => SchedulerSpec::Worst,
             "rr" => SchedulerSpec::RoundRobin,
             "random" => SchedulerSpec::Random,
+            // lint:allow(panic-in-hot-path): the match arms mirror the static
+            // table one-to-one; tests enumerate every entry.
             other => unreachable!("table entry '{other}' not mapped"),
         })
     }
@@ -175,6 +179,8 @@ impl SchedulerSpec {
 
     /// Display name (figure legends), from the table.
     pub fn display(&self) -> &'static str {
+        // lint:allow(panic-in-hot-path): canonical() returns names drawn from
+        // the same static table this lookup reads.
         lookup(self.canonical()).expect("canonical names are in the table").display
     }
 }

@@ -241,6 +241,8 @@ impl<'q> Sim<'q> {
         let now = self.state.now;
         let events_applied = self.events.apply_until(now, &mut self.state);
 
+        // lint:allow(wallclock-in-results): sched_wall_s is diagnostic-only —
+        // it feeds the Sched µs/task column, never a fingerprint.
         let clk = Instant::now();
         self.assignment = scheduler.schedule_batch(burst, &self.state);
         let sched_elapsed_s = clk.elapsed().as_secs_f64();

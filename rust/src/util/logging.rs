@@ -2,6 +2,9 @@
 //! process start.  Deliberately tiny: the coordinator's hot path must never
 //! pay for logging when the level is off (guarded by an atomic load).
 
+// This module IS the sanctioned stderr channel (package-wide deny carve-out).
+#![allow(clippy::print_stderr)]
+
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;

@@ -1,0 +1,40 @@
+//! Meta-test: the determinism/panic-safety linter runs over the crate's
+//! own `src/` and must report zero violations — making `cargo test -q`
+//! the gate that keeps the invariants from rotting (the CLI subcommand
+//! and the CI JSON step are the other two enforcement paths; see
+//! DESIGN.md "Determinism invariants & static analysis").
+
+use std::path::Path;
+
+#[test]
+fn crate_source_is_lint_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = hmai::lint::lint_dir(&src).expect("lint walk over src/");
+    // Sanity: the walk really covered the tree (the crate has far more
+    // than 40 source files; a broken walk must not vacuously pass).
+    assert!(
+        report.files >= 40,
+        "lint walked only {} files under {} — broken walk?",
+        report.files,
+        src.display()
+    );
+    assert!(report.lines > 5_000, "implausibly small line count: {}", report.lines);
+    assert!(
+        report.violations.is_empty(),
+        "lint violations in the crate source:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn suppressions_stay_audited() {
+    // Every suppression is a justified pragma at an audited site.  This
+    // count only moves when someone adds or burns down an allowance —
+    // both are deliberate, reviewed events, so pin it.
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = hmai::lint::lint_dir(&src).expect("lint walk over src/");
+    assert_eq!(
+        report.suppressed, 12,
+        "suppression count drifted — update this pin alongside the pragma audit"
+    );
+}

@@ -6,6 +6,9 @@
 //! These tests require `make artifacts` (and the `pjrt` build feature);
 //! without either they skip with a message instead of failing.
 
+// Self-skipping tests explain themselves on stderr (deny carve-out).
+#![allow(clippy::print_stderr)]
+
 use std::sync::Arc;
 
 use hmai::env::taskgen::DeadlineMode;
