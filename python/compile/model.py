@@ -11,8 +11,15 @@ State layout (must match rust/src/sched/flexai/featurize.rs):
       amount_norm, layer_num_norm, safety_time_norm,           # Task-Info
       per-slot x N_SLOTS:                                      # HW-Info
         [ valid, kind_so, kind_si, kind_mm,
-          queue_time_norm, energy_share, rel_competitiveness, est_time_norm ] ]
-IN_DIM = 6 + 8 * N_SLOTS;  OUT_DIM = N_SLOTS.
+          queue_time_norm, energy_share, rel_competitiveness, est_time_norm,
+          comm_time_norm ] ]                                   # data locality
+IN_DIM = 6 + 9 * N_SLOTS;  OUT_DIM = N_SLOTS.
+
+`comm_time_norm` (v2 layout, SLOT_FEATS = 9) is the chiplet-interconnect
+locality feature: predicted transfer time over the task's safety budget,
+0 on monolithic platforms.  The rust featurizer gates it on the artifact's
+`slot_feats`, so models compiled from the old 8-feature layout keep their
+exact pre-interconnect inputs.
 
 Everything here is build-time only: aot.py lowers `qnet_infer`,
 `qnet_infer_batch`, `qnet_train` and `qnet_init` to HLO text which the rust
@@ -33,8 +40,8 @@ from .kernels.fused_linear import fused_linear
 # ---------------------------------------------------------------------------
 N_SLOTS = 16              # max accelerator slots (HMAI uses 11: 4 SO + 4 SI + 3 MM)
 TASK_FEATS = 6            # task one-hot(3) + amount + layer_num + safety_time
-SLOT_FEATS = 8
-IN_DIM = TASK_FEATS + SLOT_FEATS * N_SLOTS   # 134
+SLOT_FEATS = 9            # v2: + comm_time_norm (data locality)
+IN_DIM = TASK_FEATS + SLOT_FEATS * N_SLOTS   # 150
 H1 = 256                  # paper: first FC layer
 H2 = 64                   # paper: second FC layer
 OUT_DIM = N_SLOTS

@@ -21,6 +21,7 @@ from compile.kernels.fused_linear import (
     vmem_footprint_bytes,
 )
 from compile.kernels.ref import ref_fused_linear
+from compile.model import IN_DIM
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -38,9 +39,9 @@ def _mk(m, k, n, seed):
 # Fixed-shape smoke tests (the exact layer shapes the Q-network uses).
 # ---------------------------------------------------------------------------
 
-QNET_SHAPES = [(1, 134, 256), (1, 256, 64), (1, 64, 16),
-               (64, 134, 256), (64, 256, 64), (64, 64, 16),
-               (30, 134, 256)]
+QNET_SHAPES = [(1, IN_DIM, 256), (1, 256, 64), (1, 64, 16),
+               (64, IN_DIM, 256), (64, 256, 64), (64, 64, 16),
+               (30, IN_DIM, 256)]
 
 
 @pytest.mark.parametrize("m,k,n", QNET_SHAPES)

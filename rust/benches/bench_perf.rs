@@ -64,6 +64,50 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(state.busy_count());
     });
 
+    section("chiplet comm model (hmai+mesh2x2), compute-only vs comm-aware");
+    let mesh = Platform::try_parse("hmai+mesh2x2").map_err(anyhow::Error::msg)?;
+    let mesh_state = ShadowState::new(&mesh, NormScales::for_queue(&queue, &mesh));
+    // Slot 3 sits on the diagonal chiplet — the longest (two-hop) ingress
+    // route mesh2x2 has, so its pricing walks the full per-hop timeline.
+    let mono_est = b
+        .bench("est_response: mono (compute-only)", || {
+            std::hint::black_box(state.est_response(&task, 3));
+        })
+        .mean();
+    let mesh_est = b
+        .bench("est_response: mesh2x2 (comm-aware)", || {
+            std::hint::black_box(mesh_state.est_response(&task, 3));
+        })
+        .mean();
+    // Link contention: 30 commits through one ingress route reserve the
+    // same links back-to-back, the worst case for the busy-window walk.
+    b.bench("apply x30, one far slot (link contention)", || {
+        let mut s = mesh_state.clone();
+        for t in &burst {
+            std::hint::black_box(s.apply(t, 3));
+        }
+    });
+    let mut mm_mono = hmai::sched::minmin::MinMin::new();
+    let mut mm_mesh = hmai::sched::minmin::MinMin::new();
+    let mono_burst = b
+        .bench("minmin 30-task burst: mono", || {
+            std::hint::black_box(mm_mono.schedule_batch(&burst, &state));
+        })
+        .mean();
+    let mesh_burst = b
+        .bench("minmin 30-task burst: mesh2x2", || {
+            std::hint::black_box(mm_mesh.schedule_batch(&burst, &mesh_state));
+        })
+        .mean();
+    let ratio = |a: f64, m: f64| if m > 0.0 { a / m } else { 0.0 };
+    let comm_overhead = vec![
+        ("est_response", ratio(mesh_est, mono_est)),
+        ("minmin_burst", ratio(mesh_burst, mono_burst)),
+    ];
+    for (key, r) in &comm_overhead {
+        println!("    -> comm-aware {key}: {r:.2}x the compute-only cost");
+    }
+
     section("rollout fitness (30-task genome), before/after");
     let genome: Vec<usize> = (0..burst.len()).map(|i| i % platform.len()).collect();
     b.bench("rollout_cost: full-clone reference", || {
@@ -85,21 +129,23 @@ fn main() -> anyhow::Result<()> {
     };
     if let Some(rt) = &rt {
         let mut feat = vec![0.0f32; rt.meta.in_dim];
-        b.bench("featurize (134-dim state)", || {
+        // Label by the artifact's own layout: 134-dim for the 8-slot-feat
+        // v1 layout, 150-dim once the locality feature (v2) is compiled.
+        b.bench(&format!("featurize ({}-dim state)", rt.meta.in_dim), || {
             std::hint::black_box(featurize(&task, &state, &rt.meta, &mut feat));
         });
 
         section("L2/L1 compiled executables (PJRT CPU)");
         let params = rt.init_params(1)?;
         featurize(&task, &state, &rt.meta, &mut feat);
-        b.bench("qnet_infer (1x134 -> 16 Q)", || {
+        b.bench(&format!("qnet_infer (1x{} -> 16 Q)", rt.meta.in_dim), || {
             std::hint::black_box(rt.infer(&params, &feat).unwrap());
         });
         let mut states = Vec::new();
         for _ in 0..rt.meta.infer_batch {
             states.extend_from_slice(&feat);
         }
-        b.bench("qnet_infer_batch (30x134)", || {
+        b.bench(&format!("qnet_infer_batch ({}x{})", rt.meta.infer_batch, rt.meta.in_dim), || {
             std::hint::black_box(rt.infer_batch(&params, &states).unwrap());
         });
         let mut batch = TrainBatch::zeros(&rt.meta);
@@ -208,11 +254,14 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let speedup_json =
         Json::from_pairs(speedups.iter().map(|(k, v)| (*k, Json::Num(*v))).collect());
+    let comm_json =
+        Json::from_pairs(comm_overhead.iter().map(|(k, v)| (*k, Json::Num(*v))).collect());
     let report = Json::from_pairs(vec![
         ("bench", Json::Str("bench_perf".to_string())),
         ("pjrt_runtime", Json::Bool(rt.is_some())),
         ("dse_frontier_size", Json::Num(frontier_size.get() as f64)),
         ("speedup", speedup_json),
+        ("comm_overhead", comm_json),
         ("results", Json::Arr(rows)),
     ]);
     report.write_to(std::path::Path::new(JSON_PATH))?;

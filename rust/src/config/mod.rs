@@ -65,7 +65,11 @@ impl Default for TrainConfig {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
     /// Platform spec: "hmai", "13so", "13si", "12mm" or "so,si,mm" counts.
+    /// May carry an inline `+<topology>` suffix (`"hmai+mesh2x2"`).
     pub platform: String,
+    /// Package topology suffix applied to `platform` (empty = whatever the
+    /// platform spec says; `"mono"` forces monolithic).  CLI: `--topology`.
+    pub topology: String,
     /// Scheduler name ("flexai" or a baseline).
     pub scheduler: String,
     /// FlexAI checkpoint to load (empty = fresh init).
@@ -92,6 +96,7 @@ impl Default for ExperimentConfig {
     fn default() -> Self {
         ExperimentConfig {
             platform: "hmai".into(),
+            topology: String::new(),
             scheduler: "flexai".into(),
             checkpoint: String::new(),
             deadline: DeadlineMode::Rss,
@@ -107,10 +112,21 @@ impl Default for ExperimentConfig {
 }
 
 impl ExperimentConfig {
+    /// The platform spec with the configured `--topology` suffix applied
+    /// (`"hmai"` + `"mesh2x2"` → `"hmai+mesh2x2"`).
+    pub fn platform_spec(&self) -> String {
+        if self.topology.is_empty() {
+            self.platform.clone()
+        } else {
+            format!("{}+{}", self.platform, self.topology)
+        }
+    }
+
     /// Resolve the platform spec (descriptive errors via `try_parse`, so a
-    /// bad `--platform` string explains itself).
+    /// bad `--platform`/`--topology` string explains itself).
     pub fn platform(&self) -> Result<Platform> {
-        Platform::try_parse(&self.platform).map_err(|e| anyhow::anyhow!("--platform: {e}"))
+        Platform::try_parse(&self.platform_spec())
+            .map_err(|e| anyhow::anyhow!("--platform: {e}"))
     }
 
     /// Resolve the scheduler name into a typed spec (FlexAI carries the
@@ -137,7 +153,7 @@ impl ExperimentConfig {
             .area(self.env.area)
             .distances(self.env.distances_m.iter().copied())
             .deadline(self.deadline)
-            .platform(self.platform.clone())
+            .platform(self.platform_spec())
             .scheduler(self.scheduler_spec()?)
             .seed(self.env.seed);
         if self.replicates > 1 {
@@ -170,6 +186,7 @@ impl ExperimentConfig {
         for (k, v) in o.iter() {
             match k {
                 "platform" => self.platform = v.as_str().context("platform")?.to_string(),
+                "topology" => self.topology = v.as_str().context("topology")?.to_string(),
                 "scheduler" => self.scheduler = v.as_str().context("scheduler")?.to_string(),
                 "checkpoint" => self.checkpoint = v.as_str().context("checkpoint")?.to_string(),
                 "deadline" => {
@@ -241,6 +258,9 @@ impl ExperimentConfig {
         if let Some(p) = args.get("platform") {
             self.platform = p.to_string();
         }
+        if let Some(t) = args.get("topology") {
+            self.topology = t.to_string();
+        }
         if let Some(s) = args.get("sched") {
             self.scheduler = s.to_string();
         }
@@ -296,6 +316,7 @@ impl ExperimentConfig {
     pub fn to_json(&self) -> Json {
         let mut o = JsonObj::new();
         o.insert("platform", Json::Str(self.platform.clone()));
+        o.insert("topology", Json::Str(self.topology.clone()));
         o.insert("scheduler", Json::Str(self.scheduler.clone()));
         o.insert("checkpoint", Json::Str(self.checkpoint.clone()));
         o.insert("deadline", Json::Str(self.deadline.name().to_string()));
@@ -476,6 +497,28 @@ mod tests {
             .apply_args(&Args::parse(["--replicates".to_string(), "0".to_string()]))
             .unwrap_err();
         assert!(format!("{err:#}").contains("replicates"), "{err:#}");
+    }
+
+    #[test]
+    fn topology_flag_suffixes_platform() {
+        let mut c = ExperimentConfig::default();
+        c.apply_args(&Args::parse(["--topology".to_string(), "mesh2x2".to_string()])).unwrap();
+        assert_eq!(c.platform_spec(), "hmai+mesh2x2");
+        let p = c.platform().unwrap();
+        assert!(p.topology.is_some());
+        assert_eq!(p.name, "HMAI(4SO,4SI,3MM)+mesh2x2");
+        // `--topology mono` is explicit monolithic: parses and normalizes.
+        c.topology = "mono".into();
+        assert!(c.platform().unwrap().topology.is_none());
+        // Bad suffixes keep the pointed topology error.
+        c.topology = "torus9".into();
+        let err = c.platform().unwrap_err().to_string();
+        assert!(err.contains("torus9"), "{err}");
+        // Round-trips through JSON like every other key.
+        c.topology = "ring3@2x".into();
+        c.flexai.seed = c.env.seed;
+        let c2 = ExperimentConfig::from_json_text(&c.to_json().to_string()).unwrap();
+        assert_eq!(c, c2);
     }
 
     #[test]

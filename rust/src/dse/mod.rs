@@ -17,14 +17,29 @@
 //! it through [`Engine::sweep_streaming`], so trials parallelize across
 //! `--jobs`, queues are shared through the engine's queue cache, and
 //! memory stays flat no matter how many mixes are in flight.
+//!
+//! ## Topology axis
+//!
+//! `--topology` adds package topologies ([`Topology`] presets) as a second
+//! search axis: every mix is then evaluated monolithically *and* on each
+//! listed chiplet topology (spec `"{mix}+{topo}"`), with communication
+//! costs paid through the [`crate::interconnect`] model.  The axis also
+//! activates the *reticle* constraint: one die can hold at most
+//! [`MONO_DIE_AREA_UNITS`] area units, so a monolithic candidate is capped
+//! at the reticle while a C-chiplet candidate may spend up to C reticles
+//! (still within `--budget`) — the silicon-economics reason dis-integrated
+//! packages earn frontier seats despite paying for data movement.  With no
+//! `--topology` the axis is off and `hmai dse` behaves exactly as before.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::accel::{self, AccelKind, CoreSize, ALL_ACCELS, ALL_SIZES};
 use crate::engine::Engine;
 use crate::env::taskgen::DeadlineMode;
+use crate::interconnect::{Topology, MONO_DIE_AREA_UNITS};
 use crate::metrics::summary::SweepSummary;
 use crate::plan::ExperimentPlan;
 use crate::platform::Platform;
@@ -82,6 +97,10 @@ pub struct DseConfig {
     /// Beam width of the greedy search.
     pub beam: usize,
     pub search: SearchMode,
+    /// Chiplet topologies to search alongside the implicit monolithic
+    /// candidate ([`Topology::try_parse`] grammar, placement-free).  Empty
+    /// disables the topology axis entirely (legacy behavior).
+    pub topologies: Vec<String>,
 }
 
 impl Default for DseConfig {
@@ -98,8 +117,65 @@ impl Default for DseConfig {
             max_evals: 256,
             beam: 2,
             search: SearchMode::Auto,
+            topologies: Vec::new(),
         }
     }
+}
+
+/// One entry on the topology axis: `label` is the canonical topology name
+/// (`"mono"` for the implicit monolithic candidate, `topo == None`).
+#[derive(Debug, Clone)]
+struct TopoEntry {
+    label: String,
+    topo: Option<Arc<Topology>>,
+}
+
+impl TopoEntry {
+    /// Platform spec for `mix` on this entry (`Platform::try_parse`
+    /// grammar) — monolithic candidates keep the bare mix spec.
+    fn spec_for(&self, mix: &Mix) -> String {
+        match &self.topo {
+            None => mix.spec(),
+            Some(_) => format!("{}+{}", mix.spec(), self.label),
+        }
+    }
+
+    fn chiplets(&self) -> usize {
+        self.topo.as_ref().map_or(1, |t| t.chiplets)
+    }
+}
+
+/// Build the topology axis: always the implicit monolithic entry first,
+/// then each parsed `--topology` preset (deduplicated by canonical name,
+/// explicit `mono` spellings folded into the implicit entry).
+fn resolve_topologies(specs: &[String]) -> Result<Vec<TopoEntry>> {
+    let mut out = vec![TopoEntry { label: "mono".to_string(), topo: None }];
+    for s in specs {
+        anyhow::ensure!(
+            !s.contains('/'),
+            "dse --topology '{s}': explicit placements cannot be searched (candidate mixes \
+             vary their slot count) — use a placement-free preset like mesh2x2 or ring3"
+        );
+        let t = Topology::try_parse(s).map_err(|e| anyhow::anyhow!("dse --topology: {e}"))?;
+        if t.is_mono() || out.iter().any(|e| e.label == t.name) {
+            continue;
+        }
+        out.push(TopoEntry { label: t.name.clone(), topo: Some(Arc::new(t)) });
+    }
+    Ok(out)
+}
+
+/// Area budget a candidate of this topology entry may actually spend.
+/// With the topology axis active every die must fit the reticle
+/// ([`MONO_DIE_AREA_UNITS`]): a monolithic candidate is one die, a
+/// C-chiplet candidate spreads its area over C dies ([`Topology::
+/// max_die_area`]).  Without the axis (legacy `hmai dse`) the raw budget
+/// passes through untouched.
+fn effective_budget(budget_area: f64, entry: &TopoEntry, axis_active: bool) -> f64 {
+    if !axis_active {
+        return budget_area;
+    }
+    budget_area.min(MONO_DIE_AREA_UNITS * entry.chiplets() as f64)
 }
 
 /// One candidate platform mix: core count per (kind, size) cell.
@@ -179,7 +255,12 @@ impl Mix {
 #[derive(Debug, Clone)]
 pub struct EvalRow {
     pub mix: Mix,
+    /// Full candidate spec, topology suffix included (`"so:4,...+mesh2x2"`).
     pub spec: String,
+    /// Topology label — `"mono"` for a monolithic candidate.
+    pub topology: String,
+    /// Die count of the package (1 for mono).
+    pub chiplets: usize,
     pub cores: usize,
     pub area: f64,
     pub peak_power_w: f64,
@@ -190,6 +271,10 @@ pub struct EvalRow {
     /// Geometric-mean wait+compute time (s) over the slice.
     pub time_s: f64,
     pub r_balance: f64,
+    /// Mean interconnect delay per task (ms) — 0 on monolithic candidates.
+    pub comm_delay_ms_per_task: f64,
+    /// Mean bytes moved over the interconnect per trial (GB).
+    pub comm_gb: f64,
     /// Non-dominated on (stm_rate ↑, energy_j ↓, area ↓)?
     pub on_frontier: bool,
 }
@@ -198,6 +283,8 @@ impl EvalRow {
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("spec", Json::Str(self.spec.clone())),
+            ("topology", Json::Str(self.topology.clone())),
+            ("chiplets", Json::Num(self.chiplets as f64)),
             ("cores", Json::Num(self.cores as f64)),
             ("area_units", Json::Num(self.area)),
             ("peak_power_w", Json::Num(self.peak_power_w)),
@@ -205,6 +292,8 @@ impl EvalRow {
             ("energy_j", Json::Num(self.energy_j)),
             ("time_s", Json::Num(self.time_s)),
             ("r_balance", Json::Num(self.r_balance)),
+            ("comm_delay_ms_per_task", Json::Num(self.comm_delay_ms_per_task)),
+            ("comm_gb", Json::Num(self.comm_gb)),
             ("on_frontier", Json::Bool(self.on_frontier)),
         ])
     }
@@ -222,6 +311,9 @@ pub struct DseReport {
     pub power_cap_w: Option<f64>,
     /// Candidates dropped by `max_evals` (0 = exhaustive within mode).
     pub truncated: usize,
+    /// Topology-axis labels, `"mono"` first (just `["mono"]` when the
+    /// axis is off).
+    pub topologies: Vec<String>,
 }
 
 impl DseReport {
@@ -244,6 +336,10 @@ impl DseReport {
             ("search", Json::Str(self.search.to_string())),
             ("evaluated", Json::Num(self.evaluated as f64)),
             ("truncated", Json::Num(self.truncated as f64)),
+            (
+                "topologies",
+                Json::Arr(self.topologies.iter().map(|t| Json::Str(t.clone())).collect()),
+            ),
             ("frontier_size", Json::Num(self.frontier as f64)),
             (
                 "frontier",
@@ -328,36 +424,41 @@ pub fn mark_frontier(rows: &mut [EvalRow]) -> usize {
 struct Evaluator<'a> {
     cfg: &'a DseConfig,
     registry: &'a Registry,
+    /// Resolved topology axis (`[mono]` when the axis is off).
+    topos: &'a [TopoEntry],
     /// Evaluated rows, in first-evaluation order (deterministic).
     rows: Vec<EvalRow>,
-    index: BTreeMap<Mix, usize>,
+    /// (mix, topology-axis index) → row index.
+    index: BTreeMap<(Mix, usize), usize>,
 }
 
 impl<'a> Evaluator<'a> {
-    fn new(cfg: &'a DseConfig, registry: &'a Registry) -> Evaluator<'a> {
-        Evaluator { cfg, registry, rows: Vec::new(), index: BTreeMap::new() }
+    fn new(cfg: &'a DseConfig, registry: &'a Registry, topos: &'a [TopoEntry]) -> Evaluator<'a> {
+        Evaluator { cfg, registry, topos, rows: Vec::new(), index: BTreeMap::new() }
     }
 
     fn evaluated(&self) -> usize {
         self.rows.len()
     }
 
-    fn row(&self, mix: &Mix) -> &EvalRow {
-        &self.rows[self.index[mix]]
+    fn row(&self, mix: &Mix, ti: usize) -> &EvalRow {
+        &self.rows[self.index[&(*mix, ti)]]
     }
 
-    /// Evaluate every not-yet-seen mix of `mixes` in one engine sweep.
-    fn eval_all(&mut self, mixes: &[Mix]) -> Result<()> {
+    /// Evaluate every not-yet-seen mix of `mixes` on topology entry `ti`
+    /// in one engine sweep.
+    fn eval_all(&mut self, mixes: &[Mix], ti: usize) -> Result<()> {
+        let entry = &self.topos[ti];
         let mut fresh: Vec<Mix> = Vec::new();
         for &m in mixes {
-            if !self.index.contains_key(&m) && !fresh.contains(&m) {
+            if !self.index.contains_key(&(m, ti)) && !fresh.contains(&m) {
                 fresh.push(m);
             }
         }
         if fresh.is_empty() {
             return Ok(());
         }
-        let specs: Vec<String> = fresh.iter().map(|m| m.spec()).collect();
+        let specs: Vec<String> = fresh.iter().map(|m| entry.spec_for(m)).collect();
         let plan = ExperimentPlan::new()
             .scenarios(self.cfg.scenarios.iter().cloned())
             .distances(self.cfg.distances_m.iter().copied())
@@ -369,9 +470,9 @@ impl<'a> Evaluator<'a> {
             .jobs(self.cfg.jobs)
             .sweep_streaming(&plan)
             .context("dse candidate sweep")?;
-        for mix in fresh {
-            let row = fold_rows(&mix, &sweep)?;
-            self.index.insert(mix, self.rows.len());
+        for (mix, spec) in fresh.into_iter().zip(specs) {
+            let row = fold_rows(&mix, entry, spec, &sweep)?;
+            self.index.insert((mix, ti), self.rows.len());
             self.rows.push(row);
         }
         Ok(())
@@ -379,14 +480,23 @@ impl<'a> Evaluator<'a> {
 }
 
 /// Fold a candidate's sweep rows (one per scenario) into one `EvalRow`.
-fn fold_rows(mix: &Mix, sweep: &SweepSummary) -> Result<EvalRow> {
-    let name = mix.platform().name;
+fn fold_rows(mix: &Mix, entry: &TopoEntry, spec: String, sweep: &SweepSummary) -> Result<EvalRow> {
+    // Sweep groups key on the *platform name*: the bare mix name for mono,
+    // the `+topology`-suffixed name the platform parser produces otherwise.
+    let name = match &entry.topo {
+        None => mix.platform().name,
+        Some(_) => {
+            Platform::try_parse(&spec).map_err(anyhow::Error::msg).context("dse spec")?.name
+        }
+    };
     let mut met = 0u64;
     let mut tasks = 0u64;
     let mut n = 0u64;
     let mut sum_ln_e = 0.0;
     let mut sum_ln_t = 0.0;
     let mut sum_rb = 0.0;
+    let mut sum_comm_delay = 0.0;
+    let mut sum_comm_gb = 0.0;
     for g in sweep.groups.iter().filter(|g| g.key.platform == name) {
         met += g.stats.sum_tasks_met;
         tasks += g.stats.sum_tasks;
@@ -394,11 +504,15 @@ fn fold_rows(mix: &Mix, sweep: &SweepSummary) -> Result<EvalRow> {
         sum_ln_e += g.stats.sum_ln_energy;
         sum_ln_t += g.stats.sum_ln_time;
         sum_rb += g.stats.sum_r_balance;
+        sum_comm_delay += g.stats.sum_comm_delay;
+        sum_comm_gb += g.stats.sum_comm_gb;
     }
     anyhow::ensure!(n > 0, "no sweep rows for candidate '{name}'");
     Ok(EvalRow {
         mix: *mix,
-        spec: mix.spec(),
+        spec,
+        topology: entry.label.clone(),
+        chiplets: entry.chiplets(),
         cores: mix.cores(),
         area: mix.area_units(),
         peak_power_w: mix.peak_power_w(),
@@ -406,6 +520,8 @@ fn fold_rows(mix: &Mix, sweep: &SweepSummary) -> Result<EvalRow> {
         energy_j: (sum_ln_e / n as f64).exp(),
         time_s: (sum_ln_t / n as f64).exp(),
         r_balance: sum_rb / n as f64,
+        comm_delay_ms_per_task: if tasks == 0 { 0.0 } else { sum_comm_delay / tasks as f64 * 1e3 },
+        comm_gb: sum_comm_gb / n as f64,
         on_frontier: false,
     })
 }
@@ -414,9 +530,18 @@ fn fold_rows(mix: &Mix, sweep: &SweepSummary) -> Result<EvalRow> {
 /// the `beam` best per step (deadline-met rate, then energy, then area),
 /// until the budget admits no extension or `max_evals` is hit.  Every step
 /// adds exactly one core, so area strictly grows and the loop terminates.
-fn greedy_search(cfg: &DseConfig, ev: &mut Evaluator) -> Result<usize> {
+/// Searches one topology entry `ti` with its effective `budget_area`;
+/// `evals_cap` is this entry's cumulative share of `max_evals` (equal to
+/// `cfg.max_evals` when the topology axis is off).
+fn greedy_search(
+    cfg: &DseConfig,
+    ev: &mut Evaluator,
+    ti: usize,
+    budget_area: f64,
+    evals_cap: usize,
+) -> Result<usize> {
     let within = |m: &Mix| {
-        m.area_units() <= cfg.budget_area + 1e-9
+        m.area_units() <= budget_area + 1e-9
             && cfg.power_cap_w.map(|cap| m.peak_power_w() <= cap).unwrap_or(true)
     };
     let all_cells =
@@ -424,7 +549,7 @@ fn greedy_search(cfg: &DseConfig, ev: &mut Evaluator) -> Result<usize> {
     // Select the `beam` best of an evaluated batch (deterministic order).
     let select_top = |mixes: &mut Vec<Mix>, ev: &Evaluator| {
         mixes.sort_by(|a, b| {
-            let (ra, rb) = (ev.row(a), ev.row(b));
+            let (ra, rb) = (ev.row(a, ti), ev.row(b, ti));
             rb.stm_rate
                 .total_cmp(&ra.stm_rate)
                 .then(ra.energy_j.total_cmp(&rb.energy_j))
@@ -440,7 +565,7 @@ fn greedy_search(cfg: &DseConfig, ev: &mut Evaluator) -> Result<usize> {
     let mut truncated = 0usize;
     loop {
         // Cap the batch at the remaining eval budget (logged below).
-        let budget_left = cfg.max_evals.saturating_sub(ev.evaluated());
+        let budget_left = evals_cap.saturating_sub(ev.evaluated());
         if batch.len() > budget_left {
             truncated += batch.len() - budget_left;
             batch.truncate(budget_left);
@@ -448,7 +573,7 @@ fn greedy_search(cfg: &DseConfig, ev: &mut Evaluator) -> Result<usize> {
         if batch.is_empty() {
             break;
         }
-        ev.eval_all(&batch)?;
+        ev.eval_all(&batch, ti)?;
         select_top(&mut batch, ev);
         // Extend each kept beam by one core; already-evaluated mixes
         // cannot reappear (extensions always have one more core than any
@@ -493,56 +618,83 @@ pub fn run(cfg: &DseConfig, registry: &Registry) -> Result<DseReport> {
     for name in &cfg.scenarios {
         crate::env::scenario::find(name).context("dse --scenario")?;
     }
+    let topos = resolve_topologies(&cfg.topologies)?;
+    let axis_active = topos.len() > 1;
 
-    let mut ev = Evaluator::new(cfg, registry);
+    let mut ev = Evaluator::new(cfg, registry, &topos);
+    // Each topology entry gets an equal share of the eval budget so an
+    // early entry cannot starve the later ones; an entry's unspent share
+    // rolls forward via the cumulative cap.  With the axis off the single
+    // entry's cap is exactly `max_evals` (legacy behaviour).
+    let share =
+        |ti: usize| cfg.max_evals / topos.len() + usize::from(ti < cfg.max_evals % topos.len());
     let (mode, mut truncated) = match cfg.search {
         SearchMode::Greedy => (SearchMode::Greedy, 0),
         SearchMode::Full => (SearchMode::Full, 0),
         SearchMode::Auto => {
-            let (_, over) = enumerate(cfg.budget_area, cfg.power_cap_w, cfg.max_evals);
+            // Per-entry effective budgets never exceed the raw budget, so
+            // probing it with the eval budget split across the axis gives
+            // a sound (and, with the axis off, exactly the legacy) answer.
+            let limit = (cfg.max_evals / topos.len()).max(1);
+            let (_, over) = enumerate(cfg.budget_area, cfg.power_cap_w, limit);
             (if over { SearchMode::Greedy } else { SearchMode::Full }, 0)
         }
     };
     match mode {
         SearchMode::Full => {
-            let (mut mixes, over) = enumerate(cfg.budget_area, cfg.power_cap_w, 200_000);
-            if over || mixes.len() > cfg.max_evals {
-                // Shortlist by worst-model static capacity (balanced
-                // provisioning) — logged, never silent.
-                let dropped = mixes.len().saturating_sub(cfg.max_evals);
-                crate::log_warn!(
-                    "dse",
-                    "full enumeration has {} candidates; simulating the top {} by worst-model \
-                     capacity ({dropped} dropped — use --search greedy or raise --max-evals)",
-                    mixes.len(),
-                    cfg.max_evals
-                );
-                // One key build per mix (the list can be huge): positive
-                // finite f64s order identically to their bit patterns, so
-                // `to_bits` keys give capacity-desc / area-asc / spec-asc.
-                mixes.sort_by_cached_key(|m| {
-                    (
-                        std::cmp::Reverse(m.worst_capacity_fps().to_bits()),
-                        m.area_units().to_bits(),
-                        m.spec(),
-                    )
-                });
-                mixes.truncate(cfg.max_evals);
-                truncated = dropped;
+            let mut cap = 0usize;
+            for ti in 0..topos.len() {
+                cap += share(ti);
+                let eff = effective_budget(cfg.budget_area, &topos[ti], axis_active);
+                let (mut mixes, over) = enumerate(eff, cfg.power_cap_w, 200_000);
+                let left = cap.saturating_sub(ev.evaluated());
+                if over || mixes.len() > left {
+                    // Shortlist by worst-model static capacity (balanced
+                    // provisioning) — logged, never silent.
+                    let dropped = mixes.len().saturating_sub(left);
+                    crate::log_warn!(
+                        "dse",
+                        "full enumeration ({}) has {} candidates; simulating the top {left} by \
+                         worst-model capacity ({dropped} dropped — use --search greedy or raise \
+                         --max-evals)",
+                        topos[ti].label,
+                        mixes.len(),
+                    );
+                    // One key build per mix (the list can be huge): positive
+                    // finite f64s order identically to their bit patterns, so
+                    // `to_bits` keys give capacity-desc / area-asc / spec-asc.
+                    mixes.sort_by_cached_key(|m| {
+                        (
+                            std::cmp::Reverse(m.worst_capacity_fps().to_bits()),
+                            m.area_units().to_bits(),
+                            m.spec(),
+                        )
+                    });
+                    mixes.truncate(left);
+                    truncated += dropped;
+                }
+                ev.eval_all(&mixes, ti)?;
             }
-            ev.eval_all(&mixes)?;
         }
         SearchMode::Greedy | SearchMode::Auto => {
-            truncated = greedy_search(cfg, &mut ev)?;
+            let mut cap = 0usize;
+            for ti in 0..topos.len() {
+                cap += share(ti);
+                let eff = effective_budget(cfg.budget_area, &topos[ti], axis_active);
+                truncated += greedy_search(cfg, &mut ev, ti, eff, cap)?;
+            }
         }
     }
 
-    // The paper's HMAI point, for frontier placement (acceptance anchor).
+    // The paper's HMAI point, for frontier placement (acceptance anchor) —
+    // on every topology entry it fits.
     let hmai = Mix::hmai_std();
-    if hmai.area_units() <= cfg.budget_area + 1e-9
-        && cfg.power_cap_w.map(|cap| hmai.peak_power_w() <= cap).unwrap_or(true)
-    {
-        ev.eval_all(&[hmai])?;
+    for ti in 0..topos.len() {
+        if hmai.area_units() <= effective_budget(cfg.budget_area, &topos[ti], axis_active) + 1e-9
+            && cfg.power_cap_w.map(|cap| hmai.peak_power_w() <= cap).unwrap_or(true)
+        {
+            ev.eval_all(&[hmai], ti)?;
+        }
     }
 
     let mut rows = ev.rows;
@@ -565,6 +717,7 @@ pub fn run(cfg: &DseConfig, registry: &Registry) -> Result<DseReport> {
         budget_area: cfg.budget_area,
         power_cap_w: cfg.power_cap_w,
         truncated,
+        topologies: topos.iter().map(|t| t.label.clone()).collect(),
     })
 }
 
@@ -635,6 +788,8 @@ mod tests {
         let row = |stm: f64, e: f64, a: f64| EvalRow {
             mix: Mix::default(),
             spec: format!("{stm}-{e}-{a}"),
+            topology: "mono".to_string(),
+            chiplets: 1,
             cores: 1,
             area: a,
             peak_power_w: 1.0,
@@ -642,6 +797,8 @@ mod tests {
             energy_j: e,
             time_s: 1.0,
             r_balance: 0.5,
+            comm_delay_ms_per_task: 0.0,
+            comm_gb: 0.0,
             on_frontier: false,
         };
         let mut rows = vec![
@@ -701,5 +858,83 @@ mod tests {
         assert!(run(&bad, &reg).is_err());
         let bad = DseConfig { scenarios: vec!["nope".into()], ..Default::default() };
         assert!(run(&bad, &reg).is_err());
+        let bad = DseConfig { topologies: vec!["torus9".into()], ..Default::default() };
+        assert!(run(&bad, &reg).is_err());
+    }
+
+    #[test]
+    fn topology_axis_resolution_and_reticle_cap() {
+        // Axis off: one implicit mono entry, raw budget untouched.
+        let off = resolve_topologies(&[]).unwrap();
+        assert_eq!(off.len(), 1);
+        assert_eq!(off[0].label, "mono");
+        assert_eq!(effective_budget(16.0, &off[0], false), 16.0);
+        // Axis on: canonical dedup (mesh2x2@1x == mesh2x2), explicit mono
+        // spellings fold into the implicit entry.
+        let topos = resolve_topologies(&[
+            "mesh2x2".into(),
+            "mesh2x2@1x".into(),
+            "mono".into(),
+            "ring2".into(),
+        ])
+        .unwrap();
+        let labels: Vec<&str> = topos.iter().map(|e| e.label.as_str()).collect();
+        assert_eq!(labels, ["mono", "mesh2x2", "ring2"]);
+        // Reticle: mono capped at one die, C chiplets get up to C dies.
+        assert_eq!(effective_budget(16.0, &topos[0], true), MONO_DIE_AREA_UNITS);
+        assert_eq!(effective_budget(16.0, &topos[1], true), 16.0);
+        assert_eq!(effective_budget(60.0, &topos[1], true), 4.0 * MONO_DIE_AREA_UNITS);
+        assert_eq!(effective_budget(16.0, &topos[2], true), 16.0);
+        // Placement-carrying and unknown presets are pointed errors.
+        let err = resolve_topologies(&["ring2/0.1".into()]).unwrap_err().to_string();
+        assert!(err.contains("placement"), "{err}");
+        assert!(resolve_topologies(&["torus9".into()]).is_err());
+    }
+
+    #[test]
+    fn tiny_topology_axis_run_covers_both_axes() {
+        let reg = Registry::new();
+        let cfg = DseConfig {
+            budget_area: 1.5,
+            distances_m: vec![40.0],
+            scenarios: vec!["urban-rush".to_string()],
+            max_evals: 60,
+            beam: 1,
+            search: SearchMode::Greedy,
+            topologies: vec!["ring2".to_string()],
+            ..Default::default()
+        };
+        let report = run(&cfg, &reg).unwrap();
+        assert_eq!(report.topologies, vec!["mono".to_string(), "ring2".to_string()]);
+        assert!(report.rows.iter().any(|r| r.topology == "mono"));
+        assert!(report.rows.iter().any(|r| r.topology == "ring2"));
+        for r in &report.rows {
+            if r.topology == "mono" {
+                assert_eq!(r.chiplets, 1);
+                assert!(!r.spec.contains('+'), "{}", r.spec);
+                assert_eq!(r.comm_delay_ms_per_task, 0.0, "{}", r.spec);
+                assert_eq!(r.comm_gb, 0.0, "{}", r.spec);
+            } else {
+                assert_eq!(r.chiplets, 2);
+                assert!(r.spec.ends_with("+ring2"), "{}", r.spec);
+            }
+        }
+        // Some multi-core ring2 candidate actually moved bytes off-die.
+        assert!(
+            report
+                .rows
+                .iter()
+                .any(|r| r.topology == "ring2" && r.cores > 1 && r.comm_delay_ms_per_task > 0.0),
+            "no chiplet candidate paid any communication"
+        );
+        // Deterministic re-run, candidate identity included.
+        let again = run(&cfg, &reg).unwrap();
+        assert_eq!(again.evaluated, report.evaluated);
+        for (a, b) in report.rows.iter().zip(&again.rows) {
+            assert_eq!(a.spec, b.spec);
+            assert_eq!(a.topology, b.topology);
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            assert_eq!(a.comm_delay_ms_per_task.to_bits(), b.comm_delay_ms_per_task.to_bits());
+        }
     }
 }

@@ -419,6 +419,16 @@ pub fn library() -> Vec<Archetype> {
             events: Vec::new(),
         },
         Archetype {
+            name: "urban-rush-20cam-hd".into(),
+            help: "urban-rush, 20-camera rig at doubled per-camera rates (sensor upgrade: \
+                   ~14 std-core-equivalents of affine demand, beyond one reticle)",
+            legs: rush_legs(),
+            rig: CameraRig::mid20(),
+            hz_scale: 2.0,
+            dropouts: Vec::new(),
+            events: Vec::new(),
+        },
+        Archetype {
             name: "urban-rush-12cam".into(),
             help: "urban-rush on the 12-camera rig (§7)",
             legs: rush_legs(),

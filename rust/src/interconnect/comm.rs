@@ -1,0 +1,319 @@
+//! Communication-aware pricing: the [`PlatformCostModel`] seam and the
+//! dynamic link-occupancy state the simulator threads through every
+//! scheduler.
+//!
+//! [`ComputeOnly`] is today's model — a bare `accel::CostModel`.
+//! [`CommCostModel`] composes that same compute model with a
+//! [`Topology`]: every task additionally pays store-and-forward transfers
+//! for its input (and, on a residency miss, its weights) from the ingress
+//! to the executing chiplet, and for its output back.  `ShadowState`
+//! consults the seam at construction: no topology ⇒ no [`CommState`] ⇒
+//! the exact pre-interconnect instruction stream (bit-identity pinned by
+//! `tests/interconnect.rs`).
+//!
+//! The pricing discipline matches the rest of the crate: *estimates and
+//! commits share one op sequence*.  [`CommState::plan`] computes the full
+//! per-hop timeline without mutating anything; [`CommState::commit`]
+//! writes exactly the planned times back.  `ShadowState::apply`,
+//! `ShadowState::est_response` and the `RolloutCtx` fast paths all price
+//! through the same `plan`, so scheduler predictions stay exact under
+//! contention — the property `est_response_matches_apply`-style tests pin.
+
+use std::sync::Arc;
+
+use crate::accel::CostModel;
+use crate::workload::ModelKind;
+
+use super::{traffic, Topology, MAX_ROUTE_LINKS};
+
+/// How a platform prices work: a compute cost model, optionally composed
+/// with an interconnect topology.  `Platform::pricing` hands one to
+/// `ShadowState::new`.
+pub trait PlatformCostModel {
+    /// Per-slot compute cost rows (always present).
+    fn compute(&self) -> &Arc<CostModel>;
+    /// Interconnect topology, when transfers are priced too.
+    fn topology(&self) -> Option<&Arc<Topology>>;
+}
+
+/// Compute-only pricing — the pre-interconnect model, unchanged.
+pub struct ComputeOnly {
+    pub compute: Arc<CostModel>,
+}
+
+impl PlatformCostModel for ComputeOnly {
+    fn compute(&self) -> &Arc<CostModel> {
+        &self.compute
+    }
+
+    fn topology(&self) -> Option<&Arc<Topology>> {
+        None
+    }
+}
+
+/// Compute composed with inter-chiplet communication.
+pub struct CommCostModel {
+    pub compute: Arc<CostModel>,
+    pub topology: Arc<Topology>,
+}
+
+impl PlatformCostModel for CommCostModel {
+    fn compute(&self) -> &Arc<CostModel> {
+        &self.compute
+    }
+
+    fn topology(&self) -> Option<&Arc<Topology>> {
+        Some(&self.topology)
+    }
+}
+
+/// The planned timeline of one task's transfers + execution: per-hop
+/// inbound/outbound link-free times, exec window and delivery time.
+/// Produced by [`CommState::plan`], committed verbatim by
+/// [`CommState::commit`] — the two never diverge.
+#[derive(Debug, Clone, Copy)]
+pub struct CommPlan {
+    /// When the input (and any missed weights) lands on the chiplet.
+    pub arrive_s: f64,
+    /// Execution start: `max(slot drain, arrive_s)`.
+    pub start_s: f64,
+    /// Execution finish (what the slot's FIFO drains to).
+    pub finish_s: f64,
+    /// When the output lands back at the ingress — the response endpoint.
+    pub done_s: f64,
+    /// Total bytes moved (input + missed weights + output).
+    pub bytes: f64,
+    /// Time in flight: inbound + outbound transfer time.
+    pub comm_s: f64,
+    hops: usize,
+    inbound: [f64; MAX_ROUTE_LINKS],
+    outbound: [f64; MAX_ROUTE_LINKS],
+}
+
+/// Dynamic interconnect state: per-link occupancy and per-slot weight
+/// residency, plus the run accumulators the summary reports.  Cloning is
+/// cheap (two short `Vec`s), which is what GA/SA rollouts need.
+#[derive(Debug, Clone)]
+pub struct CommState {
+    topo: Arc<Topology>,
+    /// Resolved slot → chiplet placement (validated at platform parse).
+    chiplet_of: Vec<usize>,
+    /// Per link: time at which it is free (store-and-forward serial).
+    pub link_busy: Vec<f64>,
+    /// Per slot: the model whose weights are resident (None = cold).
+    pub resident: Vec<Option<ModelKind>>,
+    /// Σ per-task in-flight time (s) — the run's comm-delay accumulator.
+    pub delay_s: f64,
+    /// Σ bytes moved over the interconnect.
+    pub bytes: f64,
+}
+
+impl CommState {
+    pub fn new(topo: Arc<Topology>, slots: usize) -> CommState {
+        let chiplet_of = (0..slots).map(|s| topo.chiplet_of(s)).collect();
+        let links = topo.links.len();
+        CommState {
+            topo,
+            chiplet_of,
+            link_busy: vec![0.0; links],
+            resident: vec![None; slots],
+            delay_s: 0.0,
+            bytes: 0.0,
+        }
+    }
+
+    /// The topology this state tracks.
+    pub fn topology(&self) -> &Arc<Topology> {
+        &self.topo
+    }
+
+    /// Bitmask of the links on `slot`'s ingress route (0 for slots on the
+    /// ingress chiplet) — what incremental Min-Min intersects to find
+    /// cached bests invalidated by contention.
+    #[inline]
+    pub fn route_mask(&self, slot: usize) -> u64 {
+        self.topo.route_mask(self.chiplet_of.get(slot).copied().unwrap_or(0))
+    }
+
+    /// Would dispatching `model` to `slot` move its weights (residency
+    /// miss on a non-ingress slot)?
+    #[inline]
+    pub fn weight_miss(&self, slot: usize, model: ModelKind) -> bool {
+        self.resident.get(slot).copied().flatten() != Some(model)
+            && self.route_mask(slot) != 0
+    }
+
+    /// Price `model` on `slot` at clock `now` against the current link
+    /// occupancy: store-and-forward inbound walk (input + weights on a
+    /// residency miss), execution behind the slot's FIFO (`busy_until`,
+    /// `compute_s`), then the outbound walk for the output.  Pure — reads
+    /// only.  `None` when `slot` sits on the ingress chiplet: no hops, no
+    /// comm cost, and crucially no new float ops on that path.
+    #[inline]
+    pub fn plan(
+        &self,
+        slot: usize,
+        model: ModelKind,
+        now: f64,
+        busy_until: f64,
+        compute_s: f64,
+    ) -> Option<CommPlan> {
+        let chiplet = self.chiplet_of.get(slot).copied().unwrap_or(0);
+        let route = self.topo.route(chiplet);
+        if route.is_empty() {
+            return None;
+        }
+        let tr = traffic::of(model);
+        let miss = self.resident.get(slot).copied().flatten() != Some(model);
+        let in_bytes =
+            if miss { tr.input_bytes + tr.weight_bytes } else { tr.input_bytes };
+        let out_bytes = tr.output_bytes;
+        let mut inbound = [0.0_f64; MAX_ROUTE_LINKS];
+        let mut outbound = [0.0_f64; MAX_ROUTE_LINKS];
+        let mut t = now;
+        for (k, &li) in route.iter().enumerate() {
+            let l = &self.topo.links[li];
+            t = t.max(self.link_busy[li]) + l.hop_s(in_bytes);
+            inbound[k] = t;
+        }
+        let arrive = t;
+        let start = busy_until.max(arrive);
+        let finish = start + compute_s;
+        let mut t = finish;
+        for (k, &li) in route.iter().enumerate().rev() {
+            let l = &self.topo.links[li];
+            t = t.max(inbound[k]) + l.hop_s(out_bytes);
+            outbound[k] = t;
+        }
+        Some(CommPlan {
+            arrive_s: arrive,
+            start_s: start,
+            finish_s: finish,
+            done_s: t,
+            bytes: in_bytes + out_bytes,
+            comm_s: (arrive - now) + (t - finish),
+            hops: route.len(),
+            inbound,
+            outbound,
+        })
+    }
+
+    /// Commit a plan: reserve the links (each route link's free time
+    /// becomes its outbound-pass time — the later of the two passes),
+    /// mark the weights resident and fold the accumulators.
+    #[inline]
+    pub fn commit(&mut self, slot: usize, model: ModelKind, plan: &CommPlan) {
+        let chiplet = self.chiplet_of.get(slot).copied().unwrap_or(0);
+        let route = self.topo.route(chiplet);
+        debug_assert_eq!(route.len(), plan.hops);
+        for (k, &li) in route.iter().enumerate() {
+            self.link_busy[li] = plan.outbound[k];
+        }
+        if let Some(r) = self.resident.get_mut(slot) {
+            *r = Some(model);
+        }
+        self.delay_s += plan.comm_s;
+        self.bytes += plan.bytes;
+    }
+
+    /// Reset the rolling view to `origin`'s occupancy/residency (the
+    /// per-genome reset of `RolloutCtx::rollout_cost`).  Accumulators
+    /// restart from zero — rollouts never report them.
+    pub fn reset_from(&mut self, origin: &CommState) {
+        self.link_busy.copy_from_slice(&origin.link_busy);
+        self.resident.copy_from_slice(&origin.resident);
+        self.delay_s = 0.0;
+        self.bytes = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ALL_MODELS;
+
+    fn mesh_state() -> CommState {
+        let topo = Arc::new(Topology::try_parse("mesh2x2").unwrap());
+        CommState::new(topo, 11)
+    }
+
+    #[test]
+    fn ingress_slots_plan_nothing() {
+        let s = mesh_state();
+        // Round-robin on 4 chiplets: slots 0, 4, 8 sit on the ingress.
+        for slot in [0usize, 4, 8] {
+            assert!(s.plan(slot, ModelKind::Yolo, 0.0, 0.0, 1e-3).is_none());
+            assert_eq!(s.route_mask(slot), 0);
+            assert!(!s.weight_miss(slot, ModelKind::Yolo));
+        }
+        assert!(s.plan(1, ModelKind::Yolo, 0.0, 0.0, 1e-3).is_some());
+    }
+
+    #[test]
+    fn plan_is_pure_and_commit_reserves() {
+        let mut s = mesh_state();
+        let p1 = s.plan(1, ModelKind::Yolo, 0.0, 0.0, 1e-3).unwrap();
+        let p2 = s.plan(1, ModelKind::Yolo, 0.0, 0.0, 1e-3).unwrap();
+        assert_eq!(p1.done_s.to_bits(), p2.done_s.to_bits(), "plan must not mutate");
+        s.commit(1, ModelKind::Yolo, &p1);
+        let p3 = s.plan(1, ModelKind::Yolo, 0.0, 0.0, 1e-3).unwrap();
+        // Second task on the same link queues behind the first transfer
+        // — and hits a warm slot, so it moves fewer bytes.
+        assert!(p3.arrive_s > p1.arrive_s);
+        assert!(p3.bytes < p1.bytes, "residency must drop the weight bytes");
+        assert!((s.delay_s - p1.comm_s).abs() < 1e-15);
+        assert!((s.bytes - p1.bytes).abs() < 1e-6);
+    }
+
+    #[test]
+    fn residency_is_per_slot_and_per_model() {
+        let mut s = mesh_state();
+        assert!(s.weight_miss(1, ModelKind::Yolo));
+        let p = s.plan(1, ModelKind::Yolo, 0.0, 0.0, 1e-3).unwrap();
+        s.commit(1, ModelKind::Yolo, &p);
+        assert!(!s.weight_miss(1, ModelKind::Yolo), "warm for the same model");
+        assert!(s.weight_miss(1, ModelKind::Ssd), "cold for a different model");
+        assert!(s.weight_miss(2, ModelKind::Yolo), "other slots stay cold");
+    }
+
+    #[test]
+    fn timeline_is_causal() {
+        let s = mesh_state();
+        // Slot 3 sits on chiplet 3 (two hops) with a busy FIFO.
+        let p = s.plan(3, ModelKind::Ssd, 1.0, 5.0, 2e-3).unwrap();
+        assert!(p.arrive_s > 1.0, "transfers take time");
+        assert_eq!(p.start_s.to_bits(), p.arrive_s.max(5.0).to_bits());
+        assert!((p.finish_s - (p.start_s + 2e-3)).abs() < 1e-15);
+        assert!(p.done_s > p.finish_s, "output still has to travel");
+        assert!(p.comm_s > 0.0);
+        assert_eq!(p.hops, 2);
+    }
+
+    #[test]
+    fn far_slots_pay_more() {
+        let s = mesh_state();
+        for model in ALL_MODELS {
+            // Chiplet 1 (slot 1) is one hop; chiplet 3 (slot 3) is two.
+            let near = s.plan(1, model, 0.0, 0.0, 1e-3).unwrap();
+            let far = s.plan(3, model, 0.0, 0.0, 1e-3).unwrap();
+            assert!(far.comm_s > near.comm_s, "{model:?}");
+            assert!(far.done_s > near.done_s, "{model:?}");
+        }
+    }
+
+    #[test]
+    fn reset_from_restores_the_origin_view() {
+        let mut origin = mesh_state();
+        let p = origin.plan(1, ModelKind::Yolo, 0.0, 0.0, 1e-3).unwrap();
+        origin.commit(1, ModelKind::Yolo, &p);
+        let mut rolling = origin.clone();
+        let q = rolling.plan(3, ModelKind::Ssd, 0.0, 0.0, 1e-3).unwrap();
+        rolling.commit(3, ModelKind::Ssd, &q);
+        rolling.reset_from(&origin);
+        for (a, b) in rolling.link_busy.iter().zip(&origin.link_busy) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(rolling.resident, origin.resident);
+        assert_eq!(rolling.delay_s, 0.0);
+    }
+}

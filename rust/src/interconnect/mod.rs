@@ -1,0 +1,453 @@
+//! Chiplet/package interconnect model: topologies, link occupancy and
+//! communication-aware task pricing.
+//!
+//! The paper's HMAI substrate prices compute only — every accelerator is a
+//! zero-distance slot.  The multi-chiplet NPU literature (PAPERS.md: arXiv
+//! 2411.16007) shows inter-chiplet transfer latency and bandwidth
+//! contention dominate at exactly the camera scale the ROADMAP north-star
+//! targets, and the dataflow-accelerator line (arXiv 2109.07047) argues
+//! placement/locality must be a first-class scheduling input.  This module
+//! supplies the missing layer:
+//!
+//! * [`Topology`] — a chiplet/package graph (monolithic, `mesh<R>x<C>`,
+//!   `ring<N>`, `package<N>` presets) with per-link latency/bandwidth,
+//!   per-slot chiplet placement and precomputed ingress routes.  The spec
+//!   grammar rides on the platform grammar: `hmai+mesh2x2`,
+//!   `so:4@2x,si:4,mm:3+ring4@2x`, `hmai+mesh2x2/0.1.2.3.0.1.2.3.0.1.2`.
+//! * [`traffic`] — per-task input/weight/output movement bytes derived
+//!   from the `workload::layer` shapes (16-bit datums).
+//! * [`comm`] — the [`PlatformCostModel`] seam: [`ComputeOnly`] (today's
+//!   model, bit-identical) vs [`CommCostModel`] (compute composed with
+//!   link transfers), plus the dynamic [`CommState`] (link occupancy +
+//!   weight residency) that `ShadowState` threads through every scheduler.
+//!
+//! A monolithic topology parses to *no* topology at all — the platform
+//! keeps its bare name and `ShadowState` carries no `CommState` — so the
+//! compute-only path executes the exact pre-interconnect instruction
+//! stream (bit-identity pinned by `tests/interconnect.rs`).
+
+pub mod comm;
+pub mod traffic;
+
+pub use comm::{CommCostModel, CommPlan, CommState, ComputeOnly, PlatformCostModel};
+pub use traffic::Traffic;
+
+use crate::accel::CoreSize;
+
+/// Reticle/yield ceiling of a single die, in [`CoreSize::area_units`].
+/// A monolithic platform cannot exceed this (the economic reason chiplet
+/// packages exist: small dies yield, one huge die does not); a chiplet
+/// package is instead limited per die, so its *total* core area can grow
+/// past the ceiling at the price of inter-chiplet transfers.  `hmai dse`
+/// enforces this whenever a topology sweep is active.
+pub const MONO_DIE_AREA_UNITS: f64 = 12.0;
+
+/// Hard cap on chiplets per package (keeps link sets in a `u64` route
+/// mask and routes within [`MAX_ROUTE_LINKS`]).
+pub const MAX_CHIPLETS: usize = 16;
+
+/// Longest ingress→chiplet route any preset can produce (ring16: 8 hops);
+/// sized with headroom so `CommPlan` can hold per-hop times on the stack.
+pub const MAX_ROUTE_LINKS: usize = 16;
+
+/// Silicon-interposer D2D link (mesh/ring presets): per-hop latency.
+const D2D_LATENCY_S: f64 = 2.0e-7;
+/// Silicon-interposer D2D link bandwidth, GB/s.
+const D2D_GBYTES_PER_S: f64 = 32.0;
+/// Organic-substrate package link (package preset): per-hop latency.
+const PKG_LATENCY_S: f64 = 4.0e-7;
+/// Organic-substrate package link bandwidth, GB/s.
+const PKG_GBYTES_PER_S: f64 = 16.0;
+
+/// One undirected chiplet-to-chiplet link.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub a: usize,
+    pub b: usize,
+    /// Per-hop fixed latency (s).
+    pub latency_s: f64,
+    /// Serialization bandwidth (bytes/s).
+    pub bytes_per_s: f64,
+}
+
+impl Link {
+    /// Time to push `bytes` across this link (store-and-forward hop).
+    #[inline]
+    pub fn hop_s(&self, bytes: f64) -> f64 {
+        self.latency_s + bytes / self.bytes_per_s
+    }
+}
+
+/// A chiplet/package topology: the static interconnect graph plus the
+/// slot→chiplet placement and precomputed ingress routes.
+///
+/// Chiplet 0 hosts the sensor/DRAM ingress: task inputs (and non-resident
+/// weights) enter there and outputs return there.  Routes are BFS
+/// shortest paths from the ingress with a deterministic lowest-neighbor
+/// tie-break, fixed at parse time.
+#[derive(Debug)]
+pub struct Topology {
+    /// Canonical spec, e.g. `mesh2x2`, `ring4@2x`, `package3/0.1.2.0`.
+    pub name: String,
+    pub chiplets: usize,
+    pub links: Vec<Link>,
+    /// Explicit slot→chiplet override (`/c0.c1...`); `None` = round-robin
+    /// `slot % chiplets`.
+    placement: Option<Vec<usize>>,
+    /// Per chiplet: link indices of the ingress→chiplet route, in hop
+    /// order (empty for the ingress chiplet itself).
+    routes: Vec<Vec<usize>>,
+    /// Per chiplet: bitmask over link indices of that route.
+    masks: Vec<u64>,
+}
+
+impl Topology {
+    /// Parse a topology spec: `mono | mesh<R>x<C> | ring<N> | package<N>`
+    /// with an optional `@0.5x|@1x|@2x` link-speed scale and an optional
+    /// `/c0.c1...` per-slot placement.  Placement arity is validated
+    /// against the platform in [`Topology::bind`] (the slot count is not
+    /// known here).  Errors name the offending component, mirroring
+    /// `Platform::try_parse`.
+    pub fn try_parse(spec: &str) -> Result<Topology, String> {
+        let expected = "expected mono | mesh<R>x<C> | ring<N> | package<N>, optionally \
+                        \"@0.5x|1x|2x\" link speed and \"/c0.c1...\" per-slot placement \
+                        — e.g. \"mesh2x2\", \"ring4@2x\", \"package3/0.1.2.0\"";
+        let lc = spec.trim().to_ascii_lowercase();
+        let err = |what: &str| format!("'{lc}' topology: {what} — {expected}");
+        if lc.is_empty() {
+            return Err(err("empty spec"));
+        }
+        let (head, placement_s) = match lc.split_once('/') {
+            Some((h, p)) => (h.trim(), Some(p.trim())),
+            None => (lc.as_str(), None),
+        };
+        let (preset, scale) = match head.split_once('@') {
+            Some((p, sz)) => {
+                let scale = CoreSize::parse(sz.trim())
+                    .ok_or_else(|| err(&format!("unknown link speed '{}'", sz.trim())))?;
+                (p.trim(), scale)
+            }
+            None => (head, CoreSize::Std),
+        };
+        let dim = |s: &str, what: &str| -> Result<usize, String> {
+            let n: usize =
+                s.parse().map_err(|_| err(&format!("bad {what} '{s}' in preset '{preset}'")))?;
+            if n == 0 {
+                return Err(err(&format!(
+                    "zero-chiplet preset '{preset}' — a topology needs at least one chiplet"
+                )));
+            }
+            Ok(n)
+        };
+        let d2d = |a: usize, b: usize| Link {
+            a,
+            b,
+            latency_s: D2D_LATENCY_S,
+            bytes_per_s: D2D_GBYTES_PER_S * scale.scale() * 1e9,
+        };
+        let (canon_preset, chiplets, links) = if preset == "mono" {
+            ("mono".to_string(), 1, Vec::new())
+        } else if let Some(rc) = preset.strip_prefix("mesh") {
+            let (r_s, c_s) =
+                rc.split_once('x').ok_or_else(|| err(&format!("bad mesh spec '{preset}'")))?;
+            let (rows, cols) = (dim(r_s, "row count")?, dim(c_s, "column count")?);
+            let mut links = Vec::new();
+            for r in 0..rows {
+                for c in 0..cols {
+                    let id = r * cols + c;
+                    if c + 1 < cols {
+                        links.push(d2d(id, id + 1));
+                    }
+                    if r + 1 < rows {
+                        links.push(d2d(id, id + cols));
+                    }
+                }
+            }
+            (format!("mesh{rows}x{cols}"), rows * cols, links)
+        } else if let Some(n_s) = preset.strip_prefix("ring") {
+            let n = dim(n_s, "chiplet count")?;
+            let mut links = Vec::new();
+            for i in 0..n {
+                let next = (i + 1) % n;
+                if next != i && !(n == 2 && i == 1) {
+                    links.push(d2d(i, next));
+                }
+            }
+            (format!("ring{n}"), n, links)
+        } else if let Some(n_s) = preset.strip_prefix("package") {
+            // Multi-die package: dies on an organic substrate, star-routed
+            // through die 0 (the I/O die hosting the ingress).
+            let n = dim(n_s, "chiplet count")?;
+            let links = (1..n)
+                .map(|i| Link {
+                    a: 0,
+                    b: i,
+                    latency_s: PKG_LATENCY_S,
+                    bytes_per_s: PKG_GBYTES_PER_S * scale.scale() * 1e9,
+                })
+                .collect();
+            (format!("package{n}"), n, links)
+        } else {
+            return Err(err(&format!("unknown preset '{preset}'")));
+        };
+        if chiplets > MAX_CHIPLETS {
+            return Err(err(&format!(
+                "preset '{preset}' has {chiplets} chiplets — more than the {MAX_CHIPLETS} cap"
+            )));
+        }
+        let placement = match placement_s {
+            None => None,
+            Some(p_s) => {
+                let mut placement = Vec::new();
+                for (i, comp) in p_s.split('.').enumerate() {
+                    let c: usize = comp.trim().parse().map_err(|_| {
+                        err(&format!("placement entry {} ('{comp}') is not a chiplet index", i + 1))
+                    })?;
+                    if c >= chiplets {
+                        return Err(err(&format!(
+                            "placement entry {} ('{comp}') exceeds chiplet count {chiplets}",
+                            i + 1
+                        )));
+                    }
+                    placement.push(c);
+                }
+                Some(placement)
+            }
+        };
+        let mut name = canon_preset;
+        name.push_str(scale.suffix());
+        if let Some(p) = &placement {
+            name.push('/');
+            name.push_str(
+                &p.iter().map(|c| c.to_string()).collect::<Vec<_>>().join("."),
+            );
+        }
+        Topology::build(name, chiplets, links, placement).map_err(|what| err(&what))
+    }
+
+    /// Wire routes and masks: BFS shortest paths from the ingress
+    /// (chiplet 0), neighbors visited in ascending order so tie-breaks
+    /// are deterministic.
+    fn build(
+        name: String,
+        chiplets: usize,
+        links: Vec<Link>,
+        placement: Option<Vec<usize>>,
+    ) -> Result<Topology, String> {
+        if links.len() >= 64 {
+            return Err(format!("{} links exceed the u64 route-mask width", links.len()));
+        }
+        let mut adj: Vec<Vec<(usize, usize)>> = vec![Vec::new(); chiplets];
+        for (li, l) in links.iter().enumerate() {
+            if l.a >= chiplets || l.b >= chiplets {
+                return Err(format!("link {li} endpoints outside 0..{chiplets}"));
+            }
+            adj[l.a].push((l.b, li));
+            adj[l.b].push((l.a, li));
+        }
+        for a in adj.iter_mut() {
+            a.sort_unstable();
+        }
+        let mut prev: Vec<Option<(usize, usize)>> = vec![None; chiplets];
+        let mut seen = vec![false; chiplets];
+        let mut frontier = std::collections::VecDeque::new();
+        seen[0] = true;
+        frontier.push_back(0usize);
+        while let Some(c) = frontier.pop_front() {
+            for &(nb, li) in &adj[c] {
+                if !seen[nb] {
+                    seen[nb] = true;
+                    prev[nb] = Some((c, li));
+                    frontier.push_back(nb);
+                }
+            }
+        }
+        if let Some(orphan) = seen.iter().position(|&s| !s) {
+            return Err(format!("chiplet {orphan} is unreachable from the ingress"));
+        }
+        let mut routes = Vec::with_capacity(chiplets);
+        let mut masks = Vec::with_capacity(chiplets);
+        for c in 0..chiplets {
+            let mut route = Vec::new();
+            let mut cur = c;
+            while let Some((parent, li)) = prev[cur] {
+                route.push(li);
+                cur = parent;
+            }
+            route.reverse();
+            if route.len() > MAX_ROUTE_LINKS {
+                return Err(format!("route to chiplet {c} exceeds {MAX_ROUTE_LINKS} hops"));
+            }
+            masks.push(route.iter().fold(0u64, |m, &li| m | (1u64 << li)));
+            routes.push(route);
+        }
+        Ok(Topology { name, chiplets, links, placement, routes, masks })
+    }
+
+    /// A single-chiplet topology prices no transfers: the platform
+    /// normalizes it away entirely (no `CommState`, bare platform name).
+    pub fn is_mono(&self) -> bool {
+        self.chiplets <= 1
+    }
+
+    /// Chiplet hosting accelerator `slot` (round-robin unless an explicit
+    /// placement was given; out-of-range reads degrade to the ingress).
+    pub fn chiplet_of(&self, slot: usize) -> usize {
+        match &self.placement {
+            Some(p) => p.get(slot).copied().unwrap_or(0),
+            None => slot % self.chiplets.max(1),
+        }
+    }
+
+    /// Link indices of the ingress→`chiplet` route, in hop order.
+    pub fn route(&self, chiplet: usize) -> &[usize] {
+        self.routes.get(chiplet).map(|r| r.as_slice()).unwrap_or(&[])
+    }
+
+    /// Bitmask over link indices of `chiplet`'s ingress route.
+    pub fn route_mask(&self, chiplet: usize) -> u64 {
+        self.masks.get(chiplet).copied().unwrap_or(0)
+    }
+
+    /// Validate the explicit placement (if any) against a platform's slot
+    /// count — the arity error the CLI surfaces.
+    pub fn bind(&self, slots: usize) -> Result<(), String> {
+        if let Some(p) = &self.placement {
+            if p.len() != slots {
+                return Err(format!(
+                    "'{}' placement: {} entries for {slots} accelerator slots — need \
+                     exactly one chiplet index per slot",
+                    self.name,
+                    p.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Area of the largest die when `total` core area spreads across the
+    /// package (round-robin placement ⇒ an even split) — the quantity
+    /// `hmai dse` holds under [`MONO_DIE_AREA_UNITS`].
+    pub fn max_die_area(&self, total: f64) -> f64 {
+        total / self.chiplets.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_preset_shapes() {
+        let t = Topology::try_parse("mesh2x2").unwrap();
+        assert_eq!(t.name, "mesh2x2");
+        assert_eq!(t.chiplets, 4);
+        assert_eq!(t.links.len(), 4);
+        assert!(!t.is_mono());
+        // Ingress route to chiplet 0 is empty; to every other, non-empty.
+        assert!(t.route(0).is_empty());
+        assert_eq!(t.route_mask(0), 0);
+        for c in 1..4 {
+            assert!(!t.route(c).is_empty(), "chiplet {c}");
+            assert_ne!(t.route_mask(c), 0, "chiplet {c}");
+        }
+        // Chiplet 3 (diagonal) is two hops away.
+        assert_eq!(t.route(3).len(), 2);
+        assert_eq!(t.route_mask(3).count_ones(), 2);
+    }
+
+    #[test]
+    fn ring_and_package_presets() {
+        let r = Topology::try_parse("ring4").unwrap();
+        assert_eq!((r.chiplets, r.links.len()), (4, 4));
+        // BFS shortest: the far side of a ring4 is 2 hops, not 3.
+        assert_eq!(r.route(2).len(), 2);
+        let r2 = Topology::try_parse("ring2").unwrap();
+        assert_eq!((r2.chiplets, r2.links.len()), (2, 1));
+        let p = Topology::try_parse("package3").unwrap();
+        assert_eq!((p.chiplets, p.links.len()), (3, 2));
+        // Star: every die is one (slower) substrate hop from the I/O die.
+        assert_eq!(p.route(2).len(), 1);
+        assert!(p.links[0].latency_s > r.links[0].latency_s);
+        assert!(p.links[0].bytes_per_s < r.links[0].bytes_per_s);
+    }
+
+    #[test]
+    fn mono_normalizes() {
+        assert!(Topology::try_parse("mono").unwrap().is_mono());
+        assert!(Topology::try_parse("mesh1x1").unwrap().is_mono());
+        assert!(Topology::try_parse("ring1").unwrap().is_mono());
+    }
+
+    #[test]
+    fn link_speed_scale_applies() {
+        let std = Topology::try_parse("mesh2x2").unwrap();
+        let fast = Topology::try_parse("mesh2x2@2x").unwrap();
+        assert_eq!(fast.name, "mesh2x2@2x");
+        assert_eq!(
+            fast.links[0].bytes_per_s.to_bits(),
+            (std.links[0].bytes_per_s * 2.0).to_bits()
+        );
+        // Latency is a PHY property, not a lane-count one.
+        assert_eq!(fast.links[0].latency_s.to_bits(), std.links[0].latency_s.to_bits());
+        assert!(Topology::try_parse("mesh2x2@1x").unwrap().name == "mesh2x2");
+    }
+
+    #[test]
+    fn placement_override_and_round_robin() {
+        let t = Topology::try_parse("mesh2x2").unwrap();
+        assert_eq!((0..6).map(|s| t.chiplet_of(s)).collect::<Vec<_>>(), [0, 1, 2, 3, 0, 1]);
+        assert!(t.bind(11).is_ok(), "round-robin binds any slot count");
+        let p = Topology::try_parse("ring2/0.0.1").unwrap();
+        assert_eq!(p.name, "ring2/0.0.1");
+        assert_eq!((0..3).map(|s| p.chiplet_of(s)).collect::<Vec<_>>(), [0, 0, 1]);
+        assert!(p.bind(3).is_ok());
+        let e = p.bind(11).unwrap_err();
+        assert!(e.contains("3 entries for 11 accelerator slots"), "{e}");
+    }
+
+    #[test]
+    fn errors_name_the_offending_component() {
+        let e = Topology::try_parse("torus3").unwrap_err();
+        assert!(e.contains("unknown preset 'torus3'"), "{e}");
+        let e = Topology::try_parse("ring0").unwrap_err();
+        assert!(e.contains("zero-chiplet") && e.contains("ring0"), "{e}");
+        let e = Topology::try_parse("mesh0x2").unwrap_err();
+        assert!(e.contains("zero-chiplet"), "{e}");
+        let e = Topology::try_parse("meshAxB").unwrap_err();
+        assert!(e.contains("bad row count 'a'"), "{e}");
+        let e = Topology::try_parse("mesh2x2@9x").unwrap_err();
+        assert!(e.contains("unknown link speed '9x'"), "{e}");
+        let e = Topology::try_parse("ring2/0.z").unwrap_err();
+        assert!(e.contains("placement entry 2 ('z')"), "{e}");
+        let e = Topology::try_parse("ring2/0.5").unwrap_err();
+        assert!(e.contains("placement entry 2 ('5') exceeds chiplet count 2"), "{e}");
+        let e = Topology::try_parse("ring99").unwrap_err();
+        assert!(e.contains("more than the 16 cap"), "{e}");
+        assert!(Topology::try_parse("").is_err());
+    }
+
+    #[test]
+    fn routes_are_bfs_shortest_with_deterministic_tiebreak() {
+        let t = Topology::try_parse("mesh3x3").unwrap();
+        // Manhattan distance from the ingress corner.
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(t.route(r * 3 + c).len(), r + c, "chiplet ({r},{c})");
+            }
+        }
+        // Tie-break: the diagonal's first hop goes through the
+        // lowest-numbered neighbor (right before down).
+        let again = Topology::try_parse("mesh3x3").unwrap();
+        for c in 0..9 {
+            assert_eq!(t.route(c), again.route(c), "parse is deterministic");
+        }
+    }
+
+    #[test]
+    fn die_area_splits_evenly() {
+        let t = Topology::try_parse("mesh2x2").unwrap();
+        assert!((t.max_die_area(16.0) - 4.0).abs() < 1e-12);
+        assert!(t.max_die_area(16.0) < MONO_DIE_AREA_UNITS);
+    }
+}

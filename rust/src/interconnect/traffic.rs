@@ -1,0 +1,98 @@
+//! Per-task data-movement model: the bytes a task moves over the
+//! interconnect, derived from the `workload::layer` shapes.
+//!
+//! Three flows per dispatched task (the EXMC/off-chip path of the
+//! accelerator model, lifted to the package level):
+//!
+//! * **input** — the first layer's input tensor, sensor/DRAM ingress →
+//!   the executing chiplet (per task, always);
+//! * **weights** — the whole parameter set, ingress → chiplet, but only
+//!   on a *residency miss* (the slot last ran a different model; see
+//!   [`CommState::resident`](super::CommState));
+//! * **output** — the last layer's activation volume, chiplet → ingress
+//!   (detections/track states returned to the planner).
+//!
+//! All tensors move as 16-bit datums ([`BYTES_PER_ELEM`]), matching the
+//! fixed-point accelerator arithmetic the cost model assumes.  Slots on
+//! the ingress chiplet move nothing — their route is empty, which is what
+//! keeps monolithic platforms bit-identical to the compute-only model.
+
+use std::sync::OnceLock;
+
+use crate::workload::{model, ModelKind, ALL_MODELS};
+
+/// Bytes per tensor element: 16-bit activations and weights.
+pub const BYTES_PER_ELEM: f64 = 2.0;
+
+/// Movement bytes of one task of a given model.
+#[derive(Debug, Clone, Copy)]
+pub struct Traffic {
+    /// First-layer input tensor, ingress → chiplet (every task).
+    pub input_bytes: f64,
+    /// Full parameter set, ingress → chiplet (residency miss only).
+    pub weight_bytes: f64,
+    /// Last-layer activations, chiplet → ingress (every task).
+    pub output_bytes: f64,
+}
+
+impl Traffic {
+    fn derive(kind: ModelKind) -> Traffic {
+        let m = model(kind);
+        let input = m.layers.first().map(|l| l.input_elems()).unwrap_or(0);
+        let output = m.layers.last().map(|l| l.neurons()).unwrap_or(0);
+        Traffic {
+            input_bytes: input as f64 * BYTES_PER_ELEM,
+            weight_bytes: m.total_weights as f64 * BYTES_PER_ELEM,
+            output_bytes: output as f64 * BYTES_PER_ELEM,
+        }
+    }
+}
+
+/// Cached per-model traffic row (layer shapes are immutable).
+pub fn of(kind: ModelKind) -> Traffic {
+    static TABLE: OnceLock<[Traffic; ALL_MODELS.len()]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut rows = [Traffic { input_bytes: 0.0, weight_bytes: 0.0, output_bytes: 0.0 };
+            ALL_MODELS.len()];
+        for m in ALL_MODELS {
+            rows[m.index()] = Traffic::derive(m);
+        }
+        rows
+    });
+    table[kind.index()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_follows_layer_shapes() {
+        for kind in ALL_MODELS {
+            let t = of(kind);
+            let m = model(kind);
+            assert_eq!(
+                t.input_bytes.to_bits(),
+                (m.layers[0].input_elems() as f64 * BYTES_PER_ELEM).to_bits(),
+                "{kind:?}"
+            );
+            assert_eq!(
+                t.weight_bytes.to_bits(),
+                (m.total_weights as f64 * BYTES_PER_ELEM).to_bits(),
+                "{kind:?}"
+            );
+            assert!(t.output_bytes > 0.0, "{kind:?}");
+            // Weights dominate activations for every network in Table 1 —
+            // which is why residency (weight reuse) is the locality lever.
+            assert!(t.weight_bytes > t.input_bytes, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn cached_table_is_stable() {
+        let a = of(ModelKind::Yolo);
+        let b = of(ModelKind::Yolo);
+        assert_eq!(a.input_bytes.to_bits(), b.input_bytes.to_bits());
+        assert_eq!(a.weight_bytes.to_bits(), b.weight_bytes.to_bits());
+    }
+}

@@ -20,6 +20,7 @@ pub mod accel;
 pub mod env;
 pub mod safety;
 pub mod workload;
+pub mod interconnect;
 pub mod platform;
 pub mod metrics;
 pub mod sim;

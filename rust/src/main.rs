@@ -113,6 +113,12 @@ fn usage() -> String {
         ("--deadline <mode>", "rss | frame (deadline regime)".to_string()),
         ("--budget <area>", "dse: area budget in Std-core equivalents".to_string()),
         ("--power-cap <W>", "dse: optional peak-power cap".to_string()),
+        (
+            "--topology <t,...>",
+            "package topology: mono | mesh<R>x<C> | ring<N> | package<N> [@0.5x|2x] \
+             (dse: comma list adds a topology search axis)"
+                .to_string(),
+        ),
         ("--search <mode>", "dse: auto | full | greedy".to_string()),
         ("--beam <n>", "dse: greedy beam width".to_string()),
         ("--max-evals <n>", "dse: cap on simulated candidate mixes".to_string()),
@@ -435,7 +441,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     println!(
         "scheduler = {}  platform = {}  {}  deadline = {}  jobs = {}  events = {}",
         cfg.scheduler,
-        cfg.platform,
+        cfg.platform_spec(),
         place,
         cfg.deadline.name(),
         cfg.jobs,
@@ -632,17 +638,26 @@ fn cmd_dse(args: &Args) -> Result<()> {
         max_evals: args.get_usize("max-evals", defaults.max_evals)?,
         beam: args.get_usize("beam", defaults.beam)?.max(1),
         search: hmai::dse::SearchMode::parse(args.get_or("search", "auto"))?,
+        // `--topology mesh2x2,ring4`: chiplet topologies searched alongside
+        // the implicit monolithic candidate (activates the reticle cap).
+        topologies: args
+            .get("topology")
+            .map(|t| {
+                t.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
+            })
+            .unwrap_or_default(),
     };
     let reg = harness::registry(&cfg);
     let report = hmai::dse::run(&dse_cfg, &reg)?;
     println!(
         "dse: budget = {} area units{}  search = {}  scheduler = {}  scenarios = {}  \
-         evaluated = {} mixes ({} not simulated)  frontier = {} (★)",
+         topologies = {}  evaluated = {} candidates ({} not simulated)  frontier = {} (★)",
         dse_cfg.budget_area,
         dse_cfg.power_cap_w.map(|c| format!(" (power cap {c} W)")).unwrap_or_default(),
         report.search,
         dse_cfg.scheduler.display(),
         dse_cfg.scenarios.join(","),
+        report.topologies.join(","),
         report.evaluated,
         report.truncated,
         report.frontier,
@@ -851,7 +866,7 @@ mod tests {
             assert!(u.contains(cmd), "{cmd} missing from usage");
         }
         assert!(u.contains("fleet plan|work|merge"), "fleet actions missing from usage");
-        for opt in ["--budget", "--power-cap", "--search", "--beam", "--max-evals"] {
+        for opt in ["--budget", "--power-cap", "--topology", "--search", "--beam", "--max-evals"] {
             assert!(u.contains(opt), "{opt} missing from usage");
         }
         for opt in ["--replicates", "--shards", "--plan", "--shard", "--checkpoint-every", "--max-trials"]

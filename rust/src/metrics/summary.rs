@@ -69,6 +69,11 @@ pub struct RunSummary {
     pub mean_response_s: f64,
     /// Max response time (s).
     pub max_response_s: f64,
+    /// Σ interconnect delay over tasks (s) — 0.0 on monolithic platforms
+    /// (no chiplet topology attached).
+    pub comm_delay_s: f64,
+    /// Total bytes moved over the interconnect, in GB — 0.0 monolithically.
+    pub comm_gb: f64,
     /// Per-task response-time histogram (deterministic; filled by the
     /// engine's tails probe — empty when built outside the engine).
     pub response_hist: QuantileHistogram,
@@ -106,6 +111,8 @@ impl RunSummary {
             gvalue: m.gvalue(),
             mean_response_s,
             max_response_s,
+            comm_delay_s: 0.0,
+            comm_gb: 0.0,
             response_hist: QuantileHistogram::response(),
             braking_hist: QuantileHistogram::braking(),
         }
@@ -143,6 +150,8 @@ impl RunSummary {
             ("gvalue", Json::Num(self.gvalue)),
             ("mean_response_s", Json::Num(self.mean_response_s)),
             ("max_response_s", Json::Num(self.max_response_s)),
+            ("comm_delay_s", Json::Num(self.comm_delay_s)),
+            ("comm_gb", Json::Num(self.comm_gb)),
         ])
     }
 
@@ -169,6 +178,8 @@ impl RunSummary {
             self.gvalue,
             self.mean_response_s,
             self.max_response_s,
+            self.comm_delay_s,
+            self.comm_gb,
         ] {
             word(f.to_bits());
         }
@@ -245,6 +256,10 @@ pub struct GroupStats {
     pub sum_r_balance: f64,
     pub sum_ms_per_task: f64,
     pub sum_gvalue: f64,
+    /// Σ per-run interconnect delay (s) — 0.0 across monolithic rows.
+    pub sum_comm_delay: f64,
+    /// Σ per-run interconnect traffic (GB).
+    pub sum_comm_gb: f64,
     /// Wrapping sum of `mix(run.content_hash())` over member runs — a
     /// commutative, associative digest of the row's exact contents.
     pub content_hash: u64,
@@ -266,6 +281,8 @@ impl GroupStats {
             sum_r_balance: 0.0,
             sum_ms_per_task: 0.0,
             sum_gvalue: 0.0,
+            sum_comm_delay: 0.0,
+            sum_comm_gb: 0.0,
             content_hash: 0,
             response: QuantileHistogram::response(),
             braking: QuantileHistogram::braking(),
@@ -286,6 +303,8 @@ impl GroupStats {
         self.sum_r_balance += run.r_balance;
         self.sum_ms_per_task += run.ms_per_task();
         self.sum_gvalue += run.gvalue;
+        self.sum_comm_delay += run.comm_delay_s;
+        self.sum_comm_gb += run.comm_gb;
         self.content_hash = self.content_hash.wrapping_add(mix(run.content_hash()));
         self.response.merge(&run.response_hist);
         self.braking.merge(&run.braking_hist);
@@ -303,6 +322,8 @@ impl GroupStats {
         self.sum_r_balance += other.sum_r_balance;
         self.sum_ms_per_task += other.sum_ms_per_task;
         self.sum_gvalue += other.sum_gvalue;
+        self.sum_comm_delay += other.sum_comm_delay;
+        self.sum_comm_gb += other.sum_comm_gb;
         self.content_hash = self.content_hash.wrapping_add(other.content_hash);
         self.response.merge(&other.response);
         self.braking.merge(&other.braking);
@@ -341,6 +362,11 @@ impl GroupStats {
                 Json::Str(format!("{:016x}", self.sum_ms_per_task.to_bits())),
             ),
             ("sum_gvalue_bits", Json::Str(format!("{:016x}", self.sum_gvalue.to_bits()))),
+            (
+                "sum_comm_delay_bits",
+                Json::Str(format!("{:016x}", self.sum_comm_delay.to_bits())),
+            ),
+            ("sum_comm_gb_bits", Json::Str(format!("{:016x}", self.sum_comm_gb.to_bits()))),
             ("content_hash", Json::Str(format!("{:016x}", self.content_hash))),
             ("response", self.response.state_json()),
             ("braking", self.braking.state_json()),
@@ -350,6 +376,14 @@ impl GroupStats {
     pub fn from_state_json(j: &Json) -> anyhow::Result<GroupStats> {
         let f = |key: &str| -> anyhow::Result<f64> {
             Ok(f64::from_bits(parse_bits_hex(j.get_str(key)?)?))
+        };
+        // The comm sums postdate the v1 checkpoint format; a pre-interconnect
+        // checkpoint simply has none (0.0 — malformed hex still errors).
+        let f_new = |key: &str| -> anyhow::Result<f64> {
+            match j.get_str(key) {
+                Ok(s) => Ok(f64::from_bits(parse_bits_hex(s)?)),
+                Err(_) => Ok(0.0),
+            }
         };
         Ok(GroupStats {
             trials: j.get_f64("trials")? as u64,
@@ -361,6 +395,8 @@ impl GroupStats {
             sum_r_balance: f("sum_r_balance_bits")?,
             sum_ms_per_task: f("sum_ms_per_task_bits")?,
             sum_gvalue: f("sum_gvalue_bits")?,
+            sum_comm_delay: f_new("sum_comm_delay_bits")?,
+            sum_comm_gb: f_new("sum_comm_gb_bits")?,
             content_hash: parse_bits_hex(j.get_str("content_hash")?)?,
             response: QuantileHistogram::from_state_json(j.get("response")?)?,
             braking: QuantileHistogram::from_state_json(j.get("braking")?)?,
@@ -412,6 +448,16 @@ impl SweepGroup {
 
     pub fn mean_gvalue(&self) -> f64 {
         self.stats.mean_of(self.stats.sum_gvalue)
+    }
+
+    /// Mean per-trial interconnect delay (s) — 0.0 on monolithic rows.
+    pub fn mean_comm_delay_s(&self) -> f64 {
+        self.stats.mean_of(self.stats.sum_comm_delay)
+    }
+
+    /// Mean per-trial interconnect traffic (GB).
+    pub fn mean_comm_gb(&self) -> f64 {
+        self.stats.mean_of(self.stats.sum_comm_gb)
     }
 
     /// Streaming response-time quantile (q in [0,1]); `+inf` when the
@@ -529,6 +575,8 @@ impl SweepSummary {
                         ("mean_r_balance", Json::Num(g.mean_r_balance())),
                         ("mean_ms_per_task", Json::Num(g.mean_ms_per_task())),
                         ("mean_gvalue", Json::Num(g.mean_gvalue())),
+                        ("mean_comm_delay_s", Json::Num(g.mean_comm_delay_s())),
+                        ("mean_comm_gb", Json::Num(g.mean_comm_gb())),
                         ("p50_response_s", Json::Num(g.response_quantile_s(0.50))),
                         ("p99_response_s", Json::Num(g.response_quantile_s(0.99))),
                         ("p999_response_s", Json::Num(g.response_quantile_s(0.999))),
@@ -772,6 +820,44 @@ mod tests {
             assert_eq!(x.stats.sum_gvalue.to_bits(), y.stats.sum_gvalue.to_bits());
             assert_eq!(x.stats.response, y.stats.response);
         }
+    }
+
+    #[test]
+    fn comm_fields_flow_into_groups_and_fingerprints() {
+        let mk = |d: f64| {
+            let mut s = summary();
+            s.comm_delay_s = d;
+            s.comm_gb = d * 2.0;
+            let mut sw = SweepSummary::new();
+            sw.push(key("a"), s);
+            sw
+        };
+        let (a, b) = (mk(0.0), mk(0.5));
+        // Interconnect delay is a result, not wall clock: it fingerprints.
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let g = b.by_scheduler("a").unwrap();
+        assert!((g.mean_comm_delay_s() - 0.5).abs() < 1e-12);
+        assert!((g.mean_comm_gb() - 1.0).abs() < 1e-12);
+        let back =
+            SweepSummary::from_state_json(&Json::parse(&b.state_json().to_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back.groups[0].stats.sum_comm_delay.to_bits(), 0.5f64.to_bits());
+        assert!(b.to_json().to_string().contains("mean_comm_delay_s"));
+    }
+
+    #[test]
+    fn pre_interconnect_checkpoints_still_parse() {
+        // A checkpoint written before the comm sums existed lacks the two
+        // `sum_comm_*_bits` keys; it must load with zeroed comm moments and
+        // an unchanged fingerprint (the f64 sums never fingerprint).
+        let mut sw = SweepSummary::new();
+        sw.push(key("a"), varied(1.0));
+        let text = sw.state_json().to_pretty();
+        let old: String =
+            text.lines().filter(|l| !l.contains("sum_comm")).collect::<Vec<_>>().join("\n");
+        let back = SweepSummary::from_state_json(&Json::parse(&old).unwrap()).unwrap();
+        assert_eq!(back.groups[0].stats.sum_comm_delay, 0.0);
+        assert_eq!(back.fingerprint(), sw.fingerprint());
     }
 
     #[test]

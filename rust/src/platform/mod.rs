@@ -10,10 +10,19 @@
 //!   * sized mix: `"so:4@2x,si:4,mm:3@0.5x"` — comma-separated
 //!     `kind:count[@size]` components, size ∈ `0.5x | 1x | 2x`
 //!     (default `1x`); repeated kinds append.
+//!   * chiplet topology suffix: `"<spec>+<topology>"` — e.g.
+//!     `hmai+mesh2x2`, `so:4@2x,si:4,mm:3+ring4@2x` — attaches an
+//!     [`interconnect::Topology`](crate::interconnect::Topology) so the
+//!     simulator prices inter-chiplet transfers.  A monolithic suffix
+//!     (`+mono`, `+mesh1x1`, ...) normalizes away entirely: same name,
+//!     no topology, bit-identical behavior.
 
 pub mod alloc;
 
+use std::sync::Arc;
+
 use crate::accel::{self, AccelKind, CoreSize, CostModel};
+use crate::interconnect::{CommCostModel, ComputeOnly, PlatformCostModel, Topology};
 
 /// One physical sub-accelerator instance.
 #[derive(Debug, Clone, Copy)]
@@ -29,6 +38,10 @@ pub struct AccelInstance {
 pub struct Platform {
     pub name: String,
     pub accels: Vec<AccelInstance>,
+    /// Chiplet interconnect, when the spec carried a `+<topology>` suffix.
+    /// `None` (monolithic) prices compute only — the pre-interconnect
+    /// behavior, bit for bit.
+    pub topology: Option<Arc<Topology>>,
 }
 
 impl Platform {
@@ -54,7 +67,7 @@ impl Platform {
                 id += 1;
             }
         }
-        Platform { name: name.to_string(), accels }
+        Platform { name: name.to_string(), accels, topology: None }
     }
 
     /// The paper's HMAI: (4 SconvOD, 4 SconvIC, 3 MconvMC) — §8.2.
@@ -114,6 +127,18 @@ impl Platform {
         CostModel::new(self.accels.iter().map(|a| (a.kind, a.size)))
     }
 
+    /// How this platform prices work: compute-only on a monolithic die,
+    /// compute + interconnect transfers when a chiplet topology is
+    /// attached.  The [`PlatformCostModel`] seam `ShadowState::new`
+    /// consults — both pricings share the same [`CostModel`] rows.
+    pub fn pricing(&self) -> Box<dyn PlatformCostModel> {
+        let compute = Arc::new(self.cost_model());
+        match &self.topology {
+            Some(t) => Box::new(CommCostModel { compute, topology: Arc::clone(t) }),
+            None => Box::new(ComputeOnly { compute }),
+        }
+    }
+
     /// Parse a platform spec; `None` on any error (see [`Platform::try_parse`]
     /// for the error-reporting form the CLI uses).
     pub fn parse(s: &str) -> Option<Platform> {
@@ -121,11 +146,29 @@ impl Platform {
     }
 
     /// Parse a platform spec with a descriptive error: a named platform,
-    /// legacy `"so,si,mm"` counts, or `kind:count[@size]` components (see
-    /// the module docs for the grammar).
+    /// legacy `"so,si,mm"` counts, or `kind:count[@size]` components, each
+    /// optionally followed by `+<topology>` (see the module docs for the
+    /// grammar).
     pub fn try_parse(s: &str) -> Result<Platform, String> {
         let lc = s.trim().to_ascii_lowercase();
-        match lc.as_str() {
+        let Some((base, topo_s)) = lc.split_once('+') else {
+            return Self::parse_base(s, &lc);
+        };
+        let mut platform = Self::parse_base(s, base.trim())?;
+        let topo = Topology::try_parse(topo_s.trim())?;
+        // A single-chiplet package IS the monolithic die: normalize it away
+        // so `hmai+mono` is `hmai` — same name, same fingerprints.
+        if !topo.is_mono() {
+            topo.bind(platform.accels.len()).map_err(|e| format!("'{lc}': {e}"))?;
+            platform.name = format!("{}+{}", platform.name, topo.name);
+            platform.topology = Some(Arc::new(topo));
+        }
+        Ok(platform)
+    }
+
+    /// The topology-free part of the spec grammar.
+    fn parse_base(s: &str, lc: &str) -> Result<Platform, String> {
+        match lc {
             "hmai" => return Ok(Platform::hmai()),
             "13so" => return Ok(Platform::homogeneous(AccelKind::SconvOD)),
             "13si" => return Ok(Platform::homogeneous(AccelKind::SconvIC)),
@@ -135,7 +178,7 @@ impl Platform {
         }
         let parts: Vec<&str> = lc.split(',').map(str::trim).collect();
         if parts.iter().any(|p| p.contains(':')) {
-            return Self::parse_mix(&lc, &parts);
+            return Self::parse_mix(lc, &parts);
         }
         // Legacy count-triple form "so,si,mm".
         if parts.len() != 3 {
@@ -313,6 +356,62 @@ mod tests {
         let e = Platform::try_parse("so:x").unwrap_err();
         assert!(e.contains("bad count 'x'"), "{e}");
         assert!(Platform::try_parse("").is_err());
+    }
+
+    #[test]
+    fn topology_suffix_attaches_interconnect() {
+        let p = Platform::parse("hmai+mesh2x2").unwrap();
+        assert_eq!(p.name, "HMAI(4SO,4SI,3MM)+mesh2x2");
+        assert_eq!(p.len(), 11);
+        let topo = p.topology.as_ref().expect("mesh2x2 attaches a topology");
+        assert_eq!(topo.chiplets, 4);
+        // Compute side is untouched: same cost-model rows as plain hmai.
+        let mono = Platform::hmai();
+        let (a, b) = (p.cost_model(), mono.cost_model());
+        assert_eq!(
+            a.of(0, ModelKind::Yolo).time_s.to_bits(),
+            b.of(0, ModelKind::Yolo).time_s.to_bits()
+        );
+        // Mix specs compose with the suffix too.
+        let m = Platform::parse("so:2@2x,si:2,mm:2+ring3@2x").unwrap();
+        assert_eq!(m.name, "custom(so:2@2x,si:2,mm:2)+ring3@2x");
+        assert!(m.topology.is_some());
+    }
+
+    #[test]
+    fn mono_topology_suffix_normalizes_away() {
+        // `+mono` (or any 1-chiplet preset) IS the monolithic platform:
+        // same name, no topology — which is what keeps its sweep
+        // fingerprints bit-identical to the suffix-free spec.
+        for spec in ["hmai+mono", "hmai+mesh1x1", "hmai+ring1"] {
+            let p = Platform::parse(spec).unwrap();
+            assert_eq!(p.name, Platform::hmai().name, "{spec}");
+            assert!(p.topology.is_none(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn topology_suffix_errors_are_pointed() {
+        let e = Platform::try_parse("hmai+torus3").unwrap_err();
+        assert!(e.contains("torus3"), "{e}");
+        // Placement arity mismatch names the platform and the counts.
+        let e = Platform::try_parse("hmai+mesh2x2/0.1").unwrap_err();
+        assert!(e.contains("2 entries") && e.contains("11 accelerator slots"), "{e}");
+        // Errors on either side of '+' still surface.
+        assert!(Platform::try_parse("+mesh2x2").is_err());
+        assert!(Platform::try_parse("hmai+").is_err());
+    }
+
+    #[test]
+    fn pricing_follows_topology() {
+        let mono = Platform::hmai().pricing();
+        assert!(mono.topology().is_none());
+        let noc = Platform::parse("hmai+mesh2x2").unwrap().pricing();
+        assert_eq!(noc.topology().expect("comm pricing").chiplets, 4);
+        assert_eq!(
+            mono.compute().of(3, ModelKind::Ssd).time_s.to_bits(),
+            noc.compute().of(3, ModelKind::Ssd).time_s.to_bits()
+        );
     }
 
     #[test]

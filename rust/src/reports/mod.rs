@@ -58,13 +58,15 @@ pub fn sweep_table(s: &SweepSummary) -> Table {
 /// mix in report order.
 pub fn dse_table(report: &crate::dse::DseReport) -> Table {
     let mut t = Table::new([
-        "", "Mix", "Cores", "Area", "Peak W", "STMRate", "Energy M (J)", "Time M (s)",
-        "R_Balance",
+        "", "Mix", "Topology", "Dies", "Cores", "Area", "Peak W", "STMRate", "Energy M (J)",
+        "Time M (s)", "R_Balance", "Comm ms/task",
     ]);
     for r in &report.rows {
         t.row([
             if r.on_frontier { "★".to_string() } else { String::new() },
             r.spec.clone(),
+            r.topology.clone(),
+            r.chiplets.to_string(),
             r.cores.to_string(),
             f2(r.area),
             f1(r.peak_power_w),
@@ -72,6 +74,7 @@ pub fn dse_table(report: &crate::dse::DseReport) -> Table {
             f1(r.energy_j),
             f2(r.time_s),
             f2(r.r_balance),
+            f2(r.comm_delay_ms_per_task),
         ]);
     }
     t
@@ -376,6 +379,8 @@ mod tests {
         let row = |spec: &str, frontier: bool| EvalRow {
             mix: Mix::hmai_std(),
             spec: spec.to_string(),
+            topology: "mesh2x2".to_string(),
+            chiplets: 4,
             cores: 11,
             area: 11.0,
             peak_power_w: 150.0,
@@ -383,21 +388,28 @@ mod tests {
             energy_j: 1234.5,
             time_s: 10.0,
             r_balance: 0.8,
+            comm_delay_ms_per_task: 1.25,
+            comm_gb: 0.5,
             on_frontier: frontier,
         };
         let report = DseReport {
-            rows: vec![row("so:4,si:4,mm:3", true), row("so:1@2x", false)],
+            rows: vec![row("so:4,si:4,mm:3+mesh2x2", true), row("so:1@2x", false)],
             frontier: 1,
             evaluated: 2,
             search: "greedy",
             budget_area: 12.0,
             power_cap_w: None,
             truncated: 0,
+            topologies: vec!["mono".to_string(), "mesh2x2".to_string()],
         };
         let s = dse_table(&report).render();
-        assert!(s.contains("so:4,si:4,mm:3"), "{s}");
+        assert!(s.contains("so:4,si:4,mm:3+mesh2x2"), "{s}");
         assert!(s.contains('★'), "{s}");
         assert!(s.contains("95.0%"), "{s}");
+        assert!(s.contains("Topology"), "{s}");
+        assert!(s.contains("mesh2x2"), "{s}");
+        assert!(s.contains("Comm ms/task"), "{s}");
+        assert!(s.contains("1.25"), "{s}");
     }
 
     #[test]

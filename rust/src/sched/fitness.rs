@@ -70,7 +70,7 @@ mod tests {
         // platforms, including dead-slot (+inf) genomes and mixed cores.
         let q = small_queue(3);
         let mut rng = Rng::new(17);
-        for spec in ["hmai", "so:2@2x,si:2,mm:2@0.5x"] {
+        for spec in ["hmai", "so:2@2x,si:2,mm:2@0.5x", "so:2@2x,si:2,mm:2@0.5x+mesh2x2"] {
             let platform = Platform::parse(spec).unwrap();
             let mut state = ShadowState::new(&platform, NormScales::unit());
             for round in 0..4 {

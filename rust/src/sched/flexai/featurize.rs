@@ -6,12 +6,19 @@
 //!     amount_norm, layer_num_norm, safety_time_norm,            Task-Info
 //!     per-slot × N_SLOTS:                                        HW-Info
 //!       [ valid_capacity, kind_so, kind_si, kind_mm,
-//!         queue_time_norm, energy_share, rel_competitiveness, est_time_norm ] ]
+//!         queue_time_norm, energy_share, rel_competitiveness, est_time_norm,
+//!         comm_time_norm  (slot_feats >= 9 metas only) ] ]
 //!
 //! `valid_capacity` is 0 for an absent slot and the core's relative MAC
 //! scale otherwise (0.5 half / 1.0 std / 2.0 double) — the core-size
 //! feature.  Std platforms write exactly the 1.0 the pre-size `valid`
 //! flag wrote, so Std featurizations are bit-identical.
+//!
+//! `comm_time_norm` is the data-locality feature: the slot's predicted
+//! interconnect time for this task over its safety budget (0 on monolithic
+//! platforms).  It only exists when the artifact's meta says
+//! `slot_feats >= 9`, so Q-networks compiled against the 8-feature layout
+//! featurize bit-identically to before the interconnect existed.
 //!
 //! All other features are bounded to [0, 1] so a policy trained on one
 //! route length transfers to another (raw E_i / queue times grow
@@ -68,6 +75,11 @@ pub fn featurize(task: &Task, state: &ShadowState, meta: &Meta, out: &mut [f32])
         out[base + 6] = ((est / est_min - 1.0).clamp(0.0, 1.0)) as f32;
         // Predicted response over safety time — the MS signal.
         out[base + 7] = ratio01(est / task.safety_time_s.max(1e-9));
+        if meta.slot_feats >= 9 {
+            // Data locality: predicted interconnect time (contended links +
+            // weight-residency misses) over the safety budget.
+            out[base + 8] = ratio01(state.est_comm_s(task, i) / task.safety_time_s.max(1e-9));
+        }
     }
     n
 }
@@ -173,6 +185,55 @@ mod tests {
         assert_eq!(out[meta.task_feats], 0.5);
         assert_eq!(out[meta.task_feats + meta.slot_feats], 1.0);
         assert_eq!(out[meta.task_feats + 2 * meta.slot_feats], 2.0);
+    }
+
+    fn meta9() -> Meta {
+        Meta::parse(
+            r#"{
+            "n_slots": 16, "task_feats": 6, "slot_feats": 9,
+            "in_dim": 150, "h1": 256, "h2": 64, "out_dim": 16,
+            "train_batch": 64, "infer_batch": 30,
+            "gamma": 0.95, "lr": 0.01,
+            "param_names": ["w1","b1","w2","b2","w3","b3"],
+            "param_shapes": [[150,256],[256],[256,64],[64],[64,16],[16]]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn locality_feature_is_gated_on_meta_layout() {
+        let q = crate::sched::tests::small_queue(3);
+        let task = q.tasks[0].clone();
+        let noc = ShadowState::new(&Platform::parse("hmai+mesh2x2").unwrap(), NormScales::unit());
+        // An 8-feature meta never writes the locality slot — old artifacts
+        // featurize bit-identically even on a chiplet platform state.
+        let m8 = meta();
+        let mut out8 = vec![0.0f32; m8.in_dim];
+        featurize(&task, &noc, &m8, &mut out8);
+        // A 9-feature meta sees comm: off-ingress slots nonzero, ingress 0.
+        let m9 = meta9();
+        let mut out9 = vec![0.0f32; m9.in_dim];
+        let n = featurize(&task, &noc, &m9, &mut out9);
+        assert_eq!(n, 11);
+        let feat = |slot: usize| out9[m9.task_feats + slot * m9.slot_feats + 8];
+        assert_eq!(feat(0), 0.0, "ingress slot moves nothing");
+        assert!(feat(1) > 0.0, "off-ingress slot pays transfers");
+        // The shared prefix (features 0..8 per slot) agrees bit for bit.
+        for slot in 0..11 {
+            for f in 0..8 {
+                let a = out8[m8.task_feats + slot * m8.slot_feats + f];
+                let b = out9[m9.task_feats + slot * m9.slot_feats + f];
+                assert_eq!(a.to_bits(), b.to_bits(), "slot {slot} feat {f}");
+            }
+        }
+        // Monolithic platform: the locality feature exists but is zero.
+        let mono = ShadowState::new(&Platform::hmai(), NormScales::unit());
+        let mut out = vec![0.0f32; m9.in_dim];
+        featurize(&task, &mono, &m9, &mut out);
+        for slot in 0..11 {
+            assert_eq!(out[m9.task_feats + slot * m9.slot_feats + 8], 0.0);
+        }
     }
 
     #[test]

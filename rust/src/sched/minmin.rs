@@ -85,9 +85,24 @@ impl Scheduler for MinMin {
             out[ti] = accel;
             // Only `accel`'s drain moved (upward): every cached best on a
             // different accelerator is still exact, tasks that sat on
-            // `accel` re-scan their row.
+            // `accel` re-scan their row.  On a chiplet platform the commit
+            // also (a) reserved `accel`'s route links — any slot sharing a
+            // link saw its column worsen — and (b) made `accel`'s weights
+            // resident, so a *same-model* task's `accel` column may have
+            // IMPROVED; both kinds of row re-scan.  Rows whose cached-best
+            // column is link-disjoint from the route and whose model
+            // differs saw their best column unchanged and other columns
+            // only worsen or stay, so cached value and first-of-min
+            // tie-break both survive.  `accel_mask == 0` (monolithic, or
+            // an ingress slot) reduces this to exactly the old condition.
+            let accel_mask = ctx.route_mask(accel);
+            let model = tasks[ti].model;
             for &tj in &unassigned {
-                if cached[tj].0 == accel {
+                if cached[tj].0 == accel
+                    || (accel_mask != 0
+                        && (ctx.route_mask(cached[tj].0) & accel_mask != 0
+                            || tasks[tj].model == model))
+                {
                     cached[tj] = ctx.best_completion(&tasks[tj]);
                 }
             }
@@ -165,7 +180,8 @@ mod tests {
         // identical SconvIC slots), so this pins the first-of-equal-minima
         // tie-break, across burst sizes, backlog, derating and failures.
         let q = crate::sched::tests::small_queue(4);
-        for spec in ["hmai", "so:2@2x,si:2,mm:2@0.5x", "1,1,1"] {
+        for spec in ["hmai", "so:2@2x,si:2,mm:2@0.5x", "1,1,1", "so:2@2x,si:2,mm:2@0.5x+mesh2x2"]
+        {
             let platform = Platform::parse(spec).unwrap();
             let mut state = ShadowState::new(&platform, NormScales::unit());
             for (round, take) in [1usize, 2, 7, 30, 61].into_iter().enumerate() {

@@ -30,6 +30,7 @@
 //! [`reference`](crate::sched::reference).
 
 use crate::env::taskgen::Task;
+use crate::interconnect::CommState;
 use crate::sim::ShadowState;
 use crate::workload::ALL_MODELS;
 
@@ -67,6 +68,12 @@ pub struct RolloutCtx<'a> {
     best_t: f64,
     /// Genome-invariant Σ per-task best-case energy (J).
     best_e: f64,
+    /// Rolling interconnect scratch (link occupancy + weight residency),
+    /// cloned from the state's comm view; `None` on monolithic platforms,
+    /// where every expression below is textually the compute-only one.
+    /// Mirrors `ShadowState`'s comm handling op for op, so estimates and
+    /// pushes stay bit-identical to a cloned-state replay.
+    comm: Option<CommState>,
 }
 
 impl<'a> RolloutCtx<'a> {
@@ -92,6 +99,7 @@ impl<'a> RolloutCtx<'a> {
             busy: state.busy_until.clone(),
             best_t: 0.0,
             best_e: 0.0,
+            comm: state.comm.clone(),
         }
     }
 
@@ -100,7 +108,10 @@ impl<'a> RolloutCtx<'a> {
     /// best-case (time, energy) fold that prices energy in "equivalent
     /// seconds".  The fold walks slots in ascending order per model — the
     /// same minima, in the same order, the old per-genome inner loop
-    /// produced, so [`RolloutCtx::rollout_cost`] is bit-identical.
+    /// produced, so [`RolloutCtx::rollout_cost`] is bit-identical.  The
+    /// fold stays compute-only on chiplet platforms: it is a genome-
+    /// invariant normalization constant, not a per-candidate estimate, so
+    /// interconnect delays do not belong in it.
     pub fn for_burst(tasks: &[Task], state: &'a ShadowState) -> RolloutCtx<'a> {
         let mut ctx = RolloutCtx::new(state);
         let mut best = [(f64::INFINITY, f64::INFINITY); M]; // (time, energy)
@@ -131,10 +142,19 @@ impl<'a> RolloutCtx<'a> {
 
     /// Predicted response time (wait + compute) of `task` on slot `i`
     /// against the *rolling* drain view — bit-identical to
-    /// `ShadowState::est_response` on a clone that applied the same picks.
+    /// `ShadowState::est_response` on a clone that applied the same picks
+    /// (including the interconnect plan on chiplet platforms).
     #[inline]
     pub fn est_response(&self, task: &Task, i: usize) -> f64 {
-        (self.busy[i] - self.now).max(0.0) + self.compute[i * M + task.model.index()]
+        let compute = self.compute[i * M + task.model.index()];
+        if let Some(comm) = &self.comm {
+            if compute.is_finite() {
+                if let Some(p) = comm.plan(i, task.model, self.now, self.busy[i], compute) {
+                    return p.done_s - self.now;
+                }
+            }
+        }
+        (self.busy[i] - self.now).max(0.0) + compute
     }
 
     /// Predicted completion-time point on the route clock.
@@ -168,15 +188,32 @@ impl<'a> RolloutCtx<'a> {
 
     /// Commit `task` to slot `i` in the rolling view: the FIFO update of
     /// `ShadowState::apply`, minus the metrics.  A failed slot loses the
-    /// task and leaves its (dead) FIFO untouched, exactly like `apply`.
+    /// task and leaves its (dead) FIFO untouched, exactly like `apply`; on
+    /// a chiplet platform the route's links and residency are reserved,
+    /// exactly like `apply`.
     #[inline]
     pub fn push(&mut self, task: &Task, i: usize) {
         let compute = self.compute[i * M + task.model.index()];
         if !compute.is_finite() {
             return; // dead slot: the task is lost, the FIFO stays clean
         }
+        if let Some(comm) = &mut self.comm {
+            if let Some(p) = comm.plan(i, task.model, self.now, self.busy[i], compute) {
+                comm.commit(i, task.model, &p);
+                self.busy[i] = p.finish_s;
+                return;
+            }
+        }
         let start = self.busy[i].max(self.now);
         self.busy[i] = start + compute;
+    }
+
+    /// Link-route mask of slot `i` (0 on monolithic platforms or
+    /// ingress-chiplet slots) — Min-Min's incremental rescan consults this
+    /// to find rows a commit's link/residency changes could have touched.
+    #[inline]
+    pub fn route_mask(&self, i: usize) -> u64 {
+        self.comm.as_ref().map_or(0, |c| c.route_mask(i))
     }
 
     /// Cost of mapping `tasks` with `assignment`: burst-local makespan
@@ -189,6 +226,9 @@ impl<'a> RolloutCtx<'a> {
     pub fn rollout_cost(&mut self, tasks: &[Task], assignment: &[usize]) -> f64 {
         debug_assert_eq!(tasks.len(), assignment.len());
         self.busy.copy_from_slice(&self.state.busy_until);
+        if let (Some(scratch), Some(orig)) = (self.comm.as_mut(), self.state.comm.as_ref()) {
+            scratch.reset_from(orig);
+        }
         let mut energy = 0.0;
         for (task, &a) in tasks.iter().zip(assignment) {
             let m = task.model.index();
@@ -200,8 +240,18 @@ impl<'a> RolloutCtx<'a> {
                 // they would look *free*).
                 return f64::INFINITY;
             }
-            let start = self.busy[a].max(self.now);
-            self.busy[a] = start + compute;
+            let mut committed = false;
+            if let Some(comm) = &mut self.comm {
+                if let Some(p) = comm.plan(a, task.model, self.now, self.busy[a], compute) {
+                    comm.commit(a, task.model, &p);
+                    self.busy[a] = p.finish_s;
+                    committed = true;
+                }
+            }
+            if !committed {
+                let start = self.busy[a].max(self.now);
+                self.busy[a] = start + compute;
+            }
             energy += self.energy[a * M + m];
         }
         let drain = self.busy.iter().fold(0.0_f64, |m, &b| m.max(b - self.now));
@@ -305,6 +355,55 @@ mod tests {
         let _ = ctx.rollout_cost(&burst, &piled);
         let a2 = ctx.rollout_cost(&burst, &spread);
         assert_eq!(a1.to_bits(), a2.to_bits(), "stale drain state leaked");
+    }
+
+    fn noc_state() -> ShadowState {
+        let p = Platform::parse("so:2@2x,si:2,mm:2@0.5x+mesh2x2").unwrap();
+        ShadowState::new(&p, NormScales::unit())
+    }
+
+    #[test]
+    fn comm_estimates_and_pushes_track_shadow_state() {
+        // On a chiplet platform the slim context must mirror a full
+        // ShadowState replay bit for bit: same estimates before each pick,
+        // same FIFO drains after, with links and residency in lockstep.
+        let q = small_queue(6);
+        let state = noc_state();
+        let mut rolling = state.clone();
+        let mut ctx = RolloutCtx::new(&state);
+        for (k, task) in q.tasks.iter().take(24).enumerate() {
+            for i in 0..state.len() {
+                assert_eq!(
+                    ctx.est_response(task, i).to_bits(),
+                    rolling.est_response(task, i).to_bits(),
+                    "task {k} slot {i}"
+                );
+            }
+            let a = k % state.len();
+            rolling.apply(task, a);
+            ctx.push(task, a);
+            for i in 0..state.len() {
+                assert_eq!(ctx.busy[i].to_bits(), rolling.busy_until[i].to_bits(), "slot {i}");
+            }
+        }
+        assert!(ctx.route_mask(1) != 0, "off-ingress slot has links");
+        assert_eq!(ctx.route_mask(0), 0, "ingress slot moves nothing");
+    }
+
+    #[test]
+    fn comm_rollout_cost_resets_scratch() {
+        let q = small_queue(7);
+        let state = noc_state();
+        let n = state.len();
+        let burst: Vec<_> = q.tasks.iter().take(10).cloned().collect();
+        let spread: Vec<usize> = (0..10).map(|i| i % n).collect();
+        let piled = vec![1usize; 10];
+        let mut ctx = RolloutCtx::for_burst(&burst, &state);
+        let a1 = ctx.rollout_cost(&burst, &spread);
+        let b = ctx.rollout_cost(&burst, &piled);
+        let a2 = ctx.rollout_cost(&burst, &spread);
+        assert_eq!(a1.to_bits(), a2.to_bits(), "stale link/residency scratch leaked");
+        assert_ne!(a1.to_bits(), b.to_bits());
     }
 
     #[test]

@@ -290,7 +290,7 @@ impl<'q> Sim<'q> {
         // Mean response over *completed* tasks (== all processed tasks on
         // an event-free run, so `simulate()` stays bit-identical).
         let n = self.completed as f64;
-        let summary = RunSummary::from_metrics(
+        let mut summary = RunSummary::from_metrics(
             scheduler_name,
             &self.platform_name,
             &self.state.metrics,
@@ -300,6 +300,12 @@ impl<'q> Sim<'q> {
             if n > 0.0 { self.response_sum / n } else { 0.0 },
             self.response_max,
         );
+        // Interconnect totals (0.0 on monolithic platforms — the fields
+        // exist either way so fingerprints cover them uniformly).
+        if let Some(comm) = &self.state.comm {
+            summary.comm_delay_s = comm.delay_s;
+            summary.comm_gb = comm.bytes / 1e9;
+        }
         SimResult {
             summary,
             final_state: self.state,

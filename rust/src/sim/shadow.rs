@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use crate::accel::{AccelKind, CoreSize, CostModel, TaskCost};
 use crate::env::taskgen::Task;
+use crate::interconnect::{CommPlan, CommState};
 use crate::metrics::{AccelMetrics, NormScales, PlatformMetrics};
 use crate::platform::Platform;
 use crate::safety::ms::matching_score;
@@ -73,6 +74,12 @@ pub struct ShadowState {
     /// the whole platform; `BENCH_PERF.json` carries the scan-vs-cached
     /// micro numbers that motivated it.
     busy_now: usize,
+    /// Interconnect occupancy + residency, present iff the platform spec
+    /// carried a chiplet topology ([`Platform::pricing`]).  `None` is the
+    /// monolithic platform — every timing expression below is then
+    /// textually the pre-interconnect one, which is what pins monolithic
+    /// sweeps bit-identical to the compute-only model.
+    pub comm: Option<CommState>,
 }
 
 impl ShadowState {
@@ -80,15 +87,18 @@ impl ShadowState {
         let kinds: Vec<AccelKind> = platform.accels.iter().map(|a| a.kind).collect();
         let sizes: Vec<CoreSize> = platform.accels.iter().map(|a| a.size).collect();
         let n = kinds.len();
+        let pricing = platform.pricing();
+        let comm = pricing.topology().map(|t| CommState::new(Arc::clone(t), n));
         ShadowState {
             kinds,
             sizes,
-            costs: Arc::new(platform.cost_model()),
+            costs: Arc::clone(pricing.compute()),
             now: 0.0,
             busy_until: vec![0.0; n],
             speed: vec![1.0; n],
             metrics: PlatformMetrics::new(n, scales),
             busy_now: 0,
+            comm,
         }
     }
 
@@ -143,8 +153,22 @@ impl ShadowState {
     /// failed one predicts `+inf`, which is what steers min-seeking
     /// schedulers away from it.  (Division by a speed of exactly 1.0 is
     /// bit-exact in IEEE 754, so the nominal path is unchanged.)
+    ///
+    /// On a chiplet platform the prediction walks the slot's route
+    /// ([`CommState::plan`]) so response = input/weight transfers + queue +
+    /// compute + output return; ingress-chiplet slots have an empty route
+    /// and take the monolithic expression unchanged.
     pub fn est_response(&self, task: &Task, i: usize) -> f64 {
-        self.queue_delay(i) + self.costs.of(i, task.model).time_s / self.speed[i]
+        let compute = self.costs.of(i, task.model).time_s / self.speed[i];
+        if let Some(comm) = &self.comm {
+            if compute.is_finite() {
+                if let Some(p) = comm.plan(i, task.model, self.now, self.busy_until[i], compute)
+                {
+                    return p.done_s - self.now;
+                }
+            }
+        }
+        self.queue_delay(i) + compute
     }
 
     /// Predicted completion-time point on the route clock.
@@ -155,6 +179,23 @@ impl ShadowState {
     /// Energy `task` would consume on accelerator `i`.
     pub fn est_energy(&self, task: &Task, i: usize) -> f64 {
         self.costs.of(i, task.model).energy_j
+    }
+
+    /// Predicted interconnect time of `task` on slot `i` — the inbound
+    /// transfer delay plus the output return leg, after link contention.
+    /// 0.0 on monolithic platforms, ingress-chiplet slots and failed
+    /// accelerators.  The FlexAI locality feature reads this.
+    pub fn est_comm_s(&self, task: &Task, i: usize) -> f64 {
+        if let Some(comm) = &self.comm {
+            let compute = self.costs.of(i, task.model).time_s / self.speed[i];
+            if compute.is_finite() {
+                if let Some(p) = comm.plan(i, task.model, self.now, self.busy_until[i], compute)
+                {
+                    return p.comm_s;
+                }
+            }
+        }
+        0.0
     }
 
     /// Fraction of accelerators still busy at `t` — the O(N) scan form
@@ -231,6 +272,41 @@ impl ShadowState {
         // Speed-scaled execution: 1.0 nominal (bit-exact), (0,1) derated.
         // Energy is the task's work, not its duration, so it is not scaled.
         let compute = c.time_s / speed;
+        // Chiplet path: price the route's transfers and reserve its links.
+        // The plan's timeline (arrive → start → finish → done) replaces the
+        // local-FIFO one below; an empty route (ingress-chiplet slot, or a
+        // monolithic platform) falls through to the unchanged expressions.
+        let mut planned: Option<CommPlan> = None;
+        if let Some(comm) = &mut self.comm {
+            planned = comm.plan(accel, task.model, self.now, self.busy_until[accel], compute);
+            if let Some(p) = planned {
+                comm.commit(accel, task.model, &p);
+            }
+        }
+        if let Some(p) = planned {
+            let was_busy = self.busy_until[accel] > self.now;
+            self.busy_until[accel] = p.finish_s;
+            if !was_busy && p.finish_s > self.now {
+                self.busy_now += 1;
+            }
+            let wait = p.start_s - self.now;
+            let response = p.done_s - self.now;
+            let ms = matching_score(task.category, response, task.safety_time_s);
+            let r_j = self.busy_now as f64 / self.kinds.len() as f64;
+            self.metrics.per_accel[accel].update(c.energy_j, compute, response, ms, r_j);
+            return Applied {
+                accel,
+                start_s: p.start_s,
+                finish_s: p.finish_s,
+                wait_s: wait,
+                compute_s: compute,
+                response_s: response,
+                energy_j: c.energy_j,
+                ms,
+                r_j,
+                met_deadline: response <= task.safety_time_s,
+            };
+        }
         let was_busy = self.busy_until[accel] > self.now;
         let start = self.busy_until[accel].max(self.now);
         let finish = start + compute;
@@ -503,6 +579,76 @@ mod tests {
         let want: Vec<usize> = (0..s.len()).filter(|&i| i != 2 && i != 7).collect();
         assert_eq!(ups, want);
         assert_eq!(s.up_count(), s.len() - 2);
+    }
+
+    fn noc_shadow() -> ShadowState {
+        ShadowState::new(&Platform::parse("hmai+mesh2x2").unwrap(), NormScales::unit())
+    }
+
+    #[test]
+    fn comm_est_matches_apply_bit_for_bit() {
+        // The comm-aware prediction must be as exact as the monolithic one:
+        // est_response and apply walk the identical plan.
+        let mut s = noc_shadow();
+        let models = [ModelKind::Yolo, ModelKind::Ssd, ModelKind::Goturn];
+        for k in 0..24 {
+            let t = task(models[k % 3], k as f64 * 0.002, 1.0);
+            s.advance(t.release_s);
+            let i = (k * 5) % s.len();
+            let est = s.est_response(&t, i);
+            let a = s.apply(&t, i);
+            assert_eq!(est.to_bits(), a.response_s.to_bits(), "task {k} slot {i}");
+        }
+        let comm = s.comm.as_ref().unwrap();
+        assert!(comm.delay_s > 0.0 && comm.bytes > 0.0);
+    }
+
+    #[test]
+    fn ingress_slots_stay_compute_only() {
+        // hmai+mesh2x2, round-robin placement: slots 0/4/8 live on the
+        // ingress chiplet — empty route, so their timing is bit-identical
+        // to the monolithic platform; off-chiplet slots pay transfers.
+        let mut mono = shadow();
+        let mut noc = noc_shadow();
+        let t = task(ModelKind::Yolo, 0.0, 1.0);
+        assert_eq!(mono.est_response(&t, 0).to_bits(), noc.est_response(&t, 0).to_bits());
+        let (a, b) = (mono.apply(&t, 0), noc.apply(&t, 0));
+        assert_eq!(a.response_s.to_bits(), b.response_s.to_bits());
+        assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+        assert!(noc.est_response(&t, 1) > mono.est_response(&t, 1));
+        assert!(noc.est_comm_s(&t, 1) > 0.0);
+        assert_eq!(noc.est_comm_s(&t, 4), 0.0, "ingress slot moves nothing");
+        assert_eq!(mono.est_comm_s(&t, 1), 0.0, "monolithic moves nothing");
+    }
+
+    #[test]
+    fn weight_residency_drops_repeat_cost() {
+        let mut s = noc_shadow();
+        let t = task(ModelKind::Yolo, 0.0, 1.0);
+        let first = s.est_response(&t, 1);
+        let a = s.apply(&t, 1);
+        s.advance(a.finish_s + 1.0);
+        // Same model, warm slot: weights stay resident, only activations move.
+        let second = s.est_response(&t, 1);
+        assert!(second < first, "{second} !< {first}");
+        // A different model evicts the weights; the repeat pays in full again.
+        let g = task(ModelKind::Goturn, s.now, 1.0);
+        let b = s.apply(&g, 1);
+        s.advance(b.finish_s + 1.0);
+        let third = s.est_response(&t, 1);
+        assert!(third > second, "{third} !> {second}");
+    }
+
+    #[test]
+    fn comm_clone_is_independent() {
+        let s = noc_shadow();
+        let t = task(ModelKind::Ssd, 0.0, 1.0);
+        let mut r = s.clone();
+        r.apply(&t, 3);
+        assert!(r.comm.as_ref().unwrap().bytes > 0.0);
+        let orig = s.comm.as_ref().unwrap();
+        assert_eq!(orig.bytes, 0.0);
+        assert!(orig.link_busy.iter().all(|&b| b == 0.0));
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Interconnect integration suite: the chiplet communication model must be
+//! (a) invisible on monolithic platforms — every mono spelling of a
+//! platform spec is bit-identical to the compute-only model, (b) identical
+//! between the optimized schedulers and `sched::reference` on chiplet
+//! platforms, (c) invariant under the `jobs` split with platform events
+//! on, (d) actually visible (non-zero comm time/bytes) on chiplet
+//! platforms, and (e) strong enough to put a chiplet candidate on the DSE
+//! Pareto frontier when the workload outgrows one reticle.
+
+use hmai::dse::{self, DseConfig, SearchMode};
+use hmai::engine::Engine;
+use hmai::env::taskgen::DeadlineMode;
+use hmai::metrics::summary::SweepSummary;
+use hmai::plan::ExperimentPlan;
+use hmai::sched::reference::reference_registry;
+use hmai::sched::{Registry, SchedulerSpec};
+
+/// Every registered scheduler except FlexAI (needs a PJRT runtime — the
+/// one spec the base registry cannot build, same gap in both registries).
+fn all_specs() -> Vec<SchedulerSpec> {
+    [
+        SchedulerSpec::MinMin,
+        SchedulerSpec::Ata,
+        SchedulerSpec::Edp,
+        SchedulerSpec::Ga,
+        SchedulerSpec::Sa,
+        SchedulerSpec::Worst,
+        SchedulerSpec::RoundRobin,
+        SchedulerSpec::Random,
+    ]
+    .to_vec()
+}
+
+fn sweep(reg: &Registry, plan: &ExperimentPlan, events: bool, jobs: usize) -> SweepSummary {
+    Engine::new(reg).jobs(jobs).events(events).sweep_streaming(plan).unwrap()
+}
+
+#[test]
+fn mono_topology_spellings_are_bit_identical_to_compute_only() {
+    // `+mono`, `+mesh1x1` and `+ring1` all normalize to a topology-free
+    // platform with an unchanged name: the sweep fingerprint (which folds
+    // every per-run metric, comm fields included) must not move a bit
+    // for any registered scheduler.
+    let reg = Registry::new();
+    let plan_for = |spec: &str| {
+        ExperimentPlan::new()
+            .platforms([spec])
+            .scenarios(["urban-rush"])
+            .distances([40.0])
+            .schedulers(all_specs())
+            .seed(7)
+    };
+    let base = sweep(&reg, &plan_for("hmai"), false, 2).fingerprint();
+    for spelling in ["hmai+mono", "hmai+mesh1x1", "hmai+ring1"] {
+        let fp = sweep(&reg, &plan_for(spelling), false, 2).fingerprint();
+        assert_eq!(fp, base, "{spelling} drifted from the compute-only model");
+    }
+}
+
+#[test]
+fn optimized_matches_reference_on_chiplet_platforms() {
+    // The sharpest cross-check of the comm fast paths: the incremental
+    // Min-Min cache, the RolloutCtx comm mirror and the route-mask
+    // invalidation must reproduce the reference ShadowState decisions
+    // exactly — on a preset topology and on a mixed-core ring with an
+    // explicit non-trivial placement of its 11 slots over 3 chiplets.
+    let plan = ExperimentPlan::new()
+        .platforms(["hmai+mesh2x2", "so:4@2x,si:4,mm:3@0.5x+ring3/0.1.2.0.1.2.0.1.2.0.1"])
+        .scenarios(["urban-rush"])
+        .distances([40.0])
+        .schedulers(all_specs())
+        .seed(3);
+    let fast = sweep(&Registry::new(), &plan, false, 2).fingerprint();
+    let slow = sweep(&reference_registry(), &plan, false, 2).fingerprint();
+    assert_eq!(fast, slow, "chiplet sweep drifted from the reference schedulers");
+}
+
+#[test]
+fn jobs_split_is_invariant_on_chiplet_platform_with_events() {
+    // Comm state is part of the per-run simulation state; sharding the
+    // sweep across workers must not leak it between runs — including
+    // through a mid-route accelerator failure and recovery.
+    let plan = ExperimentPlan::new()
+        .platforms(["hmai+mesh2x2"])
+        .scenarios(["accel-failure"])
+        .distances([60.0])
+        .schedulers(all_specs())
+        .seed(11);
+    let serial = sweep(&Registry::new(), &plan, true, 1).fingerprint();
+    let sharded = sweep(&Registry::new(), &plan, true, 3).fingerprint();
+    assert_eq!(serial, sharded, "jobs split changed a chiplet sweep");
+}
+
+#[test]
+fn chiplet_comm_is_visible_and_mono_comm_is_zero() {
+    let plan = ExperimentPlan::new()
+        .platforms(["hmai", "hmai+mesh2x2"])
+        .scenarios(["urban-rush"])
+        .distances([40.0])
+        .schedulers([SchedulerSpec::MinMin])
+        .seed(7);
+    let results = Engine::new(&Registry::new()).run(&plan).unwrap();
+    let mut saw = (false, false);
+    for r in &results {
+        if r.trial.platform.contains("+mesh2x2") {
+            saw.0 = true;
+            assert!(r.summary.comm_delay_s > 0.0, "mesh run moved no comm time");
+            assert!(r.summary.comm_gb > 0.0, "mesh run moved no bytes");
+            assert!(
+                r.summary.makespan_s > 0.0 && r.summary.comm_delay_s < r.summary.compute_s,
+                "comm should tax the run, not dominate it"
+            );
+        } else {
+            saw.1 = true;
+            assert_eq!(r.summary.comm_delay_s.to_bits(), 0.0_f64.to_bits());
+            assert_eq!(r.summary.comm_gb.to_bits(), 0.0_f64.to_bits());
+        }
+    }
+    assert!(saw.0 && saw.1, "plan must cover both platforms");
+}
+
+#[test]
+fn dse_topology_sweep_puts_a_chiplet_on_the_frontier() {
+    // ISSUE 8 acceptance: a 20-camera scenario whose affine demand
+    // (~14 std-core-equivalents) exceeds one reticle (12 area units).
+    // With the topology axis on, monolithic candidates are capped at one
+    // die while mesh2x2 candidates may spend the full 16-unit budget
+    // across 4 dies — under frame-budget deadlines the extra capacity
+    // beats the comm tax, so at least one chiplet candidate must be
+    // Pareto-optimal.
+    let cfg = DseConfig {
+        budget_area: 16.0,
+        scenarios: vec!["urban-rush-20cam-hd".to_string()],
+        distances_m: vec![60.0],
+        deadline: DeadlineMode::FrameBudget,
+        max_evals: 24,
+        search: SearchMode::Full,
+        topologies: vec!["mesh2x2".to_string()],
+        jobs: 2,
+        ..DseConfig::default()
+    };
+    let report = dse::run(&cfg, &Registry::new()).unwrap();
+    assert_eq!(report.topologies, vec!["mono".to_string(), "mesh2x2".to_string()]);
+
+    let (mut mono, mut mesh) = (0usize, 0usize);
+    for r in &report.rows {
+        if r.topology == "mono" {
+            mono += 1;
+            assert_eq!(r.chiplets, 1, "{}", r.spec);
+            assert!(r.area <= 12.0 + 1e-9, "reticle cap violated: {} ({})", r.spec, r.area);
+            assert_eq!(r.comm_delay_ms_per_task.to_bits(), 0.0_f64.to_bits(), "{}", r.spec);
+        } else {
+            mesh += 1;
+            assert_eq!(r.topology, "mesh2x2");
+            assert_eq!(r.chiplets, 4, "{}", r.spec);
+            assert!(r.spec.ends_with("+mesh2x2"), "{}", r.spec);
+            assert!(r.area <= 16.0 + 1e-9, "{} ({})", r.spec, r.area);
+        }
+    }
+    assert!(mono >= 12 && mesh >= 12, "both axes must get their eval share ({mono}/{mesh})");
+    // The capacity shortlist must actually use the beyond-reticle headroom
+    // only chiplets can reach, and pay visible communication for it.
+    assert!(
+        report.rows.iter().any(|r| r.topology == "mesh2x2" && r.area > 12.0 + 1e-9),
+        "no mesh candidate beyond one reticle"
+    );
+    assert!(
+        report.rows.iter().any(|r| r.topology == "mesh2x2" && r.comm_delay_ms_per_task > 0.0),
+        "mesh candidates paid no comm"
+    );
+    // The acceptance bar itself.
+    assert!(
+        report.frontier_rows().any(|r| r.topology != "mono"),
+        "no chiplet candidate on the Pareto frontier: {:?}",
+        report
+            .rows
+            .iter()
+            .map(|r| (r.spec.clone(), r.on_frontier, r.stm_rate, r.energy_j, r.area))
+            .collect::<Vec<_>>()
+    );
+}
