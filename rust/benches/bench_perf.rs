@@ -232,6 +232,33 @@ fn main() -> anyhow::Result<()> {
     });
     println!("    -> frontier of {} non-dominated mixes", frontier_size.get());
 
+    section("DSE fidelity pipeline, full-fidelity vs multi-fidelity");
+    // Same exploration twice: `exact` evaluates every candidate at full
+    // fidelity (the pre-pipeline evaluator), `multi` prunes by analytic
+    // bounds and screens on truncated routes first.  The ratio is the
+    // pipeline's wall-clock win on this slice.
+    let exact_cfg = hmai::dse::DseConfig {
+        fidelity: hmai::dse::FidelityMode::Exact,
+        ..dse_cfg.clone()
+    };
+    let exact_mean = heavy
+        .bench("dse::run --fidelity exact", || {
+            std::hint::black_box(hmai::dse::run(&exact_cfg, &reg).unwrap());
+        })
+        .mean();
+    let multi_cfg = hmai::dse::DseConfig {
+        fidelity: hmai::dse::FidelityMode::Multi,
+        ..dse_cfg.clone()
+    };
+    let multi_mean = heavy
+        .bench("dse::run --fidelity multi", || {
+            std::hint::black_box(hmai::dse::run(&multi_cfg, &reg).unwrap());
+        })
+        .mean();
+    let mf_ratio = if multi_mean > 0.0 { exact_mean / multi_mean } else { 0.0 };
+    println!("    -> multi-fidelity pipeline: {mf_ratio:.2}x vs exact");
+    speedups.push(("dse_multifidelity", mf_ratio));
+
     for (key, ratio) in &speedups {
         println!("speedup {key}: {ratio:.2}x");
     }

@@ -1,0 +1,255 @@
+//! Analytic candidate bounds for multi-fidelity DSE: a best-case
+//! deadline-met rate and a lowest-possible energy per candidate mix,
+//! derived from the *demand* of the evaluation slice (task counts per
+//! model, route horizons) and the mix's static capacity
+//! ([`Mix::capacity_fps`]) — no simulation involved.
+//!
+//! Soundness is the whole point: a candidate is pruned only when an
+//! already-evaluated full-fidelity row dominates its *best case*, so
+//! pruning can never remove a Pareto-frontier member (domination is
+//! transitive, see DESIGN.md "DSE evaluation pipeline").
+//!
+//! Why the bounds hold against the simulator:
+//!   * STM upper bound — in one evaluation cell every model-`m` task is
+//!     released inside `[0, T)` (`T` = route duration) and meets its
+//!     deadline only if it completes within its RSS slack, i.e. inside
+//!     `[0, T + S_m)` with `S_m` the cell's largest model-`m` safety
+//!     time.  Each core completes model-`m` work at most at its
+//!     `cost_sized(...).fps()` rate (events are off in DSE and
+//!     interconnect delay only *adds* latency), so the met count is at
+//!     most `min(N_m, capacity_fps(m) · (T + S_m))` even with cores
+//!     shared across models.
+//!   * Energy lower bound — the simulator charges every executed task
+//!     exactly its cost-table `energy_j` (energy is work, not duration,
+//!     and communication adds none), and with events off no task is
+//!     lost, so a cell's run energy is at least
+//!     `Σ_m N_m · min_core_energy(m)`.  The per-run geometric mean the
+//!     report uses is monotone in each run, so the geomean of the cell
+//!     floors bounds the reported energy from below.
+
+use anyhow::Result;
+
+use crate::accel;
+use crate::engine::QueueCache;
+use crate::env::scenario;
+use crate::plan::{replicate_seeds, Fidelity, Scenario, Trial};
+use crate::workload::ALL_MODELS;
+
+use super::{DseConfig, EvalRow, Mix};
+
+/// One evaluation cell — one (scenario, distance, seed replicate) queue.
+#[derive(Debug, Clone)]
+pub(super) struct DemandCell {
+    /// Task count per model kind (`ModelKind::index` order).
+    pub n: [u64; 3],
+    /// Largest RSS safety slack per model kind (s); 0 when absent.
+    pub slack_s: [f64; 3],
+    /// Route duration (s).
+    pub route_s: f64,
+    /// Total tasks in the cell.
+    pub total: u64,
+}
+
+/// The evaluation slice's demand: one cell per (scenario, distance,
+/// seed replicate), in plan-expansion order.  Candidate-independent, so
+/// it is built once per DSE run.
+#[derive(Debug, Clone)]
+pub(super) struct Demand {
+    pub cells: Vec<DemandCell>,
+}
+
+/// Best-case metrics for one candidate mix against a [`Demand`].
+#[derive(Debug, Clone, Copy)]
+pub struct CandidateBound {
+    /// Upper bound on the deadline-met rate (Σmet / Σtasks).
+    pub stm_ub: f64,
+    /// Lower bound on the geometric-mean per-queue energy (J).
+    pub energy_lb_j: f64,
+}
+
+/// Build the demand of `cfg`'s evaluation slice.  Queues are fetched
+/// through the shared engine `cache` at full fidelity, so the candidate
+/// evaluations that follow reuse the exact same `Arc`ed queues instead of
+/// re-synthesizing routes.
+pub(super) fn build_demand(cfg: &DseConfig, cache: &QueueCache) -> Result<Demand> {
+    let seeds = replicate_seeds(cfg.seed, cfg.replicates.max(1));
+    let mut cells = Vec::new();
+    for seed in seeds {
+        for name in &cfg.scenarios {
+            let arch = scenario::find(name)?;
+            let area = arch.primary_area();
+            for (qi, &distance_m) in cfg.distances_m.iter().enumerate() {
+                let trial = Trial {
+                    id: 0,
+                    scenario: Scenario {
+                        archetype: Some(arch.clone()),
+                        area,
+                        distance_m,
+                        deadline: cfg.deadline,
+                    },
+                    queue_index: qi,
+                    platform: "hmai".to_string(),
+                    scheduler: cfg.scheduler.clone(),
+                    seed,
+                    sched_seed: seed,
+                    fidelity: Fidelity::full(),
+                };
+                let queue = cache.get(&trial);
+                let mut n = [0u64; 3];
+                let mut slack_s = [0.0f64; 3];
+                for t in &queue.tasks {
+                    let mi = t.model.index();
+                    n[mi] += 1;
+                    slack_s[mi] = slack_s[mi].max(t.safety_time_s);
+                }
+                cells.push(DemandCell {
+                    n,
+                    slack_s,
+                    route_s: queue.route_duration_s,
+                    total: queue.tasks.len() as u64,
+                });
+            }
+        }
+    }
+    Ok(Demand { cells })
+}
+
+/// Compute `mix`'s best-case bound against `demand`.
+pub(super) fn candidate_bound(mix: &Mix, demand: &Demand) -> CandidateBound {
+    // Static per-model capacity and cheapest per-task energy of the mix.
+    let mut cap_fps = [0.0f64; 3];
+    let mut min_e = [f64::INFINITY; 3];
+    for (mi, &model) in ALL_MODELS.iter().enumerate() {
+        cap_fps[mi] = mix.capacity_fps(model);
+        for (k, s, _) in mix.cells() {
+            min_e[mi] = min_e[mi].min(accel::cost_sized(k, model, s).energy_j);
+        }
+    }
+    let mut met_ub = 0.0f64;
+    let mut tasks = 0.0f64;
+    let mut sum_ln_floor = 0.0f64;
+    for cell in &demand.cells {
+        let mut cell_floor = 0.0f64;
+        for mi in 0..ALL_MODELS.len() {
+            let n = cell.n[mi] as f64;
+            if n == 0.0 {
+                continue;
+            }
+            let window_s = cell.route_s + cell.slack_s[mi];
+            met_ub += n.min(cap_fps[mi] * window_s);
+            if min_e[mi].is_finite() {
+                cell_floor += n * min_e[mi];
+            }
+        }
+        tasks += cell.total as f64;
+        sum_ln_floor += cell_floor.max(1e-300).ln();
+    }
+    let stm_ub = if tasks == 0.0 { 1.0 } else { (met_ub / tasks).min(1.0) };
+    // Small relative margin so float fold-order noise can never make an
+    // exact-arithmetic-sound bound unsound in practice.
+    let n_cells = demand.cells.len().max(1) as f64;
+    let energy_lb_j = (sum_ln_floor / n_cells).exp() * (1.0 - 1e-9);
+    CandidateBound { stm_ub, energy_lb_j }
+}
+
+/// Is a candidate with this `area` and best-case `bound` dominated by an
+/// already-evaluated full-fidelity row?  Uses the same (stm ↑, energy ↓,
+/// area ↓, at least one strict) domination as [`super::mark_frontier`],
+/// applied to the candidate's *best case* — so a `true` here proves the
+/// candidate's eventual row could never sit on the frontier.
+pub(super) fn bound_dominated(rows: &[EvalRow], area: f64, bound: &CandidateBound) -> bool {
+    rows.iter().any(|r| {
+        r.stm_rate >= bound.stm_ub
+            && r.energy_j <= bound.energy_lb_j
+            && r.area <= area
+            && (r.stm_rate > bound.stm_ub || r.energy_j < bound.energy_lb_j || r.area < area)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{AccelKind, CoreSize};
+
+    fn tiny_cfg() -> DseConfig {
+        DseConfig {
+            scenarios: vec!["urban-rush".to_string()],
+            distances_m: vec![40.0, 60.0],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn demand_covers_every_cell_of_the_slice() {
+        let cache = QueueCache::default();
+        let d = build_demand(&tiny_cfg(), &cache).unwrap();
+        assert_eq!(d.cells.len(), 2, "1 scenario x 2 distances x 1 replicate");
+        for cell in &d.cells {
+            assert!(cell.total > 0);
+            assert_eq!(cell.n.iter().sum::<u64>(), cell.total);
+            assert!(cell.route_s > 0.0);
+            for mi in 0..3 {
+                assert!((cell.n[mi] > 0) == (cell.slack_s[mi] > 0.0), "model {mi}");
+            }
+        }
+        // Replicates multiply the cells.
+        let cfg = DseConfig { replicates: 3, ..tiny_cfg() };
+        let d3 = build_demand(&cfg, &cache).unwrap();
+        assert_eq!(d3.cells.len(), 6);
+        // Replicate 0 is the base seed: its cells match the single-replicate run.
+        assert_eq!(d3.cells[0].total, d.cells[0].total);
+    }
+
+    #[test]
+    fn bounds_grow_with_capacity_and_shrink_with_cheap_cores() {
+        let cache = QueueCache::default();
+        let d = build_demand(&tiny_cfg(), &cache).unwrap();
+        let hmai = Mix::hmai_std();
+        let b = candidate_bound(&hmai, &d);
+        assert!(b.stm_ub > 0.0 && b.stm_ub <= 1.0);
+        assert!(b.energy_lb_j > 0.0);
+        // More cores: never a lower STM ceiling, never a higher energy floor.
+        let bigger = hmai.with_added(AccelKind::SconvOD, CoreSize::Double);
+        let bb = candidate_bound(&bigger, &d);
+        assert!(bb.stm_ub >= b.stm_ub);
+        assert!(bb.energy_lb_j <= b.energy_lb_j + 1e-12);
+        // A single half core is capacity-starved well below a full rate.
+        let one = Mix::default().with_added(AccelKind::SconvOD, CoreSize::Half);
+        let ob = candidate_bound(&one, &d);
+        assert!(ob.stm_ub < 1.0, "{}", ob.stm_ub);
+    }
+
+    #[test]
+    fn bound_domination_needs_all_axes_and_one_strict() {
+        let row = |stm: f64, e: f64, a: f64| EvalRow {
+            mix: Mix::default(),
+            spec: "r".to_string(),
+            topology: "mono".to_string(),
+            chiplets: 1,
+            cores: 1,
+            area: a,
+            peak_power_w: 1.0,
+            stm_rate: stm,
+            energy_j: e,
+            time_s: 1.0,
+            r_balance: 0.5,
+            comm_delay_ms_per_task: 0.0,
+            comm_gb: 0.0,
+            stm_bound: 1.0,
+            energy_bound_j: 0.0,
+            on_frontier: false,
+        };
+        let rows = vec![row(0.8, 10.0, 4.0)];
+        let b = |stm_ub: f64, energy_lb_j: f64| CandidateBound { stm_ub, energy_lb_j };
+        // Strictly worse best case on every axis: pruned.
+        assert!(bound_dominated(&rows, 5.0, &b(0.7, 11.0)));
+        // Equal on all axes, nothing strict: kept.
+        assert!(!bound_dominated(&rows, 4.0, &b(0.8, 10.0)));
+        // Equal bound, strictly larger area: pruned.
+        assert!(bound_dominated(&rows, 4.5, &b(0.8, 10.0)));
+        // A better best-case STM survives any row.
+        assert!(!bound_dominated(&rows, 9.0, &b(0.9, 12.0)));
+        // A cheaper best-case energy survives too.
+        assert!(!bound_dominated(&rows, 9.0, &b(0.5, 9.0)));
+    }
+}

@@ -1,0 +1,285 @@
+//! The DSE's batched candidate evaluator.
+//!
+//! Every unseen candidate of a batch — across *all* topology entries —
+//! goes through **one** [`ExperimentPlan`] whose platform axis is the
+//! candidate list, so trials from independent candidates run concurrently
+//! on the engine's worker pool instead of serially per entry.  Three
+//! caches make repeated evaluation cheap:
+//!
+//!   * a shared [`QueueCache`] handed to every engine run, so routes are
+//!     synthesized once per (scenario, distance, seed, fidelity) for the
+//!     whole exploration;
+//!   * a per-(candidate, fidelity) result cache (`index` for full
+//!     fidelity, `lf` for screening fractions), so rungs re-promoting a
+//!     candidate never re-simulate it;
+//!   * a compute memo keyed on the *canonical platform name* × fidelity,
+//!     so spec spellings the platform parser folds together (e.g. a
+//!     `+mono`-equivalent topology suffix) are simulated and folded once.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::engine::{Engine, QueueCache};
+use crate::metrics::summary::SweepSummary;
+use crate::plan::{ExperimentPlan, Fidelity};
+use crate::platform::Platform;
+use crate::sched::Registry;
+
+use super::bounds::{self, Demand};
+use super::{DseConfig, EvalRow, Mix, TopoEntry};
+
+/// Folded simulation metrics for one candidate at one fidelity.
+#[derive(Debug, Clone, Copy)]
+pub(super) struct Metrics {
+    pub stm_rate: f64,
+    pub energy_j: f64,
+    pub time_s: f64,
+    pub r_balance: f64,
+    pub comm_delay_ms_per_task: f64,
+    pub comm_gb: f64,
+}
+
+pub(super) struct Evaluator<'a> {
+    pub cfg: &'a DseConfig,
+    registry: &'a Registry,
+    /// Resolved topology axis (`[mono]` when the axis is off).
+    pub topos: &'a [TopoEntry],
+    /// The slice's demand (for analytic bounds on every row).
+    pub demand: Demand,
+    cache: Arc<QueueCache>,
+    /// Full-fidelity rows, in first-evaluation order (deterministic).
+    pub rows: Vec<EvalRow>,
+    /// (mix, topology-axis index) → full-fidelity row index.
+    index: BTreeMap<(Mix, usize), usize>,
+    /// (mix, topology-axis index, route-frac bits) → screening metrics.
+    lf: BTreeMap<(Mix, usize, u64), Metrics>,
+    /// Canonical platform name × route-frac bits → folded metrics.
+    memo: BTreeMap<(String, u64), Metrics>,
+    /// Low-fidelity pairs in first-evaluation order (the greedy search's
+    /// candidate pool under multi fidelity).
+    pub lf_order: Vec<(Mix, usize)>,
+    /// Candidates actually simulated at full / screening fidelity.
+    pub full_sims: usize,
+    pub lf_sims: usize,
+    /// Candidates served from the canonical-name memo without a sweep.
+    pub memo_hits: usize,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(
+        cfg: &'a DseConfig,
+        registry: &'a Registry,
+        topos: &'a [TopoEntry],
+    ) -> Result<Evaluator<'a>> {
+        let cache = Arc::new(QueueCache::default());
+        let demand = bounds::build_demand(cfg, &cache)?;
+        Ok(Evaluator {
+            cfg,
+            registry,
+            topos,
+            demand,
+            cache,
+            rows: Vec::new(),
+            index: BTreeMap::new(),
+            lf: BTreeMap::new(),
+            memo: BTreeMap::new(),
+            lf_order: Vec::new(),
+            full_sims: 0,
+            lf_sims: 0,
+            memo_hits: 0,
+        })
+    }
+
+    /// The full-fidelity axis of this run: whole routes,
+    /// `cfg.replicates` seed replicates.
+    pub fn full_fidelity(&self) -> Fidelity {
+        Fidelity { route_frac: 1.0, replicates: self.cfg.replicates.max(1) }
+    }
+
+    pub fn evaluated(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn has_row(&self, mix: &Mix, ti: usize) -> bool {
+        self.index.contains_key(&(*mix, ti))
+    }
+
+    pub fn row(&self, mix: &Mix, ti: usize) -> &EvalRow {
+        &self.rows[self.index[&(*mix, ti)]]
+    }
+
+    /// Candidates evaluated so far at `fid` (the search-budget counter).
+    pub fn searched(&self, fid: Fidelity) -> usize {
+        if fid.is_full() {
+            self.rows.len()
+        } else {
+            self.lf_order.len()
+        }
+    }
+
+    /// Folded metrics of an already-evaluated candidate at `fid`.
+    pub fn metric(&self, mix: &Mix, ti: usize, fid: Fidelity) -> Metrics {
+        if fid.is_full() {
+            let r = self.row(mix, ti);
+            Metrics {
+                stm_rate: r.stm_rate,
+                energy_j: r.energy_j,
+                time_s: r.time_s,
+                r_balance: r.r_balance,
+                comm_delay_ms_per_task: r.comm_delay_ms_per_task,
+                comm_gb: r.comm_gb,
+            }
+        } else {
+            self.lf[&(*mix, ti, fid.frac_bits())]
+        }
+    }
+
+    /// Evaluate every not-yet-seen mix of `mixes` on topology entry `ti`.
+    pub fn eval_all(&mut self, mixes: &[Mix], ti: usize, fid: Fidelity) -> Result<()> {
+        let pairs: Vec<(Mix, usize)> = mixes.iter().map(|&m| (m, ti)).collect();
+        self.eval_pairs(&pairs, fid)
+    }
+
+    /// Evaluate every not-yet-seen (mix, topology entry) pair of `pairs`
+    /// at fidelity `fid` in one engine sweep.
+    pub fn eval_pairs(&mut self, pairs: &[(Mix, usize)], fid: Fidelity) -> Result<()> {
+        let frac = fid.frac_bits();
+        let mut fresh: Vec<(Mix, usize)> = Vec::new();
+        for &(m, ti) in pairs {
+            let seen = if fid.is_full() {
+                self.index.contains_key(&(m, ti))
+            } else {
+                self.lf.contains_key(&(m, ti, frac))
+            };
+            if !seen && !fresh.contains(&(m, ti)) {
+                fresh.push((m, ti));
+            }
+        }
+        if fresh.is_empty() {
+            return Ok(());
+        }
+        // Resolve each candidate's canonical platform name; only names the
+        // compute memo has never seen enter the plan's platform axis.
+        let mut named: Vec<(Mix, usize, String, String)> = Vec::new();
+        let mut queued: BTreeSet<String> = BTreeSet::new();
+        let mut specs: Vec<String> = Vec::new();
+        for &(m, ti) in &fresh {
+            let entry = &self.topos[ti];
+            let spec = entry.spec_for(&m);
+            // Sweep groups key on the *platform name*: the bare mix name
+            // for mono, the `+topology`-suffixed name otherwise.
+            let name = match &entry.topo {
+                None => m.platform().name,
+                Some(_) => Platform::try_parse(&spec)
+                    .map_err(anyhow::Error::msg)
+                    .context("dse spec")?
+                    .name,
+            };
+            if self.memo.contains_key(&(name.clone(), frac)) {
+                self.memo_hits += 1;
+            } else if queued.insert(name.clone()) {
+                specs.push(spec.clone());
+            } else {
+                self.memo_hits += 1; // name-equivalent spelling in this batch
+            }
+            named.push((m, ti, spec, name));
+        }
+        if !specs.is_empty() {
+            let plan = ExperimentPlan::new()
+                .scenarios(self.cfg.scenarios.iter().cloned())
+                .distances(self.cfg.distances_m.iter().copied())
+                .deadline(self.cfg.deadline)
+                .platforms(specs.iter().cloned())
+                .scheduler(self.cfg.scheduler.clone())
+                .seed(self.cfg.seed)
+                .fidelity(fid);
+            let sweep = Engine::new(self.registry)
+                .jobs(self.cfg.jobs)
+                .queue_cache(Arc::clone(&self.cache))
+                .sweep_streaming(&plan)
+                .context("dse candidate sweep")?;
+            if fid.is_full() {
+                self.full_sims += specs.len();
+            } else {
+                self.lf_sims += specs.len();
+            }
+            for (_, _, _, name) in &named {
+                if queued.remove(name) {
+                    let folded = fold_metrics(&sweep, name)?;
+                    self.memo.insert((name.clone(), frac), folded);
+                }
+            }
+        }
+        for (m, ti, spec, name) in named {
+            let met = *self
+                .memo
+                .get(&(name.clone(), frac))
+                .ok_or_else(|| anyhow::anyhow!("dse: no folded metrics for '{name}'"))?;
+            if fid.is_full() {
+                let row = self.make_row(m, ti, spec, met);
+                self.index.insert((m, ti), self.rows.len());
+                self.rows.push(row);
+            } else {
+                self.lf.insert((m, ti, frac), met);
+                self.lf_order.push((m, ti));
+            }
+        }
+        Ok(())
+    }
+
+    fn make_row(&self, mix: Mix, ti: usize, spec: String, m: Metrics) -> EvalRow {
+        let entry = &self.topos[ti];
+        let b = bounds::candidate_bound(&mix, &self.demand);
+        EvalRow {
+            mix,
+            spec,
+            topology: entry.label.clone(),
+            chiplets: entry.chiplets(),
+            cores: mix.cores(),
+            area: mix.area_units(),
+            peak_power_w: mix.peak_power_w(),
+            stm_rate: m.stm_rate,
+            energy_j: m.energy_j,
+            time_s: m.time_s,
+            r_balance: m.r_balance,
+            comm_delay_ms_per_task: m.comm_delay_ms_per_task,
+            comm_gb: m.comm_gb,
+            stm_bound: b.stm_ub,
+            energy_bound_j: b.energy_lb_j,
+            on_frontier: false,
+        }
+    }
+}
+
+/// Fold a candidate's sweep rows (one group per scenario) into metrics.
+fn fold_metrics(sweep: &SweepSummary, name: &str) -> Result<Metrics> {
+    let mut met = 0u64;
+    let mut tasks = 0u64;
+    let mut n = 0u64;
+    let mut sum_ln_e = 0.0;
+    let mut sum_ln_t = 0.0;
+    let mut sum_rb = 0.0;
+    let mut sum_comm_delay = 0.0;
+    let mut sum_comm_gb = 0.0;
+    for g in sweep.groups.iter().filter(|g| g.key.platform == name) {
+        met += g.stats.sum_tasks_met;
+        tasks += g.stats.sum_tasks;
+        n += g.stats.trials;
+        sum_ln_e += g.stats.sum_ln_energy;
+        sum_ln_t += g.stats.sum_ln_time;
+        sum_rb += g.stats.sum_r_balance;
+        sum_comm_delay += g.stats.sum_comm_delay;
+        sum_comm_gb += g.stats.sum_comm_gb;
+    }
+    anyhow::ensure!(n > 0, "no sweep rows for candidate '{name}'");
+    Ok(Metrics {
+        stm_rate: if tasks == 0 { 1.0 } else { met as f64 / tasks as f64 },
+        energy_j: (sum_ln_e / n as f64).exp(),
+        time_s: (sum_ln_t / n as f64).exp(),
+        r_balance: sum_rb / n as f64,
+        comm_delay_ms_per_task: if tasks == 0 { 0.0 } else { sum_comm_delay / tasks as f64 * 1e3 },
+        comm_gb: sum_comm_gb / n as f64,
+    })
+}

@@ -3,49 +3,58 @@
 //! for a new form of parallelism" — this module searches the
 //! (kind × [`CoreSize`] × count) mix space under an area (and optional
 //! peak-power) budget, evaluates each candidate platform on the real
-//! [`Engine`] across a scenario-library slice, and reports the Pareto
-//! frontier of deadline-met rate vs energy vs area.
+//! [`Engine`](crate::engine::Engine) across a scenario-library slice, and
+//! reports the Pareto frontier of deadline-met rate vs energy vs area.
 //!
-//! Two search modes share one evaluator:
-//!   * **full** — enumerate every per-kind-uniform-size mix within the
-//!     budget (tractable for small budgets / raised `--max-evals`);
-//!   * **greedy** — beam search growing mixes one core at a time, the
-//!     mode for realistic budgets where enumeration explodes.
+//! Three orthogonal axes shape a run:
 //!
-//! Evaluation batches every unseen candidate into *one*
-//! [`ExperimentPlan`] whose platform axis is the candidate list and runs
-//! it through [`Engine::sweep_streaming`], so trials parallelize across
-//! `--jobs`, queues are shared through the engine's queue cache, and
-//! memory stays flat no matter how many mixes are in flight.
+//!   * **Search** (`--search`): *full* enumerates every
+//!     per-kind-uniform-size mix within the budget (shortlisted by static
+//!     capacity when it explodes, logged never silent); *greedy* beam
+//!     search grows mixes one core at a time; *auto* picks.
+//!   * **Topology** (`--topology`): adds chiplet packages
+//!     ([`Topology`] presets) as a second candidate axis — every mix is
+//!     evaluated monolithically *and* on each listed topology (spec
+//!     `"{mix}+{topo}"`), paying communication through the
+//!     [`crate::interconnect`] model, with the reticle constraint
+//!     ([`MONO_DIE_AREA_UNITS`]) capping a monolithic die while a
+//!     C-chiplet package may spend up to C reticles.
+//!   * **Fidelity** (`--fidelity`): *multi* (the default) runs the
+//!     multi-fidelity pipeline — analytic capacity/energy bounds prune
+//!     candidates whose best case is already dominated, successive-
+//!     halving rungs screen the rest on truncated routes
+//!     (`--rungs`, `--keep-frac`), and only the promoted set pays for
+//!     full-fidelity evaluation; *exact* disables pruning and screening
+//!     entirely and reproduces the pre-fidelity evaluator bit-for-bit.
 //!
-//! ## Topology axis
-//!
-//! `--topology` adds package topologies ([`Topology`] presets) as a second
-//! search axis: every mix is then evaluated monolithically *and* on each
-//! listed chiplet topology (spec `"{mix}+{topo}"`), with communication
-//! costs paid through the [`crate::interconnect`] model.  The axis also
-//! activates the *reticle* constraint: one die can hold at most
-//! [`MONO_DIE_AREA_UNITS`] area units, so a monolithic candidate is capped
-//! at the reticle while a C-chiplet candidate may spend up to C reticles
-//! (still within `--budget`) — the silicon-economics reason dis-integrated
-//! packages earn frontier seats despite paying for data movement.  With no
-//! `--topology` the axis is off and `hmai dse` behaves exactly as before.
+//! Whatever the axes, **frontier rows only ever come from full-fidelity
+//! evaluations** (`tests/dse_fidelity.rs` pins both the exact-mode
+//! bit-identity and the multi-mode frontier-set equality), and evaluation
+//! batches every unseen candidate — across all topology entries — into
+//! *one* [`ExperimentPlan`](crate::plan::ExperimentPlan) so trials
+//! parallelize across `--jobs`, queues are shared through one
+//! [`QueueCache`](crate::engine::QueueCache) for the whole run, and
+//! name-equivalent spec spellings are simulated once (see `eval.rs`).
 
-use std::collections::BTreeMap;
+mod bounds;
+mod eval;
+mod screen;
+
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::accel::{self, AccelKind, CoreSize, ALL_ACCELS, ALL_SIZES};
-use crate::engine::Engine;
 use crate::env::taskgen::DeadlineMode;
 use crate::interconnect::{Topology, MONO_DIE_AREA_UNITS};
-use crate::metrics::summary::SweepSummary;
-use crate::plan::ExperimentPlan;
+use crate::plan::Fidelity;
 use crate::platform::Platform;
 use crate::sched::{Registry, SchedulerSpec};
 use crate::util::json::Json;
 use crate::workload::{ModelKind, ALL_MODELS};
+
+pub use bounds::CandidateBound;
+use eval::Evaluator;
 
 /// How `run` explores the mix space.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,6 +87,34 @@ impl SearchMode {
     }
 }
 
+/// How `run` spends simulation effort per candidate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FidelityMode {
+    /// Bound pruning + successive-halving screening; only promoted
+    /// candidates are evaluated at full fidelity (the default).
+    Multi,
+    /// Every candidate evaluated at full fidelity, no pruning or
+    /// screening — bit-identical to the pre-fidelity evaluator.
+    Exact,
+}
+
+impl FidelityMode {
+    pub fn parse(s: &str) -> Result<FidelityMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "multi" | "mf" => Ok(FidelityMode::Multi),
+            "exact" => Ok(FidelityMode::Exact),
+            other => anyhow::bail!("--fidelity: expected multi|exact, got '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FidelityMode::Multi => "multi",
+            FidelityMode::Exact => "exact",
+        }
+    }
+}
+
 /// DSE run parameters.
 #[derive(Debug, Clone)]
 pub struct DseConfig {
@@ -92,7 +129,7 @@ pub struct DseConfig {
     pub scheduler: SchedulerSpec,
     pub seed: u64,
     pub jobs: usize,
-    /// Hard cap on simulated candidates (truncation is logged).
+    /// Hard cap on searched candidates (truncation is logged).
     pub max_evals: usize,
     /// Beam width of the greedy search.
     pub beam: usize,
@@ -101,6 +138,16 @@ pub struct DseConfig {
     /// candidate ([`Topology::try_parse`] grammar, placement-free).  Empty
     /// disables the topology axis entirely (legacy behavior).
     pub topologies: Vec<String>,
+    pub fidelity: FidelityMode,
+    /// Successive-halving rungs of the multi-fidelity pipeline (1..=6;
+    /// rung `i` of `n` screens at `0.5^(n-i)` of the route).
+    pub rungs: usize,
+    /// Fraction of candidates promoted per rung, in (0, 1] — the
+    /// screening-fidelity Pareto frontier is always promoted on top.
+    pub keep_frac: f64,
+    /// Seed replicates of every full-fidelity evaluation
+    /// ([`crate::plan::replicate_seeds`]; screening rungs always use 1).
+    pub replicates: usize,
 }
 
 impl Default for DseConfig {
@@ -118,6 +165,10 @@ impl Default for DseConfig {
             beam: 2,
             search: SearchMode::Auto,
             topologies: Vec::new(),
+            fidelity: FidelityMode::Multi,
+            rungs: 1,
+            keep_frac: 0.5,
+            replicates: 1,
         }
     }
 }
@@ -208,7 +259,8 @@ impl Mix {
     }
 
     /// Aggregate best-case throughput for `model` (FPS) — the static
-    /// capacity proxy the full-mode shortlist ranks by.
+    /// capacity the full-mode shortlist ranks by and the analytic
+    /// STM upper bound is derived from (`bounds.rs`).
     pub fn capacity_fps(&self, model: ModelKind) -> f64 {
         self.cells().map(|(k, s, n)| n as f64 * accel::cost_sized(k, model, s).fps()).sum()
     }
@@ -252,6 +304,7 @@ impl Mix {
 }
 
 /// One evaluated candidate: static characteristics + simulated outcome.
+/// Every row in a report was evaluated at **full fidelity**.
 #[derive(Debug, Clone)]
 pub struct EvalRow {
     pub mix: Mix,
@@ -275,6 +328,11 @@ pub struct EvalRow {
     pub comm_delay_ms_per_task: f64,
     /// Mean bytes moved over the interconnect per trial (GB).
     pub comm_gb: f64,
+    /// Analytic best-case deadline-met rate (`bounds.rs`); always ≥
+    /// `stm_rate`.
+    pub stm_bound: f64,
+    /// Analytic lowest-possible energy (J); always ≤ `energy_j`.
+    pub energy_bound_j: f64,
     /// Non-dominated on (stm_rate ↑, energy_j ↓, area ↓)?
     pub on_frontier: bool,
 }
@@ -294,19 +352,76 @@ impl EvalRow {
             ("r_balance", Json::Num(self.r_balance)),
             ("comm_delay_ms_per_task", Json::Num(self.comm_delay_ms_per_task)),
             ("comm_gb", Json::Num(self.comm_gb)),
+            ("stm_bound", Json::Num(self.stm_bound)),
+            ("energy_bound_j", Json::Num(self.energy_bound_j)),
             ("on_frontier", Json::Bool(self.on_frontier)),
         ])
     }
 }
 
+/// A candidate skipped by the analytic bound pruner: its best case was
+/// already dominated by an evaluated full-fidelity row, so it could never
+/// reach the frontier.  Reported, never silent.
+#[derive(Debug, Clone)]
+pub struct PrunedRow {
+    pub spec: String,
+    pub topology: String,
+    pub area: f64,
+    pub stm_bound: f64,
+    pub energy_bound_j: f64,
+}
+
+impl PrunedRow {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("spec", Json::Str(self.spec.clone())),
+            ("topology", Json::Str(self.topology.clone())),
+            ("area_units", Json::Num(self.area)),
+            ("stm_bound", Json::Num(self.stm_bound)),
+            ("energy_bound_j", Json::Num(self.energy_bound_j)),
+        ])
+    }
+}
+
+/// One successive-halving rung's accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RungLog {
+    /// Route fraction this rung screened at.
+    pub route_frac: f64,
+    /// Candidates entering the rung.
+    pub entered: usize,
+    /// Candidates promoted out of it.
+    pub promoted: usize,
+}
+
+impl RungLog {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("route_frac", Json::Num(self.route_frac)),
+            ("entered", Json::Num(self.entered as f64)),
+            ("promoted", Json::Num(self.promoted as f64)),
+        ])
+    }
+}
+
 /// Outcome of a DSE run: every evaluated mix (frontier rows first, then by
-/// descending deadline-met rate) plus run bookkeeping.
+/// descending deadline-met rate) plus run and pipeline bookkeeping.
+///
+/// Multi-fidelity accounting invariant: `pool == pruned_rows.len() +
+/// screened_out + promoted` — every candidate the search produced is
+/// either pruned analytically, screened out at some rung, or promoted to
+/// a full-fidelity row.  In exact mode the pipeline is inactive:
+/// `pool == evaluated` and the other counts are 0.
 #[derive(Debug)]
 pub struct DseReport {
     pub rows: Vec<EvalRow>,
     pub frontier: usize,
+    /// Full-fidelity-evaluated candidates (`rows.len()`).
     pub evaluated: usize,
     pub search: &'static str,
+    pub fidelity: &'static str,
+    pub rungs: usize,
+    pub keep_frac: f64,
     pub budget_area: f64,
     pub power_cap_w: Option<f64>,
     /// Candidates dropped by `max_evals` (0 = exhaustive within mode).
@@ -314,6 +429,17 @@ pub struct DseReport {
     /// Topology-axis labels, `"mono"` first (just `["mono"]` when the
     /// axis is off).
     pub topologies: Vec<String>,
+    /// Candidates the search produced for the evaluation pipeline.
+    pub pool: usize,
+    /// Candidates skipped by analytic bounds (with their bounds).
+    pub pruned_rows: Vec<PrunedRow>,
+    /// Candidates dropped by successive-halving rungs.
+    pub screened_out: usize,
+    /// Candidates promoted to full fidelity (anchor overlaps included).
+    pub promoted: usize,
+    /// Candidate evaluations at screening fidelity (all rungs).
+    pub low_fidelity_evals: usize,
+    pub rung_log: Vec<RungLog>,
 }
 
 impl DseReport {
@@ -326,6 +452,11 @@ impl DseReport {
         self.rows.iter().find(|r| r.spec == spec)
     }
 
+    /// Candidates skipped by the analytic bound pruner.
+    pub fn pruned(&self) -> usize {
+        self.pruned_rows.len()
+    }
+
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("budget_area", Json::Num(self.budget_area)),
@@ -334,8 +465,25 @@ impl DseReport {
                 self.power_cap_w.map(Json::Num).unwrap_or(Json::Null),
             ),
             ("search", Json::Str(self.search.to_string())),
+            ("fidelity", Json::Str(self.fidelity.to_string())),
+            ("rungs", Json::Num(self.rungs as f64)),
+            ("keep_frac", Json::Num(self.keep_frac)),
             ("evaluated", Json::Num(self.evaluated as f64)),
             ("truncated", Json::Num(self.truncated as f64)),
+            ("pool", Json::Num(self.pool as f64)),
+            ("pruned", Json::Num(self.pruned() as f64)),
+            ("screened_out", Json::Num(self.screened_out as f64)),
+            ("promoted", Json::Num(self.promoted as f64)),
+            ("full_evals", Json::Num(self.evaluated as f64)),
+            ("low_fidelity_evals", Json::Num(self.low_fidelity_evals as f64)),
+            (
+                "rung_log",
+                Json::Arr(self.rung_log.iter().map(|r| r.to_json()).collect()),
+            ),
+            (
+                "pruned_rows",
+                Json::Arr(self.pruned_rows.iter().map(|r| r.to_json()).collect()),
+            ),
             (
                 "topologies",
                 Json::Arr(self.topologies.iter().map(|t| Json::Str(t.clone())).collect()),
@@ -419,111 +567,30 @@ pub fn mark_frontier(rows: &mut [EvalRow]) -> usize {
     frontier
 }
 
-/// Batched evaluator with a result cache: every unseen mix of a batch goes
-/// through one engine sweep.
-struct Evaluator<'a> {
-    cfg: &'a DseConfig,
-    registry: &'a Registry,
-    /// Resolved topology axis (`[mono]` when the axis is off).
-    topos: &'a [TopoEntry],
-    /// Evaluated rows, in first-evaluation order (deterministic).
-    rows: Vec<EvalRow>,
-    /// (mix, topology-axis index) → row index.
-    index: BTreeMap<(Mix, usize), usize>,
-}
-
-impl<'a> Evaluator<'a> {
-    fn new(cfg: &'a DseConfig, registry: &'a Registry, topos: &'a [TopoEntry]) -> Evaluator<'a> {
-        Evaluator { cfg, registry, topos, rows: Vec::new(), index: BTreeMap::new() }
-    }
-
-    fn evaluated(&self) -> usize {
-        self.rows.len()
-    }
-
-    fn row(&self, mix: &Mix, ti: usize) -> &EvalRow {
-        &self.rows[self.index[&(*mix, ti)]]
-    }
-
-    /// Evaluate every not-yet-seen mix of `mixes` on topology entry `ti`
-    /// in one engine sweep.
-    fn eval_all(&mut self, mixes: &[Mix], ti: usize) -> Result<()> {
-        let entry = &self.topos[ti];
-        let mut fresh: Vec<Mix> = Vec::new();
-        for &m in mixes {
-            if !self.index.contains_key(&(m, ti)) && !fresh.contains(&m) {
-                fresh.push(m);
-            }
-        }
-        if fresh.is_empty() {
-            return Ok(());
-        }
-        let specs: Vec<String> = fresh.iter().map(|m| entry.spec_for(m)).collect();
-        let plan = ExperimentPlan::new()
-            .scenarios(self.cfg.scenarios.iter().cloned())
-            .distances(self.cfg.distances_m.iter().copied())
-            .deadline(self.cfg.deadline)
-            .platforms(specs.iter().cloned())
-            .scheduler(self.cfg.scheduler.clone())
-            .seed(self.cfg.seed);
-        let sweep = Engine::new(self.registry)
-            .jobs(self.cfg.jobs)
-            .sweep_streaming(&plan)
-            .context("dse candidate sweep")?;
-        for (mix, spec) in fresh.into_iter().zip(specs) {
-            let row = fold_rows(&mix, entry, spec, &sweep)?;
-            self.index.insert((mix, ti), self.rows.len());
-            self.rows.push(row);
-        }
-        Ok(())
-    }
-}
-
-/// Fold a candidate's sweep rows (one per scenario) into one `EvalRow`.
-fn fold_rows(mix: &Mix, entry: &TopoEntry, spec: String, sweep: &SweepSummary) -> Result<EvalRow> {
-    // Sweep groups key on the *platform name*: the bare mix name for mono,
-    // the `+topology`-suffixed name the platform parser produces otherwise.
-    let name = match &entry.topo {
-        None => mix.platform().name,
-        Some(_) => {
-            Platform::try_parse(&spec).map_err(anyhow::Error::msg).context("dse spec")?.name
-        }
-    };
-    let mut met = 0u64;
-    let mut tasks = 0u64;
-    let mut n = 0u64;
-    let mut sum_ln_e = 0.0;
-    let mut sum_ln_t = 0.0;
-    let mut sum_rb = 0.0;
-    let mut sum_comm_delay = 0.0;
-    let mut sum_comm_gb = 0.0;
-    for g in sweep.groups.iter().filter(|g| g.key.platform == name) {
-        met += g.stats.sum_tasks_met;
-        tasks += g.stats.sum_tasks;
-        n += g.stats.trials;
-        sum_ln_e += g.stats.sum_ln_energy;
-        sum_ln_t += g.stats.sum_ln_time;
-        sum_rb += g.stats.sum_r_balance;
-        sum_comm_delay += g.stats.sum_comm_delay;
-        sum_comm_gb += g.stats.sum_comm_gb;
-    }
-    anyhow::ensure!(n > 0, "no sweep rows for candidate '{name}'");
-    Ok(EvalRow {
-        mix: *mix,
-        spec,
-        topology: entry.label.clone(),
-        chiplets: entry.chiplets(),
-        cores: mix.cores(),
-        area: mix.area_units(),
-        peak_power_w: mix.peak_power_w(),
-        stm_rate: if tasks == 0 { 1.0 } else { met as f64 / tasks as f64 },
-        energy_j: (sum_ln_e / n as f64).exp(),
-        time_s: (sum_ln_t / n as f64).exp(),
-        r_balance: sum_rb / n as f64,
-        comm_delay_ms_per_task: if tasks == 0 { 0.0 } else { sum_comm_delay / tasks as f64 * 1e3 },
-        comm_gb: sum_comm_gb / n as f64,
-        on_frontier: false,
-    })
+/// Shortlist an over-large enumeration to its `left` best candidates by
+/// worst-model static capacity (balanced provisioning) — logged, never
+/// silent.  Returns the dropped count.
+fn shortlist_by_capacity(mixes: &mut Vec<Mix>, left: usize, label: &str) -> usize {
+    let dropped = mixes.len().saturating_sub(left);
+    crate::log_warn!(
+        "dse",
+        "full enumeration ({label}) has {} candidates; keeping the top {left} by \
+         worst-model capacity ({dropped} dropped — use --search greedy or raise \
+         --max-evals)",
+        mixes.len(),
+    );
+    // One key build per mix (the list can be huge): positive finite f64s
+    // order identically to their bit patterns, so `to_bits` keys give
+    // capacity-desc / area-asc / spec-asc.
+    mixes.sort_by_cached_key(|m| {
+        (
+            std::cmp::Reverse(m.worst_capacity_fps().to_bits()),
+            m.area_units().to_bits(),
+            m.spec(),
+        )
+    });
+    mixes.truncate(left);
+    dropped
 }
 
 /// Greedy beam search: grow mixes one (kind, size) core at a time, keeping
@@ -532,13 +599,16 @@ fn fold_rows(mix: &Mix, entry: &TopoEntry, spec: String, sweep: &SweepSummary) -
 /// adds exactly one core, so area strictly grows and the loop terminates.
 /// Searches one topology entry `ti` with its effective `budget_area`;
 /// `evals_cap` is this entry's cumulative share of `max_evals` (equal to
-/// `cfg.max_evals` when the topology axis is off).
+/// `cfg.max_evals` when the topology axis is off).  The search evaluates
+/// at `fid` — full fidelity in exact mode, the first screening rung in
+/// multi mode (where its evaluations seed the pipeline's rung cache).
 fn greedy_search(
     cfg: &DseConfig,
     ev: &mut Evaluator,
     ti: usize,
     budget_area: f64,
     evals_cap: usize,
+    fid: Fidelity,
 ) -> Result<usize> {
     let within = |m: &Mix| {
         m.area_units() <= budget_area + 1e-9
@@ -549,12 +619,12 @@ fn greedy_search(
     // Select the `beam` best of an evaluated batch (deterministic order).
     let select_top = |mixes: &mut Vec<Mix>, ev: &Evaluator| {
         mixes.sort_by(|a, b| {
-            let (ra, rb) = (ev.row(a, ti), ev.row(b, ti));
-            rb.stm_rate
-                .total_cmp(&ra.stm_rate)
-                .then(ra.energy_j.total_cmp(&rb.energy_j))
-                .then(ra.area.total_cmp(&rb.area))
-                .then(ra.spec.cmp(&rb.spec))
+            let (ma, mb) = (ev.metric(a, ti, fid), ev.metric(b, ti, fid));
+            mb.stm_rate
+                .total_cmp(&ma.stm_rate)
+                .then(ma.energy_j.total_cmp(&mb.energy_j))
+                .then(a.area_units().total_cmp(&b.area_units()))
+                .then(ev.topos[ti].spec_for(a).cmp(&ev.topos[ti].spec_for(b)))
         });
         mixes.truncate(cfg.beam);
     };
@@ -565,7 +635,7 @@ fn greedy_search(
     let mut truncated = 0usize;
     loop {
         // Cap the batch at the remaining eval budget (logged below).
-        let budget_left = evals_cap.saturating_sub(ev.evaluated());
+        let budget_left = evals_cap.saturating_sub(ev.searched(fid));
         if batch.len() > budget_left {
             truncated += batch.len() - budget_left;
             batch.truncate(budget_left);
@@ -573,7 +643,7 @@ fn greedy_search(
         if batch.is_empty() {
             break;
         }
-        ev.eval_all(&batch, ti)?;
+        ev.eval_all(&batch, ti, fid)?;
         select_top(&mut batch, ev);
         // Extend each kept beam by one core; already-evaluated mixes
         // cannot reappear (extensions always have one more core than any
@@ -592,7 +662,7 @@ fn greedy_search(
     if truncated > 0 {
         crate::log_warn!(
             "dse",
-            "--max-evals {} reached; {truncated} candidate(s) not simulated (raise \
+            "--max-evals {} reached; {truncated} candidate(s) not searched (raise \
              --max-evals or narrow --budget for an exhaustive pass)",
             cfg.max_evals
         );
@@ -600,10 +670,123 @@ fn greedy_search(
     Ok(truncated)
 }
 
-/// Run the exploration: enumerate or beam-search candidates, evaluate on
-/// the engine, and mark the Pareto frontier.  The HMAI (4,4,3)@Std point
-/// is always evaluated when it fits the budget, so the paper's pick can be
-/// located relative to the frontier.
+/// Per-entry cumulative share of the eval budget: each topology entry
+/// gets an equal share so an early entry cannot starve the later ones; an
+/// entry's unspent share rolls forward via the cumulative cap.  With the
+/// axis off the single entry's cap is exactly `max_evals`.
+fn share(cfg: &DseConfig, n_topos: usize, ti: usize) -> usize {
+    cfg.max_evals / n_topos + usize::from(ti < cfg.max_evals % n_topos)
+}
+
+/// Does the HMAI anchor fit this entry's effective budget?
+fn anchor_fits(cfg: &DseConfig, eff_budget: f64) -> bool {
+    let hmai = Mix::hmai_std();
+    hmai.area_units() <= eff_budget + 1e-9
+        && cfg.power_cap_w.map(|cap| hmai.peak_power_w() <= cap).unwrap_or(true)
+}
+
+/// Exact-mode body: every searched candidate is evaluated at full
+/// fidelity, the anchor last — the pre-fidelity evaluator, preserved
+/// bit-for-bit (`tests/dse_fidelity.rs`).
+fn run_exact(
+    cfg: &DseConfig,
+    ev: &mut Evaluator,
+    mode: SearchMode,
+    axis_active: bool,
+) -> Result<usize> {
+    let n = ev.topos.len();
+    let full = ev.full_fidelity();
+    let mut truncated = 0usize;
+    match mode {
+        SearchMode::Full => {
+            let mut cap = 0usize;
+            for ti in 0..n {
+                cap += share(cfg, n, ti);
+                let eff = effective_budget(cfg.budget_area, &ev.topos[ti], axis_active);
+                let (mut mixes, over) = enumerate(eff, cfg.power_cap_w, 200_000);
+                let left = cap.saturating_sub(ev.evaluated());
+                if over || mixes.len() > left {
+                    truncated += shortlist_by_capacity(&mut mixes, left, &ev.topos[ti].label);
+                }
+                ev.eval_all(&mixes, ti, full)?;
+            }
+        }
+        SearchMode::Greedy | SearchMode::Auto => {
+            let mut cap = 0usize;
+            for ti in 0..n {
+                cap += share(cfg, n, ti);
+                let eff = effective_budget(cfg.budget_area, &ev.topos[ti], axis_active);
+                truncated += greedy_search(cfg, ev, ti, eff, cap, full)?;
+            }
+        }
+    }
+    // The paper's HMAI point, for frontier placement (acceptance anchor) —
+    // on every topology entry it fits.
+    for ti in 0..n {
+        let eff = effective_budget(cfg.budget_area, &ev.topos[ti], axis_active);
+        if anchor_fits(cfg, eff) {
+            ev.eval_all(&[Mix::hmai_std()], ti, full)?;
+        }
+    }
+    Ok(truncated)
+}
+
+/// Multi-fidelity body: evaluate the anchor first (it doubles as the
+/// bound pruner's reference row), build the candidate pool without
+/// simulating it (full search) or from a screening-fidelity greedy
+/// search, then run the prune → screen → promote pipeline.
+fn run_multi(
+    cfg: &DseConfig,
+    ev: &mut Evaluator,
+    mode: SearchMode,
+    axis_active: bool,
+) -> Result<(usize, screen::PipelineOutcome)> {
+    let n = ev.topos.len();
+    let full = ev.full_fidelity();
+    for ti in 0..n {
+        let eff = effective_budget(cfg.budget_area, &ev.topos[ti], axis_active);
+        if anchor_fits(cfg, eff) {
+            ev.eval_all(&[Mix::hmai_std()], ti, full)?;
+        }
+    }
+    let mut truncated = 0usize;
+    let pool: Vec<(Mix, usize)> = match mode {
+        SearchMode::Full => {
+            let mut pool: Vec<(Mix, usize)> = Vec::new();
+            let mut cap = 0usize;
+            for ti in 0..n {
+                cap += share(cfg, n, ti);
+                let eff = effective_budget(cfg.budget_area, &ev.topos[ti], axis_active);
+                let (mut mixes, over) = enumerate(eff, cfg.power_cap_w, 200_000);
+                let left = cap.saturating_sub(pool.len());
+                if over || mixes.len() > left {
+                    truncated += shortlist_by_capacity(&mut mixes, left, &ev.topos[ti].label);
+                }
+                pool.extend(mixes.into_iter().map(|m| (m, ti)));
+            }
+            pool
+        }
+        SearchMode::Greedy | SearchMode::Auto => {
+            let fid0 =
+                Fidelity { route_frac: screen::rung_frac(cfg.rungs, 0), replicates: 1 };
+            let mut cap = 0usize;
+            for ti in 0..n {
+                cap += share(cfg, n, ti);
+                let eff = effective_budget(cfg.budget_area, &ev.topos[ti], axis_active);
+                truncated += greedy_search(cfg, ev, ti, eff, cap, fid0)?;
+            }
+            ev.lf_order.clone()
+        }
+    };
+    let outcome = screen::run_pipeline(cfg, ev, pool)?;
+    Ok((truncated, outcome))
+}
+
+/// Run the exploration: enumerate or beam-search candidates, evaluate
+/// them through the fidelity pipeline, and mark the Pareto frontier.  The
+/// HMAI (4,4,3)@Std point is always evaluated (at full fidelity) when it
+/// fits the budget, so the paper's pick can be located relative to the
+/// frontier.
 pub fn run(cfg: &DseConfig, registry: &Registry) -> Result<DseReport> {
     anyhow::ensure!(
         cfg.budget_area >= CoreSize::Half.area_units(),
@@ -615,89 +798,58 @@ pub fn run(cfg: &DseConfig, registry: &Registry) -> Result<DseReport> {
     anyhow::ensure!(!cfg.distances_m.is_empty(), "dse: at least one --dist required");
     anyhow::ensure!(cfg.max_evals > 0, "dse: --max-evals must be positive");
     anyhow::ensure!(cfg.beam > 0, "dse: --beam must be positive");
+    anyhow::ensure!(
+        (1..=6).contains(&cfg.rungs),
+        "dse: --rungs must be in 1..=6, got {}",
+        cfg.rungs
+    );
+    anyhow::ensure!(
+        cfg.keep_frac > 0.0 && cfg.keep_frac <= 1.0,
+        "dse: --keep-frac must be in (0, 1], got {}",
+        cfg.keep_frac
+    );
+    anyhow::ensure!(cfg.replicates >= 1, "dse: --replicates must be positive");
     for name in &cfg.scenarios {
         crate::env::scenario::find(name).context("dse --scenario")?;
     }
     let topos = resolve_topologies(&cfg.topologies)?;
     let axis_active = topos.len() > 1;
 
-    let mut ev = Evaluator::new(cfg, registry, &topos);
-    // Each topology entry gets an equal share of the eval budget so an
-    // early entry cannot starve the later ones; an entry's unspent share
-    // rolls forward via the cumulative cap.  With the axis off the single
-    // entry's cap is exactly `max_evals` (legacy behaviour).
-    let share =
-        |ti: usize| cfg.max_evals / topos.len() + usize::from(ti < cfg.max_evals % topos.len());
-    let (mode, mut truncated) = match cfg.search {
-        SearchMode::Greedy => (SearchMode::Greedy, 0),
-        SearchMode::Full => (SearchMode::Full, 0),
+    let mut ev = Evaluator::new(cfg, registry, &topos)?;
+    let mode = match cfg.search {
+        SearchMode::Greedy => SearchMode::Greedy,
+        SearchMode::Full => SearchMode::Full,
         SearchMode::Auto => {
             // Per-entry effective budgets never exceed the raw budget, so
             // probing it with the eval budget split across the axis gives
             // a sound (and, with the axis off, exactly the legacy) answer.
             let limit = (cfg.max_evals / topos.len()).max(1);
             let (_, over) = enumerate(cfg.budget_area, cfg.power_cap_w, limit);
-            (if over { SearchMode::Greedy } else { SearchMode::Full }, 0)
+            if over {
+                SearchMode::Greedy
+            } else {
+                SearchMode::Full
+            }
         }
     };
-    match mode {
-        SearchMode::Full => {
-            let mut cap = 0usize;
-            for ti in 0..topos.len() {
-                cap += share(ti);
-                let eff = effective_budget(cfg.budget_area, &topos[ti], axis_active);
-                let (mut mixes, over) = enumerate(eff, cfg.power_cap_w, 200_000);
-                let left = cap.saturating_sub(ev.evaluated());
-                if over || mixes.len() > left {
-                    // Shortlist by worst-model static capacity (balanced
-                    // provisioning) — logged, never silent.
-                    let dropped = mixes.len().saturating_sub(left);
-                    crate::log_warn!(
-                        "dse",
-                        "full enumeration ({}) has {} candidates; simulating the top {left} by \
-                         worst-model capacity ({dropped} dropped — use --search greedy or raise \
-                         --max-evals)",
-                        topos[ti].label,
-                        mixes.len(),
-                    );
-                    // One key build per mix (the list can be huge): positive
-                    // finite f64s order identically to their bit patterns, so
-                    // `to_bits` keys give capacity-desc / area-asc / spec-asc.
-                    mixes.sort_by_cached_key(|m| {
-                        (
-                            std::cmp::Reverse(m.worst_capacity_fps().to_bits()),
-                            m.area_units().to_bits(),
-                            m.spec(),
-                        )
-                    });
-                    mixes.truncate(left);
-                    truncated += dropped;
-                }
-                ev.eval_all(&mixes, ti)?;
-            }
+    let (truncated, outcome) = match cfg.fidelity {
+        FidelityMode::Exact => (run_exact(cfg, &mut ev, mode, axis_active)?, None),
+        FidelityMode::Multi => {
+            let (t, o) = run_multi(cfg, &mut ev, mode, axis_active)?;
+            (t, Some(o))
         }
-        SearchMode::Greedy | SearchMode::Auto => {
-            let mut cap = 0usize;
-            for ti in 0..topos.len() {
-                cap += share(ti);
-                let eff = effective_budget(cfg.budget_area, &topos[ti], axis_active);
-                truncated += greedy_search(cfg, &mut ev, ti, eff, cap)?;
-            }
-        }
-    }
+    };
 
-    // The paper's HMAI point, for frontier placement (acceptance anchor) —
-    // on every topology entry it fits.
-    let hmai = Mix::hmai_std();
-    for ti in 0..topos.len() {
-        if hmai.area_units() <= effective_budget(cfg.budget_area, &topos[ti], axis_active) + 1e-9
-            && cfg.power_cap_w.map(|cap| hmai.peak_power_w() <= cap).unwrap_or(true)
-        {
-            ev.eval_all(&[hmai], ti)?;
-        }
-    }
-
-    let mut rows = ev.rows;
+    crate::log_info!(
+        "dse",
+        "evaluator: {} full-fidelity simulation(s), {} screening simulation(s), {} \
+         candidate(s) served from the canonical-name memo",
+        ev.full_sims,
+        ev.lf_sims,
+        ev.memo_hits
+    );
+    let low_fidelity_evals = ev.lf_order.len();
+    let mut rows = std::mem::take(&mut ev.rows);
     let frontier = mark_frontier(&mut rows);
     // Report order: frontier first, then by deadline-met rate desc,
     // energy asc, area asc (deterministic tie-break on the spec).
@@ -709,15 +861,29 @@ pub fn run(cfg: &DseConfig, registry: &Registry) -> Result<DseReport> {
             .then(a.area.total_cmp(&b.area))
             .then(a.spec.cmp(&b.spec))
     });
+    let evaluated = rows.len();
+    let (pool, pruned_rows, screened_out, promoted, rung_log) = match outcome {
+        Some(o) => (o.pool, o.pruned_rows, o.screened_out, o.promoted, o.rung_log),
+        None => (evaluated, Vec::new(), 0, 0, Vec::new()),
+    };
     Ok(DseReport {
-        evaluated: rows.len(),
-        frontier,
         rows,
+        frontier,
+        evaluated,
         search: mode.name(),
+        fidelity: cfg.fidelity.name(),
+        rungs: cfg.rungs,
+        keep_frac: cfg.keep_frac,
         budget_area: cfg.budget_area,
         power_cap_w: cfg.power_cap_w,
         truncated,
         topologies: topos.iter().map(|t| t.label.clone()).collect(),
+        pool,
+        pruned_rows,
+        screened_out,
+        promoted,
+        low_fidelity_evals,
+        rung_log,
     })
 }
 
@@ -799,6 +965,8 @@ mod tests {
             r_balance: 0.5,
             comm_delay_ms_per_task: 0.0,
             comm_gb: 0.0,
+            stm_bound: 1.0,
+            energy_bound_j: 0.0,
             on_frontier: false,
         };
         let mut rows = vec![
@@ -815,6 +983,8 @@ mod tests {
 
     #[test]
     fn tiny_greedy_run_produces_a_frontier() {
+        // Runs under the *default* fidelity (multi): greedy search at the
+        // screening fraction, pipeline promotion, full-fidelity rows.
         let reg = Registry::new();
         let cfg = DseConfig {
             budget_area: 2.5,
@@ -831,12 +1001,18 @@ mod tests {
         assert!(report.rows.iter().any(|r| r.on_frontier));
         // Frontier rows lead the report.
         assert!(report.rows[0].on_frontier);
-        // Every evaluated mix respects the budget.
+        // Every evaluated mix respects the budget, its analytic bounds and
+        // the pipeline accounting.
         for r in &report.rows {
             assert!(r.area <= 2.5 + 1e-9, "{}", r.spec);
             assert!(r.stm_rate >= 0.0 && r.stm_rate <= 1.0);
             assert!(r.energy_j > 0.0);
+            assert!(r.stm_rate <= r.stm_bound + 1e-9, "{}", r.spec);
+            assert!(r.energy_j >= r.energy_bound_j, "{}", r.spec);
         }
+        assert_eq!(report.fidelity, "multi");
+        assert_eq!(report.pool, report.pruned() + report.screened_out + report.promoted);
+        assert!(report.low_fidelity_evals > 0, "greedy searched at screening fidelity");
         // HMAI does not fit a 2.5-unit budget, so it must not be injected.
         assert!(report.find("so:4,si:4,mm:3").is_none());
         // Deterministic: same config, same report.
@@ -860,6 +1036,26 @@ mod tests {
         assert!(run(&bad, &reg).is_err());
         let bad = DseConfig { topologies: vec!["torus9".into()], ..Default::default() };
         assert!(run(&bad, &reg).is_err());
+        let bad = DseConfig { rungs: 0, ..Default::default() };
+        assert!(run(&bad, &reg).is_err());
+        let bad = DseConfig { rungs: 7, ..Default::default() };
+        assert!(run(&bad, &reg).is_err());
+        let bad = DseConfig { keep_frac: 0.0, ..Default::default() };
+        assert!(run(&bad, &reg).is_err());
+        let bad = DseConfig { keep_frac: 1.5, ..Default::default() };
+        assert!(run(&bad, &reg).is_err());
+        let bad = DseConfig { replicates: 0, ..Default::default() };
+        assert!(run(&bad, &reg).is_err());
+    }
+
+    #[test]
+    fn fidelity_mode_parse_round_trips() {
+        assert_eq!(FidelityMode::parse("multi").unwrap(), FidelityMode::Multi);
+        assert_eq!(FidelityMode::parse("MF").unwrap(), FidelityMode::Multi);
+        assert_eq!(FidelityMode::parse("Exact").unwrap(), FidelityMode::Exact);
+        assert!(FidelityMode::parse("approximate").is_err());
+        assert_eq!(FidelityMode::Multi.name(), "multi");
+        assert_eq!(FidelityMode::Exact.name(), "exact");
     }
 
     #[test]
@@ -893,6 +1089,9 @@ mod tests {
 
     #[test]
     fn tiny_topology_axis_run_covers_both_axes() {
+        // Pinned to exact fidelity: this test asserts structural coverage
+        // of *every* searched candidate (e.g. "some ring2 candidate paid
+        // communication"), which screening could legitimately thin out.
         let reg = Registry::new();
         let cfg = DseConfig {
             budget_area: 1.5,
@@ -902,6 +1101,7 @@ mod tests {
             beam: 1,
             search: SearchMode::Greedy,
             topologies: vec!["ring2".to_string()],
+            fidelity: FidelityMode::Exact,
             ..Default::default()
         };
         let report = run(&cfg, &reg).unwrap();
@@ -919,6 +1119,12 @@ mod tests {
                 assert!(r.spec.ends_with("+ring2"), "{}", r.spec);
             }
         }
+        // Exact mode: the pipeline is inactive.
+        assert_eq!(report.fidelity, "exact");
+        assert_eq!(report.pruned(), 0);
+        assert_eq!(report.screened_out, 0);
+        assert_eq!(report.low_fidelity_evals, 0);
+        assert!(report.rung_log.is_empty());
         // Some multi-core ring2 candidate actually moved bytes off-die.
         assert!(
             report

@@ -1,0 +1,174 @@
+//! The multi-fidelity screening pipeline: analytic bound pruning, then
+//! successive-halving rungs at truncated route fractions, then one
+//! full-fidelity pass over the promoted set.  Frontier rows only ever
+//! come from that last pass — screening decides *which* candidates pay
+//! for full evaluation, never what their reported numbers are.
+//!
+//! Promotion per rung is the union of
+//!   * the top `ceil(keep_frac · n)` candidates by the screening
+//!     metrics (stm ↓desc, energy ↑asc, area ↑asc, spec), and
+//!   * every candidate non-dominated *at this fidelity* —
+//! because a pure top-K by STM would demote small-area frontier members
+//! (they rank last on throughput by construction).  Promoting the
+//! screening frontier wholesale is what lets the default mode reproduce
+//! the exact frontier set on the deterministic test slices.
+
+use anyhow::Result;
+
+use crate::plan::Fidelity;
+
+use super::bounds;
+use super::eval::Evaluator;
+use super::{DseConfig, Mix, PrunedRow, RungLog};
+
+/// Accounting of one pipeline run.  `pool == pruned_rows.len() +
+/// screened_out + promoted` — every pool candidate is pruned, screened
+/// out at some rung, or promoted to full fidelity; nothing is dropped
+/// silently.
+pub(super) struct PipelineOutcome {
+    pub pool: usize,
+    pub pruned_rows: Vec<PrunedRow>,
+    pub screened_out: usize,
+    pub promoted: usize,
+    pub rung_log: Vec<RungLog>,
+}
+
+/// Route fraction of rung `i` of `rungs`: the last rung screens at half
+/// the route, each earlier rung at half the next (`0.5^(rungs - i)`).
+pub(super) fn rung_frac(rungs: usize, i: usize) -> f64 {
+    0.5f64.powi((rungs - i) as i32)
+}
+
+/// Run `pool` through the pipeline.  `ev` must already hold every
+/// full-fidelity reference row the bound pruner may compare against
+/// (the HMAI anchor); pool members already evaluated at full fidelity
+/// count as promoted without re-entering the rungs.
+pub(super) fn run_pipeline(
+    cfg: &DseConfig,
+    ev: &mut Evaluator,
+    pool: Vec<(Mix, usize)>,
+) -> Result<PipelineOutcome> {
+    let pool_n = pool.len();
+    // Stage 1: analytic capacity/energy bounds against evaluated rows.
+    let mut pruned_rows: Vec<PrunedRow> = Vec::new();
+    let mut survivors: Vec<(Mix, usize)> = Vec::new();
+    let mut already_full = 0usize;
+    for (m, ti) in pool {
+        if ev.has_row(&m, ti) {
+            already_full += 1;
+            continue;
+        }
+        let area = m.area_units();
+        let b = bounds::candidate_bound(&m, &ev.demand);
+        if bounds::bound_dominated(&ev.rows, area, &b) {
+            pruned_rows.push(PrunedRow {
+                spec: ev.topos[ti].spec_for(&m),
+                topology: ev.topos[ti].label.clone(),
+                area,
+                stm_bound: b.stm_ub,
+                energy_bound_j: b.energy_lb_j,
+            });
+        } else {
+            survivors.push((m, ti));
+        }
+    }
+    if !pruned_rows.is_empty() {
+        crate::log_info!(
+            "dse",
+            "analytic bounds pruned {} of {pool_n} candidate(s) before any simulation \
+             (best-case STM/energy dominated by an evaluated row)",
+            pruned_rows.len(),
+        );
+    }
+    // Stage 2: successive-halving rungs on truncated routes.
+    let mut rung_log: Vec<RungLog> = Vec::new();
+    let mut screened_out = 0usize;
+    for i in 0..cfg.rungs {
+        let frac = rung_frac(cfg.rungs, i);
+        let fid = Fidelity { route_frac: frac, replicates: 1 };
+        ev.eval_pairs(&survivors, fid)?;
+        let entered = survivors.len();
+        survivors = promote(cfg, ev, survivors, fid);
+        screened_out += entered - survivors.len();
+        rung_log.push(RungLog { route_frac: frac, entered, promoted: survivors.len() });
+    }
+    // Stage 3: full fidelity for the promoted set.
+    let full = ev.full_fidelity();
+    ev.eval_pairs(&survivors, full)?;
+    Ok(PipelineOutcome {
+        pool: pool_n,
+        pruned_rows,
+        screened_out,
+        promoted: survivors.len() + already_full,
+        rung_log,
+    })
+}
+
+/// One rung's promotion: top `keep_frac` by screening rank, unioned with
+/// the screening-fidelity Pareto frontier.  Pool order is preserved.
+fn promote(
+    cfg: &DseConfig,
+    ev: &Evaluator,
+    pairs: Vec<(Mix, usize)>,
+    fid: Fidelity,
+) -> Vec<(Mix, usize)> {
+    let n = pairs.len();
+    if n <= 1 {
+        return pairs;
+    }
+    // (stm, energy, area, spec) per candidate at this fidelity.
+    let stats: Vec<(f64, f64, f64, String)> = pairs
+        .iter()
+        .map(|&(m, ti)| {
+            let met = ev.metric(&m, ti, fid);
+            (met.stm_rate, met.energy_j, m.area_units(), ev.topos[ti].spec_for(&m))
+        })
+        .collect();
+    let keep = ((cfg.keep_frac * n as f64).ceil() as usize).clamp(1, n);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let (sa, sb) = (&stats[a], &stats[b]);
+        sb.0.total_cmp(&sa.0)
+            .then(sa.1.total_cmp(&sb.1))
+            .then(sa.2.total_cmp(&sb.2))
+            .then(sa.3.cmp(&sb.3))
+    });
+    let mut selected = vec![false; n];
+    for &i in order.iter().take(keep) {
+        selected[i] = true;
+    }
+    for i in 0..n {
+        let dominated = (0..n).any(|j| {
+            j != i
+                && stats[j].0 >= stats[i].0
+                && stats[j].1 <= stats[i].1
+                && stats[j].2 <= stats[i].2
+                && (stats[j].0 > stats[i].0
+                    || stats[j].1 < stats[i].1
+                    || stats[j].2 < stats[i].2)
+        });
+        if !dominated {
+            selected[i] = true;
+        }
+    }
+    pairs.into_iter().enumerate().filter(|(i, _)| selected[*i]).map(|(_, p)| p).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rung_schedule_halves_toward_full() {
+        assert_eq!(rung_frac(1, 0), 0.5);
+        assert_eq!(rung_frac(2, 0), 0.25);
+        assert_eq!(rung_frac(2, 1), 0.5);
+        assert_eq!(rung_frac(3, 0), 0.125);
+        for rungs in 1..=6 {
+            for i in 1..rungs {
+                assert_eq!(rung_frac(rungs, i), 2.0 * rung_frac(rungs, i - 1));
+            }
+            assert!(rung_frac(rungs, rungs - 1) < 1.0);
+        }
+    }
+}

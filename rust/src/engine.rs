@@ -46,6 +46,9 @@ struct QueueKey {
     index: usize,
     deadline: DeadlineMode,
     seed: u64,
+    /// Fidelity route fraction (`Fidelity::frac_bits`): truncated queues
+    /// cache separately from full ones.
+    route_frac_bits: u64,
 }
 
 impl QueueKey {
@@ -57,13 +60,18 @@ impl QueueKey {
             index: trial.queue_index,
             deadline: trial.scenario.deadline,
             seed: trial.seed,
+            route_frac_bits: trial.fidelity.frac_bits(),
         }
     }
 }
 
-/// Thread-safe memo of generated queues, shared across engine workers.
+/// Thread-safe memo of generated queues, shared across engine workers —
+/// and, via [`Engine::queue_cache`], across engine *runs*: the DSE hands
+/// one cache to every candidate batch so routes are synthesized once per
+/// (scenario, distance, seed, fidelity) for the whole exploration instead
+/// of once per batch.
 #[derive(Default)]
-struct QueueCache {
+pub struct QueueCache {
     queues: Mutex<BTreeMap<QueueKey, Arc<TaskQueue>>>,
 }
 
@@ -71,7 +79,7 @@ impl QueueCache {
     /// Get or generate the queue for `trial`.  Generation happens outside
     /// the lock, so two workers may race to build the same queue once —
     /// both get identical (deterministic) results and one copy is kept.
-    fn get(&self, trial: &Trial) -> Arc<TaskQueue> {
+    pub fn get(&self, trial: &Trial) -> Arc<TaskQueue> {
         let key = QueueKey::of(trial);
         if let Some(q) = self.queues.lock().expect("queue cache poisoned").get(&key) {
             return q.clone();
@@ -160,11 +168,12 @@ pub struct Engine<'r> {
     jobs: usize,
     options: SimOptions,
     events: bool,
+    cache: Option<Arc<QueueCache>>,
 }
 
 impl<'r> Engine<'r> {
     pub fn new(registry: &'r Registry) -> Engine<'r> {
-        Engine { registry, jobs: 1, options: SimOptions::default(), events: false }
+        Engine { registry, jobs: 1, options: SimOptions::default(), events: false, cache: None }
     }
 
     /// Worker threads (1 = run on the calling thread).  0 means "all
@@ -189,6 +198,15 @@ impl<'r> Engine<'r> {
     /// the caller opts in (CLI: `--events`).
     pub fn events(mut self, on: bool) -> Self {
         self.events = on;
+        self
+    }
+
+    /// Share a queue cache across engine runs.  Queue generation is
+    /// deterministic, so results are bit-identical with or without a
+    /// shared cache — only the route-synthesis work is saved.  Without
+    /// this, each `execute` builds a private cache.
+    pub fn queue_cache(mut self, cache: Arc<QueueCache>) -> Self {
+        self.cache = Some(cache);
         self
     }
 
@@ -357,7 +375,10 @@ impl<'r> Engine<'r> {
     where
         F: FnMut(usize, TrialResult),
     {
-        let cache = QueueCache::default();
+        let cache = match &self.cache {
+            Some(shared) => Arc::clone(shared),
+            None => Arc::new(QueueCache::default()),
+        };
         self.execute_tasks(
             trials.len(),
             |i| {

@@ -262,6 +262,32 @@ fn scale_count(base: usize, scale: f64) -> usize {
     (base as f64 * scale).round() as usize
 }
 
+/// Truncate a task queue to the first `frac` of its route: keep the
+/// release-ordered prefix of tasks released before `frac *
+/// route_duration_s` and shrink the route horizon to match.  This is the
+/// low-fidelity screening signal for multi-fidelity DSE — the truncated
+/// queue exercises the same per-frame contention as the full route, just
+/// for a shorter window.
+///
+/// `frac >= 1.0` (and any non-positive or non-finite `frac`) is the
+/// identity: the queue passes through untouched, so full-fidelity plans
+/// are bit-identical to pre-fidelity ones.  A truncation never returns an
+/// empty queue when the input had tasks: at least the first release
+/// survives, so every candidate still sees real work.
+pub fn truncate_queue(queue: TaskQueue, frac: f64) -> TaskQueue {
+    if !(frac > 0.0) || frac >= 1.0 || !frac.is_finite() {
+        return queue;
+    }
+    let horizon = queue.route_duration_s * frac;
+    let mut keep = queue.tasks.iter().take_while(|t| t.release_s < horizon).count();
+    if keep == 0 && !queue.tasks.is_empty() {
+        keep = 1; // never screen a candidate against an empty queue
+    }
+    let mut tasks = queue.tasks;
+    tasks.truncate(keep);
+    TaskQueue { tasks, route_duration_s: horizon }
+}
+
 /// One compiled leg: a concrete route whose timeline starts at `start_s`
 /// on the composite clock.
 #[derive(Debug, Clone)]
@@ -700,5 +726,37 @@ mod tests {
                 plain.segments.iter().filter(|s| s.scenario == Scenario::Turn).count();
         }
         assert!(rush_turns > plain_turns, "rush {rush_turns} !> plain {plain_turns}");
+    }
+
+    #[test]
+    fn truncate_queue_keeps_a_release_ordered_prefix() {
+        let arch = find("urban-rush").unwrap();
+        let full = arch.queue_for(200.0, 0, DeadlineMode::Rss, 3);
+        let half = truncate_queue(full.clone(), 0.5);
+        assert!(!half.is_empty());
+        assert!(half.len() < full.len(), "{} !< {}", half.len(), full.len());
+        assert_eq!(half.route_duration_s.to_bits(), (full.route_duration_s * 0.5).to_bits());
+        let horizon = half.route_duration_s;
+        assert!(half.tasks.iter().all(|t| t.release_s < horizon));
+        for (a, b) in half.tasks.iter().zip(&full.tasks) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.release_s.to_bits(), b.release_s.to_bits());
+        }
+        // The first task past the horizon was the cut point.
+        assert!(full.tasks[half.len()].release_s >= horizon);
+    }
+
+    #[test]
+    fn truncate_queue_full_and_degenerate_fracs_are_identity() {
+        let arch = find("night-rain").unwrap();
+        let full = arch.queue_for(150.0, 1, DeadlineMode::Rss, 9);
+        for frac in [1.0, 1.5, 0.0, -0.25, f64::NAN] {
+            let q = truncate_queue(full.clone(), frac);
+            assert_eq!(q.len(), full.len(), "frac {frac}");
+            assert_eq!(q.route_duration_s.to_bits(), full.route_duration_s.to_bits());
+        }
+        // Tiny fractions still keep at least one task.
+        let sliver = truncate_queue(full, 1e-9);
+        assert_eq!(sliver.len(), 1);
     }
 }

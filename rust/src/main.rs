@@ -122,6 +122,17 @@ fn usage() -> String {
         ("--search <mode>", "dse: auto | full | greedy".to_string()),
         ("--beam <n>", "dse: greedy beam width".to_string()),
         ("--max-evals <n>", "dse: cap on simulated candidate mixes".to_string()),
+        (
+            "--fidelity <mode>",
+            "dse: multi (bound pruning + screening, default) | exact".to_string(),
+        ),
+        ("--rungs <n>", "dse: successive-halving screening rungs (1..=6)".to_string()),
+        (
+            "--keep-frac <f>",
+            "dse: fraction promoted per rung, (0,1] (the screening frontier always \
+             promotes)"
+                .to_string(),
+        ),
         ("--jobs <n>", "engine worker threads (0 = all cores)".to_string()),
         ("--replicates <n>", "seed replicates per sweep cell (expands the seed axis)".to_string()),
         ("--shards <n>", "fleet plan: number of worker shards".to_string()),
@@ -646,15 +657,24 @@ fn cmd_dse(args: &Args) -> Result<()> {
                 t.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
             })
             .unwrap_or_default(),
+        // `--fidelity multi` (default): bound pruning + successive-halving
+        // screening; `--fidelity exact` reproduces the pre-fidelity
+        // evaluator bit-for-bit.
+        fidelity: hmai::dse::FidelityMode::parse(args.get_or("fidelity", "multi"))?,
+        rungs: args.get_usize("rungs", defaults.rungs)?,
+        keep_frac: args.get_f64("keep-frac", defaults.keep_frac)?,
+        replicates: args.get_usize("replicates", defaults.replicates)?.max(1),
     };
     let reg = harness::registry(&cfg);
     let report = hmai::dse::run(&dse_cfg, &reg)?;
     println!(
-        "dse: budget = {} area units{}  search = {}  scheduler = {}  scenarios = {}  \
-         topologies = {}  evaluated = {} candidates ({} not simulated)  frontier = {} (★)",
+        "dse: budget = {} area units{}  search = {}  fidelity = {}  scheduler = {}  \
+         scenarios = {}  topologies = {}  evaluated = {} candidates ({} not searched)  \
+         frontier = {} (★)",
         dse_cfg.budget_area,
         dse_cfg.power_cap_w.map(|c| format!(" (power cap {c} W)")).unwrap_or_default(),
         report.search,
+        report.fidelity,
         dse_cfg.scheduler.display(),
         dse_cfg.scenarios.join(","),
         report.topologies.join(","),
@@ -662,6 +682,19 @@ fn cmd_dse(args: &Args) -> Result<()> {
         report.truncated,
         report.frontier,
     );
+    if report.fidelity == "multi" {
+        println!(
+            "dse pipeline: pool = {}  pruned = {} (analytic bounds)  screened out = {}  \
+             promoted = {}  low-fidelity evals = {}",
+            report.pool,
+            report.pruned(),
+            report.screened_out,
+            report.promoted,
+            report.low_fidelity_evals,
+        );
+        hmai::reports::dse_pipeline_table(&report).print();
+        println!();
+    }
     hmai::reports::dse_table(&report).print();
     let hmai_spec = hmai::dse::Mix::hmai_std().spec();
     if let Some(r) = report.find(&hmai_spec) {
@@ -866,7 +899,10 @@ mod tests {
             assert!(u.contains(cmd), "{cmd} missing from usage");
         }
         assert!(u.contains("fleet plan|work|merge"), "fleet actions missing from usage");
-        for opt in ["--budget", "--power-cap", "--topology", "--search", "--beam", "--max-evals"] {
+        for opt in [
+            "--budget", "--power-cap", "--topology", "--search", "--beam", "--max-evals",
+            "--fidelity", "--rungs", "--keep-frac",
+        ] {
             assert!(u.contains(opt), "{opt} missing from usage");
         }
         for opt in ["--replicates", "--shards", "--plan", "--shard", "--checkpoint-every", "--max-trials"]

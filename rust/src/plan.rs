@@ -23,6 +23,46 @@ use crate::platform::Platform;
 use crate::sched::SchedulerSpec;
 use crate::util::rng::Rng;
 
+/// Evaluation fidelity for a plan's trials: a fraction of each route to
+/// simulate plus a seed-replicate count.  Full fidelity (`route_frac >=
+/// 1.0`) is the exact legacy evaluation — queues are bit-identical to a
+/// plan without a fidelity axis.  Lower fractions truncate every task
+/// queue to the releases inside the first `route_frac` of its route
+/// (see [`scenario::truncate_queue`]), which is the cheap screening
+/// signal the DSE's successive-halving rungs run on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fidelity {
+    /// Fraction of each route's duration to keep, clamped to (0, 1].
+    pub route_frac: f64,
+    /// Seed replicates this fidelity evaluates
+    /// (see [`ExperimentPlan::fidelity`]).
+    pub replicates: usize,
+}
+
+impl Fidelity {
+    /// The exact evaluation: whole route, single replicate.
+    pub fn full() -> Fidelity {
+        Fidelity { route_frac: 1.0, replicates: 1 }
+    }
+
+    /// Whether queues pass through untruncated.
+    pub fn is_full(&self) -> bool {
+        !(self.route_frac < 1.0)
+    }
+
+    /// Cache-key bits for the route fraction (full fidelity normalises
+    /// to 1.0 so every "no truncation" spelling shares queue-cache keys).
+    pub fn frac_bits(&self) -> u64 {
+        if self.is_full() { 1.0f64.to_bits() } else { self.route_frac.to_bits() }
+    }
+}
+
+impl Default for Fidelity {
+    fn default() -> Self {
+        Fidelity::full()
+    }
+}
+
 /// One scenario cell of a sweep: either a plain (area, distance, deadline)
 /// cell — the legacy axis — or a library archetype
 /// ([`env::scenario`](crate::env::scenario)) resolved at plan expansion,
@@ -92,6 +132,9 @@ pub struct Trial {
     /// replicate — the legacy behavior, where `reset()` re-seeded every
     /// queue identically — and `Rng::fork`-derived for later replicates.
     pub sched_seed: u64,
+    /// Evaluation fidelity (route truncation).  `Fidelity::full()` for
+    /// every plan that never called [`ExperimentPlan::fidelity`].
+    pub fidelity: Fidelity,
 }
 
 impl Trial {
@@ -99,7 +142,7 @@ impl Trial {
     /// scenarios compile their archetype with the same fork-derived stream
     /// the legacy path uses, so both axes share one determinism contract.
     pub fn queue(&self) -> TaskQueue {
-        match &self.scenario.archetype {
+        let full = match &self.scenario.archetype {
             Some(arch) => arch.queue_for(
                 self.scenario.distance_m,
                 self.queue_index,
@@ -113,7 +156,8 @@ impl Trial {
                 self.scenario.deadline,
                 self.seed,
             ),
-        }
+        };
+        scenario::truncate_queue(full, self.fidelity.route_frac)
     }
 
     /// Resolve this trial's platform.
@@ -158,6 +202,7 @@ pub struct ExperimentPlan {
     platforms: Vec<String>,
     schedulers: Vec<SchedulerSpec>,
     seeds: Vec<u64>,
+    fidelity: Fidelity,
 }
 
 impl Default for ExperimentPlan {
@@ -176,6 +221,7 @@ impl ExperimentPlan {
             platforms: vec!["hmai".to_string()],
             schedulers: Vec::new(),
             seeds: vec![42],
+            fidelity: Fidelity::full(),
         }
     }
 
@@ -264,6 +310,21 @@ impl ExperimentPlan {
         self
     }
 
+    /// Set the evaluation fidelity.  `f.route_frac` stamps every expanded
+    /// trial (truncating its queue); `f.replicates > 1` additionally
+    /// re-derives the seed axis as [`replicate_seeds`] of the plan's
+    /// first seed — call after `seed()`/`seeds()`.  `Fidelity::full()`
+    /// leaves the plan bit-identical to one that never set a fidelity.
+    pub fn fidelity(mut self, f: Fidelity) -> Self {
+        self.fidelity = f;
+        if f.replicates > 1 {
+            if let Some(&base) = self.seeds.first() {
+                self.seeds = replicate_seeds(base, f.replicates);
+            }
+        }
+        self
+    }
+
     /// Number of trials this plan expands to.
     pub fn len(&self) -> usize {
         let scenario_axis =
@@ -326,6 +387,7 @@ impl ExperimentPlan {
                                     scheduler: sched.clone(),
                                     seed,
                                     sched_seed: seed,
+                                    fidelity: self.fidelity,
                                 });
                             }
                         }
@@ -467,6 +529,63 @@ mod tests {
             .scheduler(SchedulerSpec::RoundRobin);
         let trials = plan.trials().unwrap();
         assert_eq!(trials.len(), crate::env::scenario::names().len());
+    }
+
+    #[test]
+    fn full_fidelity_is_the_identity() {
+        let base = ExperimentPlan::new()
+            .scenarios(["urban-rush"])
+            .distances([60.0])
+            .scheduler(SchedulerSpec::MinMin)
+            .seed(4);
+        let with = base.clone().fidelity(Fidelity::full());
+        let (ta, tb) = (base.trials().unwrap(), with.trials().unwrap());
+        assert_eq!(ta.len(), tb.len());
+        for (a, b) in ta.iter().zip(&tb) {
+            let (qa, qb) = (a.queue(), b.queue());
+            assert_eq!(qa.len(), qb.len());
+            assert_eq!(qa.route_duration_s.to_bits(), qb.route_duration_s.to_bits());
+            for (x, y) in qa.tasks.iter().zip(&qb.tasks) {
+                assert_eq!(x.release_s.to_bits(), y.release_s.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn reduced_fidelity_truncates_to_a_queue_prefix() {
+        let plan = ExperimentPlan::new()
+            .scenarios(["urban-rush"])
+            .distances([120.0])
+            .scheduler(SchedulerSpec::MinMin)
+            .seed(4);
+        let full = plan.clone().trials().unwrap()[0].queue();
+        let half_plan = plan.fidelity(Fidelity { route_frac: 0.5, replicates: 1 });
+        let half = half_plan.trials().unwrap()[0].queue();
+        assert!(half.len() < full.len(), "{} !< {}", half.len(), full.len());
+        assert!(!half.is_empty());
+        assert!(half.route_duration_s < full.route_duration_s);
+        for (a, b) in half.tasks.iter().zip(&full.tasks) {
+            assert_eq!(a.id, b.id, "truncation keeps a prefix");
+            assert_eq!(a.release_s.to_bits(), b.release_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn fidelity_replicates_match_the_replicates_builder() {
+        let via_fid = ExperimentPlan::new()
+            .scheduler(SchedulerSpec::MinMin)
+            .distances([50.0])
+            .seed(7)
+            .fidelity(Fidelity { route_frac: 1.0, replicates: 3 });
+        let via_reps = ExperimentPlan::new()
+            .scheduler(SchedulerSpec::MinMin)
+            .distances([50.0])
+            .replicates(7, 3);
+        let (a, b) = (via_fid.trials().unwrap(), via_reps.trials().unwrap());
+        assert_eq!(a.len(), b.len());
+        let sa: Vec<u64> = a.iter().map(|t| t.seed).collect();
+        let sb: Vec<u64> = b.iter().map(|t| t.seed).collect();
+        assert_eq!(sa, sb);
     }
 
     #[test]

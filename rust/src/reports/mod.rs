@@ -58,8 +58,8 @@ pub fn sweep_table(s: &SweepSummary) -> Table {
 /// mix in report order.
 pub fn dse_table(report: &crate::dse::DseReport) -> Table {
     let mut t = Table::new([
-        "", "Mix", "Topology", "Dies", "Cores", "Area", "Peak W", "STMRate", "Energy M (J)",
-        "Time M (s)", "R_Balance", "Comm ms/task",
+        "", "Mix", "Topology", "Dies", "Cores", "Area", "Peak W", "STMRate", "STM UB",
+        "Energy M (J)", "E LB (J)", "Time M (s)", "R_Balance", "Comm ms/task",
     ]);
     for r in &report.rows {
         t.row([
@@ -71,12 +71,48 @@ pub fn dse_table(report: &crate::dse::DseReport) -> Table {
             f2(r.area),
             f1(r.peak_power_w),
             pct(r.stm_rate),
+            pct(r.stm_bound),
             f1(r.energy_j),
+            f1(r.energy_bound_j),
             f2(r.time_s),
             f2(r.r_balance),
             f2(r.comm_delay_ms_per_task),
         ]);
     }
+    t
+}
+
+/// Render the multi-fidelity pipeline's accounting (`hmai dse` under the
+/// default `--fidelity multi`): how the candidate pool shrank through
+/// analytic pruning and each successive-halving rung before full-fidelity
+/// evaluation.  `pool == pruned + screened out + promoted` by
+/// construction — nothing leaves the pipeline uncounted.
+pub fn dse_pipeline_table(report: &crate::dse::DseReport) -> Table {
+    let mut t = Table::new(["Stage", "In", "Out", "Note"]);
+    let pruned = report.pruned();
+    t.row([
+        "bound prune".to_string(),
+        report.pool.to_string(),
+        (report.pool - pruned).to_string(),
+        format!("{pruned} dominated analytically"),
+    ]);
+    for (i, r) in report.rung_log.iter().enumerate() {
+        t.row([
+            format!("rung {}/{}", i + 1, report.rung_log.len()),
+            r.entered.to_string(),
+            r.promoted.to_string(),
+            format!("screened at {:.3} of the route", r.route_frac),
+        ]);
+    }
+    t.row([
+        "full fidelity".to_string(),
+        report.promoted.to_string(),
+        report.evaluated.to_string(),
+        format!(
+            "{} low-fidelity eval(s), {} full row(s)",
+            report.low_fidelity_evals, report.evaluated
+        ),
+    ]);
     t
 }
 
@@ -390,6 +426,8 @@ mod tests {
             r_balance: 0.8,
             comm_delay_ms_per_task: 1.25,
             comm_gb: 0.5,
+            stm_bound: 0.99,
+            energy_bound_j: 1000.0,
             on_frontier: frontier,
         };
         let report = DseReport {
@@ -397,19 +435,45 @@ mod tests {
             frontier: 1,
             evaluated: 2,
             search: "greedy",
+            fidelity: "multi",
+            rungs: 1,
+            keep_frac: 0.5,
             budget_area: 12.0,
             power_cap_w: None,
             truncated: 0,
             topologies: vec!["mono".to_string(), "mesh2x2".to_string()],
+            pool: 5,
+            pruned_rows: vec![crate::dse::PrunedRow {
+                spec: "so:9".to_string(),
+                topology: "mono".to_string(),
+                area: 9.0,
+                stm_bound: 0.4,
+                energy_bound_j: 2000.0,
+            }],
+            screened_out: 2,
+            promoted: 2,
+            low_fidelity_evals: 4,
+            rung_log: vec![crate::dse::RungLog { route_frac: 0.5, entered: 4, promoted: 2 }],
         };
         let s = dse_table(&report).render();
         assert!(s.contains("so:4,si:4,mm:3+mesh2x2"), "{s}");
         assert!(s.contains('★'), "{s}");
         assert!(s.contains("95.0%"), "{s}");
+        assert!(s.contains("99.0%"), "{s}"); // STM upper bound column
+        assert!(s.contains("E LB (J)"), "{s}");
+        assert!(s.contains("1000.0"), "{s}");
         assert!(s.contains("Topology"), "{s}");
         assert!(s.contains("mesh2x2"), "{s}");
         assert!(s.contains("Comm ms/task"), "{s}");
         assert!(s.contains("1.25"), "{s}");
+
+        let p = dse_pipeline_table(&report).render();
+        assert!(p.contains("bound prune"), "{p}");
+        assert!(p.contains("1 dominated analytically"), "{p}");
+        assert!(p.contains("rung 1/1"), "{p}");
+        assert!(p.contains("screened at 0.500 of the route"), "{p}");
+        assert!(p.contains("full fidelity"), "{p}");
+        assert!(p.contains("4 low-fidelity eval(s)"), "{p}");
     }
 
     #[test]

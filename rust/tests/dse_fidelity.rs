@@ -1,0 +1,215 @@
+//! Multi-fidelity DSE acceptance suite (ISSUE 9):
+//!   (a) `--fidelity exact` is bit-identical to a hand-rolled
+//!       plan-and-fold evaluation of the same candidate set — the
+//!       pre-fidelity evaluator's contract, preserved;
+//!   (b) the default multi-fidelity mode reproduces the exact mode's
+//!       Pareto frontier set on the tiny deterministic config while
+//!       evaluating strictly fewer candidates at full fidelity, with the
+//!       pool fully accounted (pruned + screened out + promoted);
+//!   (c) rung promotion is deterministic run-to-run;
+//!   (d) every reported row respects its own analytic bounds, and every
+//!       pruned candidate really is dominated by an evaluated row.
+
+use std::collections::BTreeSet;
+
+use hmai::dse::{self, DseConfig, DseReport, FidelityMode, SearchMode};
+use hmai::engine::Engine;
+use hmai::env::taskgen::DeadlineMode;
+use hmai::plan::ExperimentPlan;
+use hmai::platform::Platform;
+use hmai::sched::{Registry, SchedulerSpec};
+
+/// The tiny deterministic config both fidelity modes are compared on:
+/// small enough for full enumeration (no shortlist truncation), too small
+/// for the HMAI anchor (area 11 > budget 2.5), so the candidate sets of
+/// both modes are exactly `enumerate(2.5, None, _)`.
+fn tiny(fidelity: FidelityMode) -> DseConfig {
+    DseConfig {
+        budget_area: 2.5,
+        scenarios: vec!["urban-rush".to_string()],
+        distances_m: vec![40.0],
+        max_evals: 512,
+        search: SearchMode::Full,
+        jobs: 2,
+        fidelity,
+        ..DseConfig::default()
+    }
+}
+
+fn frontier_specs(r: &DseReport) -> BTreeSet<String> {
+    r.frontier_rows().map(|x| x.spec.clone()).collect()
+}
+
+/// Every row must obey its own analytic bounds — the soundness property
+/// the pruner stands on (bounds are computed identically for pruned and
+/// evaluated candidates).
+fn assert_rows_respect_bounds(r: &DseReport) {
+    for row in &r.rows {
+        assert!(
+            row.stm_rate <= row.stm_bound + 1e-9,
+            "{}: realized STM {} above its upper bound {}",
+            row.spec,
+            row.stm_rate,
+            row.stm_bound
+        );
+        assert!(
+            row.energy_j >= row.energy_bound_j * (1.0 - 1e-9),
+            "{}: realized energy {} below its lower bound {}",
+            row.spec,
+            row.energy_j,
+            row.energy_bound_j
+        );
+    }
+}
+
+#[test]
+fn exact_mode_is_bit_identical_to_a_hand_rolled_evaluator() {
+    let cfg = tiny(FidelityMode::Exact);
+    let report = dse::run(&cfg, &Registry::new()).unwrap();
+    assert_eq!(report.fidelity, "exact");
+    // Exact mode: pipeline inactive, every candidate a full row.
+    assert_eq!(report.pruned(), 0);
+    assert_eq!(report.screened_out, 0);
+    assert_eq!(report.low_fidelity_evals, 0);
+    assert_eq!(report.truncated, 0);
+
+    // The candidate set is the full enumeration; re-evaluate it through
+    // the public plan/engine API exactly the way the evaluator batches it
+    // (one plan, all specs on the platform axis) and compare bits.
+    let (mixes, over) = dse::enumerate(cfg.budget_area, None, cfg.max_evals);
+    assert!(!over, "tiny budget must enumerate exhaustively");
+    assert_eq!(report.evaluated, mixes.len());
+    let plan = ExperimentPlan::new()
+        .scenarios(cfg.scenarios.iter().cloned())
+        .distances(cfg.distances_m.iter().copied())
+        .deadline(cfg.deadline)
+        .platforms(mixes.iter().map(|m| m.spec()))
+        .scheduler(SchedulerSpec::MinMin)
+        .seed(cfg.seed);
+    let sweep = Engine::new(&Registry::new()).jobs(cfg.jobs).sweep_streaming(&plan).unwrap();
+    for m in &mixes {
+        let spec = m.spec();
+        let name = Platform::try_parse(&spec).unwrap().name;
+        let (mut met, mut tasks, mut n) = (0u64, 0u64, 0u64);
+        let (mut ln_e, mut ln_t) = (0.0f64, 0.0f64);
+        for g in sweep.groups.iter().filter(|g| g.key.platform == name) {
+            met += g.stats.sum_tasks_met;
+            tasks += g.stats.sum_tasks;
+            n += g.stats.trials;
+            ln_e += g.stats.sum_ln_energy;
+            ln_t += g.stats.sum_ln_time;
+        }
+        assert!(n > 0, "no sweep rows for '{spec}'");
+        let stm = if tasks == 0 { 1.0 } else { met as f64 / tasks as f64 };
+        let energy = (ln_e / n as f64).exp();
+        let time = (ln_t / n as f64).exp();
+        let row = report.find(&spec).unwrap_or_else(|| panic!("'{spec}' missing from report"));
+        assert_eq!(row.stm_rate.to_bits(), stm.to_bits(), "{spec} stm");
+        assert_eq!(row.energy_j.to_bits(), energy.to_bits(), "{spec} energy");
+        assert_eq!(row.time_s.to_bits(), time.to_bits(), "{spec} time");
+    }
+    assert_rows_respect_bounds(&report);
+}
+
+#[test]
+fn default_multi_fidelity_reproduces_the_exact_frontier_with_fewer_full_evals() {
+    let reg = Registry::new();
+    let exact = dse::run(&tiny(FidelityMode::Exact), &reg).unwrap();
+    let multi = dse::run(&tiny(FidelityMode::Multi), &reg).unwrap();
+    assert_eq!(multi.fidelity, "multi");
+
+    // The whole point: same frontier set, strictly fewer full evals.
+    assert_eq!(
+        frontier_specs(&exact),
+        frontier_specs(&multi),
+        "multi-fidelity mode changed the Pareto frontier set"
+    );
+    assert!(
+        multi.evaluated < exact.evaluated,
+        "multi mode must evaluate strictly fewer candidates at full fidelity \
+         ({} vs {})",
+        multi.evaluated,
+        exact.evaluated
+    );
+    // Pipeline accounting: nothing leaves the pool uncounted.
+    assert_eq!(multi.pool, exact.evaluated, "both modes search the same candidate pool");
+    assert_eq!(multi.pool, multi.pruned() + multi.screened_out + multi.promoted);
+    assert_eq!(multi.evaluated, multi.promoted, "every promoted candidate became a row");
+    assert!(multi.low_fidelity_evals > 0, "screening must have run");
+    assert_eq!(multi.rung_log.len(), 1, "default --rungs 1");
+    assert_eq!(multi.rung_log[0].entered, multi.pool - multi.pruned());
+    assert_eq!(multi.rung_log[0].promoted, multi.promoted);
+
+    // Frontier rows come from full-fidelity evaluations: bit-identical to
+    // the exact mode's rows for the same specs (group folds are invariant
+    // to which other platforms shared the plan).
+    for spec in frontier_specs(&multi) {
+        let a = exact.find(&spec).unwrap();
+        let b = multi.find(&spec).unwrap();
+        assert_eq!(a.stm_rate.to_bits(), b.stm_rate.to_bits(), "{spec} stm");
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{spec} energy");
+        assert_eq!(a.time_s.to_bits(), b.time_s.to_bits(), "{spec} time");
+    }
+    assert_rows_respect_bounds(&multi);
+}
+
+#[test]
+fn rung_promotion_is_deterministic() {
+    let reg = Registry::new();
+    let cfg = DseConfig { rungs: 2, keep_frac: 0.4, ..tiny(FidelityMode::Multi) };
+    let a = dse::run(&cfg, &reg).unwrap();
+    let b = dse::run(&cfg, &reg).unwrap();
+    assert_eq!(a.rung_log.len(), 2);
+    assert_eq!(a.rung_log, b.rung_log, "rung accounting differs run-to-run");
+    assert_eq!(a.evaluated, b.evaluated);
+    assert_eq!(a.pruned(), b.pruned());
+    assert_eq!(a.screened_out, b.screened_out);
+    let specs = |r: &DseReport| r.rows.iter().map(|x| x.spec.clone()).collect::<Vec<_>>();
+    assert_eq!(specs(&a), specs(&b), "promoted candidate set differs run-to-run");
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(ra.stm_rate.to_bits(), rb.stm_rate.to_bits(), "{}", ra.spec);
+        assert_eq!(ra.energy_j.to_bits(), rb.energy_j.to_bits(), "{}", ra.spec);
+    }
+    // The two rungs ratchet: the later rung screens a superset fraction of
+    // the route and never re-admits candidates.
+    assert!(a.rung_log[0].route_frac < a.rung_log[1].route_frac);
+    assert!(a.rung_log[1].entered == a.rung_log[0].promoted);
+}
+
+#[test]
+fn pruning_accounting_is_sound_when_an_anchor_row_exists() {
+    // Budget 11 fits the HMAI anchor, which multi mode evaluates *first*
+    // at full fidelity — giving the bound pruner a reference row before
+    // any pool candidate is simulated.
+    let reg = Registry::new();
+    let cfg = DseConfig {
+        budget_area: 11.0,
+        max_evals: 32,
+        ..tiny(FidelityMode::Multi)
+    };
+    let report = dse::run(&cfg, &reg).unwrap();
+    let hmai_spec = dse::Mix::hmai_std().spec();
+    assert!(report.find(&hmai_spec).is_some(), "anchor must be evaluated at full fidelity");
+    // Accounting holds even with the anchor overlapping the pool (the
+    // shortlist may or may not re-list it — either way it is counted).
+    assert_eq!(report.pool, report.pruned() + report.screened_out + report.promoted);
+    assert_rows_respect_bounds(&report);
+    // Pruning soundness: every pruned candidate's *best case* is dominated
+    // by some evaluated full-fidelity row, so it could never have joined
+    // the frontier (domination is transitive).
+    for p in &report.pruned_rows {
+        assert!(
+            report.rows.iter().any(|r| {
+                r.stm_rate >= p.stm_bound
+                    && r.energy_j <= p.energy_bound_j
+                    && r.area <= p.area
+                    && (r.stm_rate > p.stm_bound
+                        || r.energy_j < p.energy_bound_j
+                        || r.area < p.area)
+            }),
+            "pruned '{}' is not dominated by any evaluated row",
+            p.spec
+        );
+        assert!(report.find(&p.spec).is_none(), "'{}' both pruned and evaluated", p.spec);
+    }
+}

@@ -7,7 +7,7 @@
 //! platforms, and (e) strong enough to put a chiplet candidate on the DSE
 //! Pareto frontier when the workload outgrows one reticle.
 
-use hmai::dse::{self, DseConfig, SearchMode};
+use hmai::dse::{self, DseConfig, FidelityMode, SearchMode};
 use hmai::engine::Engine;
 use hmai::env::taskgen::DeadlineMode;
 use hmai::metrics::summary::SweepSummary;
@@ -127,16 +127,22 @@ fn dse_topology_sweep_puts_a_chiplet_on_the_frontier() {
     // die while mesh2x2 candidates may spend the full 16-unit budget
     // across 4 dies — under frame-budget deadlines the extra capacity
     // beats the comm tax, so at least one chiplet candidate must be
-    // Pareto-optimal.
+    // Pareto-optimal.  Exact fidelity: the per-axis structural floors
+    // below ("mono >= 12") count *every* searched candidate, which
+    // multi-fidelity screening legitimately thins out.  The 90 m route
+    // keeps the 20-camera load saturating long enough that the best mesh
+    // candidate's capacity edge over one reticle is decisive, not a
+    // coin-flip on queue tail effects.
     let cfg = DseConfig {
         budget_area: 16.0,
         scenarios: vec!["urban-rush-20cam-hd".to_string()],
-        distances_m: vec![60.0],
+        distances_m: vec![90.0],
         deadline: DeadlineMode::FrameBudget,
         max_evals: 24,
         search: SearchMode::Full,
         topologies: vec!["mesh2x2".to_string()],
         jobs: 2,
+        fidelity: FidelityMode::Exact,
         ..DseConfig::default()
     };
     let report = dse::run(&cfg, &Registry::new()).unwrap();
@@ -168,14 +174,32 @@ fn dse_topology_sweep_puts_a_chiplet_on_the_frontier() {
         report.rows.iter().any(|r| r.topology == "mesh2x2" && r.comm_delay_ms_per_task > 0.0),
         "mesh candidates paid no comm"
     );
-    // The acceptance bar itself.
+    // The acceptance bar itself, asserted on the mesh axis' best-STM row
+    // directly: the best mesh candidate must strictly beat every reticle-
+    // capped monolithic candidate on deadline-met rate (the capacity the
+    // workload cannot reach on one die), which makes it mono-undominated
+    // and therefore a frontier member — no reliance on how the rest of
+    // the frontier shakes out.
+    let best = |topo: &str| {
+        report
+            .rows
+            .iter()
+            .filter(|r| r.topology == topo)
+            .map(|r| r.stm_rate)
+            .fold(f64::NEG_INFINITY, f64::max)
+    };
+    let (best_mesh, best_mono) = (best("mesh2x2"), best("mono"));
     assert!(
-        report.frontier_rows().any(|r| r.topology != "mono"),
-        "no chiplet candidate on the Pareto frontier: {:?}",
+        best_mesh > best_mono,
+        "best mesh STM {best_mesh} does not beat best mono STM {best_mono}: {:?}",
         report
             .rows
             .iter()
             .map(|r| (r.spec.clone(), r.on_frontier, r.stm_rate, r.energy_j, r.area))
             .collect::<Vec<_>>()
+    );
+    assert!(
+        report.frontier_rows().any(|r| r.topology == "mesh2x2"),
+        "no mesh candidate on the Pareto frontier despite winning on STM"
     );
 }
