@@ -18,20 +18,35 @@
 //! the simulation (accelerator failure / recovery / derating mid-route).
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::env::taskgen::{DeadlineMode, Task, TaskQueue};
 use crate::env::Area;
+use crate::faults::FaultModel;
 use crate::metrics::quantile::QuantileHistogram;
 use crate::metrics::summary::{RunSummary, SweepKey, SweepSummary};
 use crate::metrics::NormScales;
 use crate::plan::{ExperimentPlan, Trial};
 use crate::safety::braking::{braking_distance_m, BrakingBreakdown};
+use crate::sched::degrade::DegradeSched;
 use crate::sched::Registry;
 use crate::sim::{simulate_observed_with_scales, Applied, SimObserver, SimOptions, TaskRecord};
+
+/// Render a `catch_unwind` payload for logs: panics raised via `panic!`
+/// carry a `&str` or `String`; anything else is opaque.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Cache key for generated task queues: everything queue generation
 /// depends on.  Trials differing only in scheduler/platform share the
@@ -79,15 +94,23 @@ impl QueueCache {
     /// Get or generate the queue for `trial`.  Generation happens outside
     /// the lock, so two workers may race to build the same queue once —
     /// both get identical (deterministic) results and one copy is kept.
+    ///
+    /// A poisoned lock is recovered via `PoisonError::into_inner` rather
+    /// than panicking: the cache holds immutable `Arc<TaskQueue>` entries
+    /// that are only ever inserted (never mutated in place), so a worker
+    /// that panicked mid-`get` cannot have left a torn value behind — and
+    /// a worker panic must not cascade into every later cache user.
     pub fn get(&self, trial: &Trial) -> Arc<TaskQueue> {
         let key = QueueKey::of(trial);
-        if let Some(q) = self.queues.lock().expect("queue cache poisoned").get(&key) {
+        if let Some(q) =
+            self.queues.lock().unwrap_or_else(|e| e.into_inner()).get(&key)
+        {
             return q.clone();
         }
         let q = Arc::new(trial.queue());
         self.queues
             .lock()
-            .expect("queue cache poisoned")
+            .unwrap_or_else(|e| e.into_inner())
             .entry(key)
             .or_insert(q)
             .clone()
@@ -168,12 +191,22 @@ pub struct Engine<'r> {
     jobs: usize,
     options: SimOptions,
     events: bool,
+    faults: Option<FaultModel>,
+    degrade: bool,
     cache: Option<Arc<QueueCache>>,
 }
 
 impl<'r> Engine<'r> {
     pub fn new(registry: &'r Registry) -> Engine<'r> {
-        Engine { registry, jobs: 1, options: SimOptions::default(), events: false, cache: None }
+        Engine {
+            registry,
+            jobs: 1,
+            options: SimOptions::default(),
+            events: false,
+            faults: None,
+            degrade: false,
+            cache: None,
+        }
     }
 
     /// Worker threads (1 = run on the calling thread).  0 means "all
@@ -198,6 +231,27 @@ impl<'r> Engine<'r> {
     /// the caller opts in (CLI: `--events`).
     pub fn events(mut self, on: bool) -> Self {
         self.events = on;
+        self
+    }
+
+    /// Inject stochastic platform faults: each trial draws its own
+    /// accelerator/link failure–repair timeline from `model`, seeded by the
+    /// trial's environment seed (see [`FaultModel::events_for_platform`]).
+    /// Fault events run *in addition to* any scenario-declared events and
+    /// independently of [`Engine::events`] — a campaign opts in explicitly.
+    /// `None` (the default) reproduces every pre-faults result bit-for-bit.
+    pub fn faults(mut self, model: Option<FaultModel>) -> Self {
+        self.faults = model;
+        self
+    }
+
+    /// Wrap every trial's scheduler in the graceful-degradation controller
+    /// ([`DegradeSched`]): under an accelerator outage, comfort-tier tasks
+    /// that cannot meet their safety time on any surviving accelerator are
+    /// shed instead of queued.  Off by default; on a healthy platform the
+    /// wrapper is bit-identical pass-through.
+    pub fn degrade(mut self, on: bool) -> Self {
+        self.degrade = on;
         self
     }
 
@@ -253,6 +307,13 @@ impl<'r> Engine<'r> {
                 let r = self.run_trial_on(t, &t.queue(), &mut [&mut obs])?;
                 Ok((r, obs))
             },
+            // Observed runs pair each result with a caller-built observer;
+            // there is no meaningful (result, observer) to fabricate for a
+            // panicked trial, so panics stay hard errors here.
+            |i, msg| {
+                let t = &trials[i];
+                Err(anyhow!("trial {} ({}) panicked: {msg}", t.id, t.label()))
+            },
             |i, pair| slots[i] = Some(pair),
         )?;
         Ok(slots.into_iter().map(|s| s.expect("every trial ran")).collect())
@@ -270,10 +331,20 @@ impl<'r> Engine<'r> {
             .registry
             .build(&trial.scheduler, trial.sched_seed)
             .with_context(|| format!("trial {} ({})", trial.id, trial.label()))?;
-        let events = match (&trial.scenario.archetype, self.events) {
+        if self.degrade {
+            sched = Box::new(DegradeSched::new(sched));
+        }
+        let mut events = match (&trial.scenario.archetype, self.events) {
             (Some(arch), true) => arch.platform_events(queue.route_duration_s),
             _ => Vec::new(),
         };
+        if let Some(fm) = &self.faults {
+            // Seeded by trial.seed (not trial.id): replicates differ,
+            // while the on/off degrade arms and every scheduler see the
+            // *same* fault timeline for the same replicate — paired
+            // comparisons, not re-rolled ones.
+            events.extend(fm.events_for_platform(trial.seed, queue.route_duration_s, &platform));
+        }
         let scales = NormScales::for_queue(queue, &platform);
         let mut tails = TailsProbe::new(trial.scenario.area.max_velocity_ms());
         let mut r = {
@@ -311,16 +382,31 @@ impl<'r> Engine<'r> {
     /// The one worker-pool core every parallel path shares: run `work(i)`
     /// for `i in 0..n` on `jobs` workers, delivering each payload to
     /// `deliver` on the calling thread in *completion* order.
-    fn execute_tasks<T, W, F>(&self, n: usize, work: W, mut deliver: F) -> Result<()>
+    ///
+    /// A trial that *panics* (e.g. a buggy scheduler indexing out of
+    /// bounds) is caught per task — on both the serial and the threaded
+    /// path — and handed to `recover`, which either fabricates a
+    /// counted-failure payload (the sweep path) or converts the panic into
+    /// a hard error (paths that cannot fabricate one).  A trial that
+    /// returns `Err` stays a hard error either way: those are *setup*
+    /// failures (unknown scheduler, missing runtime) the caller must see.
+    fn execute_tasks<T, W, R, F>(&self, n: usize, work: W, recover: R, mut deliver: F) -> Result<()>
     where
         T: Send,
         W: Fn(usize) -> Result<T> + Sync,
+        R: Fn(usize, String) -> Result<T> + Sync,
         F: FnMut(usize, T),
     {
+        let run_one = |i: usize| -> Result<T> {
+            match catch_unwind(AssertUnwindSafe(|| work(i))) {
+                Ok(r) => r,
+                Err(p) => recover(i, panic_message(p.as_ref())),
+            }
+        };
         let jobs = self.jobs.max(1).min(n.max(1));
         if jobs <= 1 {
             for i in 0..n {
-                deliver(i, work(i)?);
+                deliver(i, run_one(i)?);
             }
             return Ok(());
         }
@@ -329,7 +415,7 @@ impl<'r> Engine<'r> {
         let (tx, rx) = mpsc::channel::<(usize, Result<T>)>();
         let next_ref = &next;
         let abort_ref = &abort;
-        let work_ref = &work;
+        let run_ref = &run_one;
         let mut first_err: Option<anyhow::Error> = None;
         std::thread::scope(|scope| {
             for _ in 0..jobs {
@@ -342,7 +428,7 @@ impl<'r> Engine<'r> {
                     if i >= n {
                         break;
                     }
-                    if tx.send((i, work_ref(i))).is_err() {
+                    if tx.send((i, run_ref(i))).is_err() {
                         break; // receiver gone (error path)
                     }
                 });
@@ -384,6 +470,30 @@ impl<'r> Engine<'r> {
             |i| {
                 let t = &trials[i];
                 self.run_trial_on(t, &cache.get(t), &mut [])
+            },
+            // A panicked trial becomes a *counted* failure: an empty
+            // summary with the `failed` flag set, grouped under the same
+            // sweep key as its healthy siblings (`GroupStats` counts it in
+            // `failed_trials`, outside every fingerprint) — one bad trial
+            // must never kill a fault campaign or a fleet shard.
+            |i, msg| {
+                let t = &trials[i];
+                crate::log_warn!(
+                    "engine",
+                    "trial {} ({}) panicked and was counted as failed: {msg}",
+                    t.id,
+                    t.label()
+                );
+                Ok(TrialResult {
+                    trial: t.clone(),
+                    summary: RunSummary::failed(
+                        t.scheduler.display().to_string(),
+                        t.platform.clone(),
+                    ),
+                    sched_wall_s: 0.0,
+                    bursts: 0,
+                    records: Vec::new(),
+                })
             },
             deliver,
         )

@@ -489,6 +489,32 @@ pub fn library() -> Vec<Archetype> {
                 EventSpec { at_frac: 0.75, action: EventAction::Recover { accel: 4 } },
             ],
         },
+        Archetype {
+            name: "link-failure".into(),
+            help: "urban route; interconnect link 0 severed at 30% of the route, restored at 70% \
+                   (chiplet platforms reroute; monolithic platforms are unaffected)",
+            legs: vec![LegSpec::new(Area::Urban, 1.0)],
+            rig: CameraRig::full30(),
+            hz_scale: 1.0,
+            dropouts: Vec::new(),
+            events: vec![
+                EventSpec { at_frac: 0.30, action: EventAction::LinkFail { link: 0 } },
+                EventSpec { at_frac: 0.70, action: EventAction::LinkRecover { link: 0 } },
+            ],
+        },
+        Archetype {
+            name: "degraded-comfort".into(),
+            help: "urban route; accelerator 0 down for most of the route — the regime where a \
+                   degradation-aware scheduler sheds comfort work to protect the safety tier",
+            legs: vec![LegSpec::new(Area::Urban, 1.0)],
+            rig: CameraRig::full30(),
+            hz_scale: 1.0,
+            dropouts: Vec::new(),
+            events: vec![
+                EventSpec { at_frac: 0.25, action: EventAction::Fail { accel: 0 } },
+                EventSpec { at_frac: 0.85, action: EventAction::Recover { accel: 0 } },
+            ],
+        },
     ]
 }
 
@@ -703,6 +729,17 @@ mod tests {
         assert!(evts
             .iter()
             .any(|e| e.action == EventAction::Derate { accel: 4, speed: 0.5 }));
+
+        let link = find("link-failure").unwrap();
+        let evts = link.platform_events(1000.0);
+        assert_eq!(evts.len(), 2);
+        assert!((evts[0].at_s - 300.0).abs() < 1e-9);
+        assert_eq!(evts[0].action, EventAction::LinkFail { link: 0 });
+        assert_eq!(evts[1].action, EventAction::LinkRecover { link: 0 });
+        assert_eq!(
+            find("degraded-comfort").unwrap().events[0].action,
+            EventAction::Fail { accel: 0 }
+        );
         // Event-free archetypes stay event-free.
         assert!(find("urban-rush").unwrap().platform_events(500.0).is_empty());
     }

@@ -1,0 +1,245 @@
+//! Stochastic fault campaigns: a seeded MTBF/MTTR fault process that
+//! compiles to the same [`PlatformEvent`] timelines scenario archetypes
+//! emit, so Monte-Carlo fault sweeps reuse the entire event machinery
+//! ([`EventTimeline`](crate::sim::events::EventTimeline) → `Sim` →
+//! `ShadowState`) unchanged.
+//!
+//! Determinism contract: the model draws from `Rng::fork` streams keyed by
+//! *entity* (accelerator slot or link index), all derived from one trial
+//! seed.  Forking per entity means slot 3's outage pattern does not depend
+//! on how many links the platform has — the same seed produces the same
+//! per-entity timelines on any platform shape, and crucially the timelines
+//! are **paired** across schedulers and across degradation on/off arms of
+//! a campaign (both arms are built from `trial.seed`, not the trial id).
+//!
+//! Each entity alternates exponential up-times (mean MTBF) and repair
+//! times (mean MTTR) until the route ends; every transition emits a
+//! `Fail`/`Recover` (accelerators) or `LinkFail`/`LinkRecover` (links)
+//! event.  A non-positive or non-finite MTBF disables that fault class.
+
+use crate::platform::Platform;
+use crate::sim::events::{EventAction, PlatformEvent};
+use crate::util::rng::Rng;
+
+/// Hard cap on events per entity per route — a backstop against degenerate
+/// parameters (e.g. MTBF and MTTR both ~0), far above any realistic draw.
+const MAX_EVENTS_PER_ENTITY: usize = 10_000;
+
+/// Exponential draw with the given mean.  Uses `1 - u` so `u = 0` cannot
+/// produce `ln(0)`; an infinite mean yields an infinite (or NaN) draw,
+/// which the `past_end` guards below treat as "never fires".
+fn exp_draw(rng: &mut Rng, mean_s: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() * mean_s
+}
+
+/// A seeded per-accelerator and per-link MTBF/MTTR fault process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultModel {
+    /// Mean time between accelerator failures (s); `<= 0` or non-finite
+    /// disables accelerator faults.
+    pub accel_mtbf_s: f64,
+    /// Mean accelerator repair time (s).
+    pub accel_mttr_s: f64,
+    /// Mean time between link failures (s); `<= 0` or non-finite disables
+    /// link faults (they are inherently absent on monolithic platforms).
+    pub link_mtbf_s: f64,
+    /// Mean link repair time (s).
+    pub link_mttr_s: f64,
+}
+
+impl Default for FaultModel {
+    /// Defaults sized for urban routes a few hundred meters long (tens of
+    /// seconds): most trials see one or two outages, some see none.
+    fn default() -> FaultModel {
+        FaultModel { accel_mtbf_s: 30.0, accel_mttr_s: 10.0, link_mtbf_s: 60.0, link_mttr_s: 10.0 }
+    }
+}
+
+impl FaultModel {
+    /// Compile this model into a fault-event list for one trial: `slots`
+    /// accelerators and `links` interconnect links over a route of
+    /// `duration_s` seconds, all drawn from `seed`.  The list is not
+    /// time-sorted across entities — `EventTimeline::new` sorts.
+    pub fn events_for(
+        &self,
+        seed: u64,
+        duration_s: f64,
+        slots: usize,
+        links: usize,
+    ) -> Vec<PlatformEvent> {
+        let mut events = Vec::new();
+        let mut parent = Rng::new(seed);
+        let mut accel_parent = parent.fork(1);
+        let mut link_parent = parent.fork(2);
+        if self.accel_mtbf_s > 0.0 && self.accel_mtbf_s.is_finite() {
+            for accel in 0..slots {
+                let mut rng = accel_parent.fork(accel as u64);
+                entity_events(
+                    &mut rng,
+                    duration_s,
+                    self.accel_mtbf_s,
+                    self.accel_mttr_s,
+                    EventAction::Fail { accel },
+                    EventAction::Recover { accel },
+                    &mut events,
+                );
+            }
+        }
+        if self.link_mtbf_s > 0.0 && self.link_mtbf_s.is_finite() {
+            for link in 0..links {
+                let mut rng = link_parent.fork(link as u64);
+                entity_events(
+                    &mut rng,
+                    duration_s,
+                    self.link_mtbf_s,
+                    self.link_mttr_s,
+                    EventAction::LinkFail { link },
+                    EventAction::LinkRecover { link },
+                    &mut events,
+                );
+            }
+        }
+        events
+    }
+
+    /// [`FaultModel::events_for`] sized from a platform: one fault process
+    /// per accelerator slot and per interconnect link (none on monolithic
+    /// platforms).
+    pub fn events_for_platform(
+        &self,
+        seed: u64,
+        duration_s: f64,
+        platform: &Platform,
+    ) -> Vec<PlatformEvent> {
+        let links = platform.topology.as_ref().map_or(0, |t| t.links.len());
+        self.events_for(seed, duration_s, platform.accels.len(), links)
+    }
+
+}
+
+/// One entity's alternating up/down renewal process: exponential up-times
+/// (mean `mtbf_s`) and repair times (mean `mttr_s`), emitting a
+/// `fail`/`recover` pair per outage inside the route window.
+fn entity_events(
+    rng: &mut Rng,
+    duration_s: f64,
+    mtbf_s: f64,
+    mttr_s: f64,
+    fail: EventAction,
+    recover: EventAction,
+    events: &mut Vec<PlatformEvent>,
+) {
+    let mttr_s = mttr_s.max(0.0);
+    // `is_nan || >=` rather than `!(t < duration)`: an infinite/NaN draw
+    // (degenerate mean) must terminate the process, never emit an event.
+    let past_end = |t: f64| t.is_nan() || t >= duration_s;
+    let mut t = 0.0;
+    for _ in 0..MAX_EVENTS_PER_ENTITY {
+        t += exp_draw(rng, mtbf_s);
+        if past_end(t) {
+            break;
+        }
+        events.push(PlatformEvent { at_s: t, action: fail });
+        t += exp_draw(rng, mttr_s);
+        if past_end(t) {
+            break; // the outage outlives the route: no recovery event
+        }
+        events.push(PlatformEvent { at_s: t, action: recover });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::events::EventTimeline;
+
+    #[test]
+    fn same_seed_same_timeline() {
+        let m = FaultModel::default();
+        let a = m.events_for(42, 120.0, 11, 4);
+        let b = m.events_for(42, 120.0, 11, 4);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "120 s at MTBF 30 s across 11 slots must fault");
+        let c = m.events_for(43, 120.0, 11, 4);
+        assert_ne!(a, c, "different seeds draw different timelines");
+    }
+
+    #[test]
+    fn entity_streams_are_independent_of_platform_shape() {
+        // Slot 3's pattern must not change when links are added: the
+        // campaigns stay paired across mono and chiplet spellings.
+        let m = FaultModel::default();
+        let pick = |events: &[PlatformEvent]| -> Vec<(u64, EventAction)> {
+            events
+                .iter()
+                .filter(|e| {
+                    matches!(
+                        e.action,
+                        EventAction::Fail { accel: 3 } | EventAction::Recover { accel: 3 }
+                    )
+                })
+                .map(|e| (e.at_s.to_bits(), e.action))
+                .collect()
+        };
+        let mono = m.events_for(7, 200.0, 11, 0);
+        let noc = m.events_for(7, 200.0, 11, 4);
+        assert_eq!(pick(&mono), pick(&noc));
+        assert!(
+            mono.iter().all(|e| !matches!(
+                e.action,
+                EventAction::LinkFail { .. } | EventAction::LinkRecover { .. }
+            )),
+            "no links, no link faults"
+        );
+        assert!(noc.iter().any(|e| matches!(e.action, EventAction::LinkFail { .. })));
+    }
+
+    #[test]
+    fn disabled_classes_and_short_routes_draw_nothing() {
+        let off = FaultModel {
+            accel_mtbf_s: 0.0,
+            accel_mttr_s: 1.0,
+            link_mtbf_s: f64::INFINITY,
+            link_mttr_s: 1.0,
+        };
+        assert!(off.events_for(1, 1e6, 11, 8).is_empty());
+        let m = FaultModel::default();
+        assert!(m.events_for(1, 0.0, 11, 8).is_empty(), "zero-length route");
+    }
+
+    #[test]
+    fn events_pair_fail_before_recover_per_entity() {
+        let m = FaultModel { accel_mtbf_s: 5.0, accel_mttr_s: 2.0, ..FaultModel::default() };
+        let events = m.events_for(11, 300.0, 4, 0);
+        let mut tl = EventTimeline::new(events.clone());
+        assert_eq!(tl.len(), events.len());
+        // Per entity: strictly increasing times, alternating fail/recover
+        // starting with a fail.
+        for accel in 0..4 {
+            let mine: Vec<&PlatformEvent> = events
+                .iter()
+                .filter(|e| {
+                    matches!(
+                        e.action,
+                        EventAction::Fail { accel: a } | EventAction::Recover { accel: a }
+                        if a == accel
+                    )
+                })
+                .collect();
+            for (k, e) in mine.iter().enumerate() {
+                let is_fail = matches!(e.action, EventAction::Fail { .. });
+                assert_eq!(is_fail, k % 2 == 0, "slot {accel} event {k}");
+                if k > 0 {
+                    assert!(e.at_s > mine[k - 1].at_s, "slot {accel} event {k}");
+                }
+                assert!(e.at_s > 0.0 && e.at_s < 300.0);
+            }
+        }
+        // The timeline drains them all by the end of the route.
+        let platform = crate::platform::Platform::hmai();
+        let mut state =
+            crate::sim::ShadowState::new(&platform, crate::metrics::NormScales::unit());
+        let fired = tl.apply_until(300.0, &mut state);
+        assert_eq!(fired, events.len());
+    }
+}

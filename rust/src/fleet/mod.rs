@@ -411,10 +411,44 @@ impl Default for WorkOptions {
     }
 }
 
+/// Move an unreadable checkpoint aside as `<path>.corrupt` (numbered
+/// `.corrupt.N` when earlier quarantines exist) so the worker can restart
+/// the shard fresh without destroying the evidence.
+fn quarantine_checkpoint(path: &Path) -> Result<std::path::PathBuf> {
+    let candidate = |n: u32| -> std::path::PathBuf {
+        let mut s = path.as_os_str().to_owned();
+        if n == 0 {
+            s.push(".corrupt");
+        } else {
+            s.push(format!(".corrupt.{n}"));
+        }
+        std::path::PathBuf::from(s)
+    };
+    let mut dest = candidate(0);
+    let mut n = 0u32;
+    while dest.exists() && n < 1000 {
+        n += 1;
+        dest = candidate(n);
+    }
+    std::fs::rename(path, &dest).with_context(|| {
+        format!("quarantining corrupt checkpoint {} -> {}", path.display(), dest.display())
+    })?;
+    Ok(dest)
+}
+
 /// Run (or resume) one shard: fold trials `next_trial..hi` into the
 /// partial summary, checkpointing every `checkpoint_every` trials and at
 /// the end.  Returns the final checkpoint state (complete unless
 /// `max_trials` stopped it early).
+///
+/// A checkpoint that fails to *load* (truncated by a crash mid-write
+/// outside the atomic path, bit rot, fingerprint mismatch) is quarantined
+/// — renamed `<path>.corrupt` and logged — and the shard restarts from
+/// scratch: re-running a shard is always safe (determinism), losing a
+/// fleet to one bad file is not.  A checkpoint that loads but belongs to a
+/// *different* shard/plan stays a hard error: that is an operator mix-up
+/// (wrong path or stale directory), and silently discarding someone
+/// else's valid work would be worse than stopping.
 pub fn run_shard(
     registry: &Registry,
     plan: &FleetPlan,
@@ -428,7 +462,19 @@ pub fn run_shard(
         .get(shard)
         .with_context(|| format!("shard {shard} out of range ({} shards)", resolved.shards.len()))?;
     let mut ckpt = if checkpoint_path.exists() {
-        let c = ShardCheckpoint::load(checkpoint_path)?;
+        let c = match ShardCheckpoint::load(checkpoint_path) {
+            Ok(c) => c,
+            Err(e) => {
+                let dest = quarantine_checkpoint(checkpoint_path)?;
+                crate::log_warn!(
+                    "fleet",
+                    "shard {shard}: corrupt checkpoint quarantined to {} ({e:#}); \
+                     restarting the shard from scratch",
+                    dest.display()
+                );
+                ShardCheckpoint::fresh(spec)
+            }
+        };
         anyhow::ensure!(
             c.spec == spec,
             "checkpoint {} is for shard {}/plan {:016x} range {}..{}, expected \

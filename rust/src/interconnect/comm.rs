@@ -90,9 +90,28 @@ pub struct CommPlan {
     outbound: [f64; MAX_ROUTE_LINKS],
 }
 
+/// Fault-aware ingress routes: per-chiplet link lists + masks recomputed
+/// around the current dead-link set ([`Topology::routes_avoiding`]).
+type ActiveRoutes = (Vec<Vec<usize>>, Vec<u64>);
+
+/// The route `chiplet` currently uses: the fault-aware override when one
+/// is active, else the static parse-time route.  A free function (not a
+/// method) so `commit` can hold it while mutating sibling fields.
+#[inline]
+fn route_of<'a>(
+    active: &'a Option<ActiveRoutes>,
+    topo: &'a Topology,
+    chiplet: usize,
+) -> &'a [usize] {
+    match active {
+        Some((routes, _)) => routes.get(chiplet).map(|r| r.as_slice()).unwrap_or(&[]),
+        None => topo.route(chiplet),
+    }
+}
+
 /// Dynamic interconnect state: per-link occupancy and per-slot weight
 /// residency, plus the run accumulators the summary reports.  Cloning is
-/// cheap (two short `Vec`s), which is what GA/SA rollouts need.
+/// cheap (a few short `Vec`s), which is what GA/SA rollouts need.
 #[derive(Debug, Clone)]
 pub struct CommState {
     topo: Arc<Topology>,
@@ -100,6 +119,13 @@ pub struct CommState {
     chiplet_of: Vec<usize>,
     /// Per link: time at which it is free (store-and-forward serial).
     pub link_busy: Vec<f64>,
+    /// Per link: speed factor — 1.0 nominal (bit-exact: `bw * 1.0 == bw`),
+    /// (0, 1) derated bandwidth, 0.0 dead (hops price at `+inf`).
+    link_speed: Vec<f64>,
+    /// Fault-aware route override, present iff ≥1 link is dead.  `None`
+    /// executes the exact static-route instruction stream, which is what
+    /// keeps event-free runs bit-identical.
+    active: Option<ActiveRoutes>,
     /// Per slot: the model whose weights are resident (None = cold).
     pub resident: Vec<Option<ModelKind>>,
     /// Σ per-task in-flight time (s) — the run's comm-delay accumulator.
@@ -116,6 +142,8 @@ impl CommState {
             topo,
             chiplet_of,
             link_busy: vec![0.0; links],
+            link_speed: vec![1.0; links],
+            active: None,
             resident: vec![None; slots],
             delay_s: 0.0,
             bytes: 0.0,
@@ -127,12 +155,53 @@ impl CommState {
         &self.topo
     }
 
+    /// Speed factor of link `link` (1.0 for out-of-range indices).
+    #[inline]
+    pub fn link_speed(&self, link: usize) -> f64 {
+        self.link_speed.get(link).copied().unwrap_or(1.0)
+    }
+
+    /// Set link `link`'s speed factor: 1.0 nominal, (0, 1) derated
+    /// bandwidth, 0.0 dead.  Out-of-range indices are ignored so link
+    /// events written for a large topology degrade gracefully on a
+    /// smaller one.  Whenever the dead-link set changes, ingress routes
+    /// are rebuilt around it ([`Topology::routes_avoiding`]); with no
+    /// dead links the static routes are used verbatim.
+    pub fn set_link_speed(&mut self, link: usize, speed: f64) {
+        let Some(s) = self.link_speed.get_mut(link) else {
+            return;
+        };
+        *s = speed.clamp(0.0, 1.0);
+        let mut dead = 0u64;
+        for (li, &sp) in self.link_speed.iter().enumerate() {
+            if sp == 0.0 {
+                dead |= 1u64 << li;
+            }
+        }
+        self.active =
+            if dead == 0 { None } else { Some(self.topo.routes_avoiding(dead)) };
+    }
+
+    /// Time to push `bytes` across link `li` at its current speed factor.
+    /// Nominal speed multiplies bandwidth by exactly 1.0 (bit-exact); a
+    /// dead link divides by zero bandwidth and prices `+inf`.
+    #[inline]
+    fn hop_s(&self, li: usize, bytes: f64) -> f64 {
+        let l = &self.topo.links[li];
+        l.latency_s + bytes / (l.bytes_per_s * self.link_speed[li])
+    }
+
     /// Bitmask of the links on `slot`'s ingress route (0 for slots on the
     /// ingress chiplet) — what incremental Min-Min intersects to find
-    /// cached bests invalidated by contention.
+    /// cached bests invalidated by contention.  Reads the fault-aware
+    /// routes when links are down.
     #[inline]
     pub fn route_mask(&self, slot: usize) -> u64 {
-        self.topo.route_mask(self.chiplet_of.get(slot).copied().unwrap_or(0))
+        let chiplet = self.chiplet_of.get(slot).copied().unwrap_or(0);
+        match &self.active {
+            Some((_, masks)) => masks.get(chiplet).copied().unwrap_or(0),
+            None => self.topo.route_mask(chiplet),
+        }
     }
 
     /// Would dispatching `model` to `slot` move its weights (residency
@@ -159,7 +228,7 @@ impl CommState {
         compute_s: f64,
     ) -> Option<CommPlan> {
         let chiplet = self.chiplet_of.get(slot).copied().unwrap_or(0);
-        let route = self.topo.route(chiplet);
+        let route = route_of(&self.active, &self.topo, chiplet);
         if route.is_empty() {
             return None;
         }
@@ -172,8 +241,7 @@ impl CommState {
         let mut outbound = [0.0_f64; MAX_ROUTE_LINKS];
         let mut t = now;
         for (k, &li) in route.iter().enumerate() {
-            let l = &self.topo.links[li];
-            t = t.max(self.link_busy[li]) + l.hop_s(in_bytes);
+            t = t.max(self.link_busy[li]) + self.hop_s(li, in_bytes);
             inbound[k] = t;
         }
         let arrive = t;
@@ -181,8 +249,7 @@ impl CommState {
         let finish = start + compute_s;
         let mut t = finish;
         for (k, &li) in route.iter().enumerate().rev() {
-            let l = &self.topo.links[li];
-            t = t.max(inbound[k]) + l.hop_s(out_bytes);
+            t = t.max(inbound[k]) + self.hop_s(li, out_bytes);
             outbound[k] = t;
         }
         Some(CommPlan {
@@ -204,7 +271,7 @@ impl CommState {
     #[inline]
     pub fn commit(&mut self, slot: usize, model: ModelKind, plan: &CommPlan) {
         let chiplet = self.chiplet_of.get(slot).copied().unwrap_or(0);
-        let route = self.topo.route(chiplet);
+        let route = route_of(&self.active, &self.topo, chiplet);
         debug_assert_eq!(route.len(), plan.hops);
         for (k, &li) in route.iter().enumerate() {
             self.link_busy[li] = plan.outbound[k];
@@ -221,6 +288,8 @@ impl CommState {
     /// restart from zero — rollouts never report them.
     pub fn reset_from(&mut self, origin: &CommState) {
         self.link_busy.copy_from_slice(&origin.link_busy);
+        self.link_speed.copy_from_slice(&origin.link_speed);
+        self.active.clone_from(&origin.active);
         self.resident.copy_from_slice(&origin.resident);
         self.delay_s = 0.0;
         self.bytes = 0.0;
@@ -302,18 +371,73 @@ mod tests {
     }
 
     #[test]
+    fn link_derate_scales_bandwidth_and_recover_is_bit_exact() {
+        let mut s = mesh_state();
+        let nominal = s.plan(1, ModelKind::Yolo, 0.0, 0.0, 1e-3).unwrap();
+        s.set_link_speed(0, 0.5);
+        // Slot 1's one-hop route uses some link; derating every link is a
+        // safe superset for the comparison.
+        for li in 0..4 {
+            s.set_link_speed(li, 0.5);
+        }
+        let slow = s.plan(1, ModelKind::Yolo, 0.0, 0.0, 1e-3).unwrap();
+        assert!(slow.comm_s > nominal.comm_s, "{} !> {}", slow.comm_s, nominal.comm_s);
+        assert!(slow.done_s > nominal.done_s);
+        // Recovery restores the exact nominal pricing (bw * 1.0 == bw).
+        for li in 0..4 {
+            s.set_link_speed(li, 1.0);
+        }
+        let back = s.plan(1, ModelKind::Yolo, 0.0, 0.0, 1e-3).unwrap();
+        assert_eq!(back.done_s.to_bits(), nominal.done_s.to_bits());
+        assert_eq!(back.comm_s.to_bits(), nominal.comm_s.to_bits());
+        // Out-of-range link indices are ignored.
+        s.set_link_speed(999, 0.0);
+        assert_eq!(s.link_speed(999), 1.0);
+    }
+
+    #[test]
+    fn dead_link_reroutes_or_prices_infinite() {
+        let mut s = mesh_state();
+        let topo = Arc::clone(s.topology());
+        let li = topo.route(1)[0];
+        let nominal = s.plan(1, ModelKind::Yolo, 0.0, 0.0, 1e-3).unwrap();
+        s.set_link_speed(li, 0.0);
+        // Chiplet 1 survives via the 3-hop detour: finite but slower, and
+        // its route mask no longer touches the dead link.
+        let rerouted = s.plan(1, ModelKind::Yolo, 0.0, 0.0, 1e-3).unwrap();
+        assert!(rerouted.done_s.is_finite());
+        assert!(rerouted.done_s > nominal.done_s);
+        assert_eq!(rerouted.hops, 3);
+        assert_eq!(s.route_mask(1) & (1u64 << li), 0);
+        // Recovery restores the static route and the exact pricing.
+        s.set_link_speed(li, 1.0);
+        let back = s.plan(1, ModelKind::Yolo, 0.0, 0.0, 1e-3).unwrap();
+        assert_eq!(back.done_s.to_bits(), nominal.done_s.to_bits());
+        // A severed ring2: the far chiplet keeps its static route, which
+        // now prices +inf — the lost-task signal, never a panic.
+        let mut ring = CommState::new(Arc::new(Topology::try_parse("ring2").unwrap()), 2);
+        ring.set_link_speed(0, 0.0);
+        let cut = ring.plan(1, ModelKind::Yolo, 0.0, 0.0, 1e-3).unwrap();
+        assert!(cut.done_s.is_infinite());
+    }
+
+    #[test]
     fn reset_from_restores_the_origin_view() {
         let mut origin = mesh_state();
         let p = origin.plan(1, ModelKind::Yolo, 0.0, 0.0, 1e-3).unwrap();
         origin.commit(1, ModelKind::Yolo, &p);
+        origin.set_link_speed(2, 0.0);
         let mut rolling = origin.clone();
         let q = rolling.plan(3, ModelKind::Ssd, 0.0, 0.0, 1e-3).unwrap();
         rolling.commit(3, ModelKind::Ssd, &q);
+        rolling.set_link_speed(2, 1.0);
         rolling.reset_from(&origin);
         for (a, b) in rolling.link_busy.iter().zip(&origin.link_busy) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
         assert_eq!(rolling.resident, origin.resident);
+        assert_eq!(rolling.link_speed(2), 0.0, "fault view follows the origin");
+        assert_eq!(rolling.route_mask(2), origin.route_mask(2));
         assert_eq!(rolling.delay_s, 0.0);
     }
 }

@@ -290,6 +290,67 @@ impl Topology {
         self.chiplets <= 1
     }
 
+    /// Recompute ingress routes avoiding the links in `dead` (a bitmask
+    /// over link indices) — same BFS and lowest-neighbor tie-break as the
+    /// static routes, so `dead == 0` reproduces them exactly.  A chiplet
+    /// unreachable on surviving links keeps its *static* route: that route
+    /// crosses a dead link, so pricing yields `+inf` there and dispatches
+    /// become lost tasks rather than FIFO poison (the same containment
+    /// discipline as a failed accelerator).  Routes longer than
+    /// [`MAX_ROUTE_LINKS`] likewise fall back to the static route — the
+    /// detour would not fit a [`CommPlan`].
+    pub fn routes_avoiding(&self, dead: u64) -> (Vec<Vec<usize>>, Vec<u64>) {
+        let mut adj: Vec<Vec<(usize, usize)>> = vec![Vec::new(); self.chiplets];
+        for (li, l) in self.links.iter().enumerate() {
+            if dead & (1u64 << li) != 0 {
+                continue;
+            }
+            adj[l.a].push((l.b, li));
+            adj[l.b].push((l.a, li));
+        }
+        for a in adj.iter_mut() {
+            a.sort_unstable();
+        }
+        let mut prev: Vec<Option<(usize, usize)>> = vec![None; self.chiplets];
+        let mut seen = vec![false; self.chiplets];
+        let mut frontier = std::collections::VecDeque::new();
+        seen[0] = true;
+        frontier.push_back(0usize);
+        while let Some(c) = frontier.pop_front() {
+            for &(nb, li) in &adj[c] {
+                if !seen[nb] {
+                    seen[nb] = true;
+                    prev[nb] = Some((c, li));
+                    frontier.push_back(nb);
+                }
+            }
+        }
+        let mut routes = Vec::with_capacity(self.chiplets);
+        let mut masks = Vec::with_capacity(self.chiplets);
+        for c in 0..self.chiplets {
+            if !seen[c] {
+                routes.push(self.routes[c].clone());
+                masks.push(self.masks[c]);
+                continue;
+            }
+            let mut route = Vec::new();
+            let mut cur = c;
+            while let Some((parent, li)) = prev[cur] {
+                route.push(li);
+                cur = parent;
+            }
+            route.reverse();
+            if route.len() > MAX_ROUTE_LINKS {
+                routes.push(self.routes[c].clone());
+                masks.push(self.masks[c]);
+                continue;
+            }
+            masks.push(route.iter().fold(0u64, |m, &li| m | (1u64 << li)));
+            routes.push(route);
+        }
+        (routes, masks)
+    }
+
     /// Chiplet hosting accelerator `slot` (round-robin unless an explicit
     /// placement was given; out-of-range reads degrade to the ingress).
     pub fn chiplet_of(&self, slot: usize) -> usize {
@@ -442,6 +503,30 @@ mod tests {
         for c in 0..9 {
             assert_eq!(t.route(c), again.route(c), "parse is deterministic");
         }
+    }
+
+    #[test]
+    fn routes_avoiding_reroutes_and_falls_back() {
+        let t = Topology::try_parse("mesh2x2").unwrap();
+        // dead == 0 reproduces the static routes exactly.
+        let (routes, masks) = t.routes_avoiding(0);
+        for c in 0..t.chiplets {
+            assert_eq!(routes[c], t.route(c), "chiplet {c}");
+            assert_eq!(masks[c], t.route_mask(c), "chiplet {c}");
+        }
+        // Kill chiplet 1's direct link: the detour goes the long way round
+        // (2 extra hops on a 2x2 mesh) and avoids the dead link.
+        let li = t.route(1)[0];
+        let (routes, masks) = t.routes_avoiding(1u64 << li);
+        assert_eq!(routes[1].len(), 3, "detour on a 2x2 mesh is 3 hops");
+        assert!(!routes[1].contains(&li));
+        assert_eq!(masks[1] & (1u64 << li), 0);
+        // A ring2's far chiplet has no surviving path once its only link
+        // dies: it keeps the static route (which prices +inf).
+        let r = Topology::try_parse("ring2").unwrap();
+        let (routes, masks) = r.routes_avoiding(1);
+        assert_eq!(routes[1], r.route(1));
+        assert_eq!(masks[1], r.route_mask(1));
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub mod runtime;
 pub mod config;
 pub mod plan;
 pub mod engine;
+pub mod faults;
 pub mod fleet;
 pub mod dse;
 pub mod harness;

@@ -98,7 +98,7 @@ pub const RULES: &[RuleDef] = &[
         hazard: "a panic in the scheduling/simulation hot path kills a \
                  worker mid-sweep and poisons shared queues; hot-path code \
                  returns errors or justifies its invariant",
-        scope: Scope::Only(&["sched/", "sim/", "metrics/", "fleet/", "interconnect/"]),
+        scope: Scope::Only(&["sched/", "sim/", "metrics/", "fleet/", "interconnect/", "faults/"]),
         matcher: Matcher::Tokens(&[
             ".unwrap()",
             ".expect(",

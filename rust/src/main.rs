@@ -8,6 +8,7 @@
 //!   schedule            sweep a scheduler over task queues (Fig. 12/13)
 //!   train               train the FlexAI DQN, save a checkpoint (Fig. 11)
 //!   braking             braking-distance probe (Fig. 14)
+//!   faults              MTBF/MTTR fault campaign, degradation off vs on
 //!
 //! `schedule`, `platform` and `braking` run through the typed
 //! `ExperimentPlan`/`Engine` API; `--jobs N` executes trials on N worker
@@ -24,6 +25,7 @@ use hmai::config::ExperimentConfig;
 use hmai::engine::Engine;
 use hmai::env::route::{Route, RouteParams};
 use hmai::env::{scenario, taskgen, ALL_SCENARIOS};
+use hmai::faults::FaultModel;
 use hmai::fleet::{self, FleetPlan, ShardCheckpoint, WorkOptions};
 use hmai::harness;
 use hmai::metrics::summary::SweepSummary;
@@ -60,6 +62,7 @@ fn run(args: &Args) -> Result<()> {
         Some("train") => cmd_train(args),
         Some("braking") => cmd_braking(args),
         Some("dse") => cmd_dse(args),
+        Some("faults") => cmd_faults(args),
         Some("fleet") => cmd_fleet(args),
         Some("lint") => cmd_lint(args),
         Some("help") | None => {
@@ -81,6 +84,7 @@ fn usage() -> String {
          \x20   train               train FlexAI, save a checkpoint\n\
          \x20   braking             Fig. 14 braking-distance probe\n\
          \x20   dse                 design-space exploration over core mixes (Pareto frontier)\n\
+         \x20   faults              MTBF/MTTR fault campaign: graceful degradation off vs on\n\
          \x20   fleet plan|work|merge  sharded, checkpoint-resumable fleet sweeps\n\
          \x20   lint                determinism & panic-safety lint over the crate source\n\nOPTIONS:\n",
     );
@@ -107,8 +111,15 @@ fn usage() -> String {
         ),
         (
             "--json <path>",
-            "write the full sweep summary as JSON (schedule/platform/braking)".to_string(),
+            "write the full sweep summary as JSON (schedule/platform/braking/faults)".to_string(),
         ),
+        ("--mtbf <s>", "faults: accelerator mean time between failures".to_string()),
+        ("--mttr <s>", "faults: accelerator mean repair time".to_string()),
+        (
+            "--link-mtbf <s>",
+            "faults: link mean time between failures (chiplet platforms)".to_string(),
+        ),
+        ("--link-mttr <s>", "faults: link mean repair time".to_string()),
         ("--dist <m,...>", "route distances in meters (alias: --distance)".to_string()),
         ("--deadline <mode>", "rss | frame (deadline regime)".to_string()),
         ("--budget <area>", "dse: area budget in Std-core equivalents".to_string()),
@@ -721,6 +732,136 @@ fn cmd_dse(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Aggregate survival counters of a sweep, across every group: overall
+/// STM, safety-tier STM (1.0 when the plan produced no safety-critical
+/// tasks — nothing was at risk), lost tasks, and panicked trials.
+struct Survival {
+    stm: f64,
+    safety_stm: f64,
+    lost: u64,
+    failed: u64,
+}
+
+fn survival(sweep: &SweepSummary) -> Survival {
+    let (mut tasks, mut met, mut st, mut sm, mut lost, mut failed) = (0u64, 0, 0, 0, 0, 0);
+    for g in &sweep.groups {
+        tasks += g.stats.sum_tasks;
+        met += g.stats.sum_tasks_met;
+        st += g.stats.sum_safety_tasks;
+        sm += g.stats.sum_safety_met;
+        lost += g.stats.sum_lost_tasks;
+        failed += g.stats.failed_trials;
+    }
+    Survival {
+        stm: if tasks == 0 { 0.0 } else { met as f64 / tasks as f64 },
+        safety_stm: if st == 0 { 1.0 } else { sm as f64 / st as f64 },
+        lost,
+        failed,
+    }
+}
+
+/// `hmai faults`: a seeded MTBF/MTTR fault-injection campaign run twice —
+/// graceful degradation off, then on — over *identical* fault timelines
+/// (both arms draw every outage from `trial.seed`, so the comparison
+/// isolates the degradation policy), reporting overall and safety-tier
+/// STM, lost tasks, and panicked trials per arm.
+///
+///     hmai faults --platform hmai+mesh2x2 --json BENCH_FAULTS.json
+///
+/// Defaults: Min-Min (deterministic, runtime-free; pass --sched to
+/// override), one 300 m urban route, 6 seed replicates.  `--mtbf/--mttr`
+/// shape accelerator faults, `--link-mtbf/--link-mttr` link faults
+/// (chiplet platforms only — monolithic platforms have no links).
+fn cmd_faults(args: &Args) -> Result<()> {
+    let mut cfg = config(args)?;
+    if args.get("sched").is_none() {
+        cfg.scheduler = "minmin".into();
+    }
+    if args.get("dist").is_none() && args.get("distance").is_none() {
+        cfg.env.distances_m = vec![300.0];
+    }
+    if args.get("replicates").is_none() {
+        cfg.replicates = 6;
+    }
+    let d = FaultModel::default();
+    let model = FaultModel {
+        accel_mtbf_s: args.get_f64("mtbf", d.accel_mtbf_s)?,
+        accel_mttr_s: args.get_f64("mttr", d.accel_mttr_s)?,
+        link_mtbf_s: args.get_f64("link-mtbf", d.link_mtbf_s)?,
+        link_mttr_s: args.get_f64("link-mttr", d.link_mttr_s)?,
+    };
+    let reg = harness::registry(&cfg);
+    let plan = cfg.plan()?;
+    let events_on = events_effective(&cfg);
+    let arm = |degrade: bool| -> Result<SweepSummary> {
+        Engine::new(&reg)
+            .jobs(cfg.jobs)
+            .events(events_on)
+            .faults(Some(model))
+            .degrade(degrade)
+            .sweep_streaming(&plan)
+    };
+    let off = arm(false)?;
+    let on = arm(true)?;
+
+    println!(
+        "fault campaign: scheduler = {}  platform = {}  {} trial(s)/arm  \
+         accel MTBF/MTTR = {}/{} s  link MTBF/MTTR = {}/{} s",
+        cfg.scheduler,
+        cfg.platform_spec(),
+        off.total_runs(),
+        model.accel_mtbf_s,
+        model.accel_mttr_s,
+        model.link_mtbf_s,
+        model.link_mttr_s,
+    );
+    let mut t = Table::new(["Arm", "STMRate", "Safety STM", "Lost", "Panicked"]);
+    for (name, sweep) in [("degrade off", &off), ("degrade on", &on)] {
+        let s = survival(sweep);
+        t.row([
+            name.to_string(),
+            pct(s.stm),
+            pct(s.safety_stm),
+            s.lost.to_string(),
+            s.failed.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nper-group breakdown (degrade on):");
+    hmai::reports::sweep_table(&on).print();
+
+    let arm_json = |sweep: &SweepSummary| {
+        let s = survival(sweep);
+        Json::from_pairs(vec![
+            ("stm_rate", Json::Num(s.stm)),
+            ("safety_stm_rate", Json::Num(s.safety_stm)),
+            ("lost_tasks", Json::Num(s.lost as f64)),
+            ("failed_trials", Json::Num(s.failed as f64)),
+            ("fingerprint", Json::Str(format!("{:016x}", sweep.fingerprint()))),
+            ("sweep", sweep.to_json()),
+        ])
+    };
+    write_json_report(
+        args,
+        Json::from_pairs(vec![
+            ("command", Json::Str("faults".to_string())),
+            (
+                "model",
+                Json::from_pairs(vec![
+                    ("accel_mtbf_s", Json::Num(model.accel_mtbf_s)),
+                    ("accel_mttr_s", Json::Num(model.accel_mttr_s)),
+                    ("link_mtbf_s", Json::Num(model.link_mtbf_s)),
+                    ("link_mttr_s", Json::Num(model.link_mttr_s)),
+                ]),
+            ),
+            ("config", cfg.to_json()),
+            ("degrade_off", arm_json(&off)),
+            ("degrade_on", arm_json(&on)),
+        ]),
+    )?;
+    Ok(())
+}
+
 /// `hmai fleet <plan|work|merge>`: sharded, checkpoint-resumable sweeps.
 ///
 ///     hmai fleet plan --sched rr,minmin --replicates 100 --shards 3 --out plan.json
@@ -893,9 +1034,10 @@ mod tests {
     #[test]
     fn usage_mentions_every_subcommand() {
         let u = usage();
-        for cmd in
-            ["report", "env", "platform", "schedule", "train", "braking", "dse", "fleet", "lint"]
-        {
+        for cmd in [
+            "report", "env", "platform", "schedule", "train", "braking", "dse", "faults",
+            "fleet", "lint",
+        ] {
             assert!(u.contains(cmd), "{cmd} missing from usage");
         }
         assert!(u.contains("fleet plan|work|merge"), "fleet actions missing from usage");
@@ -910,6 +1052,9 @@ mod tests {
             assert!(u.contains(opt), "{opt} missing from usage");
         }
         for opt in ["--root", "--rules"] {
+            assert!(u.contains(opt), "{opt} missing from usage");
+        }
+        for opt in ["--mtbf", "--mttr", "--link-mtbf", "--link-mttr"] {
             assert!(u.contains(opt), "{opt} missing from usage");
         }
     }
@@ -1083,6 +1228,38 @@ mod tests {
         let err = cfg.platform().unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("component 2"), "{msg}");
+    }
+
+    #[test]
+    fn faults_cli_runs_both_arms_and_reports_survival() {
+        // A miniature `hmai faults --sched rr --dist 40 --replicates 2`,
+        // with the JSON report parsed back: both arms present, the model
+        // echoed, and every survival field a finite number.
+        let dir = std::env::temp_dir().join(format!("hmai_faults_cli_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("faults.json");
+        let args = Args::parse(
+            [
+                "faults", "--sched", "rr", "--dist", "40", "--replicates", "2", "--seed", "7",
+                "--json", out.to_str().unwrap(),
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        cmd_faults(&args).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(j.get_str("command").unwrap(), "faults");
+        let model = j.get("model").unwrap();
+        assert_eq!(model.get_f64("accel_mtbf_s").unwrap(), 30.0);
+        for arm in ["degrade_off", "degrade_on"] {
+            let a = j.get(arm).unwrap();
+            for k in ["stm_rate", "safety_stm_rate", "lost_tasks", "failed_trials"] {
+                let v = a.get_f64(k).unwrap();
+                assert!(v.is_finite() && v >= 0.0, "{arm}.{k} = {v}");
+            }
+            assert!(a.get_f64("safety_stm_rate").unwrap() <= 1.0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -80,6 +80,22 @@ pub struct RunSummary {
     /// Per-task braking-distance histogram (deterministic components
     /// only; see `engine::TailsProbe`).
     pub braking_hist: QuantileHistogram,
+    /// Safety-critical (Detection-tier) tasks in the run — the survival
+    /// denominator of fault campaigns.  Report-only: like every survival
+    /// field below, derived from the same records as `tasks`/`tasks_met`
+    /// and deliberately outside `fold_fingerprint`/`content_hash`, so
+    /// pre-faults fingerprints reproduce bit-for-bit.
+    pub safety_tasks: u64,
+    /// Safety-critical tasks that met their safety time.
+    pub safety_met: u64,
+    /// Tasks lost outright (`response = +inf`: dead accelerator or severed
+    /// interconnect route).
+    pub lost_tasks: u64,
+    /// Set when the trial did not produce a result (its scheduler
+    /// panicked); the engine fabricates an otherwise-empty summary so the
+    /// failure is *counted* (`GroupStats::failed_trials`) instead of
+    /// killing the sweep.
+    pub failed: bool,
 }
 
 impl RunSummary {
@@ -115,6 +131,43 @@ impl RunSummary {
             comm_gb: 0.0,
             response_hist: QuantileHistogram::response(),
             braking_hist: QuantileHistogram::braking(),
+            safety_tasks: 0,
+            safety_met: 0,
+            lost_tasks: 0,
+            failed: false,
+        }
+    }
+
+    /// The summary of a trial that produced no result (its scheduler
+    /// panicked mid-simulation): empty moments, `failed` set.  Grouped
+    /// under the same sweep key as its healthy siblings so
+    /// [`GroupStats::push`] counts it in `failed_trials` without folding
+    /// anything else.
+    pub fn failed(scheduler: String, platform: String) -> RunSummary {
+        RunSummary {
+            scheduler,
+            platform,
+            tasks: 0,
+            tasks_met: 0,
+            energy_j: 0.0,
+            makespan_s: 0.0,
+            total_time_s: 0.0,
+            wait_s: 0.0,
+            compute_s: 0.0,
+            sched_s: 0.0,
+            r_balance: 0.0,
+            ms_total: 0.0,
+            gvalue: 0.0,
+            mean_response_s: 0.0,
+            max_response_s: 0.0,
+            comm_delay_s: 0.0,
+            comm_gb: 0.0,
+            response_hist: QuantileHistogram::response(),
+            braking_hist: QuantileHistogram::braking(),
+            safety_tasks: 0,
+            safety_met: 0,
+            lost_tasks: 0,
+            failed: true,
         }
     }
 
@@ -152,12 +205,20 @@ impl RunSummary {
             ("max_response_s", Json::Num(self.max_response_s)),
             ("comm_delay_s", Json::Num(self.comm_delay_s)),
             ("comm_gb", Json::Num(self.comm_gb)),
+            ("safety_tasks", Json::Num(self.safety_tasks as f64)),
+            ("safety_met", Json::Num(self.safety_met as f64)),
+            ("lost_tasks", Json::Num(self.lost_tasks as f64)),
+            ("failed", Json::Bool(self.failed)),
         ])
     }
 
     /// Fold this run's *deterministic* scalar fields into an FNV-1a hash.
     /// Wall-clock fields (`sched_s`, and `total_time_s` which includes it)
     /// are excluded, so the fingerprint is invariant under `--jobs`.
+    /// The survival counters (`safety_tasks`/`safety_met`/`lost_tasks`)
+    /// are excluded too: they are report-only derivations of the same
+    /// records, and folding them would break bit-identity with every
+    /// pre-faults fingerprint.
     pub fn fold_fingerprint(&self, mut h: u64) -> u64 {
         let mut word = |w: u64| {
             h ^= w;
@@ -267,6 +328,18 @@ pub struct GroupStats {
     pub response: QuantileHistogram,
     /// Merged per-task braking-distance histogram.
     pub braking: QuantileHistogram,
+    /// Σ safety-critical tasks over member runs (report-only — survival
+    /// counters never enter the fingerprint; see `RunSummary`).
+    pub sum_safety_tasks: u64,
+    /// Σ safety-critical tasks that met their safety time.
+    pub sum_safety_met: u64,
+    /// Σ tasks lost outright (`response = +inf`).
+    pub sum_lost_tasks: u64,
+    /// Trials that panicked instead of completing: counted here, folded
+    /// nowhere else (`trials` and every moment exclude them), and outside
+    /// the fingerprint — a sweep with one bad trial still merges and
+    /// fingerprints identically to one re-run without it.
+    pub failed_trials: u64,
 }
 
 impl GroupStats {
@@ -286,14 +359,24 @@ impl GroupStats {
             content_hash: 0,
             response: QuantileHistogram::response(),
             braking: QuantileHistogram::braking(),
+            sum_safety_tasks: 0,
+            sum_safety_met: 0,
+            sum_lost_tasks: 0,
+            failed_trials: 0,
         }
     }
 
     /// Fold one run in (push order = trial-id order when fed by the
     /// engine).  The clamp-then-`ln` per element matches
     /// `util::stats::geomean` exactly, so monolithic aggregates keep their
-    /// pre-refactor bits.
+    /// pre-refactor bits.  A `failed` run only bumps `failed_trials`: its
+    /// empty moments would otherwise poison the geomeans (`ln(1e-12)`
+    /// per zeroed field) and dilute every mean.
     pub fn push(&mut self, run: &RunSummary) {
+        if run.failed {
+            self.failed_trials += 1;
+            return;
+        }
         self.trials += 1;
         self.sum_tasks += run.tasks;
         self.sum_tasks_met += run.tasks_met;
@@ -308,6 +391,9 @@ impl GroupStats {
         self.content_hash = self.content_hash.wrapping_add(mix(run.content_hash()));
         self.response.merge(&run.response_hist);
         self.braking.merge(&run.braking_hist);
+        self.sum_safety_tasks += run.safety_tasks;
+        self.sum_safety_met += run.safety_met;
+        self.sum_lost_tasks += run.lost_tasks;
     }
 
     /// Fold another partial aggregate in (commutative and associative on
@@ -327,6 +413,10 @@ impl GroupStats {
         self.content_hash = self.content_hash.wrapping_add(other.content_hash);
         self.response.merge(&other.response);
         self.braking.merge(&other.braking);
+        self.sum_safety_tasks += other.sum_safety_tasks;
+        self.sum_safety_met += other.sum_safety_met;
+        self.sum_lost_tasks += other.sum_lost_tasks;
+        self.failed_trials += other.failed_trials;
     }
 
     fn mean_of(&self, sum: f64) -> f64 {
@@ -368,6 +458,10 @@ impl GroupStats {
             ),
             ("sum_comm_gb_bits", Json::Str(format!("{:016x}", self.sum_comm_gb.to_bits()))),
             ("content_hash", Json::Str(format!("{:016x}", self.content_hash))),
+            ("sum_safety_tasks", Json::Num(self.sum_safety_tasks as f64)),
+            ("sum_safety_met", Json::Num(self.sum_safety_met as f64)),
+            ("sum_lost_tasks", Json::Num(self.sum_lost_tasks as f64)),
+            ("failed_trials", Json::Num(self.failed_trials as f64)),
             ("response", self.response.state_json()),
             ("braking", self.braking.state_json()),
         ])
@@ -385,6 +479,9 @@ impl GroupStats {
                 Err(_) => Ok(0.0),
             }
         };
+        // Integer survival counters postdate the comm sums; same
+        // missing-key-means-zero treatment for pre-faults checkpoints.
+        let u_new = |key: &str| -> u64 { j.get_f64(key).map(|v| v as u64).unwrap_or(0) };
         Ok(GroupStats {
             trials: j.get_f64("trials")? as u64,
             sum_tasks: j.get_f64("sum_tasks")? as u64,
@@ -400,6 +497,10 @@ impl GroupStats {
             content_hash: parse_bits_hex(j.get_str("content_hash")?)?,
             response: QuantileHistogram::from_state_json(j.get("response")?)?,
             braking: QuantileHistogram::from_state_json(j.get("braking")?)?,
+            sum_safety_tasks: u_new("sum_safety_tasks"),
+            sum_safety_met: u_new("sum_safety_met"),
+            sum_lost_tasks: u_new("sum_lost_tasks"),
+            failed_trials: u_new("failed_trials"),
         })
     }
 }
@@ -458,6 +559,31 @@ impl SweepGroup {
     /// Mean per-trial interconnect traffic (GB).
     pub fn mean_comm_gb(&self) -> f64 {
         self.stats.mean_of(self.stats.sum_comm_gb)
+    }
+
+    /// STMRate over safety-critical (Detection-tier) tasks only — the
+    /// survival headline of a fault campaign.  1.0 when the row saw no
+    /// safety tasks (nothing to miss).
+    pub fn safety_stm_rate(&self) -> f64 {
+        if self.stats.sum_safety_tasks == 0 {
+            1.0
+        } else {
+            self.stats.sum_safety_met as f64 / self.stats.sum_safety_tasks as f64
+        }
+    }
+
+    /// Fraction of tasks lost outright (`response = +inf`).
+    pub fn lost_rate(&self) -> f64 {
+        if self.stats.sum_tasks == 0 {
+            0.0
+        } else {
+            self.stats.sum_lost_tasks as f64 / self.stats.sum_tasks as f64
+        }
+    }
+
+    /// Trials that panicked instead of completing (outside `trials()`).
+    pub fn failed_trials(&self) -> u64 {
+        self.stats.failed_trials
     }
 
     /// Streaming response-time quantile (q in [0,1]); `+inf` when the
@@ -577,6 +703,11 @@ impl SweepSummary {
                         ("mean_gvalue", Json::Num(g.mean_gvalue())),
                         ("mean_comm_delay_s", Json::Num(g.mean_comm_delay_s())),
                         ("mean_comm_gb", Json::Num(g.mean_comm_gb())),
+                        ("safety_tasks", Json::Num(g.stats.sum_safety_tasks as f64)),
+                        ("safety_met", Json::Num(g.stats.sum_safety_met as f64)),
+                        ("safety_stm_rate", Json::Num(g.safety_stm_rate())),
+                        ("lost_tasks", Json::Num(g.stats.sum_lost_tasks as f64)),
+                        ("failed_trials", Json::Num(g.failed_trials() as f64)),
                         ("p50_response_s", Json::Num(g.response_quantile_s(0.50))),
                         ("p99_response_s", Json::Num(g.response_quantile_s(0.99))),
                         ("p999_response_s", Json::Num(g.response_quantile_s(0.999))),
@@ -858,6 +989,74 @@ mod tests {
         let back = SweepSummary::from_state_json(&Json::parse(&old).unwrap()).unwrap();
         assert_eq!(back.groups[0].stats.sum_comm_delay, 0.0);
         assert_eq!(back.fingerprint(), sw.fingerprint());
+    }
+
+    #[test]
+    fn survival_counters_are_report_only() {
+        let mk = |met: u64| {
+            let mut s = summary();
+            s.safety_tasks = 2;
+            s.safety_met = met;
+            s.lost_tasks = 1;
+            let mut sw = SweepSummary::new();
+            sw.push(key("a"), s);
+            sw
+        };
+        let (a, b) = (mk(1), mk(2));
+        // Survival counters never fingerprint (pre-faults bit-identity).
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let g = a.by_scheduler("a").unwrap();
+        assert!((g.safety_stm_rate() - 0.5).abs() < 1e-12);
+        assert!((g.lost_rate() - 0.5).abs() < 1e-12);
+        // No safety tasks at all: nothing missed.
+        let empty = SweepSummary::new();
+        assert!(empty.groups.is_empty());
+        let plain = {
+            let mut sw = SweepSummary::new();
+            sw.push(key("a"), summary());
+            sw
+        };
+        assert_eq!(plain.by_scheduler("a").unwrap().safety_stm_rate(), 1.0);
+        // Counters survive checkpoint roundtrips and appear in reports.
+        let back =
+            SweepSummary::from_state_json(&Json::parse(&a.state_json().to_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back.groups[0].stats.sum_safety_tasks, 2);
+        assert_eq!(back.groups[0].stats.sum_lost_tasks, 1);
+        assert!(a.to_json().to_string().contains("safety_stm_rate"));
+    }
+
+    #[test]
+    fn failed_runs_count_separately_and_never_fingerprint() {
+        let mut sw = SweepSummary::new();
+        sw.push(key("a"), varied(1.0));
+        let f = sw.fingerprint();
+        sw.push(key("a"), RunSummary::failed("a".into(), "p".into()));
+        assert_eq!(sw.fingerprint(), f, "failed trials are outside the fingerprint");
+        let g = sw.by_scheduler("a").unwrap();
+        assert_eq!(g.failed_trials(), 1);
+        assert_eq!(g.trials(), 1, "failed runs are not completed trials");
+        // Merge carries the counter; checkpoints roundtrip it and old
+        // checkpoints without the key load as zero.
+        let mut m = SweepSummary::new();
+        m.merge(&sw);
+        m.merge(&sw);
+        assert_eq!(m.by_scheduler("a").unwrap().failed_trials(), 2);
+        let back =
+            SweepSummary::from_state_json(&Json::parse(&sw.state_json().to_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back.groups[0].stats.failed_trials, 1);
+        assert_eq!(back.fingerprint(), sw.fingerprint());
+        let stripped: String = sw
+            .state_json()
+            .to_pretty()
+            .lines()
+            .filter(|l| !l.contains("failed_trials"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let old = SweepSummary::from_state_json(&Json::parse(&stripped).unwrap()).unwrap();
+        assert_eq!(old.groups[0].stats.failed_trials, 0);
+        assert_eq!(old.fingerprint(), sw.fingerprint());
     }
 
     #[test]

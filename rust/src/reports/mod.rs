@@ -22,12 +22,15 @@ use crate::workload::{model, ALL_MODELS};
 /// one row per scheduler × platform × scenario × area × deadline group,
 /// aggregate columns over that group's queues/seeds.  The Scenario column
 /// is the per-archetype breakdown of the scenario-variability library
-/// ("-" for plain area/distance sweeps).
+/// ("-" for plain area/distance sweeps).  The three survival columns
+/// (safety-tier STM, lost tasks, panicked trials) only move under fault
+/// campaigns — an event-free sweep shows 100% / 0 / 0.
 pub fn sweep_table(s: &SweepSummary) -> Table {
     let mut t = Table::new([
         "Scheduler", "Platform", "Scenario", "Area", "DL", "Queues", "Time M (s)",
-        "Energy M (J)", "R_Balance", "MS/task", "STMRate", "Rsp P50 (ms)", "Rsp P99 (ms)",
-        "Rsp P99.9 (ms)", "Brk P50 (m)", "Brk P99 (m)", "Brk P99.9 (m)",
+        "Energy M (J)", "R_Balance", "MS/task", "STMRate", "Safety STM", "Lost", "Panicked",
+        "Rsp P50 (ms)", "Rsp P99 (ms)", "Rsp P99.9 (ms)", "Brk P50 (m)", "Brk P99 (m)",
+        "Brk P99.9 (m)",
     ]);
     for g in &s.groups {
         t.row([
@@ -42,6 +45,9 @@ pub fn sweep_table(s: &SweepSummary) -> Table {
             f2(g.mean_r_balance()),
             f2(g.mean_ms_per_task()),
             pct(g.mean_stm_rate()),
+            pct(g.safety_stm_rate()),
+            g.stats.sum_lost_tasks.to_string(),
+            g.failed_trials().to_string(),
             f2(g.response_quantile_s(0.50) * 1e3),
             f2(g.response_quantile_s(0.99) * 1e3),
             f2(g.response_quantile_s(0.999) * 1e3),
@@ -407,6 +413,10 @@ mod tests {
         assert!(s.contains("night-rain"), "{s}");
         assert!(s.contains("Rsp P99 (ms)"), "{s}");
         assert!(s.contains("Brk P99.9 (m)"), "{s}");
+        // Survival columns: an event-free run shows the benign values.
+        assert!(s.contains("Safety STM"), "{s}");
+        assert!(s.contains("Lost"), "{s}");
+        assert!(s.contains("Panicked"), "{s}");
     }
 
     #[test]

@@ -44,6 +44,14 @@ pub fn meets_safety_time(response_time: f64, safety_time: f64) -> bool {
     response_time <= safety_time
 }
 
+/// Criticality tier: Detection feeds the braking/perception pipeline
+/// (safety-critical — its deadline protects the §8.5 braking distance);
+/// Tracking is comfort-tier and may be shed by the graceful-degradation
+/// controller when platform capacity drops under faults.
+pub fn is_safety_critical(cat: TaskCategory) -> bool {
+    matches!(cat, TaskCategory::Detection)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,5 +81,11 @@ mod tests {
     fn stmrate_predicate() {
         assert!(meets_safety_time(1.0, 2.0));
         assert!(!meets_safety_time(3.0, 2.0));
+    }
+
+    #[test]
+    fn criticality_tiers() {
+        assert!(is_safety_critical(TaskCategory::Detection));
+        assert!(!is_safety_critical(TaskCategory::Tracking));
     }
 }

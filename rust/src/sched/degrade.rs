@@ -1,0 +1,179 @@
+//! Graceful degradation: a criticality-aware controller that wraps any
+//! registered scheduler and sheds comfort-tier work when platform capacity
+//! drops under faults, so safety-tier deadlines survive outages — the
+//! priority-tier direction of the dataflow-accelerator literature
+//! (PAPERS.md: arXiv 2109.07047) applied to the paper's safety claim.
+//!
+//! Policy (deterministic, documented in DESIGN.md):
+//!
+//! * **Healthy platform** (every accelerator up): pure pass-through.  The
+//!   wrapper adds zero float/rng operations, so no-fault sweeps stay
+//!   bit-identical to the unwrapped scheduler — fingerprint-pinned by
+//!   `tests/faults.rs`.
+//! * **Degraded platform** (≥1 accelerator down): a comfort-tier task
+//!   ([`TaskCategory::Tracking`](crate::safety::ms::TaskCategory)) whose
+//!   *best-case* response on every surviving accelerator already misses
+//!   its safety time is **shed**: it is assigned to a dead slot, which the
+//!   platform model books as a lost task (MS −1, no FIFO occupancy) — the
+//!   pinned lost-task semantics of `ShadowState::apply`.  Shedding such a
+//!   task can only help: it would have missed its deadline anyway, and
+//!   dispatching it would have queued real work ahead of safety-tier
+//!   tasks.  Safety-tier tasks and still-viable comfort tasks go to the
+//!   inner scheduler as a reduced burst, and its assignments are merged
+//!   back in the original task order.
+//!
+//! Derate-only capacity loss (all accelerators up but slower) keeps the
+//! controller dormant: est-based shedding under derating would change
+//! scheduling on runs whose capacity still covers demand, and the inner
+//! schedulers already price derated slots through `est_response`.
+
+use crate::env::taskgen::Task;
+use crate::safety::ms::is_safety_critical;
+use crate::sim::ShadowState;
+
+use super::Scheduler;
+
+/// The graceful-degradation wrapper.  Built by the engine around the
+/// trial's scheduler when degradation is enabled (`Engine::degrade`) — it
+/// is not a registry row of its own, so `name()` forwards the inner
+/// scheduler's name and group keys stay comparable across the on/off arms
+/// of a campaign.
+pub struct DegradeSched {
+    inner: Box<dyn Scheduler>,
+}
+
+impl DegradeSched {
+    pub fn new(inner: Box<dyn Scheduler>) -> DegradeSched {
+        DegradeSched { inner }
+    }
+}
+
+impl Scheduler for DegradeSched {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn schedule_batch(&mut self, tasks: &[Task], state: &ShadowState) -> Vec<usize> {
+        let ups = state.up_count();
+        if ups == state.len() || ups == 0 {
+            // Healthy (pass-through, bit-identical) or hopeless (every
+            // slot down: the inner scheduler's all-down fallback already
+            // loses every task; shedding would change nothing).
+            return self.inner.schedule_batch(tasks, state);
+        }
+        // First dead slot: the shed destination (exists: ups < len).
+        let shed_to = (0..state.len()).find(|&i| !state.is_up(i)).unwrap_or(0);
+        let mut shed = vec![false; tasks.len()];
+        let mut kept: Vec<Task> = Vec::with_capacity(tasks.len());
+        for (k, task) in tasks.iter().enumerate() {
+            let hopeless = !is_safety_critical(task.category)
+                && !state
+                    .up_iter()
+                    .any(|i| state.est_response(task, i) <= task.safety_time_s);
+            if hopeless {
+                shed[k] = true;
+            } else {
+                kept.push(task.clone());
+            }
+        }
+        if kept.len() == tasks.len() {
+            return self.inner.schedule_batch(tasks, state);
+        }
+        let inner_assign = self.inner.schedule_batch(&kept, state);
+        let mut out = Vec::with_capacity(tasks.len());
+        let mut j = 0;
+        for dropped in shed {
+            if dropped {
+                out.push(shed_to);
+            } else {
+                out.push(inner_assign.get(j).copied().unwrap_or(shed_to));
+                j += 1;
+            }
+        }
+        out
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{CameraGroup, Scenario};
+    use crate::metrics::NormScales;
+    use crate::platform::Platform;
+    use crate::safety::ms::TaskCategory;
+    use crate::sched::Registry;
+    use crate::workload::ModelKind;
+
+    fn task(id: u32, category: TaskCategory, safety_time_s: f64) -> Task {
+        Task {
+            id,
+            group: CameraGroup::Fc,
+            cam_idx: 0,
+            release_s: 0.0,
+            model: match category {
+                TaskCategory::Detection => ModelKind::Yolo,
+                TaskCategory::Tracking => ModelKind::Goturn,
+            },
+            category,
+            scenario: Scenario::GoStraight,
+            safety_time_s,
+        }
+    }
+
+    fn wrapped(reg: &Registry) -> DegradeSched {
+        DegradeSched::new(reg.build_by_name("minmin", 7).unwrap())
+    }
+
+    #[test]
+    fn healthy_platform_is_pass_through() {
+        let reg = Registry::new();
+        let state = ShadowState::new(&Platform::hmai(), NormScales::unit());
+        let burst: Vec<Task> = (0..8)
+            .map(|k| {
+                task(
+                    k,
+                    if k % 2 == 0 { TaskCategory::Detection } else { TaskCategory::Tracking },
+                    1.0,
+                )
+            })
+            .collect();
+        let mut plain = reg.build_by_name("minmin", 7).unwrap();
+        let mut deg = wrapped(&reg);
+        assert_eq!(deg.name(), plain.name(), "group keys must stay comparable");
+        assert_eq!(deg.schedule_batch(&burst, &state), plain.schedule_batch(&burst, &state));
+    }
+
+    #[test]
+    fn hopeless_comfort_tasks_are_shed_to_a_dead_slot() {
+        let reg = Registry::new();
+        let mut state = ShadowState::new(&Platform::hmai(), NormScales::unit());
+        state.set_speed(2, 0.0);
+        // An impossible deadline: no up slot can meet 1 ns.
+        let burst = vec![
+            task(0, TaskCategory::Detection, 1e-9),
+            task(1, TaskCategory::Tracking, 1e-9),
+            task(2, TaskCategory::Tracking, 10.0),
+        ];
+        let mut deg = wrapped(&reg);
+        let assign = deg.schedule_batch(&burst, &state);
+        assert_eq!(assign.len(), 3);
+        assert_eq!(assign[1], 2, "hopeless comfort task goes to the dead slot");
+        assert_ne!(assign[0], 2, "safety tasks are never shed");
+        assert_ne!(assign[2], 2, "viable comfort tasks are scheduled normally");
+    }
+
+    #[test]
+    fn outage_without_hopeless_tasks_matches_inner() {
+        let reg = Registry::new();
+        let mut state = ShadowState::new(&Platform::hmai(), NormScales::unit());
+        state.set_speed(0, 0.0);
+        let burst: Vec<Task> = (0..6).map(|k| task(k, TaskCategory::Tracking, 10.0)).collect();
+        let mut plain = reg.build_by_name("minmin", 7).unwrap();
+        let mut deg = wrapped(&reg);
+        assert_eq!(deg.schedule_batch(&burst, &state), plain.schedule_batch(&burst, &state));
+    }
+}

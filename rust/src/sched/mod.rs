@@ -3,6 +3,7 @@
 //! unscheduled worst case) and FlexAI, the DQN scheduler.
 
 pub mod ata;
+pub mod degrade;
 pub mod edp;
 pub mod fitness;
 pub mod flexai;

@@ -199,6 +199,9 @@ impl<'a> RolloutCtx<'a> {
         }
         if let Some(comm) = &mut self.comm {
             if let Some(p) = comm.plan(i, task.model, self.now, self.busy[i], compute) {
+                if !p.done_s.is_finite() {
+                    return; // severed route: task lost, FIFO stays clean
+                }
                 comm.commit(i, task.model, &p);
                 self.busy[i] = p.finish_s;
                 return;
@@ -243,6 +246,11 @@ impl<'a> RolloutCtx<'a> {
             let mut committed = false;
             if let Some(comm) = &mut self.comm {
                 if let Some(p) = comm.plan(a, task.model, self.now, self.busy[a], compute) {
+                    if !p.done_s.is_finite() {
+                        // A severed route loses the task just like a dead
+                        // slot: the candidate is unexecutable.
+                        return f64::INFINITY;
+                    }
                     comm.commit(a, task.model, &p);
                     self.busy[a] = p.finish_s;
                     committed = true;

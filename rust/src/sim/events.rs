@@ -25,6 +25,15 @@ pub enum EventAction {
     /// time divides by `speed`; energy is unchanged — the work is the
     /// same, only slower).
     Derate { accel: usize, speed: f64 },
+    /// Interconnect link drops dead: its hops price at `+inf` and ingress
+    /// routes fall back to surviving BFS paths.  A no-op on monolithic
+    /// platforms (no `CommState`).
+    LinkFail { link: usize },
+    /// Interconnect link returns to nominal bandwidth.
+    LinkRecover { link: usize },
+    /// Interconnect link derates to `speed` × nominal bandwidth
+    /// (0 < speed < 1); per-hop latency is a PHY property and unchanged.
+    LinkDerate { link: usize, speed: f64 },
 }
 
 impl EventAction {
@@ -34,6 +43,9 @@ impl EventAction {
             EventAction::Fail { accel } => state.set_speed(accel, 0.0),
             EventAction::Recover { accel } => state.set_speed(accel, 1.0),
             EventAction::Derate { accel, speed } => state.set_speed(accel, speed),
+            EventAction::LinkFail { link } => state.set_link_speed(link, 0.0),
+            EventAction::LinkRecover { link } => state.set_link_speed(link, 1.0),
+            EventAction::LinkDerate { link, speed } => state.set_link_speed(link, speed),
         }
     }
 
@@ -43,6 +55,9 @@ impl EventAction {
             EventAction::Fail { accel } => format!("fail a{accel}"),
             EventAction::Recover { accel } => format!("recover a{accel}"),
             EventAction::Derate { accel, speed } => format!("derate a{accel}x{speed}"),
+            EventAction::LinkFail { link } => format!("linkfail l{link}"),
+            EventAction::LinkRecover { link } => format!("linkrecover l{link}"),
+            EventAction::LinkDerate { link, speed } => format!("linkderate l{link}x{speed}"),
         }
     }
 }
@@ -139,6 +154,29 @@ mod tests {
         let mut s = state();
         assert_eq!(tl.apply_until(2.0, &mut s), 2);
         assert!((s.speed[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_events_touch_comm_and_noop_on_mono() {
+        // Monolithic platform: no CommState, link events are no-ops.
+        let mut mono = state();
+        EventAction::LinkFail { link: 0 }.apply(&mut mono);
+        assert!(mono.comm.is_none());
+        // Chiplet platform: the link's speed factor follows the events.
+        let mut noc = ShadowState::new(
+            &Platform::parse("hmai+mesh2x2").unwrap(),
+            NormScales::unit(),
+        );
+        EventAction::LinkDerate { link: 1, speed: 0.5 }.apply(&mut noc);
+        assert!((noc.comm.as_ref().unwrap().link_speed(1) - 0.5).abs() < 1e-12);
+        EventAction::LinkFail { link: 1 }.apply(&mut noc);
+        assert_eq!(noc.comm.as_ref().unwrap().link_speed(1), 0.0);
+        EventAction::LinkRecover { link: 1 }.apply(&mut noc);
+        assert_eq!(noc.comm.as_ref().unwrap().link_speed(1), 1.0);
+        assert!(EventAction::LinkFail { link: 1 }.describe().contains("l1"));
+        assert!(EventAction::LinkDerate { link: 1, speed: 0.5 }
+            .describe()
+            .contains("linkderate l1x0.5"));
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::env::taskgen::{Task, TaskQueue};
 use crate::metrics::summary::RunSummary;
 use crate::metrics::NormScales;
 use crate::platform::Platform;
+use crate::safety::ms::is_safety_critical;
 use crate::sched::Scheduler;
 use crate::workload::ModelKind;
 
@@ -172,6 +173,10 @@ pub struct Sim<'q> {
     /// denominator; equals `processed` unless platform events lost tasks.
     completed: u64,
     met: u64,
+    /// Safety-critical (Detection-tier) tasks seen / met — the survival
+    /// numerators of fault campaigns (report-only, never fingerprinted).
+    safety_tasks: u64,
+    safety_met: u64,
     wait_s: f64,
     response_sum: f64,
     response_max: f64,
@@ -193,6 +198,8 @@ impl<'q> Sim<'q> {
             processed: 0,
             completed: 0,
             met: 0,
+            safety_tasks: 0,
+            safety_met: 0,
             wait_s: 0.0,
             response_sum: 0.0,
             response_max: 0.0,
@@ -257,6 +264,12 @@ impl<'q> Sim<'q> {
             if a.met_deadline {
                 self.met += 1;
             }
+            if is_safety_critical(task.category) {
+                self.safety_tasks += 1;
+                if a.met_deadline {
+                    self.safety_met += 1;
+                }
+            }
             // Tasks lost to a failed accelerator respond "never" (+inf);
             // they count as missed deadlines (and MS = -1) but stay out of
             // the response accumulators *and* the mean's denominator, so
@@ -306,6 +319,11 @@ impl<'q> Sim<'q> {
             summary.comm_delay_s = comm.delay_s;
             summary.comm_gb = comm.bytes / 1e9;
         }
+        // Survival counters (report-only; see RunSummary docs).  Lost =
+        // processed minus finite-response completions.
+        summary.safety_tasks = self.safety_tasks;
+        summary.safety_met = self.safety_met;
+        summary.lost_tasks = self.processed - self.completed;
         SimResult {
             summary,
             final_state: self.state,
@@ -682,6 +700,46 @@ mod tests {
         let r = Sim::new(&q, &platform, scales).run(&mut s, &mut [&mut progress]);
         assert_eq!(ticks.len() as u64, r.bursts / 10);
         assert!(ticks.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 < w[1].1));
+    }
+
+    #[test]
+    fn survival_counters_track_safety_tier_and_losses() {
+        // Event-free run: nothing lost; the safety tier matches a record
+        // scan (Detection-category tasks are exactly the non-trackers).
+        let q = queue(50.0, 13);
+        let platform = Platform::hmai();
+        let mut s = RoundRobin::new();
+        let r = simulate(&q, &platform, &mut s, SimOptions { record_tasks: true });
+        assert_eq!(r.summary.lost_tasks, 0);
+        let det: Vec<_> = r.records.iter().filter(|x| !x.model.is_tracker()).collect();
+        assert_eq!(r.summary.safety_tasks, det.len() as u64);
+        assert_eq!(
+            r.summary.safety_met,
+            det.iter().filter(|x| x.met_deadline).count() as u64
+        );
+        assert!(r.summary.safety_tasks > 0 && r.summary.safety_tasks < r.summary.tasks);
+
+        // A one-accel platform whose accelerator dies and never recovers:
+        // every later task is lost, and the counter sees each one.
+        let tiny = Platform::from_counts("tiny", 1, 0, 0);
+        let events = vec![PlatformEvent {
+            at_s: 0.5 * q.route_duration_s,
+            action: EventAction::Fail { accel: 0 },
+        }];
+        let mut s2 = RoundRobin::new();
+        let scales = NormScales::for_queue(&q, &tiny);
+        let lossy = simulate_observed_with_scales(
+            &q,
+            &tiny,
+            &mut s2,
+            SimOptions { record_tasks: true },
+            scales,
+            events,
+            &mut [],
+        );
+        let lost = lossy.records.iter().filter(|x| !x.response_s.is_finite()).count() as u64;
+        assert!(lost > 0, "outage must lose tasks");
+        assert_eq!(lossy.summary.lost_tasks, lost);
     }
 
     #[test]

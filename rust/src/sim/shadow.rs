@@ -135,6 +135,16 @@ impl ShadowState {
         }
     }
 
+    /// Set interconnect link `link`'s speed factor (0.0 = dead, 1.0 =
+    /// nominal bandwidth).  A no-op on monolithic platforms (no
+    /// `CommState`) and for out-of-range indices, so link events written
+    /// for a chiplet platform degrade gracefully everywhere else.
+    pub fn set_link_speed(&mut self, link: usize, speed: f64) {
+        if let Some(comm) = &mut self.comm {
+            comm.set_link_speed(link, speed);
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.kinds.len()
     }
@@ -280,6 +290,30 @@ impl ShadowState {
         if let Some(comm) = &mut self.comm {
             planned = comm.plan(accel, task.model, self.now, self.busy_until[accel], compute);
             if let Some(p) = planned {
+                if !p.done_s.is_finite() {
+                    // A severed route (dead link, no surviving path to the
+                    // slot's chiplet): the task is lost exactly like a
+                    // dispatch to a failed accelerator — and crucially the
+                    // plan is *not* committed, so neither the slot's FIFO
+                    // nor the link occupancy is poisoned past the link's
+                    // recovery.
+                    let ms =
+                        matching_score(task.category, f64::INFINITY, task.safety_time_s);
+                    let r_j = self.busy_now as f64 / self.kinds.len() as f64;
+                    self.metrics.per_accel[accel].update(0.0, 0.0, 0.0, ms, r_j);
+                    return Applied {
+                        accel,
+                        start_s: self.now,
+                        finish_s: f64::INFINITY,
+                        wait_s: 0.0,
+                        compute_s: f64::INFINITY,
+                        response_s: f64::INFINITY,
+                        energy_j: 0.0,
+                        ms,
+                        r_j,
+                        met_deadline: false,
+                    };
+                }
                 comm.commit(accel, task.model, &p);
             }
         }
@@ -637,6 +671,54 @@ mod tests {
         s.advance(b.finish_s + 1.0);
         let third = s.est_response(&t, 1);
         assert!(third > second, "{third} !> {second}");
+    }
+
+    #[test]
+    fn severed_route_loses_tasks_without_poisoning() {
+        // Two slots over a ring2: slot 1 lives across the package's only
+        // link.  Severing it makes slot 1 unreachable — dispatches there
+        // are lost tasks, and neither its FIFO nor the link occupancy is
+        // poisoned past the link's recovery.
+        let p = Platform::parse("so:1,si:1+ring2").unwrap();
+        let mut s = ShadowState::new(&p, NormScales::unit());
+        let t = task(ModelKind::Yolo, 0.0, 1.0);
+        s.set_link_speed(0, 0.0);
+        assert!(s.est_response(&t, 1).is_infinite());
+        let a = s.apply(&t, 1);
+        assert!(!a.met_deadline);
+        assert_eq!(a.ms, -1.0);
+        assert!(a.response_s.is_infinite());
+        assert_eq!(a.energy_j, 0.0);
+        assert_eq!(s.busy_until[1], 0.0, "severed slot's FIFO must stay clean");
+        let comm = s.comm.as_ref().unwrap();
+        assert_eq!(comm.delay_s, 0.0, "no commit on a severed route");
+        assert!(comm.link_busy.iter().all(|&b| b == 0.0));
+        // Recovery restores service: new work completes finitely.
+        s.set_link_speed(0, 1.0);
+        assert!(s.est_response(&t, 1).is_finite());
+        let b = s.apply(&t, 1);
+        assert!(b.response_s.is_finite());
+    }
+
+    #[test]
+    fn link_failure_reroutes_on_mesh() {
+        let mut s = noc_shadow();
+        let t = task(ModelKind::Yolo, 0.0, 1.0);
+        let nominal = s.est_response(&t, 1);
+        let li = s.comm.as_ref().unwrap().topology().route(1)[0];
+        s.set_link_speed(li, 0.0);
+        // The 2x2 mesh survives one dead link: slot 1 takes the 3-hop
+        // detour — finite, slower, and est still matches apply bit-exact.
+        let detour = s.est_response(&t, 1);
+        assert!(detour.is_finite());
+        assert!(detour > nominal);
+        let a = s.apply(&t, 1);
+        assert_eq!(a.response_s.to_bits(), detour.to_bits());
+        // Monolithic platforms ignore link events entirely.
+        let mut mono = shadow();
+        mono.set_link_speed(0, 0.0);
+        assert!(mono.comm.is_none());
+        assert!(mono.est_response(&t, 1).is_finite());
     }
 
     #[test]

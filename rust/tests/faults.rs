@@ -1,0 +1,170 @@
+//! Fault-injection integration suite: seeded MTBF/MTTR campaigns must be
+//! deterministic and jobs-invariant; the link-failure archetype must
+//! visibly tax communication on chiplet platforms while staying a bit-exact
+//! no-op on monolithic ones; graceful degradation must be a bit-exact
+//! pass-through on healthy platforms and never hurt the safety tier under
+//! faults; and a panicking scheduler must cost exactly its own trials,
+//! never the sweep.
+
+use std::sync::Arc;
+
+use hmai::engine::Engine;
+use hmai::faults::FaultModel;
+use hmai::metrics::summary::SweepSummary;
+use hmai::plan::ExperimentPlan;
+use hmai::sched::{BuildCtx, Registry, Scheduler, SchedulerSpec};
+
+/// Aggregate safety-tier STM over every group of a sweep.
+fn safety_stm(s: &SweepSummary) -> f64 {
+    let tasks: u64 = s.groups.iter().map(|g| g.stats.sum_safety_tasks).sum();
+    let met: u64 = s.groups.iter().map(|g| g.stats.sum_safety_met).sum();
+    assert!(tasks > 0, "plan produced no safety-critical tasks");
+    met as f64 / tasks as f64
+}
+
+#[test]
+fn fault_campaign_is_deterministic_and_jobs_invariant() {
+    // Same seed, same campaign — across the jobs split and across repeat
+    // runs — and the campaign must actually perturb the sweep relative to
+    // a fault-free run of the same plan.
+    let reg = Registry::new();
+    let plan = ExperimentPlan::new()
+        .platforms(["hmai", "hmai+mesh2x2"])
+        .scenarios(["urban-rush"])
+        .distances([60.0])
+        .schedulers([SchedulerSpec::MinMin, SchedulerSpec::RoundRobin, SchedulerSpec::Edp])
+        .seed(13);
+    let model = FaultModel::default();
+    let run = |jobs: usize| {
+        Engine::new(&reg).jobs(jobs).faults(Some(model)).sweep_streaming(&plan).unwrap()
+    };
+    let a = run(1);
+    assert_eq!(a.fingerprint(), run(3).fingerprint(), "jobs split changed a fault campaign");
+    assert_eq!(a.fingerprint(), run(1).fingerprint(), "same seed must redraw the same faults");
+    let clean = Engine::new(&reg).sweep_streaming(&plan).unwrap();
+    assert_ne!(a.fingerprint(), clean.fingerprint(), "default fault model had no effect");
+}
+
+#[test]
+fn link_failure_taxes_the_mesh_and_is_a_noop_on_mono() {
+    let reg = Registry::new();
+    let plan_for = |platform: &str, sched: SchedulerSpec| {
+        ExperimentPlan::new()
+            .platforms([platform])
+            .scenarios(["link-failure"])
+            .distances([60.0])
+            .schedulers([sched])
+            .seed(7)
+    };
+    // Monolithic platforms have no links: the archetype's events apply to
+    // nothing, so events on/off must be bit-identical.
+    let mono = |events: bool| {
+        Engine::new(&reg)
+            .events(events)
+            .sweep_streaming(&plan_for("hmai", SchedulerSpec::MinMin))
+            .unwrap()
+            .fingerprint()
+    };
+    assert_eq!(mono(true), mono(false), "link events leaked into a mono platform");
+
+    // On the mesh the severed link must change the run, and under Round-
+    // Robin — which assigns cyclically, blind to communication cost — every
+    // crossing of the dead link mid-window is rerouted over the long way
+    // around, so the total comm delay strictly rises.
+    let mesh = |events: bool, sched: SchedulerSpec| {
+        let results =
+            Engine::new(&reg).events(events).run(&plan_for("hmai+mesh2x2", sched)).unwrap();
+        assert_eq!(results.len(), 1);
+        results.into_iter().next().unwrap().summary
+    };
+    let mm_on = mesh(true, SchedulerSpec::MinMin);
+    let mm_off = mesh(false, SchedulerSpec::MinMin);
+    assert!(mm_on.comm_delay_s > 0.0, "mesh run moved no comm time");
+    assert_ne!(
+        mm_on.content_hash(),
+        mm_off.content_hash(),
+        "a severed link changed nothing on the mesh"
+    );
+    let rr_on = mesh(true, SchedulerSpec::RoundRobin);
+    let rr_off = mesh(false, SchedulerSpec::RoundRobin);
+    assert!(
+        rr_on.comm_delay_s > rr_off.comm_delay_s,
+        "rerouted crossings must cost more: {} !> {}",
+        rr_on.comm_delay_s,
+        rr_off.comm_delay_s
+    );
+}
+
+#[test]
+fn degrade_wrapper_is_bit_exact_pass_through_when_healthy() {
+    // With no faults and no events every slot stays alive, so the
+    // degradation wrapper must forward untouched — the whole sweep is
+    // bit-identical with it on or off, on mono and chiplet platforms.
+    let reg = Registry::new();
+    let plan = ExperimentPlan::new()
+        .platforms(["hmai", "hmai+mesh2x2"])
+        .scenarios(["urban-rush"])
+        .distances([40.0])
+        .schedulers([SchedulerSpec::MinMin, SchedulerSpec::RoundRobin, SchedulerSpec::Worst])
+        .seed(5);
+    let arm = |degrade: bool| {
+        Engine::new(&reg).degrade(degrade).sweep_streaming(&plan).unwrap().fingerprint()
+    };
+    assert_eq!(arm(true), arm(false), "degradation wrapper changed a healthy sweep");
+}
+
+#[test]
+fn degradation_never_hurts_the_safety_tier_under_faults() {
+    // The degraded-comfort archetype keeps accelerator 0 down for most of
+    // the route; shedding hopeless comfort (tracking) work must never cost
+    // the safety tier — identical event timelines in both arms, so the
+    // comparison isolates the policy.
+    let reg = Registry::new();
+    let plan = ExperimentPlan::new()
+        .platforms(["hmai"])
+        .scenarios(["degraded-comfort"])
+        .distances([60.0, 90.0])
+        .schedulers([SchedulerSpec::MinMin])
+        .seed(3);
+    let arm = |degrade: bool| {
+        Engine::new(&reg).events(true).degrade(degrade).sweep_streaming(&plan).unwrap()
+    };
+    let off = safety_stm(&arm(false));
+    let on = safety_stm(&arm(true));
+    assert!(on >= off, "degradation hurt the safety tier: {on} < {off}");
+}
+
+#[test]
+fn a_panicking_scheduler_costs_its_trials_not_the_sweep() {
+    // Re-register one canonical name with a factory that panics: its
+    // trials must be counted as failed — moments untouched, sweep
+    // completed, siblings unaffected — and the recovery path must be as
+    // jobs-invariant as everything else.
+    let mut reg = Registry::new();
+    reg.register(
+        "worst",
+        Arc::new(|_: &SchedulerSpec, _: &BuildCtx| -> anyhow::Result<Box<dyn Scheduler>> {
+            panic!("injected fault: scheduler construction blew up")
+        }),
+    );
+    let plan = ExperimentPlan::new()
+        .platforms(["hmai"])
+        .scenarios(["urban-rush"])
+        .distances([40.0])
+        .schedulers([SchedulerSpec::MinMin, SchedulerSpec::Worst])
+        .seed(2);
+    let run = |jobs: usize| Engine::new(&reg).jobs(jobs).sweep_streaming(&plan).unwrap();
+    let sweep = run(1);
+    let group = |name: &str| {
+        sweep.groups.iter().find(|g| g.key.scheduler == name).unwrap_or_else(|| {
+            panic!("no '{name}' group in {:?}", sweep.groups.iter().map(|g| &g.key).collect::<Vec<_>>())
+        })
+    };
+    let worst = group("WorstCase");
+    assert_eq!(worst.stats.failed_trials, 1, "the panicked trial must be counted");
+    assert_eq!(worst.trials(), 0, "a panicked trial must not fold moments");
+    let minmin = group("Min-Min");
+    assert_eq!(minmin.trials(), 1);
+    assert_eq!(minmin.stats.failed_trials, 0);
+    assert_eq!(run(2).fingerprint(), sweep.fingerprint(), "recovery path is jobs-variant");
+}

@@ -109,6 +109,51 @@ fn kill_mid_shard_then_resume_is_invisible() {
 }
 
 #[test]
+fn corrupt_checkpoint_is_quarantined_and_the_shard_recovers() {
+    let reg = Registry::new();
+    let mut plan = fleet_plan();
+    plan.shards = 2;
+    let resolved = plan.resolve().unwrap();
+    let whole = monolithic(&plan, &reg);
+    let dir = temp_dir("quarantine");
+    let p0 = dir.join("shard_0.json");
+    let p1 = dir.join("shard_1.json");
+
+    // Stop shard 0 mid-range, then corrupt its checkpoint the way a crash
+    // outside the atomic write path would: truncate the file.
+    let stop = WorkOptions { jobs: 1, checkpoint_every: 1, max_trials: Some(2) };
+    run_shard(&reg, &plan, &resolved, 0, &p0, stop).unwrap();
+    let text = std::fs::read_to_string(&p0).unwrap();
+    std::fs::write(&p0, &text[..100]).unwrap();
+
+    // The resume must quarantine the file, restart the shard fresh, and
+    // still produce the complete, correct shard summary.
+    let go = WorkOptions { jobs: 1, checkpoint_every: 3, max_trials: None };
+    let s0 = run_shard(&reg, &plan, &resolved, 0, &p0, go).unwrap();
+    assert!(s0.complete(), "shard must recover from a corrupt checkpoint");
+    let quarantined = dir.join("shard_0.json.corrupt");
+    assert!(quarantined.exists(), "corrupt file kept as evidence");
+    assert_eq!(std::fs::read_to_string(&quarantined).unwrap(), &text[..100]);
+
+    // A second corruption quarantines under a numbered name.
+    let good = std::fs::read_to_string(&p0).unwrap();
+    std::fs::write(&p0, &good[..80]).unwrap();
+    let s0_again = run_shard(&reg, &plan, &resolved, 0, &p0, go).unwrap();
+    assert!(s0_again.complete());
+    assert!(dir.join("shard_0.json.corrupt.1").exists());
+
+    // The merged fleet result is unaffected by the whole ordeal.
+    let s1 = run_shard(&reg, &plan, &resolved, 1, &p1, go).unwrap();
+    let merged = merge_checkpoints(&resolved, &[s0_again, s1]).unwrap();
+    assert_eq!(
+        merged.fingerprint(),
+        whole.fingerprint(),
+        "quarantine/restart changed the merged result"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn checkpoint_file_roundtrip_is_byte_exact() {
     let reg = Registry::new();
     let mut plan = fleet_plan();
